@@ -1,0 +1,81 @@
+"""Shared benchmark plumbing: corpus/index cache, radius pick, timing, CSV."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BuildConfig, RangeConfig, RangeSearchEngine, SearchConfig,
+    average_precision, exact_range_search,
+)
+from repro.core.radius import default_grid, select_radius, sweep
+from repro.data.synthetic import make_corpus
+from repro.utils import block_until_ready
+
+_CACHE: dict = {}
+
+
+def get_dataset(profile: str, n: int, n_queries: int = 256, seed: int = 0):
+    key = ("ds", profile, n, n_queries, seed)
+    if key not in _CACHE:
+        ds = make_corpus(profile, n=n, n_queries=n_queries, seed=seed)
+        pts = jnp.asarray(ds.points)
+        qs = jnp.asarray(ds.queries)
+        grid = default_grid(ds.points, ds.queries, ds.metric, num=24)
+        prof = sweep(pts, qs, grid, ds.metric)
+        r, gi = select_radius(prof, robustness_weight=0.2)
+        gt = exact_range_search(pts, qs, r, ds.metric)
+        _CACHE[key] = (ds, pts, qs, float(r), prof, gt)
+    return _CACHE[key]
+
+
+def get_engine(profile: str, n: int, seed: int = 0, max_degree: int = 24,
+               build_beam: int = 48) -> RangeSearchEngine:
+    key = ("eng", profile, n, seed, max_degree, build_beam)
+    if key not in _CACHE:
+        ds, pts, _, _, _, _ = get_dataset(profile, n, seed=seed)
+        t0 = time.perf_counter()
+        eng = RangeSearchEngine.build(
+            pts, BuildConfig(max_degree=max_degree, beam=build_beam,
+                             insert_batch=512, metric=ds.metric),
+            metric=ds.metric)
+        print(f"    [build {profile} n={n}: {time.perf_counter()-t0:.1f}s]")
+        _CACHE[key] = eng
+    return _CACHE[key]
+
+
+def run_range(eng, qs, r, cfg: RangeConfig, es_radius=None, iters: int = 2):
+    """(qps, ap_inputs, result) — median wall time over iters (after warmup)."""
+    fn = lambda: eng.range(qs, r, cfg, es_radius=es_radius)
+    block_until_ready(fn())
+    times = []
+    res = None
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        res = fn()
+        block_until_ready(res)
+        times.append(time.perf_counter() - t0)
+    qps = qs.shape[0] / float(np.median(times))
+    return qps, res
+
+
+def ap_of(res, gt) -> float:
+    return average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
+                             np.asarray(res.ids), np.asarray(res.count))
+
+
+def print_table(title: str, header: list[str], rows: list[list]):
+    print(f"\n### {title}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(f"{x:.4g}" if isinstance(x, float) else str(x) for x in r))
+
+
+QUICK_PROFILES = ["bigann-like", "gist-like", "msmarco-like"]
+ALL_PROFILES = ["bigann-like", "deep-like", "msturing-like", "gist-like",
+                "ssnpp-like", "openai-like", "text2image-like",
+                "wikipedia-like", "msmarco-like"]

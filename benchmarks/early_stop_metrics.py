@@ -1,0 +1,66 @@
+"""Paper Fig. 5 / Appendix A: early-stopping metric separation.
+
+At step vl of a beam-100 search, histogram d_visited / d_top1 / d_top10 /
+d_top10/d_start for queries grouped by true result count (0, 1-2, >=3),
+EXCLUDING searches that already found an in-range candidate (the paper's
+Fig. 5b criterion). Reports a separation score (Cohen's d between the
+zero-result and >=3-result groups) per metric — positive separation is what
+licenses early stopping on a dataset.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import SearchConfig, beam_search_batch
+from .common import ALL_PROFILES, QUICK_PROFILES, get_dataset, get_engine, print_table
+
+import jax.numpy as jnp
+
+
+def collect_metrics(profile: str, n: int, step: int = 20, beam: int = 100):
+    ds, pts, qs, r, _, gt = get_dataset(profile, n)
+    eng = get_engine(profile, n)
+    cfg = SearchConfig(beam=beam, max_beam=beam, visit_cap=step, metric=ds.metric)
+    st = beam_search_batch(pts, eng.graph, qs, eng.start_ids,
+                           jnp.asarray(np.inf, jnp.float32), cfg)
+    counts = np.asarray(gt[2])
+    found = np.asarray(st.dists[:, 0]) <= r   # already has a candidate -> excluded
+    d_visited = np.asarray(st.d_visited)
+    d_top1 = np.asarray(st.dists[:, 0])
+    d_top10 = np.asarray(st.dists[:, 9])
+    d_start = np.asarray(st.d_start)
+    ratio = d_top10 / np.maximum(d_start, 1e-30)
+    groups = {"zero": (counts == 0) & ~found,
+              "small": (counts > 0) & (counts <= 2) & ~found,
+              "large": (counts >= 3) & ~found}
+    return {"d_visited": d_visited, "d_top1": d_top1, "d_top10": d_top10,
+            "d_top10/d_start": ratio}, groups
+
+
+def _cohens_d(a: np.ndarray, b: np.ndarray) -> float:
+    if len(a) < 2 or len(b) < 2:
+        return float("nan")
+    s = np.sqrt((a.var() + b.var()) / 2)
+    return float((a.mean() - b.mean()) / max(s, 1e-12))
+
+
+def run(n: int = 10_000, quick: bool = True):
+    rows = []
+    profiles = QUICK_PROFILES if quick else ALL_PROFILES
+    for prof_name in profiles:
+        metrics, groups = collect_metrics(prof_name, n)
+        for mname, vals in metrics.items():
+            sep = _cohens_d(vals[groups["zero"]], vals[groups["large"]])
+            rows.append([prof_name, mname, int(groups["zero"].sum()),
+                         int(groups["large"].sum()), sep])
+    print_table("Fig5: early-stop metric separation (Cohen's d, "
+                "zero-result vs >=3-result queries, found-excluded)",
+                ["profile", "metric", "n_zero", "n_large", "separation"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

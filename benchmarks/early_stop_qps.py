@@ -1,0 +1,49 @@
+"""Paper Figs. 9/14/15: QPS vs AP with and without early stopping.
+
+The paper's claim: early stopping helps where the zero-vs-some metric
+distributions separate (bigann/deep-like), and is neutral-to-harmful where
+they overlap. We report per-profile (qps, ap) pairs for greedy and
+doubling, es on/off.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import ES_D_VISITED, RangeConfig, SearchConfig
+from .common import (
+    ALL_PROFILES, QUICK_PROFILES, ap_of, get_dataset, get_engine,
+    print_table, run_range,
+)
+
+
+def run(n: int = 10_000, quick: bool = True, beam: int = 32):
+    rows = []
+    profiles = QUICK_PROFILES if quick else ALL_PROFILES
+    for prof_name in profiles:
+        ds, pts, qs, r, _, gt = get_dataset(prof_name, n)
+        eng = get_engine(prof_name, n)
+        for mode in ("greedy", "doubling"):
+            for es in (False, True):
+                scfg = SearchConfig(
+                    beam=beam,
+                    max_beam=beam * (16 if mode == "doubling" else 1),
+                    visit_cap=(16 if mode == "doubling" else 4) * beam,
+                    metric=ds.metric,
+                    es_metric=ES_D_VISITED if es else 0, es_visit_limit=15)
+                cfg = RangeConfig(search=scfg, mode=mode, result_cap=2048)
+                qps, res = run_range(eng, qs, r, cfg,
+                                     es_radius=1.5 * r if es else None)
+                rows.append([prof_name, mode, "es" if es else "no-es", qps,
+                             ap_of(res, gt),
+                             int(np.asarray(res.es_stopped).sum()),
+                             float(np.asarray(res.n_visited).mean())])
+    print_table("Fig9/14/15: early stopping on/off",
+                ["profile", "mode", "es", "qps", "ap", "n_es_stopped",
+                 "mean_visited"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

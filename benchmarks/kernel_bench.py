@@ -1,0 +1,81 @@
+"""Kernel microbench: rangescan / gatherdist / flashattn.
+
+Wall-clock on CPU is meaningless for TPU kernels, so this reports two
+things per shape: (a) XLA-path wall time (the ref oracle jit'd — a real
+measurement of the fallback used on CPU), and (b) the v5e roofline-term
+ESTIMATE for the Pallas kernel (FLOPs / bytes analytically from the tiling,
+against 197 TFLOP/s + 819 GB/s), which is what the TPU deployment would be
+bounded by.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+from repro.kernels import flash_attention_ref, gatherdist_ref, rangescan_ref
+from repro.utils import block_until_ready
+from .common import print_table
+
+
+def _wall(fn, iters=3):
+    block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # rangescan: retrieval_cand-ish shapes
+    for (q, n, d) in [(16, 100_000, 128), (1, 1_000_000, 256)]:
+        qs = jax.random.normal(key, (q, d), jnp.float32)
+        xs = jax.random.normal(key, (n, d), jnp.float32)
+        f = jax.jit(lambda a, b: rangescan_ref(a, b, jnp.float32(1.0), k=128))
+        t = _wall(lambda: f(qs, xs))
+        flops = 2.0 * q * n * d
+        byts = 4.0 * (q * d + n * d + q * n)
+        rows.append(["rangescan", f"{q}x{n}x{d}", t * 1e3,
+                     flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
+
+    # gatherdist: beam expansion shapes
+    for (q, r, n, d) in [(256, 32, 100_000, 128), (1024, 64, 100_000, 96)]:
+        pts = jax.random.normal(key, (n, d), jnp.float32)
+        qs = jax.random.normal(key, (q, d), jnp.float32)
+        ids = jax.random.randint(key, (q, r), 0, n, jnp.int32)
+        f = jax.jit(lambda p, i, u: gatherdist_ref(p, i, u))
+        t = _wall(lambda: f(pts, ids, qs))
+        flops = 3.0 * q * r * d
+        byts = 4.0 * (q * r * d + q * d + q * r)
+        rows.append(["gatherdist", f"{q}x{r}x{d}", t * 1e3,
+                     flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
+
+    # flashattn: prefill + decode shapes (small batch; CPU wall time)
+    for (b, hq, hkv, sq, skv, dh) in [(1, 8, 2, 1024, 1024, 128),
+                                      (4, 8, 2, 1, 8192, 128)]:
+        q = jax.random.normal(key, (b, hq, sq, dh), jnp.bfloat16)
+        k = jax.random.normal(key, (b, hkv, skv, dh), jnp.bfloat16)
+        v = jax.random.normal(key, (b, hkv, skv, dh), jnp.bfloat16)
+        f = jax.jit(lambda a, c, e: flash_attention_ref(a, c, e))
+        t = _wall(lambda: f(q, k, v))
+        flops = 4.0 * b * hq * sq * skv * dh
+        byts = 2.0 * (b * hq * sq * dh + 2 * b * hkv * skv * dh)
+        rows.append(["flashattn", f"b{b}h{hq}/{hkv}s{sq}/{skv}", t * 1e3,
+                     flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
+
+    print_table("kernel bench: CPU-XLA wall ms + v5e roofline-term estimate",
+                ["kernel", "shape", "cpu_ms", "v5e_compute_us", "v5e_mem_us"],
+                rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

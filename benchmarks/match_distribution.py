@@ -1,0 +1,40 @@
+"""Paper Fig. 4: frequency distribution of per-query match counts
+(buckets 0 / <=10 / <=100 / <=1e3 / <=1e4 / <=1e5), incl. the size-scaling
+observation (same radius, denser corpus -> fatter tail)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import exact_range_search
+from repro.core.radius import match_histogram
+from .common import ALL_PROFILES, QUICK_PROFILES, get_dataset, print_table
+
+import jax.numpy as jnp
+
+
+def run(n: int = 10_000, quick: bool = True):
+    rows = []
+    profiles = QUICK_PROFILES if quick else ALL_PROFILES
+    for prof_name in profiles:
+        ds, pts, qs, r, prof, gt = get_dataset(prof_name, n)
+        h = match_histogram(np.asarray(gt[2]))
+        rows.append([prof_name] + list(h.values()))
+    header = ["profile", "0", "<=1e1", "<=1e2", "<=1e3", "<=1e4", "<=1e5"]
+    print_table("Fig4: match-size distribution", header, rows)
+
+    # scaling: same radius on 1x and 3x corpus (paper: density grows)
+    scale_rows = []
+    for prof_name in profiles[:2]:
+        ds1, pts1, qs1, r1, _, gt1 = get_dataset(prof_name, n)
+        ds3, _, _, _, _, _ = get_dataset(prof_name, 3 * n)
+        pts3 = jnp.asarray(ds3.points)
+        gt3 = exact_range_search(pts3, qs1, r1, ds1.metric)
+        scale_rows.append([prof_name, float(np.asarray(gt1[2]).mean()),
+                           float(np.asarray(gt3[2]).mean())])
+    print_table("Fig4b: mean matches/query at 1x vs 3x corpus (same radius)",
+                ["profile", "mean_1x", "mean_3x"], scale_rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

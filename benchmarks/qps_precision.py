@@ -1,0 +1,95 @@
+"""Paper Figs. 6/7/16: QPS vs average precision for the three algorithms.
+
+Sweeps the starting beam per algorithm and reports (beam, QPS, AP) points;
+the Pareto frontier over beams is the paper's reported curve. ``--scale``
+reruns one profile at 1x/3x/9x corpus size with a FIXED radius (Fig. 7's
+densification study), where greedy's advantage over doubling must grow.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import RangeConfig, SearchConfig
+from .common import (
+    ALL_PROFILES, QUICK_PROFILES, ap_of, get_dataset, get_engine,
+    print_table, run_range,
+)
+
+
+def _cfgs(beam: int, metric: str):
+    return {
+        "beam": RangeConfig(search=SearchConfig(
+            beam=beam, max_beam=beam, visit_cap=4 * beam, metric=metric),
+            mode="beam", result_cap=2048),
+        "doubling": RangeConfig(search=SearchConfig(
+            beam=beam, max_beam=16 * beam, visit_cap=16 * beam, metric=metric),
+            mode="doubling", result_cap=2048),
+        "greedy": RangeConfig(search=SearchConfig(
+            beam=beam, max_beam=beam, visit_cap=4 * beam, metric=metric),
+            mode="greedy", result_cap=2048, frontier_rounds=4096),
+    }
+
+
+def run(n: int = 10_000, quick: bool = True, beams=(8, 16, 32, 64)):
+    profiles = QUICK_PROFILES if quick else ALL_PROFILES
+    rows = []
+    for prof_name in profiles:
+        ds, pts, qs, r, _, gt = get_dataset(prof_name, n)
+        eng = get_engine(prof_name, n)
+        for beam in beams:
+            for mode, cfg in _cfgs(beam, ds.metric).items():
+                qps, res = run_range(eng, qs, r, cfg)
+                rows.append([prof_name, mode, beam, qps, ap_of(res, gt)])
+    print_table("Fig6: QPS vs AP (beam sweep x 3 algorithms)",
+                ["profile", "mode", "beam", "qps", "ap"], rows)
+
+    # headline: best QPS at AP >= 0.9 per mode (speedup over beam baseline)
+    summary = []
+    for prof_name in profiles:
+        per_mode = {}
+        for p, m, b, q, a in rows:
+            if p == prof_name and a >= 0.85:
+                per_mode[m] = max(per_mode.get(m, 0.0), q)
+        if "beam" in per_mode:
+            base = per_mode["beam"]
+            summary.append([prof_name] + [
+                f"{per_mode.get(m, float('nan')) / base:.2f}x"
+                for m in ("beam", "doubling", "greedy")])
+        elif per_mode:
+            summary.append([prof_name, "beam<0.85AP"] + [
+                f"{per_mode.get(m, 0):.0f}qps" for m in ("doubling", "greedy")])
+    print_table("Fig6 summary: speedup over beam baseline at AP>=0.85",
+                ["profile", "beam", "doubling", "greedy"], summary)
+    return rows
+
+
+def run_scaling(profile: str = "ssnpp-like", n: int = 6_000, beams=(16, 32)):
+    """Fig. 7: fixed radius, growing corpus -> greedy overtakes doubling."""
+    import jax.numpy as jnp
+    from repro.core import exact_range_search
+    ds1, pts1, qs, r, _, _ = get_dataset(profile, n)
+    rows = []
+    for scale in (1, 3, 9):
+        ds = get_dataset(profile, scale * n)[0]
+        pts = jnp.asarray(ds.points)
+        gt = exact_range_search(pts, qs, r, ds.metric)
+        eng = get_engine(profile, scale * n)
+        mean_matches = float(np.asarray(gt[2]).mean())
+        for beam in beams:
+            for mode, cfg in _cfgs(beam, ds.metric).items():
+                if mode == "beam":
+                    continue
+                qps, res = run_range(eng, qs, r, cfg)
+                rows.append([profile, scale, f"{mean_matches:.1f}", mode,
+                             beam, qps, ap_of(res, gt)])
+    print_table("Fig7: size scaling at fixed radius",
+                ["profile", "scale", "mean_matches", "mode", "beam", "qps",
+                 "ap"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()
+    run_scaling()

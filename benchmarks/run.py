@@ -1,0 +1,50 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (3 profiles)
+  PYTHONPATH=src python -m benchmarks.run --full     # all 9 profiles
+  PYTHONPATH=src python -m benchmarks.run --scale    # + Fig7 densification
+
+Corpora are synthetic with paper-matched range characteristics
+(data/synthetic.py); absolute QPS is CPU-scale, the paper's *qualitative*
+claims (speedup ordering, early-stop separation, greedy-vs-doubling
+crossover) are what each section validates.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--full", action="store_true", help="all 9 dataset profiles")
+    p.add_argument("--scale", action="store_true", help="include Fig7 scaling")
+    p.add_argument("--n", type=int, default=10_000)
+    args = p.parse_args(argv)
+    quick = not args.full
+
+    from . import (
+        early_stop_metrics, early_stop_qps, kernel_bench, match_distribution,
+        qps_precision, radius_capture, time_breakdown, topk_compare,
+    )
+
+    t0 = time.time()
+    print("== repro benchmarks (paper: Range Retrieval with Graph-Based "
+          "Indices) ==")
+    radius_capture.run(n=args.n, quick=quick)
+    match_distribution.run(n=args.n, quick=quick)
+    qps_precision.run(n=args.n, quick=quick)
+    early_stop_metrics.run(n=args.n, quick=quick)
+    early_stop_qps.run(n=args.n, quick=quick)
+    time_breakdown.run(n=args.n)
+    topk_compare.run(n=args.n)
+    kernel_bench.run()
+    if args.scale:
+        qps_precision.run_scaling(n=max(args.n // 2, 4000))
+    print(f"\n== done in {time.time() - t0:.0f}s ==")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

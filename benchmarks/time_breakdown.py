@@ -1,0 +1,66 @@
+"""Paper Fig. 8: time breakdown — initial beam-search phase vs second phase
+(greedy / doubling), with and without early stopping.
+
+We time phase 1 alone (the shared beam search) and the full pipeline; the
+difference is phase-2 cost. Run per profile at a fixed configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import (
+    ES_D_VISITED, RangeConfig, SearchConfig, beam_search_batch,
+)
+from repro.utils import block_until_ready
+from .common import QUICK_PROFILES, ap_of, get_dataset, get_engine, print_table
+
+import jax.numpy as jnp
+
+
+def _time(fn, iters=2):
+    block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(n: int = 10_000, beam: int = 32):
+    rows = []
+    for prof_name in QUICK_PROFILES:
+        ds, pts, qs, r, _, gt = get_dataset(prof_name, n)
+        eng = get_engine(prof_name, n)
+        for es in (False, True):
+            scfg = SearchConfig(beam=beam, max_beam=beam, visit_cap=4 * beam,
+                                metric=ds.metric,
+                                es_metric=ES_D_VISITED if es else 0,
+                                es_visit_limit=15)
+            esr = 1.5 * r if es else None
+            t_phase1 = _time(lambda: beam_search_batch(
+                pts, eng.graph, qs, eng.start_ids, jnp.asarray(r, jnp.float32),
+                scfg, None if esr is None else jnp.asarray(esr, jnp.float32)))
+            for mode in ("greedy", "doubling"):
+                cfg = RangeConfig(
+                    search=dataclasses.replace(
+                        scfg, max_beam=beam * (16 if mode == "doubling" else 1),
+                        visit_cap=16 * beam if mode == "doubling" else 4 * beam),
+                    mode=mode, result_cap=2048)
+                t_full = _time(lambda: eng.range(qs, r, cfg, es_radius=esr))
+                _, res = (None, eng.range(qs, r, cfg, es_radius=esr))
+                rows.append([prof_name, mode, "es" if es else "no-es",
+                             t_phase1, max(t_full - t_phase1, 0.0), t_full,
+                             ap_of(res, gt)])
+    print_table("Fig8: phase time breakdown (seconds, batch of "
+                f"{256} queries)",
+                ["profile", "mode", "early_stop", "phase1_s", "phase2_s",
+                 "total_s", "ap"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

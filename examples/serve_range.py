@@ -1,0 +1,14 @@
+"""End-to-end serving driver (the paper's kind of system is a retrieval
+service): build an index, start the RangeServer, drive batched requests
+through admission -> micro-batching -> two-phase search -> responses.
+
+  PYTHONPATH=src python examples/serve_range.py [--n 20000 --queries 512]
+
+This is a thin CLI over repro.launch.serve; see that module for the knobs.
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,7 @@
+from .hlo import CollectiveStats, count_op, fusion_count, parse_collectives
+from .roofline import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, RooflineReport, analytic_model_flops,
+    load_reports, make_report, save_reports,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

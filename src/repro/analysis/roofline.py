@@ -1,0 +1,185 @@
+"""Roofline terms per (arch x shape x mesh) from the compiled dry-run.
+
+Hardware constants (TPU v5e, per brief): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (seconds):
+  compute    = HLO_FLOPs            / (chips * 197e12)
+  memory     = HLO_bytes_accessed   / (chips * 819e9)
+  collective = collective_bytes     / (chips * 50e9)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (whole-program,
+all devices); collective_bytes from the HLO-text parse (analysis/hlo.py).
+MODEL_FLOPS is the analytic useful-work count — 6·N·D for dense training,
+6·N_active·D for MoE (brief), 2·N·D for inference passes, with the GNN /
+recsys analogues documented in ``analytic_model_flops``. The
+MODEL_FLOPS / HLO_FLOPs ratio exposes remat recompute and redundancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch_id: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float          # operand-bytes metric (brief)
+    collective_wire_bytes: float     # ring wire estimate / device
+    collective_summary: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    step_time_s: float               # max of the three terms (bound)
+    mfu: float                       # model_flops / (chips*peak*step_time)
+    memory_per_device: dict
+    note: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def row(self) -> str:
+        return (f"{self.arch_id:22s} {self.shape:14s} {self.mesh:10s} "
+                f"c={self.compute_s:.3e} m={self.memory_s:.3e} "
+                f"x={self.collective_s:.3e} dom={self.dominant:10s} "
+                f"useful={self.useful_ratio:.2f} mfu~{self.mfu:.2%}")
+
+
+def _count_params(tree, scale_moe: float = 1.0) -> float:
+    """Matmul-participating parameter count; expert tensors scaled by
+    (top_k/n_experts) when ``scale_moe`` < 1."""
+    from ..layers.common import flatten_paths
+    total = 0.0
+    for path, leaf in flatten_paths(tree).items():
+        size = float(np.prod(leaf.shape)) if leaf.shape else 1.0
+        if "/moe/" in f"/{path}/" and "router" not in path and "shared" not in path:
+            size *= scale_moe
+        total += size
+    return total
+
+
+def analytic_model_flops(arch, shape, params_abstract) -> float:
+    """Useful-work FLOPs per step (see module docstring)."""
+    fam = arch.family
+    if fam == "lm":
+        cfg = arch.model_cfg
+        scale = (cfg.top_k / cfg.n_experts) if cfg.is_moe else 1.0
+        n_active = _count_params(params_abstract, scale_moe=scale)
+        if shape.kind == "train":
+            return 6.0 * n_active * shape.global_batch * shape.seq_len
+        if shape.kind == "prefill":
+            return 2.0 * n_active * shape.global_batch * shape.seq_len
+        # decode: one token/seq forward + KV-cache attention reads
+        kv_flops = 4.0 * shape.global_batch * shape.seq_len * \
+            cfg.n_heads * (cfg.d_head if cfg.attn_kind == "gqa" else cfg.v_head_dim)
+        return 2.0 * n_active * shape.global_batch + kv_flops
+    if fam == "gnn":
+        cfg = arch.model_cfg
+        if shape.kind == "graph_batched":
+            n = shape.n_graphs * shape.nodes_per_graph
+            e = shape.n_graphs * shape.edges_per_graph
+            d_in = 16
+        elif shape.kind == "graph_sampled":
+            from ..launch.steps import sampled_caps
+            n, e = sampled_caps(shape)
+            d_in = shape.d_feat
+        else:
+            n, e = shape.n_nodes, shape.n_edges
+            d_in = shape.d_feat
+        dims = [d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [7]
+        dense = sum(2.0 * n * dims[i] * dims[i + 1] for i in range(cfg.n_layers))
+        msg = sum(2.0 * e * dims[i + 1] for i in range(cfg.n_layers))
+        mult = 3.0 if "train" in ("train",) else 1.0  # all GNN cells train: fwd+bwd
+        return 3.0 * (dense + msg)
+    if fam == "recsys":
+        import re
+        from ..layers.common import flatten_paths
+        emb_re = re.compile(r"(^|/)(tables|wide)(/|$)")
+        n_mlp = sum(
+            float(np.prod(leaf.shape)) for path, leaf in
+            flatten_paths(params_abstract).items() if not emb_re.search(path))
+        b = shape.n_candidates or shape.global_batch
+        mult = 6.0 if shape.kind == "train" else 2.0
+        flops = mult * n_mlp * b
+        if shape.kind == "retrieval" and arch.model_cfg.kind == "two_tower":
+            flops = 2.0 * n_mlp * 1 + 2.0 * shape.n_candidates * arch.model_cfg.d_out
+        return flops
+    if fam == "engine":
+        cfg = arch.model_cfg
+        # per query: ~visit_cap expansions x max_degree neighbors x 2d flops
+        sc = cfg.range_cfg.search
+        return (2.0 * shape.global_batch * sc.visit_cap * cfg.max_degree * cfg.dim)
+    return 0.0
+
+
+def make_report(arch, shape, mesh_name: str, chips: int, cost: dict,
+                mem: Any, analysis, model_flops: float,
+                note: str = "") -> RooflineReport:
+    # compiled.cost_analysis() and the HLO text describe the PARTITIONED
+    # per-device module; whole-program totals are x chips. The brief's
+    # "HLO_FLOPs / (chips * peak)" therefore reduces to per-device / peak.
+    #
+    # cost_analysis counts while bodies ONCE (verified) — for scanned
+    # programs we use the trip-count-aware HLO walk (analysis.dot_flops /
+    # hbm_bytes, analysis/hlo.py) instead. dot_flops excludes elementwise
+    # FLOPs (matmuls dominate); hbm_bytes is the operand+result traffic
+    # approximation (slightly conservative).
+    coll = analysis.collectives
+    flops_dev = max(float(cost.get("flops", 0.0)), analysis.dot_flops)
+    bytes_cost = float(cost.get("bytes accessed", 0.0))
+    bytes_dev = max(bytes_cost, analysis.hbm_bytes) if analysis.max_trip > 4 \
+        else bytes_cost
+    cbytes_dev = float(coll.total_operand_bytes)
+    flops = flops_dev * chips
+    byts = bytes_dev * chips
+    cbytes = cbytes_dev * chips
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = cbytes_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    step = max(compute_s, memory_s, collective_s)
+    mfu = model_flops / (chips * PEAK_FLOPS * step) if step > 0 else 0.0
+    mem_d = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_d[f] = int(v)
+    return RooflineReport(
+        arch_id=arch.arch_id, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, collective_bytes=cbytes,
+        collective_wire_bytes=float(coll.total_wire_bytes),
+        collective_summary=coll.summary(),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_ratio=(model_flops / flops) if flops else 0.0,
+        step_time_s=step, mfu=mfu, memory_per_device=mem_d, note=note)
+
+
+def save_reports(reports: list[RooflineReport], path: str):
+    with open(path, "w") as f:
+        json.dump([r.to_json() for r in reports], f, indent=1)
+
+
+def load_reports(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,51 @@
+"""deepseek-v2-236b [moe] — 60L d_model=5120 128H, MLA (kv_lora=512,
+q_lora=1536, rope_dim=64), MoE 160 routed top-6 + 2 shared (d_expert=1536),
+first layer dense (d_ff=12288), vocab=102400. [arXiv:2405.04434; hf]
+
+Memory note: 236B params train on 256 v5e chips only with bf16 parameter
+storage (fp32 moments): 0.47 TB params + 1.9 TB moments + 0.47 TB grads =
+~11 GB/chip — verified by the dry-run memory_analysis.
+"""
+import jax.numpy as jnp
+
+from ..dist.sharding import LM_RULES
+from ..models.transformer import TransformerConfig
+from ..optim.adamw import AdamWConfig
+from .common import ArchSpec, lm_shapes
+
+
+def reduced() -> TransformerConfig:
+    return TransformerConfig(
+        name="deepseek-smoke", n_layers=3, d_model=64, n_heads=4,
+        attn_kind="mla", q_lora=32, kv_lora=16, qk_nope_dim=16,
+        qk_rope_dim=8, v_head_dim=16, d_ff=128, n_experts=8, n_shared=2,
+        top_k=2, d_expert=32, first_dense=1, vocab=512,
+        capacity_factor=8.0,  # drop-free at smoke scale (decode parity)
+        dtype=jnp.float32, remat=False, loss_chunk=32)
+
+
+ARCH = ArchSpec(
+    arch_id="deepseek-v2-236b",
+    family="lm",
+    model_cfg=TransformerConfig(
+        name="deepseek-v2-236b", n_layers=60, d_model=5120, n_heads=128,
+        attn_kind="mla", q_lora=1536, kv_lora=512, qk_nope_dim=128,
+        qk_rope_dim=64, v_head_dim=128, d_ff=12288, n_experts=160,
+        n_shared=2, top_k=6, d_expert=1536, first_dense=1, moe_groups=32,
+        capacity_factor=1.25, vocab=102_400, rope_theta=10_000.0,
+        tie_embeddings=False, dtype=jnp.bfloat16, remat=True, loss_chunk=512,
+        attn_chunk=1024),
+    shapes=lm_shapes(),
+    rules=LM_RULES,
+    param_dtype=jnp.bfloat16,
+    accum_steps=4,
+    opt_cfg=AdamWConfig(lr=2.4e-4, total_steps=100_000, warmup_steps=2_000,
+                    moment_dtype=jnp.bfloat16, accum_dtype=jnp.bfloat16),
+    source="arXiv:2405.04434 (DeepSeek-V2); hf tier",
+    technique_note=(
+        "MoE LM: expert top-k routing is a selection over 160 experts — "
+        "unrelated scale to ANNS; technique inapplicable inside the model "
+        "(DESIGN.md §6). MLA cache (512+64 dims/token) is what makes the "
+        "long_500k decode cell cheap."),
+    reduced=reduced,
+)

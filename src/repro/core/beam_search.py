@@ -1,0 +1,271 @@
+"""Batched graph beam search with range-retrieval extensions.
+
+This implements the paper's Algorithms 1 (BeamSearch), 3/4 (EarlyStopping) and
+5 (DoublingSearch) as a single fixed-shape ``jax.lax.while_loop``:
+
+* The beam is a distance-sorted triple ``(ids, dists, expanded)`` of length
+  ``max_beam`` (the hardware allocation), of which only the first
+  ``active_width`` entries are *eligible for expansion* — ``active_width`` is
+  the paper's beam size ``b``.
+* **Doubling** (Alg. 5) is performed *in place*: when the active prefix is
+  fully expanded and at least ``lam * b`` of it is in-range, ``b`` doubles
+  (up to ``max_beam``) and the same loop continues. This is our TPU adaptation
+  A1 (see DESIGN.md §2): it visits a superset of the restart-based variant's
+  candidates with strictly fewer re-expansions.
+* **Early stopping** (Algs. 3/4) is evaluated before each expansion using one
+  of the paper's four metrics (``d_visited`` — the recommended one —
+  ``d_top1``, ``d_top10``, or ``d_top10 / d_start``). A search that has
+  already found an in-range candidate never early-stops (paper Sec. 4.3).
+* Every expansion is appended to a visited log (capacity ``visit_cap``); the
+  log is what Vamana's RobustPrune consumes at build time and what greedy
+  range search seeds from.
+
+Single-query semantics are written once and batched with ``jax.vmap``; the
+vmapped while-loop steps all queries until every lane is done (lanes that
+finish early are frozen by the batching rule — the query-compaction machinery
+in ``range_search.py`` exists precisely to bound that straggler effect).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import INVALID_ID
+from .distances import gather_dist, point_dist
+from .graph import Graph
+
+# Early-stop metric selector (paper Sec. 4.3). Static ints so jit specializes.
+ES_NONE = 0
+ES_D_VISITED = 1   # distance to the node being visited (paper's best)
+ES_D_TOP1 = 2      # distance to closest known neighbor
+ES_D_TOP10 = 3     # distance to 10th closest known neighbor
+ES_RATIO_TOP10 = 4 # d_top10 / d_start
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Static search hyper-parameters (hashable; a jit static argument)."""
+
+    beam: int = 64            # initial beam width b (paper's B)
+    max_beam: int = 64        # allocation; > beam enables in-place doubling
+    visit_cap: int = 256      # max expansions == visited-log capacity
+    lam: float = 1.0          # λ: in-range fraction of beam that triggers widening
+    es_metric: int = ES_NONE  # early-stopping metric (ES_*)
+    es_visit_limit: int = 20  # vl: expansions before early stop may trigger
+    metric: str = "l2"
+
+    def __post_init__(self):
+        if self.beam < 1 or self.max_beam < self.beam:
+            raise ValueError("need 1 <= beam <= max_beam")
+        if self.visit_cap < 1:
+            raise ValueError("visit_cap must be >= 1")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BeamState:
+    """Per-query search state (batched by vmap on the leading axis)."""
+
+    ids: jnp.ndarray        # (L,) int32, distance-sorted, INVALID_ID padded
+    dists: jnp.ndarray      # (L,) float32, +inf padded
+    expanded: jnp.ndarray   # (L,) bool
+    active_width: jnp.ndarray  # () int32 — the paper's b
+    n_visited: jnp.ndarray  # () int32
+    d_visited: jnp.ndarray  # () float32 — last expanded node's distance
+    d_start: jnp.ndarray    # () float32 — distance to the search entry point
+    visited_ids: jnp.ndarray    # (V,) int32 log of expanded nodes
+    visited_dists: jnp.ndarray  # (V,) float32
+    n_dist: jnp.ndarray     # () int32 distance-computation counter
+    es_stopped: jnp.ndarray # () bool — terminated by early stopping
+    done: jnp.ndarray       # () bool
+
+
+def _sorted_trunc(ids, dists, expanded, length: int):
+    """Sort (dists, ids, expanded) ascending by distance; keep first `length`."""
+    dists, ids, expanded = jax.lax.sort(
+        (dists, ids, expanded.astype(jnp.int32)), num_keys=1, is_stable=True
+    )
+    return ids[:length], dists[:length], expanded[:length].astype(bool)
+
+
+def init_state(
+    points: jnp.ndarray,
+    q: jnp.ndarray,
+    start_ids: jnp.ndarray,
+    cfg: SearchConfig,
+) -> BeamState:
+    """Seed the beam with the start points (usually the medoid)."""
+    L, V = cfg.max_beam, cfg.visit_cap
+    s = start_ids.astype(jnp.int32)
+    sd = gather_dist(points, s, q, cfg.metric)
+    # de-duplicate identical start ids (keep first)
+    dup = (s[:, None] == s[None, :]) & (jnp.arange(s.shape[0])[:, None] > jnp.arange(s.shape[0])[None, :])
+    is_dup = jnp.any(dup, axis=1)
+    sd = jnp.where(is_dup, jnp.inf, sd)
+    s = jnp.where(is_dup, INVALID_ID, s)
+
+    ids = jnp.full((L,), INVALID_ID, dtype=jnp.int32).at[: s.shape[0]].set(s)
+    dists = jnp.full((L,), jnp.inf, dtype=jnp.float32).at[: s.shape[0]].set(sd)
+    expanded = jnp.zeros((L,), dtype=bool)
+    ids, dists, expanded = _sorted_trunc(ids, dists, expanded, L)
+    return BeamState(
+        ids=ids,
+        dists=dists,
+        expanded=expanded,
+        active_width=jnp.asarray(cfg.beam, jnp.int32),
+        n_visited=jnp.asarray(0, jnp.int32),
+        d_visited=jnp.asarray(0.0, jnp.float32),
+        d_start=jnp.min(sd),
+        visited_ids=jnp.full((V,), INVALID_ID, dtype=jnp.int32),
+        visited_dists=jnp.full((V,), jnp.inf, dtype=jnp.float32),
+        n_dist=jnp.asarray(s.shape[0], jnp.int32),
+        es_stopped=jnp.asarray(False),
+        done=jnp.asarray(False),
+    )
+
+
+def _es_value(st: BeamState, cand_dist, cfg: SearchConfig):
+    if cfg.es_metric == ES_D_VISITED:
+        return cand_dist
+    if cfg.es_metric == ES_D_TOP1:
+        return st.dists[0]
+    if cfg.es_metric == ES_D_TOP10:
+        return st.dists[jnp.minimum(9, st.active_width - 1)]
+    if cfg.es_metric == ES_RATIO_TOP10:
+        return st.dists[jnp.minimum(9, st.active_width - 1)] / jnp.maximum(st.d_start, 1e-30)
+    return jnp.asarray(jnp.inf, jnp.float32)
+
+
+def in_range_count(st: BeamState, r, width: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Number of in-range entries within the first `width` beam slots."""
+    w = st.active_width if width is None else width
+    pos_ok = jnp.arange(st.ids.shape[0]) < w
+    return jnp.sum((st.dists <= r) & (st.ids != INVALID_ID) & pos_ok)
+
+
+def _step(points, graph: Graph, q, r, es_radius, cfg: SearchConfig, st: BeamState) -> BeamState:
+    L = cfg.max_beam
+    pos = jnp.arange(L)
+    eligible = (st.ids != INVALID_ID) & (~st.expanded) & (pos < st.active_width)
+    has_frontier = jnp.any(eligible)
+
+    # -- frontier exhausted at current width: widen (Alg. 5) or finish -------
+    saturated = in_range_count(st, r) >= jnp.ceil(cfg.lam * st.active_width.astype(jnp.float32)).astype(jnp.int32)
+    can_widen = (st.active_width < cfg.max_beam) & saturated
+    new_width = jnp.where(
+        ~has_frontier & can_widen,
+        jnp.minimum(st.active_width * 2, cfg.max_beam),
+        st.active_width,
+    )
+    finished = ~has_frontier & ~can_widen
+
+    # -- early stopping (Algs. 3/4), evaluated before the expansion ----------
+    idx = jnp.argmax(eligible)  # first eligible slot == closest unexpanded
+    cand_id = st.ids[idx]
+    cand_dist = st.dists[idx]
+    found_any = st.dists[0] <= r  # never stop once an in-range candidate is known
+    es_on = cfg.es_metric != ES_NONE
+    es_trigger = (
+        es_on
+        & has_frontier
+        & (~found_any)
+        & (st.n_visited >= cfg.es_visit_limit)
+        & (_es_value(st, cand_dist, cfg) > es_radius)
+    )
+
+    do_expand = has_frontier & (~es_trigger)
+
+    # -- expansion ------------------------------------------------------------
+    nbrs = graph.out_neighbors(cand_id)  # (R,)
+    nd = gather_dist(points, nbrs, q, cfg.metric)  # (R,) +inf for invalid
+    # intra-row duplicate suppression
+    rr = jnp.arange(nbrs.shape[0])
+    dup_in_row = jnp.any((nbrs[:, None] == nbrs[None, :]) & (rr[None, :] < rr[:, None]) & (nbrs[:, None] != INVALID_ID), axis=1)
+    # duplicates against the beam and the visited log
+    in_beam = jnp.any((nbrs[:, None] == st.ids[None, :]) & (nbrs[:, None] != INVALID_ID), axis=1)
+    in_visited = jnp.any((nbrs[:, None] == st.visited_ids[None, :]) & (nbrs[:, None] != INVALID_ID), axis=1)
+    fresh = (~dup_in_row) & (~in_beam) & (~in_visited)
+    nd = jnp.where(fresh, nd, jnp.inf)
+    nbr_ids = jnp.where(fresh, nbrs, INVALID_ID)
+
+    expanded = st.expanded.at[idx].set(True)
+    merged_ids = jnp.concatenate([st.ids, nbr_ids])
+    merged_dists = jnp.concatenate([st.dists, nd])
+    merged_exp = jnp.concatenate([expanded, jnp.zeros_like(fresh)])
+    m_ids, m_dists, m_exp = _sorted_trunc(merged_ids, merged_dists, merged_exp, L)
+
+    v_idx = jnp.minimum(st.n_visited, cfg.visit_cap - 1)
+    visited_ids = st.visited_ids.at[v_idx].set(cand_id)
+    visited_dists = st.visited_dists.at[v_idx].set(cand_dist)
+
+    exp_state = BeamState(
+        ids=m_ids,
+        dists=m_dists,
+        expanded=m_exp,
+        active_width=new_width,
+        n_visited=st.n_visited + 1,
+        d_visited=cand_dist,
+        d_start=st.d_start,
+        visited_ids=visited_ids,
+        visited_dists=visited_dists,
+        n_dist=st.n_dist + jnp.sum(nbrs != INVALID_ID).astype(jnp.int32),
+        es_stopped=st.es_stopped,
+        done=(st.n_visited + 1) >= cfg.visit_cap,
+    )
+
+    keep_state = dataclasses.replace(
+        st,
+        active_width=new_width,
+        es_stopped=st.es_stopped | es_trigger,
+        done=finished | es_trigger,
+    )
+
+    return jax.tree.map(
+        lambda a, b: jnp.where(do_expand, a, b), exp_state, keep_state
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def beam_search(
+    points: jnp.ndarray,
+    graph: Graph,
+    q: jnp.ndarray,
+    start_ids: jnp.ndarray,
+    r: jnp.ndarray,
+    cfg: SearchConfig,
+    es_radius: Optional[jnp.ndarray] = None,
+) -> BeamState:
+    """Run the search loop for one query. vmap over ``q`` for batches."""
+    esr = jnp.asarray(jnp.inf, jnp.float32) if es_radius is None else jnp.asarray(es_radius, jnp.float32)
+    r = jnp.asarray(r, jnp.float32)
+    st = init_state(points, q, start_ids, cfg)
+    st = jax.lax.while_loop(
+        lambda s: ~s.done,
+        lambda s: _step(points, graph, q, r, esr, cfg, s),
+        st,
+    )
+    return st
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def beam_search_batch(
+    points: jnp.ndarray,
+    graph: Graph,
+    queries: jnp.ndarray,  # (Q, d)
+    start_ids: jnp.ndarray,
+    r: jnp.ndarray,
+    cfg: SearchConfig,
+    es_radius: Optional[jnp.ndarray] = None,
+) -> BeamState:
+    esr = jnp.asarray(jnp.inf, jnp.float32) if es_radius is None else jnp.asarray(es_radius, jnp.float32)
+    fn = lambda q: beam_search(points, graph, q, start_ids, jnp.asarray(r, jnp.float32), cfg, esr)
+    return jax.vmap(fn)(queries)
+
+
+def topk_from_state(st: BeamState, k: int):
+    """Top-k (ids, dists) from a finished search (standard ANNS answer)."""
+    return st.ids[..., :k], st.dists[..., :k]

@@ -1,0 +1,243 @@
+"""Graph construction: Vamana (DiskANN) batch build, pure JAX.
+
+The paper's experiments use DiskANN's in-memory build (ParlayANN). We
+implement the same algorithm as fixed-shape batched dataflow:
+
+* prefix-doubling insertion batches (points inserted in random order; each
+  batch searches the current graph, RobustPrunes its visited set, then pushes
+  reverse edges which are themselves pruned when rows overflow);
+* RobustPrune (α-domination) vectorized as a ``fori_loop`` of masked argmin
+  selections;
+* reverse-edge packing by sort-by-destination + position-in-run arithmetic
+  (the fixed-shape replacement for per-node dynamic append).
+
+Batches are padded to a fixed maximum so the whole build reuses two jitted
+programs regardless of dataset size. Also provides a brute-force k-NN graph
+builder (small benchmarks, and the GNN `range_graph` data source).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils import INVALID_ID, cdiv
+from .beam_search import SearchConfig, beam_search_batch
+from .distances import gather_dist, point_dist
+from .graph import Graph, medoid
+from .ground_truth import exact_topk
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    max_degree: int = 32     # R
+    beam: int = 64           # L_build
+    alpha: float = 1.2
+    insert_batch: int = 1024 # padded batch width (fixed shape)
+    rev_cap: int = 8         # reverse-edge candidates accepted per node per batch
+    two_pass: bool = False   # DiskANN's alpha=1.0 first pass
+    metric: str = "l2"
+
+    @property
+    def search_cfg(self) -> SearchConfig:
+        return SearchConfig(beam=self.beam, max_beam=self.beam,
+                            visit_cap=max(2 * self.beam, 128), metric=self.metric)
+
+
+# ---------------------------------------------------------------------------
+# RobustPrune
+# ---------------------------------------------------------------------------
+
+def robust_prune(
+    points: jnp.ndarray,
+    p_vec: jnp.ndarray,       # (d,) the node being pruned
+    cand_ids: jnp.ndarray,    # (C,) candidate ids (may contain INVALID/dups)
+    cand_dists: jnp.ndarray,  # (C,) exact distances to p
+    alpha: float,
+    R: int,
+    metric: str = "l2",
+    self_id: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Vamana RobustPrune: returns (R,) selected out-neighbor ids."""
+    C = cand_ids.shape[0]
+    # drop invalid / self / duplicate candidates
+    valid = cand_ids != INVALID_ID
+    if self_id is not None:
+        valid &= cand_ids != self_id
+    order = jnp.arange(C)
+    dup = jnp.any((cand_ids[:, None] == cand_ids[None, :]) & (order[None, :] < order[:, None]) & valid[:, None], axis=1)
+    valid &= ~dup
+    dists = jnp.where(valid, cand_dists, jnp.inf)
+    n = points.shape[0]
+    safe = jnp.where(valid, cand_ids, 0)
+    cvecs = jnp.take(points, safe, axis=0)  # (C, d)
+
+    def body(i, carry):
+        mask, out = carry  # mask: still-candidate; out: (R,) selected
+        d_masked = jnp.where(mask, dists, jnp.inf)
+        j = jnp.argmin(d_masked)
+        ok = jnp.isfinite(d_masked[j])
+        sel_id = jnp.where(ok, cand_ids[j], INVALID_ID)
+        out = out.at[i].set(sel_id)
+        # α-domination: drop v with α·d(sel, v) <= d(p, v). The α scaling
+        # assumes non-negative distances (squared L2); IP distances are
+        # negative, so α degrades to plain domination there (the ParlayANN
+        # MIPS convention).
+        d_sel = point_dist(cvecs, cvecs[j], metric)  # (C,)
+        a = alpha if metric == "l2" else 1.0
+        dominated = a * d_sel <= dists
+        mask = mask & ~dominated & ok
+        mask = mask.at[j].set(False)
+        return mask, out
+
+    out0 = jnp.full((R,), INVALID_ID, jnp.int32)
+    _, out = jax.lax.fori_loop(0, R, body, (valid, out0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reverse-edge packing
+# ---------------------------------------------------------------------------
+
+def _pack_reverse(dst_flat: jnp.ndarray, src_flat: jnp.ndarray, rev_cap: int):
+    """Group (dst, src) edge pairs by dst.
+
+    Returns (unique_dst (U,), rev_srcs (U, rev_cap)) where U == len(dst_flat)
+    (INVALID-padded). At most ``rev_cap`` sources are kept per dst per call.
+    """
+    order = jnp.argsort(dst_flat, stable=True)
+    dst = dst_flat[order]
+    src = src_flat[order]
+    m = dst.shape[0]
+    idx = jnp.arange(m)
+    is_start = jnp.concatenate([jnp.array([True]), dst[1:] != dst[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    pos_in_run = idx - run_start
+    # one row per run start
+    uniq_dst = jnp.where(is_start & (dst != INVALID_ID), dst, INVALID_ID)
+    # rev_srcs[u, k] = src at run_start(u) + k if within the run
+    take = run_start[:, None] + jnp.arange(rev_cap)[None, :]
+    take = jnp.minimum(take, m - 1)
+    cand = src[take]
+    same_run = dst[take] == dst[:, None]
+    in_cap = pos_in_run[take] < rev_cap  # always true by construction
+    ok = same_run & in_cap & is_start[:, None] & (dst[:, None] != INVALID_ID)
+    return uniq_dst, jnp.where(ok, cand, INVALID_ID)
+
+
+# ---------------------------------------------------------------------------
+# Batch insert
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "alpha"))
+def _insert_batch(
+    points: jnp.ndarray,
+    nbr_rows: jnp.ndarray,      # (N, R) current adjacency
+    batch_ids: jnp.ndarray,     # (B,) padded with INVALID
+    start_id: jnp.ndarray,
+    cfg: BuildConfig,
+    alpha: float,
+) -> jnp.ndarray:
+    graph = Graph(neighbors=nbr_rows)
+    R = cfg.max_degree
+    n = points.shape[0]
+    active = batch_ids != INVALID_ID
+    safe_ids = jnp.where(active, batch_ids, 0)
+    qs = jnp.take(points, safe_ids, axis=0)  # (B, d)
+
+    # 1. search the current graph from the medoid
+    st = beam_search_batch(points, graph, qs, start_id[None], jnp.asarray(jnp.inf, jnp.float32), cfg.search_cfg)
+
+    # 2. RobustPrune over visited ∪ beam candidates
+    cand_ids = jnp.concatenate([st.visited_ids, st.ids], axis=1)
+    cand_dists = jnp.concatenate([st.visited_dists, st.dists], axis=1)
+    prune = jax.vmap(partial(robust_prune, points, alpha=alpha, R=R, metric=cfg.metric))
+    new_rows = prune(qs, cand_ids=cand_ids, cand_dists=cand_dists, self_id=safe_ids)
+    new_rows = jnp.where(active[:, None], new_rows, INVALID_ID)
+    nbr_rows = nbr_rows.at[safe_ids].set(jnp.where(active[:, None], new_rows, nbr_rows[safe_ids]))
+
+    # 3. reverse edges: candidate (dst=new neighbor, src=inserted point)
+    B = batch_ids.shape[0]
+    dst_flat = new_rows.reshape(-1)
+    src_flat = jnp.broadcast_to(batch_ids[:, None], (B, R)).reshape(-1)
+    src_flat = jnp.where(dst_flat != INVALID_ID, src_flat, INVALID_ID)
+    uniq_dst, rev_srcs = _pack_reverse(dst_flat, src_flat, cfg.rev_cap)
+
+    # 4. merge + prune overflowing rows (chunked to bound memory)
+    def fix_row(dst, revs):
+        ok = dst != INVALID_ID
+        dstv = jnp.where(ok, dst, 0)
+        cur = nbr_rows[dstv]  # (R,)
+        merged = jnp.concatenate([cur, revs])  # (R + rev_cap,)
+        # dedup + drop self
+        order = jnp.arange(merged.shape[0])
+        m_valid = (merged != INVALID_ID) & (merged != dstv)
+        dup = jnp.any((merged[:, None] == merged[None, :]) & (order[None, :] < order[:, None]) & m_valid[:, None], axis=1)
+        m_valid &= ~dup
+        merged = jnp.where(m_valid, merged, INVALID_ID)
+        n_valid = jnp.sum(m_valid)
+        pvec = points[dstv]
+        dists = gather_dist(points, merged, pvec, cfg.metric)
+        pruned = robust_prune(points, pvec, merged, dists, alpha, R, cfg.metric, self_id=dstv)
+        # no overflow -> keep merged as-is (sorted: valid first)
+        merged_sorted = jnp.sort(jnp.where(m_valid, merged, INVALID_ID))[:R]
+        row = jnp.where(n_valid > R, pruned, merged_sorted)
+        return jnp.where(ok, row, jnp.full((R,), INVALID_ID, jnp.int32)), dstv, ok
+
+    rows, dstv, ok = jax.lax.map(lambda t: fix_row(*t), (uniq_dst, rev_srcs), batch_size=1024)
+    nbr_rows = nbr_rows.at[dstv].set(jnp.where(ok[:, None], rows, nbr_rows[dstv]))
+    return nbr_rows
+
+
+def build_vamana(
+    points: jnp.ndarray,
+    cfg: BuildConfig = BuildConfig(),
+    seed: int = 0,
+    verbose: bool = False,
+) -> Graph:
+    """Prefix-doubling Vamana batch build (ParlayANN-style)."""
+    n = points.shape[0]
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n).astype(np.int32)
+    start = medoid(points)
+    nbr_rows = jnp.full((n, cfg.max_degree), INVALID_ID, jnp.int32)
+    # seed: connect the medoid to a few random points so the first searches move
+    seed_ids = jnp.asarray(order[: cfg.max_degree], jnp.int32)
+    nbr_rows = nbr_rows.at[start].set(jnp.where(seed_ids == start, INVALID_ID, seed_ids))
+
+    passes = [1.0, cfg.alpha] if cfg.two_pass else [cfg.alpha]
+    B = cfg.insert_batch
+    for alpha in passes:
+        done = 0
+        bsize = max(1, min(64, B))
+        while done < n:
+            take = min(bsize, n - done, B)
+            batch = np.full((B,), INVALID_ID, dtype=np.int32)
+            batch[:take] = order[done : done + take]
+            nbr_rows = _insert_batch(points, nbr_rows, jnp.asarray(batch), start, cfg, alpha)
+            done += take
+            bsize = min(bsize * 2, B)
+            if verbose:
+                print(f"  [build α={alpha}] inserted {done}/{n}")
+    return Graph(neighbors=nbr_rows)
+
+
+def build_knn_graph(
+    points: jnp.ndarray,
+    k: int = 16,
+    metric: str = "l2",
+    mutual: bool = False,
+) -> Graph:
+    """Brute-force k-NN graph (small corpora, GNN data source)."""
+    ids, _ = exact_topk(points, points, k=k + 1, metric=metric)
+    # drop self column
+    row = jnp.arange(points.shape[0], dtype=jnp.int32)[:, None]
+    keep = ids != row
+    # compact each row: move self (if present) to the end, then take k
+    sort_key = jnp.where(keep, jnp.arange(k + 1)[None, :], k + 1)
+    order = jnp.argsort(sort_key, axis=1)
+    ids = jnp.take_along_axis(ids, order, axis=1)[:, :k]
+    return Graph(neighbors=ids.astype(jnp.int32))

@@ -1,0 +1,68 @@
+"""Distance functions for the range-retrieval engine.
+
+Two metrics, matching the paper (Sec. 2):
+
+* ``"l2"``  — squared Euclidean distance. We use the *squared* form internally
+  (monotone in true L2, and radii in the big-ann-benchmarks range track —
+  e.g. SSNPP's 96237, BIGANN's 10000 — are already squared-L2 values).
+* ``"ip"``  — negative inner product (maximum-inner-product search as a
+  distance). Radii may be negative (e.g. Wikipedia's -10.5 means
+  ``dot(p, q) >= 10.5``).
+
+All functions support a blocked matmul formulation so the MXU does the work:
+``||q - x||^2 = ||q||^2 + ||x||^2 - 2 q.x``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+METRICS = ("l2", "ip")
+
+
+def _check(metric: str) -> None:
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r}; expected one of {METRICS}")
+
+
+def point_dist(x: jnp.ndarray, q: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """Distance between broadcastable point arrays along the last axis."""
+    _check(metric)
+    if metric == "l2":
+        d = x - q
+        return jnp.sum(d * d, axis=-1)
+    return -jnp.sum(x * q, axis=-1)
+
+
+def pairwise_dist(queries: jnp.ndarray, points: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """(Q, d) x (N, d) -> (Q, N) distance matrix via a single matmul."""
+    _check(metric)
+    dots = queries @ points.T
+    if metric == "ip":
+        return -dots
+    qn = jnp.sum(queries * queries, axis=-1, keepdims=True)
+    pn = jnp.sum(points * points, axis=-1, keepdims=True)
+    return jnp.maximum(qn + pn.T - 2.0 * dots, 0.0)
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def gather_dist(
+    points: jnp.ndarray,  # (N, d) database
+    ids: jnp.ndarray,     # (..., R) int32 candidate ids (may contain INVALID)
+    q: jnp.ndarray,       # (..., d) query, broadcastable against ids' batch dims
+    metric: str = "l2",
+) -> jnp.ndarray:
+    """Distances from q to points[ids]; padded/invalid ids get +inf."""
+    _check(metric)
+    n = points.shape[0]
+    valid = ids < n
+    safe = jnp.where(valid, ids, 0)
+    vecs = jnp.take(points, safe, axis=0)  # (..., R, d)
+    # distance arithmetic in f32 regardless of corpus storage dtype — a
+    # bf16-stored corpus halves the gather traffic (the engine's dominant
+    # roofline term; EXPERIMENTS.md §Perf C) without moving the decision
+    # boundary (error ~1e-3 relative, radii are O(1))
+    d = point_dist(vecs.astype(jnp.float32), q.astype(jnp.float32)[..., None, :], metric)
+    return jnp.where(valid, d, jnp.inf)

@@ -1,0 +1,80 @@
+"""RangeSearchEngine — the paper's contribution as one composable object.
+
+One graph index serves both top-k and range queries (the paper's stated
+goal). Single-shard here; ``repro.dist.sharded_engine`` wraps this in
+shard_map for the multi-shard production layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils import INVALID_ID
+from .beam_search import SearchConfig, beam_search_batch, topk_from_state
+from .build import BuildConfig, build_vamana
+from .graph import Graph, medoid, start_points
+from .range_search import RangeConfig, RangeResult, range_search_compacted, range_search_fused
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RangeSearchEngine:
+    """An in-memory graph index over a vector corpus."""
+
+    points: jnp.ndarray    # (N, d)
+    graph: Graph
+    start_ids: jnp.ndarray # (S,) search entry points (medoid by default)
+    metric: str = dataclasses.field(metadata=dict(static=True), default="l2")
+
+    # -- construction -------------------------------------------------------
+    @staticmethod
+    def build(points: jnp.ndarray, build_cfg: Optional[BuildConfig] = None,
+              metric: str = "l2", seed: int = 0,
+              n_starts: int = 4) -> "RangeSearchEngine":
+        cfg = build_cfg or BuildConfig(metric=metric)
+        graph = build_vamana(points, cfg, seed=seed)
+        return RangeSearchEngine(points=points, graph=graph,
+                                 start_ids=start_points(points, metric, n_starts),
+                                 metric=metric)
+
+    @staticmethod
+    def from_graph(points: jnp.ndarray, graph: Graph, metric: str = "l2",
+                   n_starts: int = 4) -> "RangeSearchEngine":
+        return RangeSearchEngine(points=points, graph=graph,
+                                 start_ids=start_points(points, metric, n_starts),
+                                 metric=metric)
+
+    # -- queries -------------------------------------------------------------
+    def topk(self, queries: jnp.ndarray, k: int = 10,
+             cfg: Optional[SearchConfig] = None):
+        cfg = cfg or SearchConfig(beam=max(2 * k, 32), max_beam=max(2 * k, 32),
+                                  visit_cap=max(4 * k, 128), metric=self.metric)
+        st = beam_search_batch(self.points, self.graph, queries, self.start_ids,
+                               jnp.asarray(jnp.inf, jnp.float32), cfg)
+        return topk_from_state(st, k)
+
+    def range(self, queries: jnp.ndarray, r: float,
+              cfg: Optional[RangeConfig] = None,
+              es_radius: Optional[float] = None,
+              compacted: bool = True) -> RangeResult:
+        cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
+        if cfg.search.metric != self.metric:
+            cfg = dataclasses.replace(cfg, search=dataclasses.replace(cfg.search, metric=self.metric))
+        fn = range_search_compacted if compacted else range_search_fused
+        return fn(self.points, self.graph, queries, self.start_ids, r, cfg, es_radius)
+
+    # -- introspection -------------------------------------------------------
+    def stats(self) -> dict:
+        deg = np.asarray(self.graph.degrees())
+        return dict(
+            num_points=int(self.points.shape[0]),
+            dim=int(self.points.shape[1]),
+            max_degree=int(self.graph.max_degree),
+            mean_degree=float(deg.mean()),
+            min_degree=int(deg.min()),
+            metric=self.metric,
+        )

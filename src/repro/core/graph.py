@@ -1,0 +1,98 @@
+"""Proximity-graph container.
+
+The CPU reference (ParlayANN) stores per-node adjacency as dynamic vectors.
+The TPU-native layout is a dense padded matrix:
+
+    neighbors : (N, R) int32, row i = out-neighbors of node i,
+                padded with INVALID_ID (sorts/clips to the end).
+
+This is the layout every kernel and search loop consumes; it is also the
+layout checkpointed to disk.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils import INVALID_ID
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Padded fixed-degree adjacency."""
+
+    neighbors: jnp.ndarray  # (N, R) int32, INVALID_ID padded
+
+    @property
+    def num_nodes(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    def degrees(self) -> jnp.ndarray:
+        return jnp.sum(self.neighbors != INVALID_ID, axis=1)
+
+    def out_neighbors(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """Gather adjacency rows; invalid ids yield all-INVALID rows."""
+        n = self.num_nodes
+        valid = ids < n
+        safe = jnp.where(valid, ids, 0)
+        rows = jnp.take(self.neighbors, safe, axis=0)
+        return jnp.where(valid[..., None], rows, INVALID_ID)
+
+
+def from_lists(lists: list[list[int]], max_degree: Optional[int] = None) -> Graph:
+    """Build a Graph from python adjacency lists (testing convenience)."""
+    r = max_degree if max_degree is not None else max((len(l) for l in lists), default=1)
+    r = max(r, 1)
+    out = np.full((len(lists), r), INVALID_ID, dtype=np.int32)
+    for i, l in enumerate(lists):
+        if len(l) > r:
+            raise ValueError(f"node {i} has degree {len(l)} > max_degree {r}")
+        out[i, : len(l)] = np.asarray(l, dtype=np.int32)
+    return Graph(neighbors=jnp.asarray(out))
+
+
+def random_regular(key: jax.Array, n: int, degree: int) -> Graph:
+    """Random out-degree-``degree`` digraph (Vamana's initialization)."""
+    nbrs = jax.random.randint(key, (n, degree), 0, n, dtype=jnp.int32)
+    # avoid trivial self loops (shift by 1 mod n where equal to row id)
+    row = jnp.arange(n, dtype=jnp.int32)[:, None]
+    nbrs = jnp.where(nbrs == row, (nbrs + 1) % n, nbrs)
+    return Graph(neighbors=nbrs)
+
+
+def medoid(points: jnp.ndarray) -> jnp.ndarray:
+    """Index of the point closest to the dataset centroid (search entry)."""
+    c = jnp.mean(points, axis=0, keepdims=True)
+    d = jnp.sum((points - c) ** 2, axis=-1)
+    return jnp.argmin(d).astype(jnp.int32)
+
+
+def start_points(points: jnp.ndarray, metric: str = "l2", k: int = 1) -> jnp.ndarray:
+    """Search entry points.
+
+    L2: the medoid plus k-1 *spread* points (k-means++-style farthest-point
+    selection) — multiple well-separated entries make graph navigation
+    robust to weakly-connected regions (beyond-paper robustness tweak,
+    recorded in EXPERIMENTS.md).
+    MIPS: the top-norm points (high-norm points dominate inner products).
+    """
+    if metric == "ip":
+        norms = jnp.sum(points * points, axis=-1)
+        _, idx = jax.lax.top_k(norms, k)
+        return idx.astype(jnp.int32)
+    starts = [medoid(points)]
+    mind = None
+    for _ in range(k - 1):
+        ds = jnp.sum((points - points[starts[-1]]) ** 2, axis=-1)
+        mind = ds if mind is None else jnp.minimum(mind, ds)
+        starts.append(jnp.argmax(mind).astype(jnp.int32))
+    return jnp.stack(starts).astype(jnp.int32)

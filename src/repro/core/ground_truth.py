@@ -1,0 +1,121 @@
+"""Exact (brute-force) range search and top-k — the oracle for everything.
+
+Blocked over the database so memory stays bounded; the inner block distance is
+a single matmul (MXU-shaped). ``kernels/rangescan`` is the Pallas version of
+the same computation; this module is the reference and the CPU path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils import INVALID_ID, cdiv
+from .distances import pairwise_dist
+
+
+@partial(jax.jit, static_argnames=("metric", "cap", "block"))
+def exact_range_search(
+    points: jnp.ndarray,   # (N, d)
+    queries: jnp.ndarray,  # (Q, d)
+    r: jnp.ndarray,
+    metric: str = "l2",
+    cap: int = 4096,
+    block: int = 8192,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (ids (Q, cap), dists (Q, cap), counts (Q,)).
+
+    ``counts`` is exact even when it exceeds ``cap``; ids/dists keep the
+    ``cap`` closest in-range points (sorted ascending).
+    """
+    n, d = points.shape
+    q = queries.shape[0]
+    r = jnp.asarray(r, jnp.float32)
+    nb = cdiv(n, block)
+    npad = nb * block
+    pts = jnp.pad(points, ((0, npad - n), (0, 0)))
+
+    def body(carry, bi):
+        ids, dists, counts = carry
+        start = bi * block
+        blk = jax.lax.dynamic_slice_in_dim(pts, start, block, axis=0)
+        bd = pairwise_dist(queries, blk, metric)  # (Q, block)
+        bids = start + jnp.arange(block, dtype=jnp.int32)
+        ok = (bd <= r) & (bids[None, :] < n)
+        counts = counts + jnp.sum(ok, axis=1).astype(jnp.int32)
+        bd = jnp.where(ok, bd, jnp.inf)
+        bi_ids = jnp.where(ok, bids[None, :], INVALID_ID)
+        md = jnp.concatenate([dists, bd], axis=1)
+        mi = jnp.concatenate([ids, jnp.broadcast_to(bi_ids, (q, block))], axis=1)
+        md, mi = jax.lax.sort((md, mi), num_keys=1, is_stable=True)
+        return (mi[:, :cap], md[:, :cap], counts), None
+
+    ids0 = jnp.full((q, cap), INVALID_ID, jnp.int32)
+    dists0 = jnp.full((q, cap), jnp.inf, jnp.float32)
+    counts0 = jnp.zeros((q,), jnp.int32)
+    (ids, dists, counts), _ = jax.lax.scan(body, (ids0, dists0, counts0), jnp.arange(nb))
+    return ids, dists, counts
+
+
+@partial(jax.jit, static_argnames=("metric", "k", "block"))
+def exact_topk(
+    points: jnp.ndarray,
+    queries: jnp.ndarray,
+    k: int = 10,
+    metric: str = "l2",
+    block: int = 8192,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact k nearest neighbors: (ids (Q, k), dists (Q, k))."""
+    n, d = points.shape
+    q = queries.shape[0]
+    nb = cdiv(n, block)
+    npad = nb * block
+    pts = jnp.pad(points, ((0, npad - n), (0, 0)))
+
+    def body(carry, bi):
+        ids, dists = carry
+        start = bi * block
+        blk = jax.lax.dynamic_slice_in_dim(pts, start, block, axis=0)
+        bd = pairwise_dist(queries, blk, metric)
+        bids = start + jnp.arange(block, dtype=jnp.int32)
+        valid = bids[None, :] < n
+        bd = jnp.where(valid, bd, jnp.inf)
+        md = jnp.concatenate([dists, bd], axis=1)
+        mi = jnp.concatenate([ids, jnp.broadcast_to(jnp.where(valid, bids[None, :], INVALID_ID), (q, block))], axis=1)
+        md, mi = jax.lax.sort((md, mi), num_keys=1, is_stable=True)
+        return (mi[:, :k], md[:, :k]), None
+
+    ids0 = jnp.full((q, k), INVALID_ID, jnp.int32)
+    dists0 = jnp.full((q, k), jnp.inf, jnp.float32)
+    (ids, dists), _ = jax.lax.scan(body, (ids0, dists0), jnp.arange(nb))
+    return ids, dists
+
+
+@partial(jax.jit, static_argnames=("metric", "block"))
+def range_counts_at(
+    points: jnp.ndarray,
+    queries: jnp.ndarray,
+    radii: jnp.ndarray,  # (G,) radius grid
+    metric: str = "l2",
+    block: int = 2048,
+) -> jnp.ndarray:
+    """(Q, G) exact match counts at each radius (Sec. 3 capture curves)."""
+    n, _ = points.shape
+    q = queries.shape[0]
+    nb = cdiv(n, block)
+    npad = nb * block
+    pts = jnp.pad(points, ((0, npad - n), (0, 0)))
+
+    def body(counts, bi):
+        start = bi * block
+        blk = jax.lax.dynamic_slice_in_dim(pts, start, block, axis=0)
+        bd = pairwise_dist(queries, blk, metric)  # (Q, block)
+        valid = (start + jnp.arange(block)) < n
+        hit = (bd[:, :, None] <= radii[None, None, :]) & valid[None, :, None]
+        return counts + jnp.sum(hit, axis=1).astype(jnp.int32), None
+
+    counts0 = jnp.zeros((q, radii.shape[0]), jnp.int32)
+    counts, _ = jax.lax.scan(body, counts0, jnp.arange(nb))
+    return counts

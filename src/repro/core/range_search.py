@@ -1,0 +1,304 @@
+"""Range-retrieval algorithms on top of the beam search (paper Algs. 2/5/6).
+
+Three modes, matching the paper:
+
+* ``"beam"``     — the naive baseline: one beam search, filter the beam by r.
+* ``"doubling"`` — Alg. 5 via in-place beam widening (``max_beam > beam``).
+* ``"greedy"``   — Alg. 6: initial beam search; queries whose beam is
+  saturated with in-range results continue with Alg. 2 (expand only in-range
+  nodes, unbounded queue -> fixed-capacity result buffer + overflow counter).
+
+Batched execution is two-phase with **query compaction** (DESIGN.md §2): the
+uniform phase 1 runs over the whole batch; the irregular phase 2 runs only on
+the compacted subset of queries that need it (bucketed to powers of two so jit
+compiles O(log Q) variants). ``range_search_fused`` keeps everything in one
+XLA program (no host sync) for dry-run lowering and single-dispatch serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils import INVALID_ID, next_pow2
+from .beam_search import (
+    BeamState,
+    SearchConfig,
+    beam_search_batch,
+    in_range_count,
+)
+from .distances import gather_dist
+from .graph import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeConfig:
+    """Static configuration for a range query batch."""
+
+    search: SearchConfig = dataclasses.field(default_factory=SearchConfig)
+    mode: str = "greedy"          # beam | doubling | greedy
+    result_cap: int = 1024        # K_cap: per-query result buffer
+    frontier_rounds: int = 4096   # greedy expansion budget (expansions/query)
+    lam: float = 1.0              # λ threshold for entering phase 2
+
+    def __post_init__(self):
+        if self.mode not in ("beam", "doubling", "greedy"):
+            raise ValueError(f"bad mode {self.mode!r}")
+        if self.mode == "doubling" and self.search.max_beam <= self.search.beam:
+            raise ValueError("doubling mode needs search.max_beam > search.beam")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RangeResult:
+    """Batched range-query output (all arrays INVALID/inf padded)."""
+
+    ids: jnp.ndarray       # (Q, K) int32
+    dists: jnp.ndarray     # (Q, K) float32
+    count: jnp.ndarray     # (Q,) int32 — number of valid entries
+    overflow: jnp.ndarray  # (Q,) bool — K_cap or budget exceeded
+    n_visited: jnp.ndarray # (Q,) int32 — phase-1 expansions
+    n_dist: jnp.ndarray    # (Q,) int32 — total distance computations
+    es_stopped: jnp.ndarray  # (Q,) bool
+    phase2: jnp.ndarray    # (Q,) bool — query took the second phase
+
+
+# ---------------------------------------------------------------------------
+# Greedy continuation (paper Alg. 2), fixed-shape form.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GreedyState:
+    res_ids: jnp.ndarray    # (K,) int32 — every id here is in-range
+    res_dists: jnp.ndarray  # (K,) float32
+    res_count: jnp.ndarray  # () int32
+    expand_ptr: jnp.ndarray # () int32
+    rounds: jnp.ndarray     # () int32
+    overflow: jnp.ndarray   # () bool
+    n_dist: jnp.ndarray     # () int32
+
+
+def _greedy_init(st: BeamState, r, cap: int) -> GreedyState:
+    """Seed the result buffer with every in-range node whose exact distance is
+    already known: the visited log plus unexpanded in-range beam entries
+    (disjoint by construction — expanded beam nodes are in the log)."""
+    v_ok = st.visited_dists <= r
+    b_ok = (st.dists <= r) & (~st.expanded) & (st.ids != INVALID_ID)
+    ids = jnp.concatenate([jnp.where(v_ok, st.visited_ids, INVALID_ID),
+                           jnp.where(b_ok, st.ids, INVALID_ID)])
+    dists = jnp.concatenate([jnp.where(v_ok, st.visited_dists, jnp.inf),
+                             jnp.where(b_ok, st.dists, jnp.inf)])
+    # pack in-range entries to the front, closest first (paper pops
+    # closest-first; our FIFO expansion then visits in that order)
+    dists, ids = jax.lax.sort((dists, ids), num_keys=1, is_stable=True)
+    k = min(cap, ids.shape[0])
+    res_ids = jnp.full((cap,), INVALID_ID, jnp.int32).at[:k].set(ids[:k])
+    res_dists = jnp.full((cap,), jnp.inf, jnp.float32).at[:k].set(dists[:k])
+    total = jnp.sum(jnp.isfinite(dists))
+    count = jnp.minimum(total, cap)
+    return GreedyState(
+        res_ids=res_ids,
+        res_dists=res_dists,
+        res_count=count.astype(jnp.int32),
+        expand_ptr=jnp.asarray(0, jnp.int32),
+        rounds=jnp.asarray(0, jnp.int32),
+        overflow=(total > cap),
+        n_dist=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _greedy_step(points, graph: Graph, q, r, cap: int, metric: str, gs: GreedyState) -> GreedyState:
+    node = gs.res_ids[gs.expand_ptr]
+    nbrs = graph.out_neighbors(node)  # (R,)
+    nd = gather_dist(points, nbrs, q, metric)
+    rr = jnp.arange(nbrs.shape[0])
+    dup_in_row = jnp.any(
+        (nbrs[:, None] == nbrs[None, :]) & (rr[None, :] < rr[:, None]) & (nbrs[:, None] != INVALID_ID),
+        axis=1,
+    )
+    seen = jnp.any((nbrs[:, None] == gs.res_ids[None, :]) & (nbrs[:, None] != INVALID_ID), axis=1)
+    new = (nd <= r) & (~dup_in_row) & (~seen) & (nbrs != INVALID_ID)
+    pos = gs.res_count + jnp.cumsum(new.astype(jnp.int32)) - 1
+    write_pos = jnp.where(new & (pos < cap), pos, cap)  # cap == OOB -> dropped
+    res_ids = gs.res_ids.at[write_pos].set(nbrs, mode="drop")
+    res_dists = gs.res_dists.at[write_pos].set(nd, mode="drop")
+    n_new = jnp.sum(new.astype(jnp.int32))
+    return GreedyState(
+        res_ids=res_ids,
+        res_dists=res_dists,
+        res_count=jnp.minimum(gs.res_count + n_new, cap),
+        expand_ptr=gs.expand_ptr + 1,
+        rounds=gs.rounds + 1,
+        overflow=gs.overflow | (gs.res_count + n_new > cap),
+        n_dist=gs.n_dist + jnp.sum(nbrs != INVALID_ID).astype(jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("cap", "rounds", "metric"))
+def greedy_search(
+    points, graph: Graph, q, r, st: BeamState,
+    cap: int, rounds: int, metric: str, active: bool | jnp.ndarray = True,
+) -> GreedyState:
+    """Paper Alg. 2 from a finished beam state. ``active=False`` lanes no-op."""
+    gs = _greedy_init(st, r, cap)
+    if not isinstance(active, jnp.ndarray):
+        active = jnp.asarray(active)
+
+    def cond(g: GreedyState):
+        return active & (g.expand_ptr < g.res_count) & (g.rounds < rounds)
+
+    gs = jax.lax.while_loop(cond, lambda g: _greedy_step(points, graph, q, r, cap, metric, g), gs)
+    gs = dataclasses.replace(gs, overflow=gs.overflow | (gs.expand_ptr < gs.res_count))
+    return gs
+
+
+# ---------------------------------------------------------------------------
+# Result extraction
+# ---------------------------------------------------------------------------
+
+def _beam_results(st: BeamState, r, cap: int):
+    """Paper baseline/doubling answer: in-range entries of the active beam."""
+    pos = jnp.arange(st.ids.shape[0])
+    ok = (st.dists <= r) & (st.ids != INVALID_ID) & (pos < st.active_width)
+    dists = jnp.where(ok, st.dists, jnp.inf)
+    ids = jnp.where(ok, st.ids, INVALID_ID)
+    dists, ids = jax.lax.sort((dists, ids), num_keys=1, is_stable=True)
+    k = min(cap, ids.shape[0])
+    out_ids = jnp.full((cap,), INVALID_ID, jnp.int32).at[:k].set(ids[:k])
+    out_dists = jnp.full((cap,), jnp.inf, jnp.float32).at[:k].set(dists[:k])
+    count = jnp.minimum(jnp.sum(ok), cap).astype(jnp.int32)
+    return out_ids, out_dists, count, jnp.sum(ok) > cap
+
+
+def _needs_phase2(st: BeamState, r, lam: float) -> jnp.ndarray:
+    """Paper Alg. 6 trigger: the size-b beam is λ-saturated with results."""
+    thresh = jnp.ceil(lam * st.active_width.astype(jnp.float32)).astype(jnp.int32)
+    return in_range_count(st, r) >= jnp.maximum(thresh, 1)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-program batch (used by dry-run lowering + single-dispatch serve)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def range_search_fused(
+    points: jnp.ndarray,
+    graph: Graph,
+    queries: jnp.ndarray,
+    start_ids: jnp.ndarray,
+    r: jnp.ndarray,
+    cfg: RangeConfig,
+    es_radius: Optional[jnp.ndarray] = None,
+) -> RangeResult:
+    r = jnp.asarray(r, jnp.float32)
+    st = beam_search_batch(points, graph, queries, start_ids, r, cfg.search, es_radius)
+
+    if cfg.mode in ("beam", "doubling"):
+        ids, dists, count, over = jax.vmap(partial(_beam_results, r=r, cap=cfg.result_cap))(st)
+        phase2 = (st.active_width > cfg.search.beam) if cfg.mode == "doubling" else jnp.zeros_like(st.done)
+        return RangeResult(ids=ids, dists=dists, count=count, overflow=over,
+                           n_visited=st.n_visited, n_dist=st.n_dist,
+                           es_stopped=st.es_stopped, phase2=phase2)
+
+    # greedy: phase 2 only for saturated lanes (masked, not compacted)
+    active = jax.vmap(partial(_needs_phase2, r=r, lam=cfg.lam))(st)
+    gfn = lambda q_, st_, a_: greedy_search(
+        points, graph, q_, r, st_, cfg.result_cap, cfg.frontier_rounds, cfg.search.metric, a_
+    )
+    gs = jax.vmap(gfn)(queries, st, active)
+    b_ids, b_dists, b_count, b_over = jax.vmap(partial(_beam_results, r=r, cap=cfg.result_cap))(st)
+    ids = jnp.where(active[:, None], gs.res_ids, b_ids)
+    dists = jnp.where(active[:, None], gs.res_dists, b_dists)
+    count = jnp.where(active, gs.res_count, b_count)
+    over = jnp.where(active, gs.overflow, b_over)
+    return RangeResult(ids=ids, dists=dists, count=count, overflow=over,
+                       n_visited=st.n_visited, n_dist=st.n_dist + jnp.where(active, gs.n_dist, 0),
+                       es_stopped=st.es_stopped, phase2=active)
+
+
+# ---------------------------------------------------------------------------
+# Two-phase pipeline with host-side query compaction (the QPS path)
+# ---------------------------------------------------------------------------
+
+def range_search_compacted(
+    points: jnp.ndarray,
+    graph: Graph,
+    queries: jnp.ndarray,
+    start_ids: jnp.ndarray,
+    r: float,
+    cfg: RangeConfig,
+    es_radius: Optional[float] = None,
+) -> RangeResult:
+    """Phase 1 over the whole batch; phase 2 over the compacted survivors.
+
+    The survivor subset is padded to the next power of two, so jit compiles at
+    most O(log Q) phase-2 variants. This bounds the batched-while straggler
+    effect: lanes with zero results never enter the expensive loop at all.
+    """
+    rj = jnp.asarray(r, jnp.float32)
+    # phase 1 runs at the BASE beam for every mode (for doubling this is the
+    # §Perf iteration C3 change: in-place widening inside the batched while
+    # made every lane wait for the widest one — a 10x QPS straggler penalty;
+    # the paper's restart-style doubling now runs on the compacted survivors
+    # only, like greedy)
+    p1_search = cfg.search if cfg.mode != "doubling" else dataclasses.replace(
+        cfg.search, max_beam=cfg.search.beam,
+        visit_cap=min(cfg.search.visit_cap, 4 * cfg.search.beam))
+    st = beam_search_batch(points, graph, queries, start_ids, rj, p1_search, es_radius)
+    b_ids, b_dists, b_count, b_over = jax.vmap(partial(_beam_results, r=rj, cap=cfg.result_cap))(st)
+    base = RangeResult(ids=b_ids, dists=b_dists, count=b_count, overflow=b_over,
+                       n_visited=st.n_visited, n_dist=st.n_dist,
+                       es_stopped=st.es_stopped,
+                       phase2=jnp.zeros_like(st.done))
+    if cfg.mode == "beam":
+        return base
+
+    active = np.asarray(jax.vmap(partial(_needs_phase2, r=rj, lam=cfg.lam))(st))
+    n_active = int(active.sum())
+    if n_active == 0:
+        return base
+
+    sel = np.nonzero(active)[0]
+    bucket = next_pow2(n_active)
+    pad = np.concatenate([sel, np.full(bucket - n_active, sel[0], dtype=sel.dtype)])
+    sub_q = queries[pad]
+    lane_on = jnp.asarray(np.arange(bucket) < n_active)
+
+    if cfg.mode == "doubling":
+        # restart with widening enabled, survivors only (paper Alg. 5)
+        st2 = beam_search_batch(points, graph, sub_q, start_ids, rj,
+                                cfg.search, es_radius)
+        s_ids, s_dists, s_count, s_over = jax.vmap(
+            partial(_beam_results, r=rj, cap=cfg.result_cap))(st2)
+        sub = (np.asarray(s_ids), np.asarray(s_dists), np.asarray(s_count),
+               np.asarray(s_over), np.asarray(st2.n_dist))
+    else:
+        sub_st = jax.tree.map(lambda x: x[pad], st)
+        gfn = lambda q_, st_, a_: greedy_search(
+            points, graph, q_, rj, st_, cfg.result_cap, cfg.frontier_rounds,
+            cfg.search.metric, a_)
+        gs = jax.vmap(gfn)(sub_q, sub_st, lane_on)
+        sub = (np.asarray(gs.res_ids), np.asarray(gs.res_dists),
+               np.asarray(gs.res_count), np.asarray(gs.overflow),
+               np.asarray(gs.n_dist))
+
+    ids = np.array(base.ids)
+    dists = np.array(base.dists)
+    count = np.array(base.count)
+    over = np.array(base.overflow)
+    ndist = np.array(base.n_dist)
+    ids[sel] = sub[0][:n_active]
+    dists[sel] = sub[1][:n_active]
+    count[sel] = sub[2][:n_active]
+    over[sel] = sub[3][:n_active]
+    ndist[sel] += sub[4][:n_active]
+    phase2 = jnp.asarray(active)
+    return RangeResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+                       count=jnp.asarray(count), overflow=jnp.asarray(over),
+                       n_visited=base.n_visited, n_dist=jnp.asarray(ndist),
+                       es_stopped=base.es_stopped, phase2=phase2)

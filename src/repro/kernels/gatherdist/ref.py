@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the gatherdist kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...utils import INVALID_ID
+
+
+def gatherdist_ref(points, ids, queries, *, metric: str = "l2"):
+    """(Q, R) distances from queries[i] to points[ids[i, j]]; INVALID -> inf."""
+    n = points.shape[0]
+    valid = (ids != INVALID_ID) & (ids < n)
+    safe = jnp.where(valid, ids, 0)
+    vecs = jnp.take(points, safe, axis=0).astype(jnp.float32)  # (Q, R, d)
+    q = queries.astype(jnp.float32)[:, None, :]
+    if metric == "l2":
+        diff = vecs - q
+        d = jnp.sum(diff * diff, axis=-1)
+    else:
+        d = -jnp.sum(vecs * q, axis=-1)
+    return jnp.where(valid, d, jnp.inf)

@@ -1,0 +1,5 @@
+from .kernel import rangescan_pallas
+from .ops import rangescan
+from .ref import rangescan_ref
+
+__all__ = ["rangescan", "rangescan_pallas", "rangescan_ref"]

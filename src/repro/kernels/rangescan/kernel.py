@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: tiled exact range scan.
+
+The paper's exact-distance hot spot: score every (query, point) pair, count
+in-range matches, and keep the K closest in-range candidates. This is the
+compute core of ground-truth generation, brute-force range search, and the
+``retrieval_cand`` recsys shape (1 query x 1M candidates).
+
+TPU mapping (DESIGN.md §7):
+
+* grid ``(Q/bq, N/bn)`` — the N axis is innermost so each query tile's
+  accumulators live in the *output blocks* across the N sweep (revisited
+  blocks are kept in VMEM between grid steps on TPU).
+* the distance tile is one MXU matmul: ``-2 * q @ x^T`` plus rank-1 norm
+  corrections for L2 (skipped for IP, where distance is just ``-q @ x^T``).
+* in-range count is a masked row-sum accumulated into ``counts``.
+* the bounded top-K collect avoids sort/scatter (unsupported on the TPU
+  vector unit) — it merges the running K-buffer with the tile's candidates
+  via a ``fori_loop`` of argmin+one-hot-mask steps: every step extracts the
+  current minimum and masks it with an iota comparison. O(K * (K + bn))
+  comparisons per tile, all VPU-legal ops.
+
+VMEM budget per grid step (f32): q tile ``bq*d``, x tile ``bn*d``, distance
+tile ``bq*bn``, buffers ``2*bq*K``. Defaults (bq=128, bn=512, d<=1536,
+K=128) stay well under 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...utils import INVALID_ID
+
+NEG_INF = float("-inf")
+
+
+def _merge_topk(buf_d, buf_i, cand_d, cand_i, k: int):
+    """Merge (bq, K) buffer with (bq, bn) candidates -> new sorted-K buffer.
+
+    Sort/scatter-free: K rounds of (argmin -> one-hot mask -> column write).
+    All candidates with non-finite distance are ignored.
+    """
+    bq = buf_d.shape[0]
+    merged_d = jnp.concatenate([buf_d, cand_d], axis=1)  # (bq, M)
+    merged_i = jnp.concatenate([buf_i, cand_i], axis=1)
+    m = merged_d.shape[1]
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bq, m), 1)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (bq, k), 1)
+
+    def body(t, carry):
+        taken, out_d, out_i = carry
+        d = jnp.where(taken, jnp.inf, merged_d)
+        j = jnp.argmin(d, axis=1)  # (bq,)
+        dmin = jnp.min(d, axis=1)  # (bq,)
+        onehot = iota_m == j[:, None]
+        imin = jnp.sum(jnp.where(onehot, merged_i, 0), axis=1)
+        imin = jnp.where(jnp.isfinite(dmin), imin, INVALID_ID)
+        taken = taken | onehot
+        col = iota_k == t
+        out_d = jnp.where(col, dmin[:, None], out_d)
+        out_i = jnp.where(col, imin[:, None], out_i)
+        return taken, out_d, out_i
+
+    taken0 = jnp.zeros((bq, m), dtype=jnp.bool_)
+    out_d0 = jnp.full((bq, k), jnp.inf, jnp.float32)
+    out_i0 = jnp.full((bq, k), INVALID_ID, jnp.int32)
+    _, out_d, out_i = jax.lax.fori_loop(0, k, body, (taken0, out_d0, out_i0))
+    return out_d, out_i
+
+
+def _rangescan_kernel(
+    r_ref,      # (1, 1) f32 in SMEM-like block: the radius
+    q_ref,      # (bq, d)
+    x_ref,      # (bn, d)
+    counts_ref, # (bq,) int32 out, accumulated over the N sweep
+    topd_ref,   # (bq, K) f32 out
+    topi_ref,   # (bq, K) int32 out
+    *,
+    n_total: int,
+    block_n: int,
+    k: int,
+    metric: str,
+):
+    j = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    dots = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bn) MXU
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=1, keepdims=True)
+        xn = jnp.sum(x * x, axis=1, keepdims=True)
+        dist = jnp.maximum(qn + xn.T - 2.0 * dots, 0.0)
+    else:  # ip
+        dist = -dots
+
+    bq, bn = dist.shape
+    col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+    valid = col < n_total
+    r = r_ref[0, 0]
+    ok = (dist <= r) & valid
+
+    @pl.when(j == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        topd_ref[...] = jnp.full_like(topd_ref, jnp.inf)
+        topi_ref[...] = jnp.full_like(topi_ref, INVALID_ID)
+
+    counts_ref[...] += jnp.sum(ok, axis=1).astype(jnp.int32)
+
+    cand_d = jnp.where(ok, dist, jnp.inf)
+    cand_i = jnp.where(ok, col, INVALID_ID)
+    new_d, new_i = _merge_topk(topd_ref[...], topi_ref[...], cand_d, cand_i, k)
+    topd_ref[...] = new_d
+    topi_ref[...] = new_i
+
+
+def rangescan_pallas(
+    queries: jnp.ndarray,  # (Q, d)
+    points: jnp.ndarray,   # (N, d); caller pads N to block_n multiple
+    r: jnp.ndarray,        # () f32
+    *,
+    n_total: int,
+    k: int = 128,
+    block_q: int = 128,
+    block_n: int = 512,
+    metric: str = "l2",
+    interpret: bool = False,
+):
+    qn, d = queries.shape
+    n, _ = points.shape
+    assert qn % block_q == 0 and n % block_n == 0
+    grid = (qn // block_q, n // block_n)
+    kernel = functools.partial(
+        _rangescan_kernel, n_total=n_total, block_n=block_n, k=k, metric=metric
+    )
+    r_arr = jnp.asarray(r, jnp.float32).reshape(1, 1)
+    counts, topd, topi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),       # radius
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),  # queries
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),  # points
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn,), jnp.int32),
+            jax.ShapeDtypeStruct((qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(r_arr, queries, points)
+    return topi, topd, counts

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the rangescan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...utils import INVALID_ID
+
+
+def rangescan_ref(queries, points, r, *, k: int = 128, metric: str = "l2"):
+    """(ids (Q,k), dists (Q,k), counts (Q,)) — exact, unblocked."""
+    q = queries.astype(jnp.float32)
+    x = points.astype(jnp.float32)
+    dots = q @ x.T
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=1, keepdims=True)
+        xn = jnp.sum(x * x, axis=1, keepdims=True)
+        dist = jnp.maximum(qn + xn.T - 2.0 * dots, 0.0)
+    else:
+        dist = -dots
+    ok = dist <= jnp.asarray(r, jnp.float32)
+    counts = jnp.sum(ok, axis=1).astype(jnp.int32)
+    masked = jnp.where(ok, dist, jnp.inf)
+    idx = jnp.argsort(masked, axis=1, stable=True)[:, :k]
+    d_sorted = jnp.take_along_axis(masked, idx, axis=1)
+    ids = jnp.where(jnp.isfinite(d_sorted), idx.astype(jnp.int32), INVALID_ID)
+    return ids, d_sorted, counts

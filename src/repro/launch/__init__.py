@@ -1,0 +1,7 @@
+"""Launchers: mesh.py, steps.py (cell builder), dryrun.py, train.py, serve.py.
+
+Deliberately empty of imports: ``python -m repro.launch.dryrun`` imports
+this package BEFORE dryrun's first lines run, and dryrun must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before anything
+touches jax.
+"""

@@ -1,0 +1,113 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first import in the process (the two lines above run before any
+other import — jax locks the device count at first init).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells, 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod # 2x16x16
+
+Per cell: jit(step).lower(*ShapeDtypeStructs).compile() under the
+production mesh; prints memory_analysis (fits?) and cost_analysis
+(FLOPs/bytes for §Roofline); parses the HLO for collective bytes; appends a
+RooflineReport row to --report (JSON).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from ..analysis.hlo import analyze_module  # noqa: E402
+from ..analysis.roofline import (  # noqa: E402
+    analytic_model_flops, make_report, save_reports,
+)
+from ..configs import REGISTRY, all_cells, get_arch  # noqa: E402
+from ..dist.sharding import activation_sharding  # noqa: E402
+from .mesh import make_production_mesh, mesh_devices  # noqa: E402
+from .steps import build_cell  # noqa: E402
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True):
+    arch = get_arch(arch_id)
+    shape = arch.shapes[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh_devices(mesh)
+    t0 = time.time()
+    with mesh, activation_sharding(mesh):
+        cell = build_cell(arch, shape_name, mesh)
+        lowered = cell.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    analysis = analyze_module(compiled.as_text())
+    params_abstract = cell.args[0]
+    model_flops = analytic_model_flops(arch, shape, params_abstract)
+    report = make_report(arch, shape, mesh_name, chips, cost, mem, analysis,
+                         model_flops)
+    if verbose:
+        print(f"== {arch_id} x {shape_name} on {mesh_name} "
+              f"({chips} chips)  [lower {t_lower:.1f}s compile {t_compile:.1f}s]")
+        print(f"   memory_analysis: {mem}")
+        print(f"   cost_analysis: flops={cost.get('flops', 0):.4g} "
+              f"bytes={cost.get('bytes accessed', 0):.4g}")
+        print(f"   collectives: {analysis.collectives.summary()}")
+        print(f"   whiles={analysis.n_while} max_trip={analysis.max_trip} dot_flops/dev={analysis.dot_flops:.4g}")
+        print(f"   roofline: {report.row()}")
+    return report
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--include-engine", action="store_true")
+    p.add_argument("--report", default=None, help="append JSON reports here")
+    p.add_argument("--keep-going", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.all:
+        cells = all_cells(include_engine=args.include_engine)
+    elif args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.arch:
+        cells = [(args.arch, s) for s in get_arch(args.arch).shapes]
+    else:
+        p.error("need --arch [--shape] or --all")
+
+    reports, failures = [], []
+    for arch_id, shape_name in cells:
+        try:
+            reports.append(run_cell(arch_id, shape_name, args.multi_pod))
+        except Exception as e:
+            failures.append((arch_id, shape_name, repr(e)))
+            print(f"!! FAILED {arch_id} x {shape_name}: {e}")
+            traceback.print_exc()
+            if not args.keep_going:
+                break
+    if args.report and reports:
+        existing = []
+        if os.path.exists(args.report):
+            with open(args.report) as f:
+                existing = json.load(f)
+        with open(args.report, "w") as f:
+            json.dump(existing + [r.to_json() for r in reports], f, indent=1)
+    print(f"\n{len(reports)} cells OK, {len(failures)} failed")
+    for a, s, e in failures:
+        print(f"  FAIL {a} x {s}: {e}")
+    return 0 if not failures else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

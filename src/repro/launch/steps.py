@@ -1,0 +1,385 @@
+"""Cell builder: (ArchSpec, ShapeSpec, mesh) -> lowerable step function.
+
+For every one of the 40 assigned (arch x shape) cells (+ the engine's own),
+this produces:
+
+* ``fn`` — the step function (train_step / prefill / decode_step / serve /
+  retrieval scoring / graph train / sharded range search),
+* ``args`` — ShapeDtypeStruct stand-ins for every input (params, optimizer
+  state, batches, KV caches): weak-type-correct, shardable, **zero
+  allocation**,
+* ``in_shardings`` — NamedShardings bound from the arch's rule table plus
+  the per-shape activation/cache layout decisions documented inline,
+* ``donate`` — donated argnums (params/opt for train, cache for decode) so
+  memory_analysis reflects steady-state HBM, not double-buffered peaks.
+
+The dry-run lowers ``jit(fn, in_shardings=...)`` with these; benchmarks and
+examples call the same builders with real arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.common import ArchSpec, ShapeSpec
+from ..core.range_search import RangeConfig
+from ..dist.sharding import bind_shardings, mesh_axes, spec_tree
+from ..layers.common import cast_tree
+from ..models import gcn as gcn_mod
+from ..models import recsys as rec_mod
+from ..models import transformer as tf_mod
+from ..optim.adamw import init_adamw, make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any = None  # pinned for train cells: params/opt return
+                               # in their sharded layout (grads reduce-
+                               # scatter instead of all-reduce+replicate)
+    donate: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def jitted(self):
+        kw = {}
+        if self.out_shardings is not None:
+            kw["out_shardings"] = self.out_shardings
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       donate_argnums=self.donate, **kw)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _abstract_params(arch: ArchSpec, init_fn) -> Any:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: cast_tree(init_fn(k), arch.param_dtype), key)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cache_spec(cfg, batch: int, mesh: Mesh):
+    """Decode-cache layout policy (DESIGN.md §5):
+    * batch shards over dp when divisible;
+    * GQA: kv heads shard over tp when there are enough heads, else the
+      *sequence* axis shards over tp (flash-decoding style partial softmax);
+    * MLA: latent dim shards over tp (512 / 16 = 32).
+    * tiny-batch long-context (long_500k): sequence shards over dp too.
+    """
+    dp, tp = mesh_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))]))
+    tp_size = mesh.shape[tp]
+    batch_ax = dp if batch % dp_size == 0 and batch >= dp_size else None
+    seq_dp = None if batch_ax is not None else dp
+    if cfg.attn_kind == "mla":
+        return P(None, batch_ax, seq_dp, tp), P(None, batch_ax, seq_dp, None)
+    if cfg.n_kv % tp_size == 0 and cfg.n_kv >= tp_size:
+        spec = P(None, batch_ax, seq_dp, tp, None)
+    else:  # few kv heads: shard the sequence axis over tp instead
+        if seq_dp is None:
+            seq_ax = tp
+        else:
+            dp_axes = seq_dp if isinstance(seq_dp, tuple) else (seq_dp,)
+            seq_ax = dp_axes + (tp,)
+        spec = P(None, batch_ax, seq_ax, None, None)
+    return spec, spec
+
+
+def build_lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    cfg = arch.model_cfg
+    dp, tp = mesh_axes(mesh)
+    params = _abstract_params(arch, lambda k: tf_mod.init_transformer(k, cfg))
+    p_shard = bind_shardings(mesh, spec_tree(params, arch.rules, mesh))
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        loss = partial(tf_mod.loss_fn, cfg=cfg)
+        step = make_train_step(loss, arch.opt_cfg,
+                               accum_steps=arch.accum_steps)
+        opt = jax.eval_shape(partial(init_adamw, cfg=arch.opt_cfg), params)
+        o_shard = {"m": p_shard, "v": p_shard,
+                   "step": _ns(mesh)}
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        b_shard = {"tokens": _ns(mesh, dp, None), "labels": _ns(mesh, dp, None)}
+        return Cell(arch.arch_id, shape.name, step, (params, opt, batch),
+                    (p_shard, o_shard, b_shard),
+                    out_shardings=(p_shard, o_shard, None),
+                    donate=(0, 1), meta={"tokens": b * s})
+
+    if shape.kind == "prefill":
+        fn = partial(tf_mod.prefill, cfg=cfg, max_len=s)
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return Cell(arch.arch_id, shape.name, fn, (params, tokens),
+                    (p_shard, _ns(mesh, dp, None)),
+                    meta={"tokens": b * s})
+
+    if shape.kind == "decode":
+        fn = partial(tf_mod.decode_step, cfg=cfg)
+        ck, cv = tf_mod.cache_shapes(cfg, b, s)
+        cache = tf_mod.KVCache(k=ck, v=cv)
+        k_spec, v_spec = _lm_cache_spec(cfg, b, mesh)
+        c_shard = tf_mod.KVCache(k=NamedSharding(mesh, k_spec),
+                                 v=NamedSharding(mesh, v_spec))
+        batch_ax = dp if b % _dp_size(mesh) == 0 and b >= _dp_size(mesh) else None
+        token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return Cell(arch.arch_id, shape.name, fn,
+                    (params, token, cache, pos),
+                    (p_shard, _ns(mesh, batch_ax, None), c_shard, _ns(mesh)),
+                    out_shardings=(None, c_shard),
+                    donate=(2,),
+                    meta={"tokens": b, "kv_len": s})
+
+    raise ValueError(shape.kind)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    dp, _ = mesh_axes(mesh)
+    axes = dp if isinstance(dp, tuple) else (dp,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _pad_to(x: int, mult: int) -> int:
+    """Round up to a sharding-divisible size (data pipelines pad; the
+    models mask padding via -1 sentinels)."""
+    return -(-x // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gcn_variant(cfg: gcn_mod.GCNConfig, shape: ShapeSpec) -> gcn_mod.GCNConfig:
+    """Same 2-layer/16-hidden geometry, input/output dims per dataset."""
+    d_feat = shape.d_feat or cfg.d_feat
+    n_classes = {"full_graph_sm": 7, "minibatch_lg": 41,
+                 "ogb_products": 47, "molecule": 2}.get(shape.name, cfg.n_classes)
+    return dataclasses.replace(cfg, d_feat=d_feat, n_classes=n_classes)
+
+
+def sampled_caps(shape: ShapeSpec) -> tuple[int, int]:
+    """(max_nodes, max_edges) of the fanout-sampled subgraph."""
+    n, e, front = shape.batch_nodes, 0, shape.batch_nodes
+    for f in shape.fanout:
+        e += front * f
+        front = front * f
+        n += front
+    return n, e
+
+
+def build_gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    dp, tp = mesh_axes(mesh)
+    all_ax = (dp, tp) if not isinstance(dp, tuple) else dp + (tp,)
+
+    if shape.kind == "graph_batched":
+        cfg = _gcn_variant(dataclasses.replace(arch.model_cfg, d_feat=16), shape)
+        params = _abstract_params(arch, lambda k: gcn_mod.init_gcn(k, cfg))
+        p_shard = bind_shardings(mesh, spec_tree(params, arch.rules, mesh))
+
+        def loss(params_, batch_):
+            logits = gcn_mod.gcn_batched_graphs(
+                params_, batch_["feats"], batch_["edge_src"], batch_["edge_dst"], cfg)
+            labels = batch_["labels"]
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+            return jnp.mean(lse - ll), {}
+
+        step = make_train_step(loss, arch.opt_cfg)
+        opt = jax.eval_shape(partial(init_adamw, cfg=arch.opt_cfg), params)
+        o_shard = {"m": p_shard, "v": p_shard, "step": _ns(mesh)}
+        g, npg, epg = shape.n_graphs, shape.nodes_per_graph, shape.edges_per_graph
+        batch = {
+            "feats": jax.ShapeDtypeStruct((g, npg, cfg.d_feat), jnp.float32),
+            "edge_src": jax.ShapeDtypeStruct((g, epg), jnp.int32),
+            "edge_dst": jax.ShapeDtypeStruct((g, epg), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((g,), jnp.int32),
+        }
+        b_shard = {"feats": _ns(mesh, dp, None, None),
+                   "edge_src": _ns(mesh, dp, None),
+                   "edge_dst": _ns(mesh, dp, None),
+                   "labels": _ns(mesh, dp)}
+        return Cell(arch.arch_id, shape.name, step, (params, opt, batch),
+                    (p_shard, o_shard, b_shard), donate=(0, 1),
+                    meta={"edges": g * epg, "nodes": g * npg})
+
+    cfg = _gcn_variant(arch.model_cfg, shape)
+    params = _abstract_params(arch, lambda k: gcn_mod.init_gcn(k, cfg))
+    p_shard = bind_shardings(mesh, spec_tree(params, arch.rules, mesh))
+    loss = partial(gcn_mod.gcn_loss, cfg=cfg)
+    step = make_train_step(loss, arch.opt_cfg)
+    opt = jax.eval_shape(partial(init_adamw, cfg=arch.opt_cfg), params)
+    o_shard = {"m": p_shard, "v": p_shard, "step": _ns(mesh)}
+
+    if shape.kind == "graph_sampled":
+        n, e = sampled_caps(shape)
+    else:
+        n, e = shape.n_nodes, shape.n_edges
+    n = _pad_to(n, _dp_size(mesh))
+    e = _pad_to(e, _dp_size(mesh) * mesh.shape[tp])
+    batch = {
+        "feats": jax.ShapeDtypeStruct((n, cfg.d_feat), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((n,), jnp.int32),
+    }
+    # nodes shard over dp; the edge list (the big array) over the whole mesh
+    b_shard = {"feats": _ns(mesh, dp, None),
+               "edge_src": _ns(mesh, all_ax),
+               "edge_dst": _ns(mesh, all_ax),
+               "labels": _ns(mesh, dp)}
+    return Cell(arch.arch_id, shape.name, step, (params, opt, batch),
+                (p_shard, o_shard, b_shard), donate=(0, 1),
+                meta={"edges": e, "nodes": n})
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def build_recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    cfg = arch.model_cfg
+    dp, tp = mesh_axes(mesh)
+    all_ax = (dp, tp) if not isinstance(dp, tuple) else dp + (tp,)
+    params = _abstract_params(arch, lambda k: rec_mod.init_recsys(k, cfg))
+    p_shard = bind_shardings(mesh, spec_tree(params, arch.rules, mesh))
+    b = shape.global_batch
+    two_tower = cfg.kind == "two_tower"
+
+    def batch_specs(bsz, ax):
+        if two_tower:
+            batch = {"user_sparse": jax.ShapeDtypeStruct((bsz, cfg.n_sparse), jnp.int32),
+                     "item_sparse": jax.ShapeDtypeStruct((bsz, cfg.n_sparse_item), jnp.int32),
+                     "log_q": jax.ShapeDtypeStruct((bsz,), jnp.float32)}
+            shard = {"user_sparse": _ns(mesh, ax, None),
+                     "item_sparse": _ns(mesh, ax, None),
+                     "log_q": _ns(mesh, ax)}
+        else:
+            batch = {"sparse": jax.ShapeDtypeStruct((bsz, cfg.n_sparse), jnp.int32),
+                     "label": jax.ShapeDtypeStruct((bsz,), jnp.float32)}
+            shard = {"sparse": _ns(mesh, ax, None), "label": _ns(mesh, ax)}
+            if cfg.n_dense:
+                batch["dense"] = jax.ShapeDtypeStruct((bsz, cfg.n_dense), jnp.float32)
+                shard["dense"] = _ns(mesh, ax, None)
+        return batch, shard
+
+    if shape.kind == "train":
+        loss = partial(rec_mod.recsys_loss, cfg=cfg)
+        step = make_train_step(loss, arch.opt_cfg)
+        opt = jax.eval_shape(partial(init_adamw, cfg=arch.opt_cfg), params)
+        o_shard = {"m": p_shard, "v": p_shard, "step": _ns(mesh)}
+        batch, b_shard = batch_specs(b, dp)
+        return Cell(arch.arch_id, shape.name, step, (params, opt, batch),
+                    (p_shard, o_shard, b_shard), donate=(0, 1),
+                    meta={"examples": b})
+
+    if shape.kind == "serve":
+        if two_tower:
+            def fn(params_, user_sparse):
+                return rec_mod.tower(params_["user"], user_sparse, cfg,
+                                     len(cfg.mlp_dims) + 1)
+            args = (params, jax.ShapeDtypeStruct((b, cfg.n_sparse), jnp.int32))
+            shard = (p_shard, _ns(mesh, dp, None))
+        else:
+            def fn(params_, batch_):
+                return rec_mod.recsys_forward(params_, batch_, cfg)
+            batch, b_shard = batch_specs(b, dp)
+            batch.pop("label"); b_shard.pop("label")
+            args = (params, batch)
+            shard = (p_shard, b_shard)
+        return Cell(arch.arch_id, shape.name, fn, args, shard,
+                    meta={"examples": b})
+
+    if shape.kind == "retrieval":
+        nc = _pad_to(shape.n_candidates, _dp_size(mesh) * mesh.shape[tp])
+        if two_tower:
+            # one user scored against 1M precomputed item embeddings:
+            # the rangescan-kernel shape (brute force) — the graph engine
+            # serves the same corpus sub-linearly (benchmarks/qps_precision)
+            def fn(params_, user_sparse, cand_emb):
+                u = rec_mod.tower(params_["user"], user_sparse, cfg,
+                                  len(cfg.mlp_dims) + 1)
+                return rec_mod.retrieval_topk(u, cand_emb, k=1000)
+            args = (params,
+                    jax.ShapeDtypeStruct((1, cfg.n_sparse), jnp.int32),
+                    jax.ShapeDtypeStruct((nc, cfg.d_out), jnp.float32))
+            shard = (p_shard, _ns(mesh, None, None), _ns(mesh, all_ax, None))
+        else:
+            # bulk-score 1M candidate rows for one context
+            def fn(params_, batch_):
+                return rec_mod.recsys_forward(params_, batch_, cfg)
+            batch, b_shard = batch_specs(nc, all_ax)
+            batch.pop("label"); b_shard.pop("label")
+            args = (params, batch)
+            shard = (p_shard, b_shard)
+        return Cell(arch.arch_id, shape.name, fn, args, shard,
+                    meta={"examples": nc})
+
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Range-engine cells (the paper's own system)
+# ---------------------------------------------------------------------------
+
+def build_engine_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    from ..dist.sharded_engine import ShardedCorpus, sharded_range_search
+    dp, tp = mesh_axes(mesh)
+    ecfg = arch.model_cfg
+    s_shards = mesh.shape[tp]
+    n, d, r_deg = ecfg.shard_corpus, ecfg.dim, ecfg.max_degree
+    cdt = jnp.dtype(getattr(ecfg, "corpus_dtype", "float32"))
+    corpus = ShardedCorpus(
+        points=jax.ShapeDtypeStruct((s_shards, n, d), cdt),
+        neighbors=jax.ShapeDtypeStruct((s_shards, n, r_deg), jnp.int32),
+        start_ids=jax.ShapeDtypeStruct((s_shards, 1), jnp.int32),
+        offsets=jax.ShapeDtypeStruct((s_shards,), jnp.int32),
+        n_total=s_shards * n)
+
+    def fn(points, neighbors, start_ids, offsets, queries):
+        c = ShardedCorpus(points=points, neighbors=neighbors,
+                          start_ids=start_ids, offsets=offsets,
+                          n_total=s_shards * n)
+        res = sharded_range_search(mesh, c, queries, 1.0, ecfg.range_cfg,
+                                   model_axis=tp, data_axis=dp)
+        return res.ids, res.dists, res.count
+
+    q = jax.ShapeDtypeStruct((shape.global_batch, d), jnp.float32)
+    args = (corpus.points, corpus.neighbors, corpus.start_ids,
+            corpus.offsets, q)
+    shard = (_ns(mesh, tp, None, None), _ns(mesh, tp, None, None),
+             _ns(mesh, tp, None), _ns(mesh, tp), _ns(mesh, dp, None))
+    return Cell(arch.arch_id, shape.name, fn, args, shard,
+                meta={"queries": shape.global_batch,
+                      "corpus": s_shards * n})
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: ArchSpec, shape_name: str, mesh: Mesh) -> Cell:
+    shape = arch.shapes[shape_name]
+    if arch.family == "lm":
+        return build_lm_cell(arch, shape, mesh)
+    if arch.family == "gnn":
+        return build_gnn_cell(arch, shape, mesh)
+    if arch.family == "recsys":
+        return build_recsys_cell(arch, shape, mesh)
+    if arch.family == "engine":
+        return build_engine_cell(arch, shape, mesh)
+    raise ValueError(arch.family)

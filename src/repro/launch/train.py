@@ -1,0 +1,102 @@
+"""Training launcher: real end-to-end runs on whatever devices exist.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-27b --smoke \\
+      --steps 200 --ckpt-dir /tmp/ckpt
+
+``--smoke`` uses the arch's reduced() config (CPU-trainable geometry of the
+same family); without it the full published config is used (requires real
+accelerators). The loop is the fault-tolerant Trainer: atomic checkpoints,
+resume-from-latest, SIGTERM-safe.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_arch
+from ..data.graphs import make_sbm_graph
+from ..data.lm import LMDataConfig, lm_batches
+from ..data.recsys import RecsysDataConfig, recsys_batches
+from ..models import gcn as gcn_mod
+from ..models import recsys as rec_mod
+from ..models import transformer as tf_mod
+from ..optim.adamw import AdamWConfig
+from ..train import Trainer, TrainerConfig
+
+
+def build_training(arch_id: str, smoke: bool, batch: int, seq_len: int,
+                   seed: int = 0):
+    arch = get_arch(arch_id)
+    cfg = arch.reduced() if smoke else arch.model_cfg
+    key = jax.random.PRNGKey(seed)
+    if arch.family == "lm":
+        params = tf_mod.init_transformer(key, cfg)
+        loss = functools.partial(tf_mod.loss_fn, cfg=cfg)
+        data = lm_batches(LMDataConfig(vocab=cfg.vocab, seq_len=seq_len,
+                                       batch=batch, seed=seed))
+        return params, loss, data
+    if arch.family == "gnn":
+        g = make_sbm_graph(400, cfg.n_classes, cfg.d_feat, avg_degree=8,
+                           seed=seed)
+        params = gcn_mod.init_gcn(key, cfg)
+        loss = functools.partial(gcn_mod.gcn_loss, cfg=cfg)
+
+        def batches():
+            b = {"feats": jnp.asarray(g.feats),
+                 "edge_src": jnp.asarray(g.edge_src),
+                 "edge_dst": jnp.asarray(g.edge_dst),
+                 "labels": jnp.asarray(g.labels)}
+            while True:
+                yield b
+        return params, loss, batches()
+    if arch.family == "recsys":
+        params = rec_mod.init_recsys(key, cfg)
+        loss = functools.partial(rec_mod.recsys_loss, cfg=cfg)
+        dcfg = RecsysDataConfig(
+            n_dense=cfg.n_dense, n_sparse=cfg.n_sparse, vocab=cfg.vocab,
+            batch=batch, seed=seed, two_tower=cfg.kind == "two_tower",
+            n_sparse_item=cfg.n_sparse_item)
+        return params, loss, recsys_batches(dcfg)
+    raise ValueError(f"{arch_id}: family {arch.family} has no train driver")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--lr", type=float, default=None)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--metrics", default=None)
+    p.add_argument("--resume", action="store_true")
+    args = p.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    params, loss, data = build_training(args.arch, args.smoke, args.batch,
+                                        args.seq_len)
+    opt_cfg = arch.opt_cfg
+    if args.lr is not None:
+        opt_cfg = dataclasses.replace(opt_cfg, lr=args.lr)
+    opt_cfg = dataclasses.replace(opt_cfg, total_steps=args.steps)
+    tr = Trainer(loss, params, opt_cfg,
+                 TrainerConfig(total_steps=args.steps,
+                               ckpt_every=args.ckpt_every, log_every=10,
+                               ckpt_dir=args.ckpt_dir,
+                               metrics_path=args.metrics))
+    if args.resume and tr.maybe_restore():
+        print(f"[train] resumed from step {tr.step}")
+    out = tr.fit(data, verbose=True)
+    print(f"[train] done at step {out['final_step']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

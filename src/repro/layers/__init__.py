@@ -1,0 +1,20 @@
+from .attention import (
+    GQAConfig, KVCache, MLAConfig, gqa_attention, init_gqa, init_mla,
+    mla_attention, sdpa,
+)
+from .common import cast_tree, dense_init, embed_init, flatten_paths, param_count
+from .embedding import (
+    BagConfig, embed_tokens, embedding_bag, init_token_embedding,
+    multi_field_lookup, unembed,
+)
+from .interactions import (
+    FieldAttnConfig, dot_interaction, field_attention, fm_interaction,
+    init_field_attention,
+)
+from .mlp import MLPConfig, dense_stack, init_dense_stack, init_mlp, mlp
+from .moe import MoEConfig, init_moe, moe_layer
+from .norm import layer_norm, rms_norm
+from .rope import apply_rope, rope_freqs
+from .segment import gather_scatter, sym_norm_weights
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,277 @@
+"""Attention layers: GQA (w/ qk-norm, sliding window, soft-cap) and MLA.
+
+Functional, cache-aware, scan-friendly:
+
+* ``window`` and ``rope_theta`` are *traced per-layer scalars* so a
+  heterogeneous stack (gemma3's 5 local : 1 global pattern) lowers as one
+  uniform ``lax.scan`` body — a local layer is just ``window > 0``.
+* training / prefill call with ``cache=None`` (full causal self-attention);
+  decode calls with a ``KVCache`` and a scalar position.
+* the XLA einsum path is the default (it lowers on every backend and lets
+  GSPMD insert the head-sharded collectives); the Pallas flash kernel is a
+  config switch for real-TPU serving.
+
+MLA (DeepSeek-V2): queries and KV are low-rank compressed; the cache stores
+only the 512-dim latent + 64-dim shared rope key per token — the 93.3%
+KV-cache reduction that lets deepseek-v2 serve 128k contexts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import DP, TP, shard_activation
+from .common import dense_init, split_keys
+from .norm import rms_norm
+from .rope import apply_rope
+
+BIG_WINDOW = jnp.int32(2**30)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Decode-time cache. GQA: k/v are (B, S_max, Hkv, dh).
+    MLA: k stores the compressed latent (B, S_max, kv_lora), v the rope key
+    (B, S_max, rope_dim)."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Masked softmax attention core (shared by GQA / MLA)
+# ---------------------------------------------------------------------------
+
+def _chunk_logits(qg, k_chunk, c0, *, causal, window, softcap, scale,
+                  q_positions, kv_valid_len):
+    """fp32 masked logits of one KV chunk: (B,Hkv,G,S,Tc)."""
+    b, s = qg.shape[0], qg.shape[1]
+    tc = k_chunk.shape[1]
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_chunk,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = q_positions[:, None, None, :, None]      # (B,1,1,S,1)
+    k_pos = c0 + jnp.arange(tc)[None, None, None, None, :]
+    mask = jnp.ones((b, 1, 1, s, tc), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    w = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), BIG_WINDOW)
+    mask &= (q_pos - k_pos) < w
+    if kv_valid_len is not None:
+        mask &= k_pos < jnp.asarray(kv_valid_len).reshape(-1, 1, 1, 1, 1)
+    return jnp.where(mask, logits, -1e30)
+
+
+def sdpa(q, k, v, *, causal: bool, window, softcap: float, scale: float,
+         q_positions, kv_valid_len=None, kv_chunk: int = 0) -> jnp.ndarray:
+    """q: (B,S,Hq,dh) k/v: (B,T,Hkv,dh), Hq % Hkv == 0 -> (B,S,Hq,dv).
+
+    GQA grouping happens INSIDE the einsums (q reshaped to
+    (B,S,Hkv,G,dh)) — materializing repeat_kv forces GSPMD to all-gather
+    the full KV cache when it is sequence-sharded (a 5.4 GB/layer gather
+    on qwen3 decode_32k; §Perf iteration B). fp32 softmax. ``window`` is a
+    traced scalar (<=0 disables); ``kv_valid_len`` masks the cache tail.
+
+    ``kv_chunk > 0`` streams KV in chunks with an online softmax
+    (flash-attention dataflow in XLA): the (S, T) fp32 logits tensor never
+    materializes — 8.6 GB/layer on deepseek-v2 train_4k (§Perf A5).
+    """
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    dv = v.shape[-1]
+    qg = q.reshape(b, s, hkv, g, dh)
+    kwargs = dict(causal=causal, window=window, softcap=softcap, scale=scale,
+                  q_positions=q_positions, kv_valid_len=kv_valid_len)
+
+    if kv_chunk > 0 and t > 2 * kv_chunk and t % kv_chunk == 0 and s > 1:
+        nc = t // kv_chunk
+        ks = k.reshape(b, nc, kv_chunk, hkv, dh).swapaxes(0, 1)
+        vs = v.reshape(b, nc, kv_chunk, hkv, dv).swapaxes(0, 1)
+
+        def body(carry, xs):
+            m_prev, l_prev, acc = carry
+            kc, vc, ci = xs
+            lg = _chunk_logits(qg, kc, ci * kv_chunk, **kwargs)
+            m_cur = jnp.maximum(m_prev, jnp.max(lg, axis=-1))
+            alpha = jnp.exp(m_prev - m_cur)
+            p = jnp.exp(lg - m_cur[..., None])
+            l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vc.dtype), vc)
+            acc = acc * alpha[..., None].astype(acc.dtype) + pv
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((b, hkv, g, s), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, s, dv), v.dtype)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (ks, vs, jnp.arange(nc)))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None].astype(acc.dtype)
+        out = jnp.moveaxis(out, 3, 1)            # (B,S,Hkv,G,dv)
+        return out.reshape(b, s, hq, dv)
+
+    logits = _chunk_logits(qg, k, 0, **kwargs)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return out.reshape(b, s, hq, dv)  # v dim != q dim under MLA
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GQAConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    qk_norm: bool = False
+    softcap: float = 0.0
+    causal: bool = True
+    kv_chunk: int = 0   # stream KV in chunks (flash dataflow in XLA)
+
+
+def init_gqa(key, cfg: GQAConfig) -> dict:
+    ks = split_keys(key, 6)
+    p = {
+        "wq": dense_init(next(ks), (cfg.d_model, cfg.n_heads, cfg.d_head), cfg.d_model),
+        "wk": dense_init(next(ks), (cfg.d_model, cfg.n_kv, cfg.d_head), cfg.d_model),
+        "wv": dense_init(next(ks), (cfg.d_model, cfg.n_kv, cfg.d_head), cfg.d_model),
+        "wo": dense_init(next(ks), (cfg.n_heads, cfg.d_head, cfg.d_model),
+                         cfg.n_heads * cfg.d_head),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.d_head,), jnp.float32)
+    return p
+
+
+def gqa_attention(
+    params: dict,
+    x: jnp.ndarray,              # (B, S, D)
+    cfg: GQAConfig,
+    *,
+    positions: jnp.ndarray,      # (B, S) absolute positions
+    rope_theta,                  # traced ok
+    window,                      # traced ok; <=0 => global
+    cache: Optional[KVCache] = None,
+    cache_pos=None,              # () int32: write offset during decode
+    kv_valid_len=None,           # (B,) or () — valid cache length incl. new tokens
+) -> tuple[jnp.ndarray, Optional[KVCache]]:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    # NOTE (§Perf, refuted hypothesis): explicitly pinning head sharding
+    # here FORCES a seq->head resharding all-to-all against the
+    # sequence-parallel residual and cost gemma3 train_4k 10s/step of
+    # collective time; GSPMD's inferred layout is better. Left unpinned.
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache_pos, axis=1)
+        new_cache = KVCache(k=ck, v=cv)
+        k, v = ck.astype(dt), cv.astype(dt)
+
+    # KV chunking only on the cache (prefill/serve) path: for training the
+    # scanned online softmax slowed the bwd and raised collective time
+    # (§Perf, measured); the unchunked einsum is better there.
+    out = sdpa(q, k, v, causal=cfg.causal, window=window, softcap=cfg.softcap,
+               scale=cfg.d_head ** -0.5, q_positions=positions,
+               kv_valid_len=kv_valid_len,
+               kv_chunk=cfg.kv_chunk if cache is not None else 0)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    softcap: float = 0.0
+    causal: bool = True
+    kv_chunk: int = 0
+
+
+def init_mla(key, cfg: MLAConfig) -> dict:
+    ks = split_keys(key, 8)
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": dense_init(next(ks), (cfg.d_model, cfg.q_lora), cfg.d_model),
+        "q_norm": jnp.ones((cfg.q_lora,), jnp.float32),
+        "w_uq": dense_init(next(ks), (cfg.q_lora, h, dn + dr), cfg.q_lora),
+        "w_dkv": dense_init(next(ks), (cfg.d_model, cfg.kv_lora), cfg.d_model),
+        "kv_norm": jnp.ones((cfg.kv_lora,), jnp.float32),
+        "w_uk": dense_init(next(ks), (cfg.kv_lora, h, dn), cfg.kv_lora),
+        "w_uv": dense_init(next(ks), (cfg.kv_lora, h, dv), cfg.kv_lora),
+        "w_kr": dense_init(next(ks), (cfg.d_model, dr), cfg.d_model),
+        "wo": dense_init(next(ks), (h, dv, cfg.d_model), h * dv),
+    }
+
+
+def mla_attention(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: MLAConfig,
+    *,
+    positions: jnp.ndarray,
+    rope_theta,
+    window,  # accepted for scan uniformity; MLA layers are global
+    cache: Optional[KVCache] = None,
+    cache_pos=None,
+    kv_valid_len=None,
+) -> tuple[jnp.ndarray, Optional[KVCache]]:
+    dt = x.dtype
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+
+    cq = rms_norm(x @ params["w_dq"].astype(dt), params["q_norm"])
+    q = jnp.einsum("bsl,lhk->bshk", cq, params["w_uq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckv = rms_norm(x @ params["w_dkv"].astype(dt), params["kv_norm"])  # (B,S,kv_lora)
+    k_rope = apply_rope(
+        (x @ params["w_kr"].astype(dt))[:, :, None, :], positions, rope_theta
+    )[:, :, 0, :]  # (B,S,dr) shared across heads
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, ckv.astype(cache.k.dtype), cache_pos, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(cache.v, k_rope.astype(cache.v.dtype), cache_pos, axis=1)
+        new_cache = KVCache(k=ck, v=cr)
+        ckv, k_rope = ck.astype(dt), cr.astype(dt)
+
+    k_nope = jnp.einsum("btl,lhk->bthk", ckv, params["w_uk"].astype(dt))
+    v = jnp.einsum("btl,lhk->bthk", ckv, params["w_uv"].astype(dt))
+    t = ckv.shape[1]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (dr,))
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    out = sdpa(qf, k, v, causal=cfg.causal, window=window, softcap=cfg.softcap,
+               scale=(dn + dr) ** -0.5, q_positions=positions,
+               kv_valid_len=kv_valid_len,
+               kv_chunk=cfg.kv_chunk if cache is not None else 0)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, new_cache

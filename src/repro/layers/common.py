@@ -1,0 +1,48 @@
+"""Shared layer plumbing: initializers and param-tree helpers.
+
+Params are plain nested dicts of jnp arrays (no flax): full control over
+flattened path names, which the sharding rule engine (dist/sharding.py)
+matches with regexes.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis_size: int | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (the LLaMA/gemma default)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = fan_in ** -0.5
+    return (std * jax.random.truncated_normal(key, -3, 3, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (0.02 * jax.random.truncated_normal(key, -3, 3, shape)).astype(dtype)
+
+
+def split_keys(key, n: int) -> Iterator[jax.Array]:
+    return iter(jax.random.split(key, n))
+
+
+def flatten_paths(tree, prefix: str = "") -> dict[str, jnp.ndarray]:
+    """{'a/b/c': leaf} view of a nested-dict param tree."""
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_paths(v, f"{prefix}/{k}" if prefix else k))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def param_count(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )

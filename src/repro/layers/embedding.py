@@ -1,0 +1,80 @@
+"""Embeddings: LM token table and the recsys EmbeddingBag.
+
+JAX has no native EmbeddingBag (torch parity gap) — we build it from
+``jnp.take`` + ``jax.ops.segment_sum``, which is the TPU-native formulation
+anyway (gather + segment-reduce both map to efficient XLA ops). This IS part
+of the system, per the brief. The row-sharded distributed version wraps this
+in shard_map (dist/embedding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import embed_init
+
+
+# ---------------------------------------------------------------------------
+# LM token embedding
+# ---------------------------------------------------------------------------
+
+def init_token_embedding(key, vocab: int, d_model: int) -> jnp.ndarray:
+    return embed_init(key, (vocab, d_model))
+
+
+def embed_tokens(table: jnp.ndarray, tokens: jnp.ndarray, dtype, scale: bool = False):
+    x = jnp.take(table, tokens, axis=0).astype(dtype)
+    if scale:
+        x = x * jnp.asarray(table.shape[1] ** 0.5, dtype)
+    return x
+
+
+def unembed(table: jnp.ndarray, x: jnp.ndarray, softcap: float = 0.0) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag (multi-hot gather-reduce)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BagConfig:
+    mode: str = "sum"  # sum | mean
+
+
+def embedding_bag(
+    table: jnp.ndarray,     # (V, d)
+    indices: jnp.ndarray,   # (B, L) int32 ids, padded with -1 (or any <0)
+    cfg: BagConfig = BagConfig(),
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """(B, d): per-bag reduction of table rows. Padded slots contribute 0."""
+    b, l = indices.shape
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = jnp.take(table, safe.reshape(-1), axis=0).astype(dtype)   # (B*L, d)
+    rows = jnp.where(valid.reshape(-1, 1), rows, 0)
+    seg = jnp.repeat(jnp.arange(b, dtype=jnp.int32), l)
+    out = jax.ops.segment_sum(rows, seg, num_segments=b)
+    if cfg.mode == "mean":
+        n = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+        out = out / n.astype(dtype)
+    return out
+
+
+def multi_field_lookup(
+    tables: jnp.ndarray,    # (F, V, d) one table per sparse field
+    indices: jnp.ndarray,   # (B, F) one id per field (single-hot fields)
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """(B, F, d) single-id-per-field lookup (DLRM/AutoInt layout)."""
+    f = tables.shape[0]
+    out = jax.vmap(lambda tab, idx: jnp.take(tab, idx, axis=0), in_axes=(0, 1),
+                   out_axes=1)(tables, indices)
+    return out.astype(dtype)

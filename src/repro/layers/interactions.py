@@ -1,0 +1,67 @@
+"""Recsys feature-interaction ops: dot (DLRM), concat (Wide&Deep), FM,
+and multi-head self-attention over field embeddings (AutoInt)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+
+def dot_interaction(feats: jnp.ndarray, keep_self: bool = False) -> jnp.ndarray:
+    """DLRM pairwise dots. feats: (B, F, d) -> (B, F*(F-1)/2) upper triangle."""
+    b, f, d = feats.shape
+    dots = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(f, k=0 if keep_self else 1)
+    return dots[:, iu, ju]
+
+
+def fm_interaction(feats: jnp.ndarray) -> jnp.ndarray:
+    """Factorization-machine 2nd-order term: 0.5*((sum v)^2 - sum v^2). (B,)"""
+    s = jnp.sum(feats, axis=1)
+    s2 = jnp.sum(feats * feats, axis=1)
+    return 0.5 * jnp.sum(s * s - s2, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldAttnConfig:
+    n_fields: int
+    d_embed: int
+    n_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32  # total attention width (split across heads)
+
+
+def init_field_attention(key, cfg: FieldAttnConfig) -> dict:
+    layers = []
+    d_in = cfg.d_embed
+    for _ in range(cfg.n_layers):
+        ks = split_keys(key, 5)
+        key = next(ks)
+        layers.append({
+            "wq": dense_init(next(ks), (d_in, cfg.d_attn), d_in),
+            "wk": dense_init(next(ks), (d_in, cfg.d_attn), d_in),
+            "wv": dense_init(next(ks), (d_in, cfg.d_attn), d_in),
+            "w_res": dense_init(next(ks), (d_in, cfg.d_attn), d_in),
+        })
+        d_in = cfg.d_attn
+    return {f"layer{i}": p for i, p in enumerate(layers)}
+
+
+def field_attention(params: dict, feats: jnp.ndarray, cfg: FieldAttnConfig) -> jnp.ndarray:
+    """AutoInt interacting layers. feats: (B, F, d) -> (B, F * d_attn)."""
+    x = feats
+    dh = cfg.d_attn // cfg.n_heads
+    for i in range(cfg.n_layers):
+        p = params[f"layer{i}"]
+        dt = x.dtype
+        q = (x @ p["wq"].astype(dt)).reshape(*x.shape[:2], cfg.n_heads, dh)
+        k = (x @ p["wk"].astype(dt)).reshape(*x.shape[:2], cfg.n_heads, dh)
+        v = (x @ p["wv"].astype(dt)).reshape(*x.shape[:2], cfg.n_heads, dh)
+        logits = jnp.einsum("bfhd,bghd->bhfg", q, k).astype(jnp.float32)
+        a = jax.nn.softmax(logits, axis=-1).astype(dt)
+        o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(*x.shape[:2], cfg.d_attn)
+        x = jax.nn.relu(o + x @ p["w_res"].astype(dt))
+    return x.reshape(x.shape[0], -1)

@@ -1,0 +1,67 @@
+"""Gated MLP (SwiGLU / GeGLU) — the dense FFN used by all five LM archs."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    act: str = "silu"
+    gated: bool = True   # False -> classic 2-matrix FFN (starcoder2)
+
+
+def init_mlp(key, cfg: MLPConfig) -> dict:
+    ks = split_keys(key, 3)
+    p = {
+        "w_up": dense_init(next(ks), (cfg.d_model, cfg.d_ff), cfg.d_model),
+        "w_down": dense_init(next(ks), (cfg.d_ff, cfg.d_model), cfg.d_ff),
+    }
+    if cfg.gated:
+        p["w_gate"] = dense_init(next(ks), (cfg.d_model, cfg.d_ff), cfg.d_model)
+    return p
+
+
+def mlp(params: dict, x: jnp.ndarray, cfg: MLPConfig) -> jnp.ndarray:
+    dt = x.dtype
+    u = x @ params["w_up"].astype(dt)
+    if cfg.gated:
+        g = ACTS[cfg.act](x @ params["w_gate"].astype(dt))
+        h = g * u
+    else:
+        h = ACTS[cfg.act](u)
+    return h @ params["w_down"].astype(dt)
+
+
+def init_dense_stack(key, dims: tuple[int, ...], act: str = "relu") -> dict:
+    """Plain MLP tower (recsys): dims = (in, h1, ..., out)."""
+    ks = split_keys(key, len(dims))
+    return {
+        f"w{i}": dense_init(next(ks), (dims[i], dims[i + 1]), dims[i])
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), jnp.float32)
+        for i in range(len(dims) - 1)
+    }
+
+
+def dense_stack(params: dict, x: jnp.ndarray, n: int, act: str = "relu",
+                final_act: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    for i in range(n):
+        x = x @ params[f"w{i}"].astype(dt) + params[f"b{i}"].astype(dt)
+        if i < n - 1 or final_act:
+            x = ACTS[act](x)
+    return x

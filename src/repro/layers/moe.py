@@ -1,0 +1,189 @@
+"""Mixture-of-Experts layer: top-k routing, shared experts, sort-based dispatch.
+
+Covers deepseek-v2 (160 routed top-6 + 2 shared, fine-grained d_expert=1536)
+and qwen2-moe (60 routed top-4 + 4 shared).
+
+TPU dispatch: the usual CPU/GPU MoE uses ragged grouped GEMM. The fixed-shape
+JAX formulation here is **sort-based capacity dispatch**:
+
+  1. flatten (token, k) assignments; stable-sort by expert id;
+  2. position-in-run arithmetic (max-scan over run starts) gives each
+     assignment its slot within its expert's capacity C;
+  3. scatter token activations into an (E*C, D) buffer (``mode="drop"``
+     enforces capacity — dropped tokens fall back to the shared experts /
+     residual, and the drop count is observable for monitoring);
+  4. one batched einsum over (E, C, D) runs all experts on the MXU;
+  5. gather back by slot and scatter-add weighted outputs per token.
+
+The (E, C, D) buffer is what EP shards over the "model" axis. Aux
+load-balance loss follows Switch (mean fraction x mean prob per expert).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import DP, TP, shard_activation
+from .common import dense_init, split_keys
+from .mlp import ACTS
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    router_dtype: str = "float32"
+    normalize_weights: bool = True  # qwen2-moe: False (norm_topk_prob)
+    n_experts_alloc: int = 0        # physical rows (pad to the EP axis size;
+                                    # qwen2-moe: 60 logical -> 64 allocated)
+    n_groups: int = 1               # token groups for dispatch: sorts and
+                                    # scatters become *batched* over groups,
+                                    # which GSPMD partitions along the group
+                                    # dim (a flat global scatter is
+                                    # replicated). Production: = dp size.
+
+    @property
+    def e_alloc(self) -> int:
+        return max(self.n_experts, self.n_experts_alloc)
+
+
+def init_moe(key, cfg: MoEConfig) -> dict:
+    ks = split_keys(key, 8)
+    e, d, f = cfg.e_alloc, cfg.d_model, cfg.d_expert
+    p = {
+        "router": dense_init(next(ks), (d, cfg.n_experts), d),
+        "w_gate": dense_init(next(ks), (e, d, f), d),
+        "w_up": dense_init(next(ks), (e, d, f), d),
+        "w_down": dense_init(next(ks), (e, f, d), f),
+    }
+    if cfg.n_shared > 0:
+        fs = cfg.n_shared * f
+        p["shared"] = {
+            "w_gate": dense_init(next(ks), (d, fs), d),
+            "w_up": dense_init(next(ks), (d, fs), d),
+            "w_down": dense_init(next(ks), (fs, d), fs),
+        }
+    return p
+
+
+def _position_in_run(sorted_e: jnp.ndarray) -> jnp.ndarray:
+    """For a sorted id array, the index of each element within its run."""
+    m = sorted_e.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    return idx - run_start
+
+
+def moe_layer(params: dict, x: jnp.ndarray, cfg: MoEConfig,
+              capacity: int | None = None):
+    """x: (B, S, D) -> (y, aux) where aux = {aux_loss, dropped_frac}."""
+    dt = x.dtype
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = (xt.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    top_w, top_i = jax.lax.top_k(probs, k)   # (T, K)
+    if cfg.normalize_weights:
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e (frac_tokens_e * mean_prob_e)
+    assign_onehot = jax.nn.one_hot(top_i[:, 0], e)  # primary assignment
+    frac = jnp.mean(assign_onehot, axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux_loss = e * jnp.sum(frac * mean_prob)
+
+    ea = cfg.e_alloc  # physical expert rows (>= e; pad rows get no tokens)
+    # group bypass at small T (decode: T=batch): grouped dispatch adds fixed
+    # per-layer collectives that only amortize over many tokens (§Perf A6 —
+    # fixed the 2.5x decode regression the grouped path introduced)
+    groups = max(1, min(cfg.n_groups, t // 2048))
+    tg = t // groups
+    if t % groups:  # group-pad (padding tokens route nowhere: weight 0)
+        pad = groups * (tg + 1) - t
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+        top_w = jnp.pad(top_w, ((0, pad), (0, 0)))
+        top_i = jnp.pad(top_i, ((0, pad), (0, 0)))
+        tg += 1
+    if capacity is None:
+        capacity = int(cfg.capacity_factor * tg * k / e) + 1
+    c = capacity
+
+    # ---- grouped sort-based dispatch ---------------------------------------
+    # Per-GROUP sort/scatter (vmap over groups) rather than one flat global
+    # scatter: GSPMD partitions batched scatters along the group dim, but
+    # REPLICATES a flat scatter with data-dependent indices (a 161 GB
+    # buffer at deepseek-v2 train_4k scale — EXPERIMENTS.md §Perf A).
+    # NOTE (§Perf, refuted): sharding the group dim over the WHOLE mesh
+    # (one group per chip, device-local dispatch) triggers SPMD
+    # "involuntary full rematerialization" on the (G*tg, D) reshapes —
+    # collective time exploded 79s -> 1532s. Groups shard over dp only;
+    # with a single group (decode) constraints are skipped outright — a
+    # dp-constraint on a size-1 dim replicates the whole dispatch.
+    def _g(x):
+        return shard_activation(x, DP, *([None] * (x.ndim - 1))) \
+            if groups > 1 else x
+    xg = _g(xt.reshape(groups, tg, d))
+    wg = _g(top_w.reshape(groups, tg, k))
+    ig = _g(top_i.reshape(groups, tg, k).astype(jnp.int32))
+
+    def dispatch_group(xt_g, top_w_g, top_i_g):
+        flat_e = top_i_g.reshape(-1)                            # (tg*K,)
+        flat_t = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)
+        flat_w = top_w_g.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        sorted_t = flat_t[order]
+        sorted_w = flat_w[order]
+        pos = _position_in_run(sorted_e)
+        keep = pos < c
+        slot = jnp.where(keep, sorted_e * c + pos, ea * c)      # OOB == drop
+        # .add, not .set: slots are unique by construction, and
+        # scatter-add's backward is a gather — scatter-set's backward
+        # materializes u32 winner-index maps (10 GB/layer here).
+        buf = jnp.zeros((ea * c, d), dt).at[slot].add(
+            xt_g[sorted_t], mode="drop")
+        return buf.reshape(ea, c, d), (slot, sorted_t, sorted_w, keep)
+
+    buf, (slot, sorted_t, sorted_w, keep) = jax.vmap(dispatch_group)(xg, wg, ig)
+    if groups > 1:
+        buf = shard_activation(buf, DP, TP, None, None)         # (G, ea, c, D)
+    else:
+        buf = shard_activation(buf, None, TP, None, None)
+
+    # ---- expert compute (batched MXU einsums; experts sharded over tp) -----
+    g = ACTS[cfg.act](jnp.einsum("Gecd,edf->Gecf", buf, params["w_gate"].astype(dt)))
+    u = jnp.einsum("Gecd,edf->Gecf", buf, params["w_up"].astype(dt))
+    yb = jnp.einsum("Gecf,efd->Gecd", g * u, params["w_down"].astype(dt))
+    yb = shard_activation(yb, DP if groups > 1 else None, TP, None, None)
+
+    # ---- combine ------------------------------------------------------------
+    def combine_group(yb_g, slot_g, sorted_t_g, sorted_w_g, keep_g):
+        flat = yb_g.reshape(ea * c, d)
+        contrib = flat.at[slot_g, :].get(mode="fill", fill_value=0.0)
+        contrib = contrib * sorted_w_g[:, None].astype(dt)
+        return jnp.zeros((tg, d), dt).at[sorted_t_g].add(
+            jnp.where(keep_g[:, None], contrib, 0.0))
+
+    y = jax.vmap(combine_group)(yb, slot, sorted_t, sorted_w, keep)
+    y = _g(y).reshape(groups * tg, d)[:t]
+    y = shard_activation(y, DP, TP)
+
+    if cfg.n_shared > 0:
+        sp = params["shared"]
+        sg = ACTS[cfg.act](xt @ sp["w_gate"].astype(dt))
+        su = xt @ sp["w_up"].astype(dt)
+        y = y + (sg * su) @ sp["w_down"].astype(dt)
+
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y.reshape(b, s, d), {"aux_loss": aux_loss, "dropped_frac": dropped}

@@ -1,0 +1,29 @@
+"""Rotary position embeddings.
+
+``theta`` may be a traced scalar — gemma3 alternates 10k (local layers) and
+1M (global layers) inside a scan-over-layers, so the frequency table is
+computed on the fly from the per-layer theta rather than precomputed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(positions: jnp.ndarray, d_head: int, theta) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(cos, sin) of shape positions.shape + (d_head // 2,)."""
+    half = d_head // 2
+    exponent = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = jnp.asarray(theta, jnp.float32) ** -exponent  # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta=10_000.0) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: (..., S). Split-half convention."""
+    dh = x.shape[-1]
+    cos, sin = rope_freqs(positions, dh, theta)  # (..., S, dh/2)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

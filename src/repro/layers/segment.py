@@ -1,0 +1,51 @@
+"""Segment ops: the GNN message-passing substrate.
+
+JAX sparse is BCOO-only (no CSR SpMM), so message passing over an edge list
+is gather (by source) -> transform -> ``segment_sum``/``segment_max`` scatter
+(by destination). These wrappers add degree normalization and padding-edge
+masking (-1 endpoints contribute nothing), which every GNN model here uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_scatter(
+    node_feats: jnp.ndarray,  # (N, d)
+    edge_src: jnp.ndarray,    # (E,) int32, -1 for padding
+    edge_dst: jnp.ndarray,    # (E,) int32
+    num_nodes: int,
+    *,
+    agg: str = "sum",         # sum | mean | max
+    edge_weight: jnp.ndarray | None = None,  # (E,)
+) -> jnp.ndarray:
+    """Aggregate source features into destinations: one GNN message pass."""
+    valid = (edge_src >= 0) & (edge_dst >= 0)
+    src = jnp.where(valid, edge_src, 0)
+    dst = jnp.where(valid, edge_dst, num_nodes)  # padding -> OOB segment (dropped)
+    msg = jnp.take(node_feats, src, axis=0)
+    if edge_weight is not None:
+        msg = msg * edge_weight[:, None].astype(msg.dtype)
+    msg = jnp.where(valid[:, None], msg, 0 if agg != "max" else -jnp.inf)
+    if agg == "max":
+        out = jax.ops.segment_max(msg, dst, num_segments=num_nodes + 1)[:num_nodes]
+        return jnp.where(jnp.isfinite(out), out, 0)
+    out = jax.ops.segment_sum(msg, dst, num_segments=num_nodes + 1)[:num_nodes]
+    if agg == "mean":
+        ones = jnp.where(valid, 1.0, 0.0)
+        deg = jax.ops.segment_sum(ones, dst, num_segments=num_nodes + 1)[:num_nodes]
+        out = out / jnp.maximum(deg, 1.0)[:, None]
+    return out
+
+
+def sym_norm_weights(edge_src, edge_dst, num_nodes: int) -> jnp.ndarray:
+    """GCN symmetric normalization 1/sqrt(deg_src * deg_dst) (w/ self-loop +1)."""
+    valid = (edge_src >= 0) & (edge_dst >= 0)
+    ones = jnp.where(valid, 1.0, 0.0)
+    src = jnp.where(valid, edge_src, 0)
+    dst = jnp.where(valid, edge_dst, 0)
+    deg = jax.ops.segment_sum(ones, dst, num_segments=num_nodes) + 1.0  # in-degree
+    deg_out = jax.ops.segment_sum(ones, src, num_segments=num_nodes) + 1.0
+    w = (deg_out[src] * deg[dst]) ** -0.5
+    return jnp.where(valid, w, 0.0)

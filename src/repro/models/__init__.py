@@ -1,0 +1,12 @@
+from .gcn import GCNConfig, gcn_batched_graphs, gcn_forward, gcn_loss, init_gcn
+from .recsys import (
+    RecsysConfig, bce_loss, embed_items, init_recsys, recsys_forward,
+    recsys_loss, retrieval_scores, retrieval_topk, two_tower_loss,
+)
+from .transformer import (
+    TransformerConfig, cache_shapes, chunked_ce_loss, decode_step, forward,
+    greedy_token, init_cache, init_transformer, logits_from_hidden, loss_fn,
+    prefill,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

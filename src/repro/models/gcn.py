@@ -1,0 +1,83 @@
+"""GCN (Kipf & Welling) over edge lists — full-batch and sampled-minibatch.
+
+Message passing is ``jax.ops.segment_sum`` over an edge index (JAX sparse is
+BCOO-only; gather-scatter IS the system here, per the brief). Symmetric
+normalization weights are computed once per graph. The ``minibatch_lg``
+shape pairs this with the fanout neighbor sampler in data/graphs.py: the
+model sees a padded sampled subgraph (layered edge blocks), identical code.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..layers.common import dense_init, split_keys
+from ..layers.segment import gather_scatter, sym_norm_weights
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn"
+    n_layers: int = 2
+    d_feat: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    agg: str = "mean"       # paper config: aggregator=mean (sym-normalized)
+    sym_norm: bool = True
+    dropout: float = 0.0    # kept 0 for determinism
+    dtype: object = jnp.float32
+
+
+def init_gcn(key, cfg: GCNConfig) -> dict:
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = split_keys(key, cfg.n_layers)
+    return {
+        f"w{i}": dense_init(next(ks), (dims[i], dims[i + 1]), dims[i])
+        for i in range(cfg.n_layers)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), jnp.float32)
+        for i in range(cfg.n_layers)
+    }
+
+
+def gcn_forward(params: dict, feats: jnp.ndarray, edge_src: jnp.ndarray,
+                edge_dst: jnp.ndarray, cfg: GCNConfig) -> jnp.ndarray:
+    """feats (N, d_feat), edges (E,) with -1 padding -> logits (N, n_classes)."""
+    n = feats.shape[0]
+    x = feats.astype(cfg.dtype)
+    w = sym_norm_weights(edge_src, edge_dst, n) if cfg.sym_norm else None
+    agg = "sum" if cfg.sym_norm else cfg.agg
+    for i in range(cfg.n_layers):
+        x = x @ params[f"w{i}"].astype(cfg.dtype) + params[f"b{i}"].astype(cfg.dtype)
+        neigh = gather_scatter(x, edge_src, edge_dst, n, agg=agg, edge_weight=w)
+        deg_self = 1.0  # self-loop contribution with sym norm folds into +x/deg
+        x = neigh + x * deg_self
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    return x.astype(jnp.float32)
+
+
+def gcn_loss(params, batch: dict, cfg: GCNConfig):
+    """batch: feats (N,d), edge_src/dst (E,), labels (N,), label_mask (N,)."""
+    logits = gcn_forward(params, batch["feats"], batch["edge_src"],
+                         batch["edge_dst"], cfg)
+    labels = jnp.maximum(batch["labels"], 0)
+    mask = (batch["labels"] >= 0).astype(jnp.float32) * batch.get(
+        "label_mask", jnp.ones_like(labels, jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = (lse - ll) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"acc": acc}
+
+
+def gcn_batched_graphs(params: dict, feats: jnp.ndarray, edge_src, edge_dst,
+                       cfg: GCNConfig) -> jnp.ndarray:
+    """molecule shape: feats (G, N, d), edges (G, E) -> graph logits (G, C)
+    via mean-pool readout. vmapped single-graph forward."""
+    node_logits = jax.vmap(lambda f, s, d: gcn_forward(params, f, s, d, cfg))(
+        feats, edge_src, edge_dst)
+    return jnp.mean(node_logits, axis=1)

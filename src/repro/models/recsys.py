@@ -1,0 +1,182 @@
+"""RecSys models: two-tower retrieval, Wide&Deep, DLRM-RM2, AutoInt.
+
+Shared substrate: a single (F, V, d) embedding-table array per model (one
+row-block per sparse field — uniform V keeps the array dense and row-
+shardable over the whole mesh), the take+segment_sum EmbeddingBag, and the
+interaction ops in layers/interactions.py.
+
+The two-tower model is the paper's home turf (DESIGN.md §6): its item tower
+produces the embedding corpus the range engine indexes, and
+``retrieval_cand`` is served either by brute force (the rangescan kernel) or
+through the graph-based range engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..layers.common import dense_init, embed_init, split_keys
+from ..layers.interactions import (
+    FieldAttnConfig, dot_interaction, field_attention, init_field_attention,
+)
+from ..layers.mlp import dense_stack, init_dense_stack
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str = "dlrm"
+    kind: str = "dlrm"          # two_tower | wide_deep | dlrm | autoint
+    n_dense: int = 0
+    n_sparse: int = 26
+    vocab: int = 100_000        # rows per field table
+    d_embed: int = 64
+    mlp_dims: tuple = (512, 256)          # deep/top tower hidden dims
+    bot_mlp_dims: tuple = ()              # dlrm bottom mlp (dense features)
+    # two-tower
+    n_sparse_item: int = 0                # item-side fields (two_tower)
+    d_out: int = 256                      # tower output dim
+    # autoint
+    attn_layers: int = 3
+    attn_heads: int = 2
+    d_attn: int = 32
+    dtype: Any = jnp.float32
+
+    def field_attn_cfg(self) -> FieldAttnConfig:
+        return FieldAttnConfig(n_fields=self.n_sparse, d_embed=self.d_embed,
+                               n_layers=self.attn_layers, n_heads=self.attn_heads,
+                               d_attn=self.d_attn)
+
+
+def _tables(key, f: int, v: int, d: int) -> jnp.ndarray:
+    return embed_init(key, (f, v, d))
+
+
+def init_recsys(key, cfg: RecsysConfig) -> dict:
+    ks = split_keys(key, 8)
+    p: dict = {}
+    if cfg.kind == "two_tower":
+        fu, fi = cfg.n_sparse, cfg.n_sparse_item or cfg.n_sparse
+        p["user"] = {
+            "tables": _tables(next(ks), fu, cfg.vocab, cfg.d_embed),
+            "mlp": init_dense_stack(next(ks), (fu * cfg.d_embed,) + cfg.mlp_dims + (cfg.d_out,)),
+        }
+        p["item"] = {
+            "tables": _tables(next(ks), fi, cfg.vocab, cfg.d_embed),
+            "mlp": init_dense_stack(next(ks), (fi * cfg.d_embed,) + cfg.mlp_dims + (cfg.d_out,)),
+        }
+        return p
+    p["tables"] = _tables(next(ks), cfg.n_sparse, cfg.vocab, cfg.d_embed)
+    if cfg.kind == "wide_deep":
+        p["wide"] = _tables(next(ks), cfg.n_sparse, cfg.vocab, 1)  # per-id weight
+        p["deep"] = init_dense_stack(next(ks), (cfg.n_sparse * cfg.d_embed,) + cfg.mlp_dims + (1,))
+    elif cfg.kind == "dlrm":
+        n_inter = (cfg.n_sparse + 1) * cfg.n_sparse // 2  # pairs incl. dense vec
+        p["bot"] = init_dense_stack(next(ks), (cfg.n_dense,) + cfg.bot_mlp_dims)
+        top_in = n_inter + cfg.bot_mlp_dims[-1]
+        p["top"] = init_dense_stack(next(ks), (top_in,) + cfg.mlp_dims + (1,))
+    elif cfg.kind == "autoint":
+        p["attn"] = init_field_attention(next(ks), cfg.field_attn_cfg())
+        p["out"] = init_dense_stack(next(ks), (cfg.n_sparse * cfg.d_attn, 1))
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def _lookup(tables: jnp.ndarray, sparse: jnp.ndarray, dtype) -> jnp.ndarray:
+    """(F, V, d) x (B, F) -> (B, F, d). One id per field (multi-hot bags go
+    through layers.embedding.embedding_bag; single-hot is the hot path)."""
+    f = tables.shape[0]
+    out = jax.vmap(lambda tab, idx: jnp.take(tab, idx, axis=0),
+                   in_axes=(0, 1), out_axes=1)(tables, sparse)
+    return out.astype(dtype)
+
+
+def tower(params: dict, sparse: jnp.ndarray, cfg: RecsysConfig,
+          n_mlp: int) -> jnp.ndarray:
+    e = _lookup(params["tables"], sparse, cfg.dtype)
+    x = e.reshape(e.shape[0], -1)
+    x = dense_stack(params["mlp"], x, n_mlp)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def recsys_forward(params: dict, batch: dict, cfg: RecsysConfig) -> jnp.ndarray:
+    """CTR models -> logit (B,). two_tower -> (user_emb, item_emb)."""
+    dt = cfg.dtype
+    if cfg.kind == "two_tower":
+        n_mlp = len(cfg.mlp_dims) + 1
+        u = tower(params["user"], batch["user_sparse"], cfg, n_mlp)
+        i = tower(params["item"], batch["item_sparse"], cfg, n_mlp)
+        return u, i
+    e = _lookup(params["tables"], batch["sparse"], dt)   # (B, F, d)
+    if cfg.kind == "wide_deep":
+        wide = jnp.sum(_lookup(params["wide"], batch["sparse"], dt)[..., 0], axis=1)
+        deep = dense_stack(params["deep"], e.reshape(e.shape[0], -1),
+                           len(cfg.mlp_dims) + 1)[:, 0]
+        return wide + deep
+    if cfg.kind == "dlrm":
+        z = dense_stack(params["bot"], batch["dense"].astype(dt),
+                        len(cfg.bot_mlp_dims), final_act=True)  # (B, d)
+        feats = jnp.concatenate([z[:, None, :], e], axis=1)     # (B, F+1, d)
+        inter = dot_interaction(feats)
+        top_in = jnp.concatenate([z, inter], axis=-1)
+        return dense_stack(params["top"], top_in, len(cfg.mlp_dims) + 1)[:, 0]
+    if cfg.kind == "autoint":
+        h = field_attention(params["attn"], e, cfg.field_attn_cfg())
+        return dense_stack(params["out"], h, 1)[:, 0]
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def bce_loss(params, batch: dict, cfg: RecsysConfig):
+    logit = recsys_forward(params, batch, cfg)
+    y = batch["label"].astype(jnp.float32)
+    z = logit.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    return loss, {"mean_logit": jnp.mean(z)}
+
+
+def two_tower_loss(params, batch: dict, cfg: RecsysConfig):
+    """In-batch sampled softmax with logQ correction (Yi et al., RecSys'19)."""
+    u, i = recsys_forward(params, batch, cfg)
+    logits = (u @ i.T).astype(jnp.float32) / 0.05          # temperature
+    logq = batch.get("log_q")                               # (B,) sampling prob
+    if logq is not None:
+        logits = logits - logq[None, :]
+    labels = jnp.arange(u.shape[0])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"in_batch_acc": acc}
+
+
+def recsys_loss(params, batch, cfg: RecsysConfig):
+    if cfg.kind == "two_tower":
+        return two_tower_loss(params, batch, cfg)
+    return bce_loss(params, batch, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Retrieval scoring (retrieval_cand shape)
+# ---------------------------------------------------------------------------
+
+def embed_items(params: dict, item_sparse: jnp.ndarray, cfg: RecsysConfig):
+    return tower(params["item"], item_sparse, cfg, len(cfg.mlp_dims) + 1)
+
+
+def retrieval_scores(query_emb: jnp.ndarray, cand_emb: jnp.ndarray) -> jnp.ndarray:
+    """(Q, d) x (N, d) -> (Q, N) inner-product scores (batched MXU matmul;
+    the rangescan kernel serves the same shape with fused top-k on TPU)."""
+    return query_emb @ cand_emb.T
+
+
+def retrieval_topk(query_emb, cand_emb, k: int = 100):
+    s = retrieval_scores(query_emb, cand_emb)
+    vals, idx = jax.lax.top_k(s, k)
+    return idx, vals

@@ -1,0 +1,383 @@
+"""Decoder-only transformer covering all five assigned LM architectures.
+
+One config class spans dense GQA (gemma3/qwen3/starcoder2), MLA + MoE
+(deepseek-v2) and GQA + MoE (qwen2-moe):
+
+* **scan-over-layers** with stacked params; per-layer heterogeneity
+  (gemma3's 5 local : 1 global sliding-window pattern, its dual rope
+  thetas) rides along as *scanned scalar arrays*, so the loop body stays
+  uniform and compiles once.
+* leading dense layers (deepseek-v2's first layer) are unstacked and run
+  before the scan.
+* ``remat='full'`` checkpoints each scanned layer (the production default
+  for the 27B/236B configs).
+* KV caches are stacked (L, B, T, ...) pytrees scanned in lockstep with
+  the layers; MLA caches the 512-dim latent + 64-dim rope key only.
+* the LM loss is a **vocab-chunked** cross-entropy: logits are produced
+  seq-chunk by seq-chunk inside a scan so the (B, S, V) tensor is never
+  materialized (with V = 262k this is the difference between fitting and
+  OOM at compile).
+
+Activation sharding: residual stream is constrained to
+``(dp, tp, None)`` — batch over data, *sequence over model* (Megatron-style
+sequence parallelism); attention/FFN internals are head-/ffn-sharded over
+``tp``. See dist/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import DP, TP, shard_activation
+from ..layers.attention import (
+    GQAConfig, KVCache, MLAConfig, gqa_attention, init_gqa, init_mla,
+    mla_attention,
+)
+from ..layers.common import split_keys
+from ..layers.embedding import embed_tokens, init_token_embedding, unembed
+from ..layers.mlp import MLPConfig, init_mlp, mlp
+from ..layers.moe import MoEConfig, init_moe, moe_layer
+from ..layers.norm import rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv: int = 2
+    d_head: int = 64
+    d_ff: int = 1024
+    ffn_gated: bool = True
+    ffn_act: str = "silu"
+    vocab: int = 1000
+    rope_theta: float = 10_000.0
+    rope_theta_local: float = 0.0    # gemma3 local layers use 10k vs 1M global
+    qk_norm: bool = False
+    attn_chunk: int = 0              # KV streaming chunk (flash-in-XLA)
+    attn_softcap: float = 0.0
+    logit_softcap: float = 0.0
+    window: int = 0                  # sliding window for local layers
+    local_ratio: int = 0             # N local layers per global (gemma3: 5)
+    attn_kind: str = "gqa"           # gqa | mla
+    # MLA
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    n_experts: int = 0
+    n_experts_alloc: int = 0         # pad experts to the EP axis (qwen: 64)
+    moe_groups: int = 1              # dispatch token groups (see layers/moe.py)
+    n_shared: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    first_dense: int = 0             # leading dense layers (deepseek-v2: 1)
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.001
+    # execution
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: bool = False  # unroll scan-over-layers: dry-run analysis
+                               # lowering (XLA cost_analysis counts a while
+                               # body once; unrolled HLO counts true FLOPs)
+    embed_scale: bool = False        # gemma multiplies embeds by sqrt(D)
+    sandwich_norm: bool = False      # gemma3 post-attn/post-ffn norms
+    tie_embeddings: bool = True
+    loss_chunk: int = 512
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def n_scanned(self) -> int:
+        return self.n_layers - self.first_dense
+
+    def attn_cfg(self):
+        if self.attn_kind == "mla":
+            return MLAConfig(d_model=self.d_model, n_heads=self.n_heads,
+                             q_lora=self.q_lora, kv_lora=self.kv_lora,
+                             qk_nope_dim=self.qk_nope_dim,
+                             qk_rope_dim=self.qk_rope_dim,
+                             v_head_dim=self.v_head_dim,
+                             softcap=self.attn_softcap,
+                             kv_chunk=self.attn_chunk)
+        return GQAConfig(d_model=self.d_model, n_heads=self.n_heads,
+                         n_kv=self.n_kv, d_head=self.d_head,
+                         qk_norm=self.qk_norm, softcap=self.attn_softcap,
+                         kv_chunk=self.attn_chunk)
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(d_model=self.d_model, n_experts=self.n_experts,
+                         top_k=self.top_k, d_expert=self.d_expert,
+                         n_shared=self.n_shared,
+                         capacity_factor=self.capacity_factor,
+                         n_experts_alloc=self.n_experts_alloc,
+                         n_groups=self.moe_groups)
+
+    def mlp_cfg(self) -> MLPConfig:
+        return MLPConfig(d_model=self.d_model, d_ff=self.d_ff,
+                         act=self.ffn_act, gated=self.ffn_gated)
+
+    def layer_meta(self) -> tuple[np.ndarray, np.ndarray]:
+        """(windows, thetas) per layer. Layer i is local iff the 5:1-style
+        pattern says so (pattern position ``local_ratio`` is the global)."""
+        L = self.n_layers
+        windows = np.zeros((L,), np.int32)
+        thetas = np.full((L,), self.rope_theta, np.float32)
+        if self.window > 0 and self.local_ratio > 0:
+            period = self.local_ratio + 1
+            local = (np.arange(L) % period) != (period - 1)
+            windows = np.where(local, self.window, 0).astype(np.int32)
+            if self.rope_theta_local > 0:
+                thetas = np.where(local, self.rope_theta_local,
+                                  self.rope_theta).astype(np.float32)
+        elif self.window > 0:
+            windows[:] = self.window
+        return windows, thetas
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: TransformerConfig, dense: bool) -> dict:
+    ks = split_keys(key, 4)
+    init_attn = init_mla if cfg.attn_kind == "mla" else init_gqa
+    p = {
+        "attn": init_attn(next(ks), cfg.attn_cfg()),
+        "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32) if cfg.sandwich_norm
+        else jnp.ones((cfg.d_model,), jnp.float32),
+        "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32) if cfg.sandwich_norm
+        else jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.sandwich_norm:
+        p["post_attn_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["post_ffn_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.is_moe and not dense:
+        p["moe"] = init_moe(next(ks), cfg.moe_cfg())
+    else:
+        p["mlp"] = init_mlp(next(ks), cfg.mlp_cfg())
+    return p
+
+
+def init_transformer(key, cfg: TransformerConfig) -> dict:
+    ks = split_keys(key, 4 + cfg.first_dense)
+    params: dict = {"embed": init_token_embedding(next(ks), cfg.vocab, cfg.d_model)}
+    params["final_norm"] = (jnp.zeros if cfg.sandwich_norm else jnp.ones)(
+        (cfg.d_model,), jnp.float32)
+    for i in range(cfg.first_dense):
+        params[f"dense_layer{i}"] = _init_layer(next(ks), cfg, dense=True)
+    layer_keys = jax.random.split(next(ks), cfg.n_scanned)
+    params["layers"] = jax.vmap(lambda k: _init_layer(k, cfg, dense=False))(layer_keys)
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_token_embedding(next(ks), cfg.vocab, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None) -> KVCache:
+    """Stacked (L, B, T, ...) cache covering scanned + leading dense layers."""
+    dt = dtype or cfg.dtype
+    L = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        k = jnp.zeros((L, batch, max_len, cfg.kv_lora), dt)
+        v = jnp.zeros((L, batch, max_len, cfg.qk_rope_dim), dt)
+    else:
+        k = jnp.zeros((L, batch, max_len, cfg.n_kv, cfg.d_head), dt)
+        v = jnp.zeros_like(k)
+    return KVCache(k=k, v=v)
+
+
+def cache_shapes(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.dtype
+    L = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        return (jax.ShapeDtypeStruct((L, batch, max_len, cfg.kv_lora), dt),
+                jax.ShapeDtypeStruct((L, batch, max_len, cfg.qk_rope_dim), dt))
+    shp = (L, batch, max_len, cfg.n_kv, cfg.d_head)
+    return jax.ShapeDtypeStruct(shp, dt), jax.ShapeDtypeStruct(shp, dt)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(lp: dict, x, cfg: TransformerConfig, *, positions, theta, window,
+               cache: Optional[KVCache], cache_pos, kv_valid, dense: bool):
+    attn_fn = mla_attention if cfg.attn_kind == "mla" else gqa_attention
+    h = rms_norm(x, lp["attn_norm"], unit_offset=cfg.sandwich_norm)
+    attn_out, new_cache = attn_fn(
+        lp["attn"], h, cfg.attn_cfg(), positions=positions, rope_theta=theta,
+        window=window, cache=cache, cache_pos=cache_pos, kv_valid_len=kv_valid)
+    if cfg.sandwich_norm:
+        attn_out = rms_norm(attn_out, lp["post_attn_norm"], unit_offset=True)
+    x = x + attn_out
+    x = shard_activation(x, DP, TP, None)
+    h = rms_norm(x, lp["ffn_norm"], unit_offset=cfg.sandwich_norm)
+    if cfg.is_moe and not dense:
+        ffn_out, aux = moe_layer(lp["moe"], h, cfg.moe_cfg())
+        aux_loss = aux["aux_loss"]
+    else:
+        ffn_out = mlp(lp["mlp"], h, cfg.mlp_cfg())
+        aux_loss = jnp.zeros((), jnp.float32)
+    if cfg.sandwich_norm:
+        ffn_out = rms_norm(ffn_out, lp["post_ffn_norm"], unit_offset=True)
+    x = x + ffn_out
+    x = shard_activation(x, DP, TP, None)
+    return x, new_cache, aux_loss
+
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,           # (B, S) int32
+    cfg: TransformerConfig,
+    *,
+    cache: Optional[KVCache] = None,  # stacked (L, ...) or None
+    cache_pos=None,                   # () int32 write offset (decode/prefill)
+    kv_valid=None,                    # () or (B,) valid kv length
+) -> tuple[jnp.ndarray, Optional[KVCache], jnp.ndarray]:
+    """Returns (hidden (B,S,D) after final norm, new stacked cache, aux_loss)."""
+    b, s = tokens.shape
+    dt = cfg.dtype
+    x = embed_tokens(params["embed"], tokens, dt, scale=cfg.embed_scale)
+    x = shard_activation(x, DP, TP, None)
+    base = jnp.zeros((), jnp.int32) if cache_pos is None else jnp.asarray(cache_pos, jnp.int32)
+    positions = base[None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (b, s))
+
+    windows_np, thetas_np = cfg.layer_meta()
+    windows = jnp.asarray(windows_np)
+    thetas = jnp.asarray(thetas_np)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # leading dense layers (unstacked)
+    for i in range(cfg.first_dense):
+        layer_cache = None
+        if cache is not None:
+            layer_cache = KVCache(k=cache.k[i], v=cache.v[i])
+        x, nc, aux = _layer_fwd(
+            params[f"dense_layer{i}"], x, cfg, positions=positions,
+            theta=thetas[i], window=windows[i], cache=layer_cache,
+            cache_pos=base, kv_valid=kv_valid, dense=True)
+        if cache is not None:
+            cache = KVCache(k=cache.k.at[i].set(nc.k), v=cache.v.at[i].set(nc.v))
+        aux_total += aux
+
+    # scanned layers
+    def body(carry, xs):
+        xc, aux_acc = carry
+        lp, theta, window, ck, cv = xs
+        layer_cache = KVCache(k=ck, v=cv) if cache is not None else None
+        xo, nc, aux = _layer_fwd(lp, xc, cfg, positions=positions, theta=theta,
+                                 window=window, cache=layer_cache,
+                                 cache_pos=base, kv_valid=kv_valid, dense=False)
+        out = (nc.k, nc.v) if nc is not None else (jnp.zeros((), dt),) * 2
+        return (xo, aux_acc + aux), out
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    fd = cfg.first_dense
+    if cache is not None:
+        xs = (params["layers"], thetas[fd:], windows[fd:], cache.k[fd:], cache.v[fd:])
+    else:
+        zk = jnp.zeros((cfg.n_scanned,), dt)
+        xs = (params["layers"], thetas[fd:], windows[fd:], zk, zk)
+    (x, aux_total2), cache_out = jax.lax.scan(
+        body_fn, (x, aux_total), xs,
+        unroll=cfg.n_scanned if cfg.scan_unroll else 1)
+
+    new_cache = None
+    if cache is not None:
+        nk, nv = cache_out
+        new_cache = KVCache(
+            k=jnp.concatenate([cache.k[:fd], nk], axis=0) if fd else nk,
+            v=jnp.concatenate([cache.v[:fd], nv], axis=0) if fd else nv)
+
+    x = rms_norm(x, params["final_norm"], unit_offset=cfg.sandwich_norm)
+    return x, new_cache, aux_total2
+
+
+def logits_from_hidden(params, x, cfg: TransformerConfig) -> jnp.ndarray:
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed(table, x, cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Loss (seq-chunked CE so (B, S, V) never materializes)
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(params, hidden, labels, mask, cfg: TransformerConfig):
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // chunk
+    hs = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)   # (nc, B, c, D)
+    ls = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def body(acc, xs):
+        h, l, m = xs
+        logits = logits_from_hidden(params, h, cfg)        # (B, c, V) fp32
+        logits = shard_activation(logits, DP, None, TP)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * m
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(m)), None
+
+    (tot, n), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ls, ms),
+                               unroll=nc if cfg.scan_unroll else 1)
+    return tot / jnp.maximum(n, 1.0)
+
+
+def loss_fn(params, batch: dict, cfg: TransformerConfig):
+    """batch: tokens (B, S), labels (B, S) (-1 = masked), -> (loss, metrics)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe_labels = jnp.maximum(labels, 0)
+    hidden, _, aux = forward(params, tokens, cfg)
+    ce = chunked_ce_loss(params, hidden, safe_labels, mask, cfg)
+    loss = ce + cfg.aux_loss_weight * aux
+    return loss, {"ce": ce, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, cfg: TransformerConfig, max_len: int):
+    """Process a prompt, returning (last-token logits, cache, kv_len)."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+    hidden, cache, _ = forward(params, tokens, cfg, cache=cache,
+                               cache_pos=jnp.zeros((), jnp.int32),
+                               kv_valid=jnp.asarray(s, jnp.int32))
+    logits = logits_from_hidden(params, hidden[:, -1:], cfg)
+    return logits, cache, jnp.asarray(s, jnp.int32)
+
+
+def decode_step(params, token, cache: KVCache, pos, cfg: TransformerConfig):
+    """One decode step: token (B, 1), pos () int32 -> (logits, new cache)."""
+    hidden, cache, _ = forward(params, token, cfg, cache=cache, cache_pos=pos,
+                               kv_valid=pos + 1)
+    logits = logits_from_hidden(params, hidden, cfg)
+    return logits, cache
+
+
+def greedy_token(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

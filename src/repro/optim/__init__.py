@@ -1,0 +1,6 @@
+from .adamw import (
+    AdamWConfig, adamw_update, clip_by_global_norm, global_norm, init_adamw,
+    make_train_step, schedule_lr,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

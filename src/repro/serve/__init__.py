@@ -1,0 +1,3 @@
+from .server import RangeServer, Request, Response, ServerConfig
+
+__all__ = ["RangeServer", "Request", "Response", "ServerConfig"]

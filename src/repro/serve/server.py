@@ -1,0 +1,148 @@
+"""RangeServer: the serving layer around the range engine.
+
+Production anatomy (single-process simulation of the real service):
+
+* **admission queue** — requests land with an id + deadline; the batcher
+  drains up to ``max_batch`` or until ``max_wait_s`` passes (micro-batching:
+  the standard accelerator-serving latency/throughput knob).
+* **bucketed dispatch** — batches are padded to power-of-two sizes so jit
+  compiles O(log B) programs total.
+* **two-phase compaction execution** — phase 1 (uniform beam search) over
+  the batch; zero-result queries exit; the compacted survivors run the
+  greedy/doubling phase (core.range_search_compacted).
+* **multi-shard** — given a mesh + ShardedCorpus, dispatch goes through
+  dist.sharded_range_search and merges per-shard unions.
+* per-request stats (visited, distance comps, early-stopped) surface in the
+  response for monitoring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import RangeSearchEngine
+from ..core.range_search import RangeConfig, range_search_compacted
+from ..dist.sharded_engine import ShardedCorpus, sharded_range_search
+from ..utils import INVALID_ID, next_pow2
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    query: np.ndarray
+    radius: float
+    deadline: float = float("inf")
+
+
+@dataclasses.dataclass
+class Response:
+    req_id: int
+    ids: np.ndarray
+    dists: np.ndarray
+    count: int
+    overflow: bool
+    es_stopped: bool
+    latency_s: float
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    max_batch: int = 256
+    max_wait_s: float = 0.005
+    default_radius: float = 1.0
+    es_radius_factor: float = 0.0   # >0 enables early stopping at factor*r
+
+
+class RangeServer:
+    def __init__(
+        self,
+        engine: RangeSearchEngine,
+        cfg: RangeConfig,
+        server_cfg: ServerConfig = ServerConfig(),
+        *,
+        mesh=None,
+        sharded: Optional[ShardedCorpus] = None,
+    ):
+        self.engine = engine
+        self.cfg = cfg
+        self.scfg = server_cfg
+        self.mesh = mesh
+        self.sharded = sharded
+        self.queue: deque[tuple[Request, float]] = deque()
+        self.stats = {"served": 0, "batches": 0, "es_stopped": 0, "overflow": 0}
+
+    # -- admission -------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append((req, time.perf_counter()))
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # -- batching ------------------------------------------------------------
+    def _drain(self) -> list[tuple[Request, float]]:
+        out = []
+        t0 = time.perf_counter()
+        while self.queue and len(out) < self.scfg.max_batch:
+            out.append(self.queue.popleft())
+            if not self.queue and (time.perf_counter() - t0) < self.scfg.max_wait_s:
+                time.sleep(0)  # yield; more requests may land in a real server
+                break
+        return out
+
+    def _execute(self, queries: np.ndarray, r: float):
+        es = self.scfg.es_radius_factor * r if self.scfg.es_radius_factor > 0 else None
+        qs = jnp.asarray(queries)
+        if self.sharded is not None and self.mesh is not None:
+            return sharded_range_search(self.mesh, self.sharded, qs, r, self.cfg, es)
+        return range_search_compacted(self.engine.points, self.engine.graph, qs,
+                                      self.engine.start_ids, r, self.cfg, es)
+
+    def step(self) -> list[Response]:
+        """Serve one micro-batch from the queue."""
+        batch = self._drain()
+        if not batch:
+            return []
+        reqs = [b[0] for b in batch]
+        arrive = [b[1] for b in batch]
+        r = reqs[0].radius if reqs[0].radius is not None else self.scfg.default_radius
+        n = len(reqs)
+        bucket = next_pow2(n)
+        q = np.stack([rq.query for rq in reqs])
+        if bucket > n:  # pad to bucket with repeats (masked out of responses)
+            q = np.concatenate([q, np.repeat(q[:1], bucket - n, axis=0)])
+        res = self._execute(q, r)
+        now = time.perf_counter()
+        out = []
+        ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        counts = np.asarray(res.count)
+        over = np.asarray(res.overflow)
+        ess = np.asarray(res.es_stopped)
+        for i, rq in enumerate(reqs):
+            row = ids[i]
+            valid = row != INVALID_ID
+            out.append(Response(
+                req_id=rq.req_id,
+                ids=row[valid],
+                dists=dists[i][valid],
+                count=int(counts[i]),
+                overflow=bool(over[i]),
+                es_stopped=bool(ess[i]),
+                latency_s=now - arrive[i],
+            ))
+        self.stats["served"] += n
+        self.stats["batches"] += 1
+        self.stats["es_stopped"] += int(ess[:n].sum())
+        self.stats["overflow"] += int(over[:n].sum())
+        return out
+
+    def run_until_drained(self) -> list[Response]:
+        out = []
+        while self.queue:
+            out.extend(self.step())
+        return out

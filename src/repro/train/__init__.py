@@ -1,0 +1,4 @@
+from .checkpoint import CheckpointManager
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["CheckpointManager", "Trainer", "TrainerConfig"]

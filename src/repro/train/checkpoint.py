@@ -1,0 +1,127 @@
+"""Atomic, elastic checkpointing.
+
+Fault-tolerance contract (DESIGN.md §5):
+
+* **atomic** — writes go to ``step_XXXX.tmp/``, fsync'd, then renamed;
+  a manifest.json written last marks the step complete. A crash mid-write
+  leaves the previous checkpoint untouched and the partial dir ignored.
+* **keep-k** — completed checkpoints beyond ``keep`` are deleted oldest-
+  first.
+* **elastic** — checkpoints store the *logical* arrays (gathered to host,
+  one .npy per flattened tree path), never the device layout. Restore
+  takes an optional mesh + sharding tree and ``device_put``s each leaf to
+  its (possibly different) target sharding: a 512-chip checkpoint restores
+  onto 256 chips, 8 chips, or CPU.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}.{k}" if prefix else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}.{i}" if prefix else str(i)))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten(flat: dict, template):
+    def rec(t, prefix=""):
+        if isinstance(t, dict):
+            return {k: rec(v, f"{prefix}.{k}" if prefix else k) for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            vals = [rec(v, f"{prefix}.{i}" if prefix else str(i)) for i, v in enumerate(t)]
+            return type(t)(vals)
+        return flat[prefix]
+    return rec(template)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, state: dict, extra: Optional[dict] = None) -> str:
+        name = f"step_{step:010d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(os.path.join(final, "manifest.json")):
+            return final  # this step is already durably checkpointed
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(state)
+        for path, leaf in flat.items():
+            np.save(os.path.join(tmp, path + ".npy"), np.asarray(leaf))
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "paths": sorted(flat.keys()),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)  # atomic on POSIX
+        self._gc()
+        return final
+
+    def _gc(self):
+        done = self.completed_steps()
+        for step in done[: max(0, len(done) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{step:010d}"),
+                          ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+    def completed_steps(self) -> list[int]:
+        out = []
+        for d in sorted(os.listdir(self.dir)):
+            full = os.path.join(self.dir, d)
+            if d.startswith("step_") and not d.endswith(".tmp") and \
+                    os.path.exists(os.path.join(full, "manifest.json")):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.completed_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None) -> tuple[dict, int]:
+        """Load into ``template``'s structure; optionally reshard each leaf.
+
+        ``shardings``: pytree of jax.sharding.Sharding matching template (or
+        None for default placement). Returns (state, step).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no completed checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_shard = _flatten(shardings) if shardings is not None else None
+        flat = {}
+        for path in manifest["paths"]:
+            arr = np.load(os.path.join(d, path + ".npy"))
+            if flat_shard is not None and flat_shard.get(path) is not None:
+                flat[path] = jax.device_put(arr, flat_shard[path])
+            else:
+                flat[path] = jnp.asarray(arr)
+        return _unflatten(flat, template), step

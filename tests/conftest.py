@@ -1,0 +1,10 @@
+# NOTE (per brief): XLA_FLAGS / device-count forcing is deliberately NOT set
+# here — smoke tests and benches must see 1 device. Multi-device tests
+# (tests/test_dist.py) spawn subprocesses that set the flag themselves.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,91 @@
+"""HLO analysis (trip-count-aware FLOPs/collectives) + roofline math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze_module, parse_collectives
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def test_scan_trip_count_flops():
+    w = jnp.zeros((128, 128), jnp.float32)
+    x = jnp.zeros((32, 128), jnp.float32)
+
+    def scanned(x):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    a = analyze_module(jax.jit(scanned).lower(x).compile().as_text())
+    assert a.n_while == 1 and a.max_trip == 7
+    np.testing.assert_allclose(a.dot_flops, 2 * 32 * 128 * 128 * 7)
+
+
+def test_nested_scan_multiplies():
+    w = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    def nested(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            y, _ = jax.lax.scan(inner, c, None, length=4)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    a = analyze_module(jax.jit(nested).lower(x).compile().as_text())
+    np.testing.assert_allclose(a.dot_flops, 2 * 8 * 64 * 64 * 12)
+
+
+def test_plain_matmul_flops_and_bytes():
+    w = jnp.zeros((256, 256), jnp.float32)
+    x = jnp.zeros((64, 256), jnp.float32)
+    a = analyze_module(jax.jit(lambda x: x @ w).lower(x).compile().as_text())
+    np.testing.assert_allclose(a.dot_flops, 2 * 64 * 256 * 256)
+    # traffic at least inputs+outputs once
+    assert a.hbm_bytes >= 4 * (64 * 256 + 256 * 256 + 64 * 256) * 0.9
+
+
+def test_collectives_parsed_with_group_size():
+    import subprocess, sys, os, textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.analysis.hlo import analyze_module
+        mesh = jax.make_mesh((8,), ("d",))
+        s = NamedSharding(mesh, P("d"))
+        f = jax.jit(lambda x: jnp.sum(x), in_shardings=(s,))
+        txt = f.lower(jax.ShapeDtypeStruct((64, 4), jnp.float32)).compile().as_text()
+        a = analyze_module(txt)
+        assert sum(a.collectives.counts.values()) >= 1, a.collectives
+        assert a.collectives.total_operand_bytes > 0
+        print("OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True,
+                       cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr
+
+
+def test_roofline_constants_are_v5e():
+    assert PEAK_FLOPS == 197e12 and HBM_BW == 819e9 and ICI_BW == 50e9
+
+
+def test_reports_loadable():
+    import os
+    from repro.analysis.roofline import load_reports
+    path = "reports/roofline_16x16.json"
+    if not os.path.exists(path):
+        pytest.skip("dry-run report not generated yet")
+    reps = load_reports(path)
+    cells = {(r["arch_id"], r["shape"]) for r in reps}
+    assert len(cells) >= 40
+    for r in reps:
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert r["hlo_flops"] > 0

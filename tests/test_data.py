@@ -1,0 +1,81 @@
+"""Data pipelines: determinism, paper-matched corpus signatures."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import exact_range_search
+from repro.core.radius import default_grid, match_histogram, select_radius, sweep
+from repro.data.lm import LMDataConfig, lm_batch
+from repro.data.recsys import RecsysDataConfig, recsys_batch
+from repro.data.synthetic import PROFILES, dataset_names, make_corpus
+
+
+def test_lm_batches_deterministic_by_step():
+    cfg = LMDataConfig(vocab=100, seq_len=8, batch=2, seed=7)
+    a, b = lm_batch(cfg, 5), lm_batch(cfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = lm_batch(cfg, 6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].max() < 100 and a["tokens"].min() >= 0
+
+
+def test_recsys_batches_deterministic_and_shaped():
+    cfg = RecsysDataConfig(n_dense=3, n_sparse=5, vocab=50, batch=16)
+    a = recsys_batch(cfg, 0)
+    b = recsys_batch(cfg, 0)
+    np.testing.assert_array_equal(a["sparse"], b["sparse"])
+    assert a["sparse"].shape == (16, 5) and a["dense"].shape == (16, 3)
+    assert set(np.unique(a["label"])) <= {0.0, 1.0}
+    tt = recsys_batch(RecsysDataConfig(n_sparse=4, vocab=50, batch=8,
+                                       two_tower=True, n_sparse_item=4), 0)
+    assert tt["user_sparse"].shape == (8, 4) and "log_q" in tt
+
+
+def test_all_nine_profiles_exist():
+    names = dataset_names()
+    assert len(names) == 9
+    assert {PROFILES[n].metric for n in names} == {"l2", "ip"}
+
+
+@pytest.mark.parametrize("profile", ["bigann-like", "msmarco-like"])
+def test_corpus_pareto_signature(profile):
+    """Sec. 3: most queries zero results, a few large outliers."""
+    ds = make_corpus(profile, n=4000, n_queries=256, seed=0)
+    pts, qs = jnp.asarray(ds.points), jnp.asarray(ds.queries)
+    grid = default_grid(ds.points, ds.queries, ds.metric, num=32)
+    prof = sweep(pts, qs, grid, ds.metric)
+    r, gi = select_radius(prof, robustness_weight=0.1)
+    counts = np.asarray(exact_range_search(pts, qs, r, ds.metric)[2])
+    h = match_histogram(counts)
+    assert h["0"] > 0.3 * len(counts)           # majority-ish zero
+    assert counts.max() >= 3                    # some real result sets
+    # capture curve is monotone in radius
+    assert all(b >= a - 1e-12 for a, b in
+               zip(prof.percent_captured, prof.percent_captured[1:]))
+
+
+def test_gist_profile_has_huge_outliers():
+    """Fig. 4's GIST row: hundreds of queries with >1e3 results."""
+    ds = make_corpus("gist-like", n=4000, n_queries=256, seed=0)
+    pts, qs = jnp.asarray(ds.points), jnp.asarray(ds.queries)
+    grid = default_grid(ds.points, ds.queries, ds.metric, num=32)
+    prof = sweep(pts, qs, grid, ds.metric)
+    r, _ = select_radius(prof, robustness_weight=0.1)
+    counts = np.asarray(exact_range_search(pts, qs, r, ds.metric)[2])
+    assert (counts > 1000).sum() >= 5
+    assert (counts == 0).sum() > 100
+
+
+def test_scaling_densifies_at_fixed_radius():
+    """Fig. 7 premise: same radius, larger corpus -> more matches/query."""
+    ds1 = make_corpus("ssnpp-like", n=3000, n_queries=128, seed=0)
+    ds3 = make_corpus("ssnpp-like", n=9000, n_queries=128, seed=0)
+    pts1, qs = jnp.asarray(ds1.points), jnp.asarray(ds1.queries)
+    grid = default_grid(ds1.points, ds1.queries, "l2", num=24)
+    prof = sweep(pts1, qs, grid)
+    r, _ = select_radius(prof, robustness_weight=0.1)
+    c1 = np.asarray(exact_range_search(pts1, qs, r)[2]).mean()
+    c3 = np.asarray(exact_range_search(jnp.asarray(ds3.points), qs, r)[2]).mean()
+    assert c3 > c1

@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    flash_attention, flash_attention_ref, gatherdist, gatherdist_ref,
+    rangescan, rangescan_ref,
+)
+from repro.utils import INVALID_ID
+
+
+# ---------------------------------------------------------------------------
+# rangescan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("q,n,d,k,bq,bn", [
+    (20, 300, 64, 16, 8, 128),
+    (7, 100, 33, 8, 8, 64),      # non-divisible everything
+    (1, 512, 128, 32, 8, 256),   # single query
+    (33, 64, 16, 64, 16, 64),    # k > in-range count
+])
+def test_rangescan_matches_ref(metric, q, n, d, k, bq, bn):
+    kq = jax.random.PRNGKey(q * 7 + n)
+    queries = jax.random.normal(kq, (q, d), jnp.float32)
+    points = jax.random.normal(jax.random.PRNGKey(1), (n, d), jnp.float32)
+    r = jnp.float32(1.1 * d * 0.5 if metric == "l2" else -0.2)
+    ids, dd, c = rangescan(queries, points, r, k=k, block_q=bq, block_n=bn,
+                           metric=metric, interpret=True)
+    rids, rd, rc = rangescan_ref(queries, points, r, k=k, metric=metric)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(dd), np.asarray(rd), rtol=1e-5, atol=1e-5)
+    fin = np.isfinite(np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(ids)[fin], np.asarray(rids)[fin])
+
+
+def test_rangescan_bf16_inputs():
+    q = jax.random.normal(jax.random.PRNGKey(0), (8, 32), jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 32), jnp.bfloat16)
+    ids, dd, c = rangescan(q, x, jnp.float32(20.0), k=8, block_q=8,
+                           block_n=64, interpret=True)
+    rids, rd, rc = rangescan_ref(q, x, jnp.float32(20.0), k=8)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(dd), np.asarray(rd), rtol=2e-2, atol=2e-2)
+
+
+def test_rangescan_counts_exceed_k():
+    """counts must be exact even when more than k points are in range."""
+    x = jnp.zeros((256, 8), jnp.float32)
+    q = jnp.zeros((4, 8), jnp.float32)
+    ids, dd, c = rangescan(q, x, jnp.float32(1.0), k=16, block_q=4,
+                           block_n=64, interpret=True)
+    assert (np.asarray(c) == 256).all()
+    assert (np.asarray(ids) != INVALID_ID).sum() == 4 * 16
+
+
+# ---------------------------------------------------------------------------
+# gatherdist
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("n,d,q,r", [(100, 32, 6, 9), (64, 7, 3, 5), (17, 128, 1, 4)])
+def test_gatherdist_matches_ref(metric, n, d, q, r):
+    pts = jax.random.normal(jax.random.PRNGKey(0), (n, d), jnp.float32)
+    qs = jax.random.normal(jax.random.PRNGKey(1), (q, d), jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(2), (q, r), 0, n, jnp.int32)
+    ids = ids.at[0, 0].set(INVALID_ID)
+    got = gatherdist(pts, ids, qs, metric=metric, interpret=True)
+    want = gatherdist_ref(pts, ids, qs, metric=metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flashattn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,dh,causal,window,cap,qoff", [
+    (2, 4, 2, 64, 64, 32, True, 0, 0.0, 0),
+    (1, 8, 2, 37, 37, 16, True, 0, 50.0, 0),      # softcap, ragged len
+    (1, 4, 4, 16, 128, 32, True, 64, 0.0, 112),   # decode w/ window+offset
+    (2, 2, 1, 33, 65, 64, False, 0, 0.0, 0),      # non-causal MQA
+    (1, 6, 3, 128, 128, 64, True, 32, 30.0, 0),   # window + softcap
+])
+def test_flash_matches_ref(b, hq, hkv, sq, skv, dh, causal, window, cap, qoff):
+    q = jax.random.normal(jax.random.PRNGKey(5), (b, hq, sq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(6), (b, hkv, skv, dh), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(7), (b, hkv, skv, dh), jnp.float32)
+    o = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                        q_offset=qoff, block_q=32, block_k=32, interpret=True)
+    ro = flash_attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=cap, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ro), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 64, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 64, 32), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 64, 32), jnp.bfloat16)
+    o = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    ro = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(ro, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_xla_fallback_matches():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 32, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 32, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 32, 16), jnp.float32)
+    a = flash_attention(q, k, v, use_pallas=False)
+    b = flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)

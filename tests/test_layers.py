@@ -1,0 +1,233 @@
+"""Layer-level unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.layers import (
+    BagConfig, FieldAttnConfig, GQAConfig, MLAConfig, MLPConfig, MoEConfig,
+    apply_rope, dot_interaction, embedding_bag, field_attention,
+    fm_interaction, gather_scatter, gqa_attention, init_field_attention,
+    init_gqa, init_mla, init_moe, init_mlp, layer_norm, mla_attention, mlp,
+    moe_layer, multi_field_lookup, rms_norm, sym_norm_weights,
+)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4), st.integers(2, 64))
+@settings(max_examples=20, deadline=None)
+def test_rms_norm_unit_variance(b, d):
+    x = jax.random.normal(jax.random.PRNGKey(b * 100 + d), (b, d)) * 7 + 3
+    y = rms_norm(x, jnp.ones((d,)))
+    ms = np.asarray(jnp.mean(y.astype(jnp.float32) ** 2, axis=-1))
+    np.testing.assert_allclose(ms, 1.0, rtol=1e-3, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relative_positions():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 2, 32))
+    pos = jnp.arange(16)[None, :]
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+    # inner products depend only on relative offset
+    q = apply_rope(jnp.broadcast_to(x[:, :1], x.shape), pos)
+    k = apply_rope(jnp.broadcast_to(x[:, 1:2], x.shape), pos)
+    dots = np.asarray(jnp.einsum("bshd,bshd->bsh", q, k))
+    # constant offset 0: all positions give the same q.k
+    np.testing.assert_allclose(dots[0, 1:], dots[0, :-1], rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def test_gqa_attention_causal_ignores_future():
+    cfg = GQAConfig(d_model=32, n_heads=4, n_kv=2, d_head=8)
+    p = init_gqa(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 10, 32))
+    pos = jnp.broadcast_to(jnp.arange(10)[None], (1, 10))
+    y1, _ = gqa_attention(p, x, cfg, positions=pos, rope_theta=1e4, window=0)
+    x2 = x.at[:, 5:].set(0.0)  # changing the future
+    y2, _ = gqa_attention(p, x2, cfg, positions=pos, rope_theta=1e4, window=0)
+    np.testing.assert_allclose(np.asarray(y1[:, :5]), np.asarray(y2[:, :5]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_gqa_sliding_window_limits_context():
+    cfg = GQAConfig(d_model=32, n_heads=2, n_kv=2, d_head=16)
+    p = init_gqa(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 32))
+    pos = jnp.broadcast_to(jnp.arange(12)[None], (1, 12))
+    y_w, _ = gqa_attention(p, x, cfg, positions=pos, rope_theta=1e4, window=3)
+    x2 = x.at[:, 0].set(9.0)  # perturb a token outside everyone's window >3
+    y2_w, _ = gqa_attention(p, x2, cfg, positions=pos, rope_theta=1e4, window=3)
+    np.testing.assert_allclose(np.asarray(y_w[:, 6:]), np.asarray(y2_w[:, 6:]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_mla_cache_stores_compressed_latent():
+    cfg = MLAConfig(d_model=32, n_heads=4, q_lora=16, kv_lora=8,
+                    qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8)
+    p = init_mla(jax.random.PRNGKey(0), cfg)
+    from repro.layers.attention import KVCache
+    cache = KVCache(k=jnp.zeros((1, 16, 8)), v=jnp.zeros((1, 16, 4)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(4)[None], (1, 4))
+    y, nc = mla_attention(p, x, cfg, positions=pos, rope_theta=1e4, window=0,
+                          cache=cache, cache_pos=jnp.asarray(0),
+                          kv_valid_len=jnp.asarray(4))
+    assert nc.k.shape == (1, 16, 8) and nc.v.shape == (1, 16, 4)
+    assert np.abs(np.asarray(nc.k[:, :4])).sum() > 0
+    assert np.abs(np.asarray(nc.k[:, 4:])).sum() == 0  # untouched tail
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _moe_dense_ref(params, x, cfg):
+    """All-experts dense reference: y = sum_k w_k * expert_{i_k}(x)."""
+    t, d = x.shape
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.normalize_weights:
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    outs = []
+    for e in range(cfg.n_experts):
+        g = jax.nn.silu(x @ params["w_gate"][e])
+        u = x @ params["w_up"][e]
+        outs.append((g * u) @ params["w_down"][e])
+    outs = jnp.stack(outs)  # (E, T, D)
+    y = jnp.zeros_like(x)
+    for k in range(cfg.top_k):
+        y += top_w[:, k][:, None] * jnp.take_along_axis(
+            outs, top_i[:, k][None, :, None], axis=0)[0]
+    return y
+
+
+@pytest.mark.parametrize("e,k,alloc", [(8, 2, 8), (6, 2, 8), (5, 1, 8)])
+def test_moe_matches_dense_reference(e, k, alloc):
+    cfg = MoEConfig(d_model=16, n_experts=e, top_k=k, d_expert=8,
+                    n_experts_alloc=alloc, capacity_factor=8.0)  # no drops
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 24, 16), jnp.float32)
+    y, aux = moe_layer(p, x, cfg)
+    want = _moe_dense_ref(p, x[0], cfg)
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+    assert float(aux["dropped_frac"]) == 0.0
+
+
+def test_moe_capacity_drops_are_reported():
+    cfg = MoEConfig(d_model=8, n_experts=4, top_k=2, d_expert=4,
+                    capacity_factor=0.01)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 8), jnp.float32)
+    y, aux = moe_layer(p, x, cfg)
+    assert float(aux["dropped_frac"]) > 0.0
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_shared_experts_contribute():
+    cfg = MoEConfig(d_model=8, n_experts=4, top_k=1, d_expert=4, n_shared=2)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8), jnp.float32)
+    y1, _ = moe_layer(p, x, cfg)
+    p2 = dict(p, shared=jax.tree.map(jnp.zeros_like, p["shared"]))
+    y2, _ = moe_layer(p2, x, cfg)
+    assert np.abs(np.asarray(y1) - np.asarray(y2)).max() > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag / segment ops
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(1, 10), st.integers(2, 50))
+@settings(max_examples=20, deadline=None)
+def test_embedding_bag_matches_loop(b, l, v):
+    rng = np.random.default_rng(b * 31 + l)
+    table = jnp.asarray(rng.standard_normal((v, 4)), jnp.float32)
+    idx = rng.integers(-1, v, (b, l)).astype(np.int32)
+    got = embedding_bag(table, jnp.asarray(idx))
+    want = np.zeros((b, 4), np.float32)
+    for i in range(b):
+        for j in range(l):
+            if idx[i, j] >= 0:
+                want[i] += np.asarray(table)[idx[i, j]]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_mean_mode():
+    table = jnp.eye(4, dtype=jnp.float32)
+    idx = jnp.asarray([[0, 1, -1]], jnp.int32)
+    got = embedding_bag(table, idx, BagConfig(mode="mean"))
+    np.testing.assert_allclose(np.asarray(got)[0], [0.5, 0.5, 0, 0])
+
+
+def test_gather_scatter_agg_modes():
+    feats = jnp.asarray([[1.0], [2.0], [4.0]])
+    src = jnp.asarray([0, 1, 2, -1], jnp.int32)
+    dst = jnp.asarray([2, 2, 0, -1], jnp.int32)
+    s = gather_scatter(feats, src, dst, 3, agg="sum")
+    np.testing.assert_allclose(np.asarray(s)[:, 0], [4, 0, 3])
+    m = gather_scatter(feats, src, dst, 3, agg="mean")
+    np.testing.assert_allclose(np.asarray(m)[:, 0], [4, 0, 1.5])
+    mx = gather_scatter(feats, src, dst, 3, agg="max")
+    np.testing.assert_allclose(np.asarray(mx)[:, 0], [4, 0, 2])
+
+
+def test_sym_norm_weights_match_gcn_formula():
+    src = jnp.asarray([0, 1], jnp.int32)
+    dst = jnp.asarray([1, 0], jnp.int32)
+    w = np.asarray(sym_norm_weights(src, dst, 2))
+    np.testing.assert_allclose(w, [0.5, 0.5])  # deg+1 = 2 each side
+
+
+# ---------------------------------------------------------------------------
+# interactions
+# ---------------------------------------------------------------------------
+
+def test_dot_interaction_matches_manual():
+    f = jax.random.normal(jax.random.PRNGKey(0), (3, 4, 8))
+    got = np.asarray(dot_interaction(f))
+    want = []
+    fa = np.asarray(f)
+    for b in range(3):
+        row = []
+        for i in range(4):
+            for j in range(i + 1, 4):
+                row.append(fa[b, i] @ fa[b, j])
+        want.append(row)
+    # note: triu order is row-major over (i, j)
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-5)
+
+
+def test_fm_identity():
+    f = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 3))
+    got = np.asarray(fm_interaction(f))
+    fa = np.asarray(f)
+    want = np.array([sum(fa[b, i] @ fa[b, j] for i in range(5)
+                         for j in range(i + 1, 5)) for b in range(2)])
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_field_attention_shapes():
+    cfg = FieldAttnConfig(n_fields=5, d_embed=8, n_layers=2, n_heads=2, d_attn=16)
+    p = init_field_attention(jax.random.PRNGKey(0), cfg)
+    f = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 8))
+    out = field_attention(p, f, cfg)
+    assert out.shape == (3, 5 * 16)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_multi_field_lookup():
+    tables = jnp.asarray(np.arange(2 * 3 * 2).reshape(2, 3, 2), jnp.float32)
+    idx = jnp.asarray([[0, 2], [1, 1]], jnp.int32)
+    out = np.asarray(multi_field_lookup(tables, idx))
+    np.testing.assert_allclose(out[0, 0], np.asarray(tables)[0, 0])
+    np.testing.assert_allclose(out[0, 1], np.asarray(tables)[1, 2])

@@ -1,0 +1,174 @@
+"""Trainer fault-tolerance + RangeServer behaviour tests."""
+import functools
+import glob
+import json
+import os
+import shutil
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RangeConfig, RangeSearchEngine, SearchConfig, average_precision,
+    build_knn_graph, exact_range_search,
+)
+from repro.data.lm import LMDataConfig, lm_batches
+from repro.models import TransformerConfig, init_transformer, loss_fn
+from repro.optim import AdamWConfig
+from repro.serve import RangeServer, Request, ServerConfig
+from repro.train import CheckpointManager, Trainer, TrainerConfig
+
+CFG = TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=2, n_kv=1,
+                        d_head=16, d_ff=64, vocab=64, dtype=jnp.float32,
+                        loss_chunk=16, remat=False)
+DCFG = LMDataConfig(vocab=64, seq_len=16, batch=4)
+LOSS = functools.partial(loss_fn, cfg=CFG)
+
+
+def _trainer(tmp, total=20, **kw):
+    return Trainer(LOSS, init_transformer(jax.random.PRNGKey(0), CFG),
+                   AdamWConfig(lr=1e-2, total_steps=100, warmup_steps=2),
+                   TrainerConfig(total_steps=total, ckpt_every=10,
+                                 log_every=5, ckpt_dir=str(tmp), **kw))
+
+
+def test_loss_decreases_and_metrics_logged(tmp_path):
+    mpath = str(tmp_path / "metrics.jsonl")
+    tr = _trainer(tmp_path / "ck", metrics_path=mpath)
+    out = tr.fit(lm_batches(DCFG))
+    assert out["history"][-1]["loss"] < out["history"][0]["loss"]
+    lines = [json.loads(l) for l in open(mpath)]
+    assert len(lines) >= 3 and all("loss" in l for l in lines)
+
+
+def test_checkpoint_atomicity_and_keep_k(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        cm.save(s, {"a": jnp.ones((3,)) * s})
+    assert cm.completed_steps() == [3, 4]
+    # a stale tmp dir is ignored
+    os.makedirs(str(tmp_path / "step_0000000099.tmp"))
+    assert cm.latest_step() == 4
+    state, step = cm.restore({"a": jnp.zeros((3,))})
+    assert step == 4 and float(state["a"][0]) == 4.0
+
+
+def test_restart_resumes_exactly(tmp_path):
+    ck = tmp_path / "ck"
+    tr1 = _trainer(ck, total=20)
+    tr1.fit(lm_batches(DCFG))
+    p1 = jax.tree.leaves(tr1.params)[0]
+
+    tr2 = _trainer(ck, total=30)
+    assert tr2.maybe_restore()
+    assert tr2.step == 20
+    np.testing.assert_array_equal(np.asarray(jax.tree.leaves(tr2.params)[0]),
+                                  np.asarray(p1))
+    out = tr2.fit(lm_batches(DCFG, start_step=20))
+    assert out["final_step"] == 30
+
+
+def test_data_fault_skipped_not_fatal(tmp_path):
+    class Flaky:
+        """Retryable loader: one transient failure, then recovers (a plain
+        generator would die permanently — real loaders retry)."""
+
+        def __init__(self):
+            self.src = lm_batches(DCFG)
+            self.n = 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            self.n += 1
+            if self.n == 3:
+                raise RuntimeError("simulated data-shard timeout")
+            return next(self.src)
+
+    tr = _trainer(tmp_path / "ck", total=10)
+    out = tr.fit(Flaky())
+    assert out["final_step"] == 10  # the fault was absorbed
+
+
+def test_preemption_signal_checkpoints(tmp_path):
+    tr = _trainer(tmp_path / "ck", total=1000)
+
+    src = lm_batches(DCFG)
+
+    def batches():
+        n = 0
+        while True:
+            n += 1
+            if n == 6:  # simulate SIGTERM mid-run
+                os.kill(os.getpid(), signal.SIGTERM)
+            yield next(src)
+
+    out = tr.fit(batches())
+    assert out["final_step"] < 1000
+    cm = CheckpointManager(str(tmp_path / "ck"))
+    assert cm.latest_step() == out["final_step"]  # preemption checkpoint
+
+
+def test_gradient_accumulation_matches_big_batch(tmp_path):
+    params = init_transformer(jax.random.PRNGKey(0), CFG)
+    from repro.optim import init_adamw, make_train_step
+    opt_cfg = AdamWConfig(lr=1e-2, warmup_steps=1, schedule="constant")
+    big = make_train_step(LOSS, opt_cfg)
+    acc = make_train_step(LOSS, opt_cfg, accum_steps=2)
+    batch = next(lm_batches(LMDataConfig(vocab=64, seq_len=16, batch=8)))
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    p1, _, m1 = big(params, init_adamw(params, opt_cfg), batch)
+    p2, _, m2 = acc(params, init_adamw(params, opt_cfg), batch)
+    l1 = jax.tree.leaves(p1)
+    l2 = jax.tree.leaves(p2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RangeServer
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_engine():
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.standard_normal((1500, 12)), jnp.float32)
+    eng = RangeSearchEngine.from_graph(pts, build_knn_graph(pts, k=10))
+    return pts, eng
+
+
+def test_server_end_to_end_ap(small_engine):
+    pts, eng = small_engine
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128),
+                      mode="greedy", result_cap=256)
+    srv = RangeServer(eng, cfg, ServerConfig(max_batch=32))
+    qs = np.asarray(pts[:60]) + 0.01
+    for i in range(60):
+        srv.submit(Request(req_id=i, query=qs[i], radius=4.0))
+    resp = srv.run_until_drained()
+    assert len(resp) == 60 and srv.pending() == 0
+    assert srv.stats["batches"] >= 2  # micro-batching happened
+    gt = exact_range_search(pts, jnp.asarray(qs), 4.0)
+    ids = np.full((60, 256), 2**31 - 1, np.int64)
+    counts = np.zeros(60, np.int64)
+    for r in resp:
+        ids[r.req_id, :len(r.ids)] = r.ids
+        counts[r.req_id] = len(r.ids)
+    ap = average_precision(np.asarray(gt[0]), np.asarray(gt[2]), ids, counts)
+    assert ap > 0.8
+
+
+def test_server_results_sorted_and_deduped(small_engine):
+    pts, eng = small_engine
+    cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16, visit_cap=64),
+                      mode="greedy", result_cap=128)
+    srv = RangeServer(eng, cfg)
+    srv.submit(Request(req_id=0, query=np.asarray(pts[0]), radius=4.0))
+    (resp,) = srv.run_until_drained()
+    assert len(np.unique(resp.ids)) == len(resp.ids)
+    assert resp.count == len(resp.ids) or resp.overflow
