@@ -16,13 +16,47 @@ import sys
 import time
 
 
+def smoke(n: int, min_qps: float, min_ap: float) -> int:
+    """CI gate: one tiny corpus through ``range_search_compacted``; exits
+    nonzero when QPS falls below ``min_qps`` (order-of-magnitude regression
+    guard — CI boxes are slow, so the floor is deliberately conservative)
+    or AP below ``min_ap``."""
+    from repro.core import RangeConfig, SearchConfig
+
+    from .common import ap_of, get_dataset, get_engine, run_range
+
+    # default n_queries so get_engine's internal get_dataset is a cache hit
+    # (a different n_queries would rebuild the grid sweep + ground truth)
+    ds, _, qs, r, _, gt = get_dataset("bigann-like", n)
+    qs, gt = qs[:128], tuple(g[:128] for g in gt)
+    eng = get_engine("bigann-like", n)
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
+                                          metric=ds.metric),
+                      mode="greedy", result_cap=1024)
+    qps, res = run_range(eng, qs, r, cfg)
+    ap = ap_of(res, gt)
+    print(f"[smoke] range_search_compacted: n={n} qps={qps:.1f} ap={ap:.4f} "
+          f"(floors: qps>={min_qps}, ap>={min_ap})")
+    if qps < min_qps or ap < min_ap:
+        print("[smoke] FAIL: below regression floor")
+        return 1
+    return 0
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--full", action="store_true", help="all 9 dataset profiles")
     p.add_argument("--scale", action="store_true", help="include Fig7 scaling")
     p.add_argument("--n", type=int, default=10_000)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny-corpus QPS/AP regression gate (CI)")
+    p.add_argument("--min-qps", type=float, default=5.0)
+    p.add_argument("--min-ap", type=float, default=0.6)
     args = p.parse_args(argv)
     quick = not args.full
+
+    if args.smoke:
+        return smoke(min(args.n, 4_000), args.min_qps, args.min_ap)
 
     from . import (
         early_stop_metrics, early_stop_qps, kernel_bench, match_distribution,

@@ -1,8 +1,11 @@
 """RangeSearchEngine — the paper's contribution as one composable object.
 
 One graph index serves both top-k and range queries (the paper's stated
-goal). Single-shard here; ``repro.dist.sharded_engine`` wraps this in
-shard_map for the multi-shard production layout.
+goal). Single-shard here; ``repro.dist.sharded_engine.sharded_range_search``
+runs the same fused search per shard under shard_map and union-merges the
+per-shard results for the multi-shard production layout (one
+``ShardedCorpus`` sub-index per model-axis shard, built by
+``repro.dist.sharded_engine.build_sharded``).
 """
 from __future__ import annotations
 

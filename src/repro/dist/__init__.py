@@ -1,0 +1,35 @@
+"""repro.dist — the distribution layer.
+
+Five modules, one contract: everything above this package (layers, models,
+trainer, server, launch) speaks in *symbolic* axes (``DP``/``TP``) and rule
+tables; everything below resolves them against a concrete ``jax`` mesh.
+
+* ``sharding``          — Rule-based PartitionSpec engine: param rule tables
+                          (``LM_RULES``/``RECSYS_RULES``/``GNN_RULES``),
+                          ``spec_tree`` with divisibility fallback,
+                          ``bind_shardings``, and the activation-sharding
+                          scope used by the model code.
+* ``sharded_engine``    — the multi-shard range-retrieval layout:
+                          ``ShardedCorpus`` (one sub-index per model-axis
+                          shard), ``build_sharded``, and
+                          ``sharded_range_search`` (shard_map fan-out +
+                          union merge with global id remapping).
+* ``collective_matmul`` — decomposed ring collectives overlapped with
+                          matmul (``allgather_matmul``,
+                          ``matmul_reducescatter``).
+* ``compression``       — int8-compressed gradient/embedding reductions.
+* ``embedding``         — row-sharded EmbeddingBag lookup over the mesh.
+"""
+from .sharding import (  # noqa: F401
+    DP,
+    GNN_RULES,
+    LM_RULES,
+    RECSYS_RULES,
+    TP,
+    Rule,
+    activation_sharding,
+    bind_shardings,
+    mesh_axes,
+    shard_activation,
+    spec_tree,
+)

@@ -1,0 +1,65 @@
+"""Decomposed collective matmuls (ring schedules inside shard_map).
+
+XLA's GSPMD emits all-gather-then-matmul / matmul-then-reduce-scatter as
+two serial ops. The ring decompositions here interleave one chunk of
+compute with one ``ppermute`` hop per step, which is what lets the compiler
+overlap transfer and MXU work (the async-collective-fusion pattern). Both
+run inside ``shard_map`` over one mesh axis of size ``n``:
+
+* ``allgather_matmul``   — x row-sharded, w replicated -> full (M, F)
+  replicated output: each step multiplies the chunk currently held and
+  passes it along the ring.
+* ``matmul_reducescatter`` — x col-sharded, w row-sharded -> partial sums
+  reduce-scattered over rows: each step adds the local contribution for one
+  destination shard and forwards the accumulator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ring(axis_name: str, n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def allgather_matmul(x, w, *, axis_name: str, n: int):
+    """x local (M/n, K) row-shard, w (K, F) replicated -> (M, F) replicated.
+
+    Equivalent to ``all_gather(x) @ w``, decomposed so chunk ``i``'s matmul
+    overlaps the ring transfer of chunk ``i+1``.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    m = x.shape[0]
+    out = jnp.zeros((n * m, w.shape[-1]), jnp.promote_types(x.dtype, w.dtype))
+    chunk = x
+    for step in range(n):
+        src = (idx - step) % n  # ring: the shard this chunk originated on
+        out = jax.lax.dynamic_update_slice_in_dim(out, chunk @ w, src * m,
+                                                  axis=0)
+        if step < n - 1:
+            chunk = jax.lax.ppermute(chunk, axis_name, _ring(axis_name, n))
+    return out
+
+
+def matmul_reducescatter(x, w, *, axis_name: str, n: int):
+    """x local (M, K/n), w local (K/n, F) -> (M/n, F) row-scattered.
+
+    Equivalent to ``psum_scatter(x @ w)``: the local partial product is
+    chunked over rows and ring-reduced so each shard ends with the fully
+    summed chunk of its own rows.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    partial = x @ w                       # (M, F) partial sum over K
+    m = partial.shape[0] // n
+
+    def chunk_for(dest):
+        return jax.lax.dynamic_slice_in_dim(partial, dest * m, m, axis=0)
+
+    # destination visited at step t is (idx - t - 1) mod n; after n-1 hops
+    # the accumulator sits on its destination shard with all n contributions.
+    acc = chunk_for((idx - 1) % n)
+    for t in range(1, n):
+        acc = jax.lax.ppermute(acc, axis_name, _ring(axis_name, n))
+        acc = acc + chunk_for((idx - t - 1) % n)
+    return acc

@@ -1,0 +1,27 @@
+"""jax version compatibility shims.
+
+The repo pins jax>=0.4.37. ``shard_map`` moved to the top-level ``jax``
+namespace (and ``check_rep`` was renamed ``check_vma``) in later releases;
+this wrapper presents the new-style keyword API on either version so call
+sites and tests are written once against the current API.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # newer jax: top-level
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4/0.5: experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the top-level move and the check_rep->check_vma rename landed in DIFFERENT
+# jax releases, so detect the kwarg from the signature, not the import path
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """New-style ``jax.shard_map`` keyword API on any supported jax."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

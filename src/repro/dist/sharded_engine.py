@@ -1,0 +1,211 @@
+"""Multi-shard range retrieval: the production layout of the paper's engine.
+
+A corpus bigger than one device's HBM splits into contiguous shards, each
+with its *own* sub-index (graph + entry points) — the standard multi-shard
+decomposition of graph-ANN systems. Range search then fans out as one
+``shard_map`` program:
+
+* shards lay along the **model** axis (one or more sub-indices per device),
+  query batches along the **data** axis;
+* each device runs the fused single-program search
+  (``core.range_search_fused``) of its query block against its local
+  shard(s) and remaps shard-local ids to global ids via the shard offset;
+* an all-gather along the model axis followed by a distance-sort
+  **union-merge** produces the global ``RangeResult``: ids/dists are the
+  ``result_cap`` closest in-range points across all shards, counts sum, and
+  overflow flags OR (plus a union-level overflow when the merged count
+  exceeds the cap).
+
+Because the shards partition the corpus, per-shard result sets are disjoint
+and the union needs no dedup — only the merge sort.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.graph import Graph
+from ..core.range_search import RangeConfig, RangeResult, range_search_fused
+from ..utils import INVALID_ID, cdiv
+from .compat import shard_map
+from .sharding import _axis_size
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ShardedCorpus:
+    """Stacked per-shard sub-indices (leading axis = shard)."""
+
+    points: Any     # (S, n, d) — shard blocks (pad rows edge-free/unreachable)
+    neighbors: Any  # (S, n, R) int32 — per-shard graph adjacency
+    start_ids: Any  # (S, k) int32 — per-shard entry points (shard-local ids)
+    offsets: Any    # (S,) int32 — global id of each shard's row 0
+    # true corpus size: required so pad-row ids (>= n_total) are droppable
+    n_total: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_shards(self) -> int:
+        return self.points.shape[0]
+
+    @property
+    def shard_size(self) -> int:
+        return self.points.shape[1]
+
+
+# Sentinel coordinates for rows padding a short last shard. The value never
+# decides correctness: pad rows are appended AFTER the sub-index is built on
+# the real rows, so no graph edge and no entry point reaches them under any
+# metric — they are unreachable, not merely distant. (Kept large so even a
+# hypothetical brute-force pass over shard rows ranks them last under l2.)
+_FAR = 1e30
+
+
+def build_sharded(
+    points,
+    n_shards: int,
+    build_fn: Callable,   # (shard_points (n, d)) -> (Graph, start_ids (k,))
+) -> ShardedCorpus:
+    """Partition ``points`` into ``n_shards`` contiguous blocks and build one
+    sub-index per block with ``build_fn``. A short last block is padded to
+    the common shard size only *after* its graph is built, so the pad rows
+    have no incoming edges (search can never visit them, under any metric)
+    and the stacked arrays stay rectangular."""
+    pts = np.asarray(points)
+    n_total, d = pts.shape
+    n = cdiv(n_total, n_shards)
+    blocks, nbrs, starts = [], [], []
+    for s in range(n_shards):
+        block = pts[s * n:(s + 1) * n]
+        graph, start_ids = build_fn(jnp.asarray(block))
+        neighbors = np.asarray(graph.neighbors)
+        if block.shape[0] < n:  # pad points AND adjacency (INVALID = no edge)
+            n_pad = n - block.shape[0]
+            block = np.concatenate(
+                [block, np.full((n_pad, d), _FAR, dtype=pts.dtype)], axis=0)
+            neighbors = np.concatenate(
+                [neighbors,
+                 np.full((n_pad, neighbors.shape[1]), INVALID_ID, np.int32)],
+                axis=0)
+        blocks.append(jnp.asarray(block))
+        nbrs.append(jnp.asarray(neighbors))
+        starts.append(jnp.asarray(start_ids, jnp.int32).reshape(-1))
+    return ShardedCorpus(
+        points=jnp.stack(blocks),
+        neighbors=jnp.stack(nbrs),
+        start_ids=jnp.stack(starts),
+        offsets=jnp.arange(n_shards, dtype=jnp.int32) * n,
+        n_total=n_total,
+    )
+
+
+def _remap_global(ids, offset, n_total: int):
+    """Shard-local ids -> global ids. INVALID padding stays INVALID, and so
+    does anything past ``n_total`` — defense in depth against pad rows of a
+    short last shard (unreachable by construction in build_sharded)."""
+    gids = jnp.where(ids == INVALID_ID, INVALID_ID, ids + offset)
+    return jnp.where(gids < n_total, gids, INVALID_ID)
+
+
+def union_merge(ids, dists, cap: int):
+    """(Q, M) candidate ids/dists (INVALID/inf padded, disjoint across
+    sources) -> the ``cap`` closest per query, distance-sorted."""
+    dists, ids = jax.lax.sort((dists, ids), num_keys=1, is_stable=True)
+    return ids[:, :cap], dists[:, :cap]
+
+
+def sharded_range_search(
+    mesh: Mesh,
+    corpus: ShardedCorpus,
+    queries,
+    r,
+    cfg: RangeConfig,
+    es_radius: Optional[float] = None,
+    *,
+    model_axis="model",
+    data_axis="data",
+) -> RangeResult:
+    """Union range search over every shard of ``corpus``; returns a global
+    ``RangeResult`` (ids are corpus-global, counts summed across shards)."""
+    if corpus.n_total <= 0:
+        raise ValueError("ShardedCorpus.n_total must be the true corpus size")
+    s_total = corpus.n_shards
+    n_model = mesh.shape[model_axis]
+    if s_total % n_model:
+        raise ValueError(
+            f"{s_total} shards do not lay out on model axis of size {n_model}")
+    s_loc = s_total // n_model
+    cap = cfg.result_cap
+
+    queries = jnp.asarray(queries)
+    n_q = queries.shape[0]
+    dp_size = _axis_size(mesh, data_axis)
+    q_pad = cdiv(n_q, dp_size) * dp_size
+    if q_pad != n_q:  # replicate-pad the batch to the data-axis multiple
+        queries = jnp.concatenate(
+            [queries, jnp.broadcast_to(queries[:1],
+                                       (q_pad - n_q,) + queries.shape[1:])])
+
+    def local_fn(points, neighbors, start_ids, offsets, qs):
+        # points (s_loc, n, d), qs (q_loc, d): search every local shard
+        ids, dists, cnts, overs, nvis, ndis, ess, ph2 = ([] for _ in range(8))
+        for s in range(s_loc):
+            res = range_search_fused(points[s], Graph(neighbors=neighbors[s]),
+                                     qs, start_ids[s], r, cfg, es_radius)
+            gids = _remap_global(res.ids, offsets[s], corpus.n_total)
+            ids.append(gids)
+            dists.append(jnp.where(gids == INVALID_ID, jnp.inf, res.dists))
+            # recount after the remap drop (result slots are exactly the
+            # valid ids, so the surviving-id count IS the shard count)
+            cnts.append(jnp.sum(gids != INVALID_ID, axis=1).astype(jnp.int32))
+            overs.append(res.overflow)
+            nvis.append(res.n_visited)
+            ndis.append(res.n_dist)
+            ess.append(res.es_stopped)
+            ph2.append(res.phase2)
+        ids = jnp.concatenate(ids, axis=1)      # (q_loc, s_loc*K)
+        dists = jnp.concatenate(dists, axis=1)
+
+        # union across the model axis: gather every shard's candidates
+        ids = jax.lax.all_gather(ids, model_axis, axis=0)     # (n_model, q, M)
+        dists = jax.lax.all_gather(dists, model_axis, axis=0)
+        ids = jnp.moveaxis(ids, 0, 1).reshape(ids.shape[1], -1)
+        dists = jnp.moveaxis(dists, 0, 1).reshape(dists.shape[1], -1)
+        ids, dists = union_merge(ids, dists, cap)
+
+        total = jax.lax.psum(sum(cnts), model_axis)           # (q_loc,)
+        over = jax.lax.psum(sum(o.astype(jnp.int32) for o in overs),
+                            model_axis) > 0
+        return RangeResult(
+            ids=ids,
+            dists=dists,
+            count=jnp.minimum(total, cap).astype(jnp.int32),
+            overflow=over | (total > cap),
+            n_visited=jax.lax.psum(sum(nvis), model_axis),
+            n_dist=jax.lax.psum(sum(ndis), model_axis),
+            es_stopped=jax.lax.psum(
+                sum(e.astype(jnp.int32) for e in ess), model_axis) > 0,
+            phase2=jax.lax.psum(
+                sum(p.astype(jnp.int32) for p in ph2), model_axis) > 0,
+        )
+
+    row = P(data_axis)
+    mat = P(data_axis, None)
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(model_axis, None, None), P(model_axis, None, None),
+                  P(model_axis, None), P(model_axis), mat),
+        out_specs=RangeResult(ids=mat, dists=mat, count=row, overflow=row,
+                              n_visited=row, n_dist=row, es_stopped=row,
+                              phase2=row),
+        check_vma=False,
+    )
+    out = fn(corpus.points, corpus.neighbors, corpus.start_ids,
+             corpus.offsets, queries)
+    if q_pad != n_q:
+        out = jax.tree.map(lambda x: x[:n_q], out)
+    return out

@@ -1,0 +1,263 @@
+"""Rule-based PartitionSpec engine.
+
+Model code never names mesh axes. It speaks two symbols:
+
+* ``DP`` — the data-parallel direction: every mesh axis that is not the
+  model axis (``"data"`` on the 16x16 mesh, ``("pod", "data")`` on the
+  multi-pod 2x16x16 mesh).
+* ``TP`` — the tensor-parallel direction: the ``"model"`` axis.
+
+Two resolution paths consume the symbols:
+
+* **params** — each architecture ships a table of ``Rule``s (regex over the
+  pytree path -> symbolic spec for the *trailing* dims, so one rule covers
+  both a stacked ``(L, D, H, dh)`` scan layer and its unstacked
+  ``dense_layer0`` twin). ``spec_tree`` matches rules against a param tree
+  and applies the **divisibility fallback**: a dim that does not divide its
+  mesh axes is replicated instead (e.g. 3 kv heads on tp=4 -> KV
+  replication), so one rule table serves every (arch x mesh) cell.
+  ``bind_shardings`` turns the symbolic tree into ``NamedSharding``s.
+* **activations** — ``shard_activation(x, DP, TP, None)`` inside an
+  ``activation_sharding(mesh)`` scope becomes a
+  ``with_sharding_constraint``; outside any scope (single-device tests,
+  smoke runs) it is the identity, which is what keeps the model code
+  mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import threading
+from contextlib import contextmanager
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Symbolic axes. Plain strings on purpose: they show up readably in spec
+# trees ("dp"/"tp"), compare by value, and can never collide with real mesh
+# axis names (the meshes here use "pod"/"data"/"model").
+DP = "dp"
+TP = "tp"
+
+AxisSym = Union[str, tuple, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """``pattern`` is a regex over the "/"-joined param path; ``spec`` is a
+    symbolic PartitionSpec for the *trailing* dims of any matching leaf
+    (leading dims — scan stacking, expert stacking — replicate)."""
+
+    pattern: str
+    spec: tuple
+
+    def matches(self, path: str) -> bool:
+        return re.fullmatch(self.pattern, path) is not None
+
+
+# ---------------------------------------------------------------------------
+# Mesh introspection
+# ---------------------------------------------------------------------------
+
+MODEL_AXIS = "model"
+
+
+def mesh_axes(mesh: Mesh):
+    """(dp, tp): tp is the model axis; dp is every other axis (a bare name
+    for one axis, a tuple for several — directly usable as a P entry)."""
+    names = tuple(mesh.axis_names)
+    tp = MODEL_AXIS if MODEL_AXIS in names else names[-1]
+    dp_axes = tuple(a for a in names if a != tp)
+    dp = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+    return dp, tp
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _resolve(sym: AxisSym, mesh: Mesh):
+    """Symbolic entry -> concrete mesh axis name(s) (or None)."""
+    if sym is None:
+        return None
+    dp, tp = mesh_axes(mesh)
+    if isinstance(sym, tuple):
+        out: list = []
+        for s in sym:
+            r = _resolve(s, mesh)
+            if r is None:
+                continue
+            out.extend(r if isinstance(r, tuple) else (r,))
+        return tuple(out) if out else None
+    if sym == DP:
+        return dp
+    if sym == TP:
+        return tp
+    if sym in mesh.axis_names:
+        return sym
+    raise ValueError(f"unknown sharding axis {sym!r} for mesh {mesh.axis_names}")
+
+
+# ---------------------------------------------------------------------------
+# spec_tree: rules x params -> symbolic spec tree (divisibility fallback)
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _leaf_spec(path: str, leaf, rules: Sequence[Rule], mesh: Mesh) -> tuple:
+    ndim = len(leaf.shape)
+    spec: list = [None] * ndim
+    for rule in rules:
+        if not rule.matches(path):
+            continue
+        tail = tuple(rule.spec)[-ndim:] if ndim else ()
+        for i, sym in enumerate(tail, start=ndim - len(tail)):
+            if sym is None:
+                continue
+            size = _axis_size(mesh, _resolve(sym, mesh) or ())
+            # divisibility fallback: replicate instead of shard
+            if size > 1 and leaf.shape[i] % size == 0 and leaf.shape[i] > 0:
+                spec[i] = sym
+        break  # first matching rule wins
+    return tuple(spec)
+
+
+class Spec(tuple):
+    """One leaf's symbolic PartitionSpec. A distinct type (not a bare tuple)
+    so ``bind_shardings`` can tell a spec from a list/tuple pytree
+    *container* of specs structurally rather than by content."""
+
+    __slots__ = ()
+
+
+def spec_tree(params: Any, rules: Sequence[Rule], mesh: Mesh) -> Any:
+    """Symbolic spec tree matching ``params``: one ``Spec`` of DP/TP/None
+    per leaf (full rank). Arrays and ShapeDtypeStructs both work as
+    leaves."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: Spec(_leaf_spec(_path_str(path), leaf, rules, mesh)),
+        params)
+
+
+def _is_spec(node) -> bool:
+    """Hand-written plain tuples/lists of symbols also count as specs
+    (``()`` = fully replicated) — but never a container holding ``Spec``s."""
+    if isinstance(node, Spec):
+        return True
+    return isinstance(node, (tuple, list)) and all(
+        n is None or isinstance(n, str) or
+        (isinstance(n, tuple) and not isinstance(n, Spec)
+         and all(isinstance(s, str) for s in n))
+        for n in node)
+
+
+def bind_shardings(mesh: Mesh, specs: Any) -> Any:
+    """Symbolic spec tree -> NamedSharding tree. ``Spec`` leaves (and plain
+    tuples of symbols, e.g. ``()``) become NamedShardings; dicts and
+    containers of specs recurse."""
+    if _is_spec(specs):
+        return NamedSharding(mesh, P(*[_resolve(s, mesh) for s in specs]))
+    if isinstance(specs, dict):
+        return {k: bind_shardings(mesh, v) for k, v in specs.items()}
+    if isinstance(specs, (list, tuple)):
+        return type(specs)(bind_shardings(mesh, v) for v in specs)
+    raise TypeError(f"cannot bind shardings for {specs!r}")
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding scope
+# ---------------------------------------------------------------------------
+
+class _Scope(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+
+
+_SCOPE = _Scope()
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh):
+    """Within this scope, ``shard_activation`` pins layouts on ``mesh``."""
+    prev, _SCOPE.mesh = _SCOPE.mesh, mesh
+    try:
+        yield mesh
+    finally:
+        _SCOPE.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _SCOPE.mesh
+
+
+def shard_activation(x, *axes: AxisSym):
+    """``with_sharding_constraint`` with symbolic axes + divisibility
+    fallback; identity outside an ``activation_sharding`` scope. ``axes``
+    cover the leading dims (trailing dims replicate)."""
+    mesh = _SCOPE.mesh
+    if mesh is None:
+        return x
+    spec = []
+    for i, sym in enumerate(axes[: x.ndim]):
+        r = _resolve(sym, mesh)
+        if r is not None and x.shape[i] % _axis_size(mesh, r) != 0:
+            r = None  # divisibility fallback: leave the dim unsharded
+        spec.append(r)
+    if not any(s is not None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Rule tables (consumed by configs/*.py)
+# ---------------------------------------------------------------------------
+
+# LM params (models/transformer.py): FSDP over dp (d_model / reduction dims),
+# Megatron TP over heads / ffn / experts / vocab. Norms and biases replicate
+# via the catch-all. Stacked scan layers get their leading L dim replicated
+# by trailing-dim alignment.
+LM_RULES = [
+    Rule(r".*attn/w[qkv]", (DP, TP, None)),          # (D, H|Hkv, dh)
+    Rule(r".*attn/wo", (TP, None, DP)),              # (H, dh|dv, D)
+    Rule(r".*attn/w_dq", (DP, TP)),                  # (D, q_lora)
+    Rule(r".*attn/w_dkv", (DP, TP)),                 # (D, kv_lora)
+    Rule(r".*attn/w_u[qkv]", (DP, TP, None)),        # (lora, H, d)
+    Rule(r".*attn/w_kr", (DP, None)),                # (D, rope_dim): tiny
+    Rule(r".*moe/router", (DP, None)),               # (D, E): E rarely /: tp
+    Rule(r".*moe/shared/w_(gate|up)", (DP, TP)),     # (D, Fs)
+    Rule(r".*moe/shared/w_down", (TP, DP)),          # (Fs, D)
+    Rule(r".*moe/w_(gate|up)", (TP, DP, None)),      # (E, D, F): EP over tp
+    Rule(r".*moe/w_down", (TP, None, DP)),           # (E, F, D)
+    Rule(r".*mlp/w_(gate|up)", (DP, TP)),            # (D, F)
+    Rule(r".*mlp/w_down", (TP, DP)),                 # (F, D)
+    Rule(r".*(embed|unembed)", (TP, DP)),            # (V, D): vocab over tp
+    Rule(r".*", ()),                                 # norms/biases replicate
+]
+
+# RecSys params (models/recsys.py): the (F, V, d) field tables row-shard V
+# over the WHOLE mesh (the EmbeddingBag substrate); MLP towers are FSDP x TP.
+RECSYS_RULES = [
+    Rule(r".*tables|.*wide", (None, (DP, TP), None)),  # (F, V, d) row-sharded
+    Rule(r"(.*/)?w\d+", (DP, TP)),                     # tower matmuls
+    Rule(r".*", ()),                                   # biases etc.
+]
+
+# GNN params (models/gcn.py): tiny dense weights; shard where divisible,
+# replicate otherwise (Cora's 1433-dim input column simply replicates).
+GNN_RULES = [
+    Rule(r"(.*/)?w\d+", (DP, TP)),
+    Rule(r".*", ()),
+]

@@ -1,8 +1,16 @@
 # NOTE (per brief): XLA_FLAGS / device-count forcing is deliberately NOT set
 # here — smoke tests and benches must see 1 device. Multi-device tests
 # (tests/test_dist.py) spawn subprocesses that set the flag themselves.
+import os
+import sys
+
 import numpy as np
 import pytest
+
+try:  # slim CI images may lack hypothesis; fall back to the local stub
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))
 
 
 @pytest.fixture

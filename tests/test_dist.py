@@ -29,7 +29,7 @@ def test_compressed_psum_and_collective_matmul():
     run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from functools import partial
-        from jax import shard_map
+        from repro.dist.compat import shard_map  # jax<0.6: no jax.shard_map
         from jax.sharding import PartitionSpec as P
         from repro.dist.compression import compressed_psum_mean
         from repro.dist.collective_matmul import allgather_matmul, matmul_reducescatter
@@ -125,6 +125,54 @@ def test_sharded_trainer_elastic_restore():
         out = tr2.fit(lm_batches(dcfg, start_step=10))
         assert out["final_step"] == 14
         assert np.isfinite(out["history"][-1]["loss"])
+        print("OK")
+    """)
+
+
+def test_sharded_matches_host_union_exactly():
+    """Parity beyond AP: sharded_range_search must equal running the same
+    per-shard searches on the host and union-merging — same ids, counts."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import RangeConfig, SearchConfig, build_knn_graph
+        from repro.core.graph import Graph, medoid
+        from repro.core.range_search import range_search_fused
+        from repro.dist.sharded_engine import build_sharded, sharded_range_search
+        from repro.utils import INVALID_ID
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        pts = jnp.asarray(np.random.default_rng(1).standard_normal((1600, 8)),
+                          jnp.float32)
+        qs = jnp.asarray(np.asarray(pts[:16]) + 0.02)
+        rcfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16,
+                                               visit_cap=64),
+                           mode="greedy", result_cap=128)
+        corpus = build_sharded(np.asarray(pts), 4,
+                               lambda p: (build_knn_graph(p, k=8), medoid(p)[None]))
+        res = sharded_range_search(mesh, corpus, qs, 2.5, rcfg)
+
+        # host reference: same per-shard fused searches, numpy union-merge
+        all_ids, all_dists, total = [], [], 0
+        for s in range(4):
+            r = range_search_fused(corpus.points[s],
+                                   Graph(neighbors=corpus.neighbors[s]),
+                                   qs, corpus.start_ids[s], 2.5, rcfg)
+            gids = np.where(np.asarray(r.ids) == INVALID_ID, INVALID_ID,
+                            np.asarray(r.ids) + int(corpus.offsets[s]))
+            all_ids.append(gids); all_dists.append(np.asarray(r.dists))
+            total = total + np.asarray(r.count)
+        ids = np.concatenate(all_ids, axis=1)
+        dists = np.concatenate(all_dists, axis=1)
+        order = np.argsort(dists, axis=1, kind="stable")
+        ids = np.take_along_axis(ids, order, axis=1)[:, :rcfg.result_cap]
+        want_count = np.minimum(total, rcfg.result_cap)
+
+        np.testing.assert_array_equal(np.asarray(res.count), want_count)
+        got_ids = np.asarray(res.ids)
+        for q in range(ids.shape[0]):
+            k = want_count[q]
+            assert set(got_ids[q, :k]) == set(ids[q, :k]), q
+            assert (got_ids[q, k:] == INVALID_ID).all()
+        assert int(want_count.sum()) > 0  # the check is not vacuous
         print("OK")
     """)
 
