@@ -1,16 +1,13 @@
 """Shared benchmark plumbing: corpus/index cache, radius pick, timing, CSV."""
 from __future__ import annotations
 
-import functools
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    BuildConfig, RangeConfig, RangeSearchEngine, SearchConfig,
-    average_precision, exact_range_search,
+    BuildConfig, RangeConfig, RangeSearchEngine, average_precision, exact_range_search,
 )
 from repro.core.radius import default_grid, select_radius, sweep
 from repro.data.synthetic import make_corpus

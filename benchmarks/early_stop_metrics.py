@@ -9,9 +9,7 @@ licenses early stopping on a dataset.
 """
 from __future__ import annotations
 
-import dataclasses
 
-import jax
 import numpy as np
 
 from repro.core import SearchConfig, beam_search_batch

@@ -7,7 +7,6 @@ doubling, es on/off.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

@@ -1,11 +1,15 @@
-"""Kernel microbench: rangescan / gatherdist / flashattn.
+"""Kernel microbench: rangescan / gatherdist / expand / flashattn.
 
 Wall-clock on CPU is meaningless for TPU kernels, so this reports two
 things per shape: (a) XLA-path wall time (the ref oracle jit'd — a real
 measurement of the fallback used on CPU), and (b) the v5e roofline-term
 ESTIMATE for the Pallas kernel (FLOPs / bytes analytically from the tiling,
 against 197 TFLOP/s + 819 GB/s), which is what the TPU deployment would be
-bounded by.
+bounded by. The expand section additionally times the *unfused* expansion
+dataflow (adjacency gather + vector gather + distance + broadcast dedups —
+what the search loop ran before the fused path) against the fused oracle,
+and runs the Pallas kernel itself in interpret mode on CPU (compiled on a
+real TPU) as a correctness-exercising smoke measurement.
 """
 from __future__ import annotations
 
@@ -16,8 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
-from repro.kernels import flash_attention_ref, gatherdist_ref, rangescan_ref
-from repro.utils import block_until_ready
+from repro.kernels import (
+    expand_frontier, expand_frontier_ref, flash_attention_ref,
+    gatherdist_ref, rangescan_ref,
+)
+from repro.utils import INVALID_ID, block_until_ready
 from .common import print_table
 
 
@@ -57,6 +64,53 @@ def run():
         byts = 4.0 * (q * r * d + q * d + q * r)
         rows.append(["gatherdist", f"{q}x{r}x{d}", t * 1e3,
                      flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
+
+    # expand: fused multi-node frontier expansion vs the unfused dataflow
+    def unfused_expand(points, neighbors, frontier, queries):
+        """The pre-fusion search-loop expansion: row gather, vector gather,
+        distance, then three O(T^2)-ish broadcast dedups."""
+        n = points.shape[0]
+        f_ok = (frontier >= 0) & (frontier < n)
+        rows = jnp.take(neighbors, jnp.where(f_ok, frontier, 0), axis=0)
+        flat = jnp.where(f_ok[..., None], rows, INVALID_ID)
+        flat = flat.reshape(frontier.shape[0], -1)              # (Q, E*R)
+        d = gatherdist_ref(points, flat, queries)
+        t = jnp.arange(flat.shape[1])
+        dup = jnp.any((flat[:, :, None] == flat[:, None, :])
+                      & (t[None, None, :] < t[None, :, None])
+                      & (flat[:, :, None] != INVALID_ID), axis=2)
+        return jnp.where(dup, INVALID_ID, flat), jnp.where(dup, jnp.inf, d)
+
+    for (q, e, n, r, d) in [(256, 4, 100_000, 64, 128), (64, 8, 100_000, 32, 96)]:
+        pts = jax.random.normal(key, (n, d), jnp.float32)
+        nbrs = jax.random.randint(key, (n, r), 0, n, jnp.int32)
+        qs = jax.random.normal(key, (q, d), jnp.float32)
+        fr = jax.random.randint(jax.random.PRNGKey(e), (q, e), 0, n, jnp.int32)
+        f_fused = jax.jit(lambda p, g, f, u: expand_frontier_ref(p, g, f, u))
+        f_unfused = jax.jit(unfused_expand)
+        t_f = _wall(lambda: f_fused(pts, nbrs, fr, qs))
+        t_u = _wall(lambda: f_unfused(pts, nbrs, fr, qs))
+        flops = 3.0 * q * e * r * d
+        byts = 4.0 * (q * e * r * d + q * d + q * e * r * 2)
+        rows.append(["expand(fused)", f"{q}x{e}x{r}x{d}", t_f * 1e3,
+                     flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
+        rows.append(["expand(unfused)", f"{q}x{e}x{r}x{d}", t_u * 1e3,
+                     flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
+
+    # the Pallas expand kernel itself: interpret mode on CPU (the DMAs are
+    # emulated — wall time is an upper bound, not a TPU prediction)
+    pts = jax.random.normal(key, (2_000, 64), jnp.float32)
+    nbrs = jax.random.randint(key, (2_000, 16), 0, 2_000, jnp.int32)
+    qs = jax.random.normal(key, (4, 64), jnp.float32)
+    fr = jax.random.randint(jax.random.PRNGKey(7), (4, 4), 0, 2_000, jnp.int32)
+    interp = jax.default_backend() != "tpu"  # compiled only where it lowers
+    t_k = _wall(lambda: expand_frontier(pts, nbrs, fr, qs, use_pallas=True,
+                                        interpret=interp), iters=1)
+    flops = 3.0 * 4 * 4 * 16 * 64
+    byts = 4.0 * (4 * 4 * 16 * 64 + 4 * 64 + 4 * 4 * 16 * 2)
+    rows.append(["expand(pallas)" + ("[interp]" if interp else ""),
+                 "4x4x16x64", t_k * 1e3,
+                 flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
 
     # flashattn: prefill + decode shapes (small batch; CPU wall time)
     for (b, hq, hkv, sq, skv, dh) in [(1, 8, 2, 1024, 1024, 128),

@@ -7,7 +7,6 @@ densification study), where greedy's advantage over doubling must grow.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

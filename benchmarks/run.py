@@ -12,32 +12,83 @@ crossover) are what each section validates.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
 import sys
 import time
+
+# machine-readable perf trajectory, one record per CI run (uploaded as an
+# artifact so QPS/AP are comparable across PRs without log scraping)
+SMOKE_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_smoke.json")
 
 
 def smoke(n: int, min_qps: float, min_ap: float) -> int:
     """CI gate: one tiny corpus through ``range_search_compacted``; exits
     nonzero when QPS falls below ``min_qps`` (order-of-magnitude regression
     guard — CI boxes are slow, so the floor is deliberately conservative)
-    or AP below ``min_ap``."""
-    from repro.core import RangeConfig, SearchConfig
+    or AP below ``min_ap``. Runs the multi-node expansion config (E=4)
+    against the single-node baseline (E=1) and records both in
+    ``BENCH_smoke.json``; the gate applies to the E=4 numbers.
+
+    The radius targets ~128 matches/query (picked off the sweep grid), the
+    paper's match-dense regime (SSNPP/Fig. 4): range retrieval's cost there
+    is dominated by the greedy result-expansion phase, which is exactly what
+    the multi-node/bitset rework accelerates — and what serving traffic pays
+    for. (At near-zero match counts the search is gather-bandwidth-bound and
+    E barely matters; that regime is covered by qps_precision.py.)"""
+    import numpy as np
+
+    from repro.core import RangeConfig, SearchConfig, exact_range_search
 
     from .common import ap_of, get_dataset, get_engine, run_range
 
     # default n_queries so get_engine's internal get_dataset is a cache hit
     # (a different n_queries would rebuild the grid sweep + ground truth)
-    ds, _, qs, r, _, gt = get_dataset("bigann-like", n)
-    qs, gt = qs[:128], tuple(g[:128] for g in gt)
+    ds, pts, qs, _, prof, _ = get_dataset("bigann-like", n)
+    qs = qs[:128]
+    mean_counts = np.asarray(prof.counts).mean(axis=0)
+    r = float(prof.radii[int(np.argmin(np.abs(mean_counts - 128.0)))])
+    gt = exact_range_search(pts, qs, r, ds.metric)
     eng = get_engine("bigann-like", n)
-    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
-                                          metric=ds.metric),
-                      mode="greedy", result_cap=1024)
-    qps, res = run_range(eng, qs, r, cfg)
-    ap = ap_of(res, gt)
-    print(f"[smoke] range_search_compacted: n={n} qps={qps:.1f} ap={ap:.4f} "
+
+    def measure(expand_width: int):
+        cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32,
+                                              visit_cap=128, metric=ds.metric,
+                                              expand_width=expand_width),
+                          mode="greedy", result_cap=1024)
+        qps, res = run_range(eng, qs, r, cfg)
+        return cfg, dict(
+            qps=round(qps, 2),
+            ap=round(ap_of(res, gt), 4),
+            mean_n_dist=round(float(np.asarray(res.n_dist).mean()), 1),
+            mean_n_visited=round(float(np.asarray(res.n_visited).mean()), 1),
+        )
+
+    cfg, rec = measure(expand_width=4)
+    _, base = measure(expand_width=1)
+    speedup = rec["qps"] / max(base["qps"], 1e-9)
+    print(f"[smoke] range_search_compacted: n={n} expand_width=4 "
+          f"qps={rec['qps']:.1f} ap={rec['ap']:.4f} "
           f"(floors: qps>={min_qps}, ap>={min_ap})")
-    if qps < min_qps or ap < min_ap:
+    print(f"[smoke] expand_width=1 baseline: qps={base['qps']:.1f} "
+          f"ap={base['ap']:.4f} -> E=4 speedup {speedup:.2f}x")
+
+    record = dict(
+        bench="smoke", n=n, n_queries=int(qs.shape[0]), radius=float(r),
+        mean_matches=round(float(np.asarray(gt[2]).mean()), 1),
+        config=dataclasses.asdict(cfg), **rec,
+        baseline_expand1=base, speedup_vs_expand1=round(speedup, 3),
+        floors=dict(min_qps=min_qps, min_ap=min_ap),
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    )
+    with open(SMOKE_JSON, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"[smoke] trajectory record -> {SMOKE_JSON}")
+
+    if rec["qps"] < min_qps or rec["ap"] < min_ap:
         print("[smoke] FAIL: below regression floor")
         return 1
     return 0

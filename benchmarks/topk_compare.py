@@ -13,8 +13,6 @@ from repro.core import (
 from repro.utils import block_until_ready
 from .common import QUICK_PROFILES, ap_of, get_dataset, get_engine, print_table
 
-import jax.numpy as jnp
-
 
 def run(n: int = 10_000):
     rows = []

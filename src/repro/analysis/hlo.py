@@ -25,7 +25,6 @@ Everything is per-device (the partitioned module is per-device).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

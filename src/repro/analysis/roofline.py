@@ -19,9 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Optional
+from typing import Any
 
-import jax
 import numpy as np
 
 PEAK_FLOPS = 197e12      # bf16 / chip

@@ -1,7 +1,6 @@
 """autoint [recsys] — 39 sparse fields, embed_dim=16, 3 interacting
 self-attention layers (2 heads, d_attn=32). [arXiv:1810.11921; paper]
 """
-import jax.numpy as jnp
 
 from ..dist.sharding import RECSYS_RULES
 from ..models.recsys import RecsysConfig

@@ -2,7 +2,6 @@
 bot_mlp 13-512-256-64, top_mlp 512-512-256-1, dot interaction.
 [arXiv:1906.00091; paper]
 """
-import jax.numpy as jnp
 
 from ..dist.sharding import RECSYS_RULES
 from ..models.recsys import RecsysConfig

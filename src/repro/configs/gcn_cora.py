@@ -2,7 +2,6 @@
 normalization), Cora geometry (2708 nodes, 1433 features, 7 classes).
 [arXiv:1609.02907; paper]
 """
-import jax.numpy as jnp
 
 from ..dist.sharding import GNN_RULES
 from ..models.gcn import GCNConfig

@@ -8,8 +8,6 @@ paper's system itself distributes, not just the ML architectures around it.
 """
 import dataclasses
 
-import jax.numpy as jnp
-
 from ..core.beam_search import SearchConfig
 from ..core.range_search import RangeConfig
 from ..dist.sharding import Rule
@@ -31,7 +29,12 @@ class EngineDeployConfig:
                                       # fused Pallas gatherdist kernel is
                                       # how bf16 storage pays off on TPU.
     range_cfg: RangeConfig = dataclasses.field(default_factory=lambda: RangeConfig(
-        search=SearchConfig(beam=64, max_beam=64, visit_cap=256),
+        search=SearchConfig(beam=64, max_beam=64, visit_cap=256,
+                            # multi-node frontier expansion; the TPU deploy
+                            # additionally flips use_expand_kernel=True (left
+                            # False here so the dry-run lowers on host
+                            # devices, where Pallas TPU calls don't exist)
+                            expand_width=4),
         mode="greedy", result_cap=1024, frontier_rounds=2048))
 
 
@@ -39,7 +42,8 @@ def reduced() -> EngineDeployConfig:
     return EngineDeployConfig(
         name="range-engine-smoke", shard_corpus=2_000, dim=16, max_degree=8,
         range_cfg=RangeConfig(search=SearchConfig(beam=16, max_beam=16,
-                                                  visit_cap=64),
+                                                  visit_cap=64,
+                                                  expand_width=4),
                               mode="greedy", result_cap=128,
                               frontier_rounds=256))
 

@@ -6,7 +6,6 @@ corpus the range engine indexes; ``retrieval_cand`` is served both by brute
 force (rangescan kernel) and through the graph-based range engine — this
 cell is one of the three hillclimb candidates (DESIGN.md §6).
 """
-import jax.numpy as jnp
 
 from ..dist.sharding import RECSYS_RULES
 from ..models.recsys import RecsysConfig

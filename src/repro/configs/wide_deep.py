@@ -1,7 +1,6 @@
 """wide-deep [recsys] — 40 sparse fields, embed_dim=32, deep MLP
 1024-512-256, concat interaction + linear wide part. [arXiv:1606.07792; paper]
 """
-import jax.numpy as jnp
 
 from ..dist.sharding import RECSYS_RULES
 from ..models.recsys import RecsysConfig

@@ -1,0 +1,103 @@
+"""Packed per-query visited bitset for the search loops.
+
+The traversal's "have I seen this node?" test used to be an
+O(R * visit_cap) broadcast against the visited log plus an O(R * max_beam)
+broadcast against the beam, *per expansion*. Marking every node at
+**discovery** time (when it is first inserted into the beam — the standard
+GPU graph-ANNS hash-table-visited semantics) collapses both tests into one
+O(1)-per-candidate bit probe into a packed ``(W,) uint32`` array.
+
+Sizing: ``W = ceil(min(N, cap_bits) / 32)`` words. Below ``cap_bits`` the
+filter is **exact** (bit index == node id). Above it, ids are hash-bucketed
+by ``id mod (W * 32)``, so memory stays bounded at billion scale
+(``cap_bits`` defaults to 2^20 bits == 128 KiB per in-flight query) at the
+cost of rare false-positive "seen" verdicts — a recall approximation, never
+a correctness hazard (a false positive only skips a candidate).
+
+All ops are branch-free jnp and vmap/while_loop friendly. ``bitset_add``
+accumulates with a scatter-*add*, which is exact only when the marked slots
+are unique and currently clear — callers dedup candidate tiles first (see
+``first_slot_occurrence``) and only mark candidates that failed the
+``bitset_contains`` probe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..utils import cdiv
+
+# Per-query filter memory bound: 2^20 bits == 128 KiB. Corpora beyond a
+# million nodes hash-bucket into this (see module docstring).
+DEFAULT_BITSET_CAP_BITS = 1 << 20
+
+
+def bitset_num_words(n_nodes: int, cap_bits: int = DEFAULT_BITSET_CAP_BITS) -> int:
+    """Number of uint32 words for a corpus of ``n_nodes`` points (static)."""
+    return cdiv(min(max(int(n_nodes), 1), int(cap_bits)), 32)
+
+
+def bitset_exact(n_nodes: int, num_words: int) -> bool:
+    """True when every node id gets its own bit (no hash bucketing)."""
+    return int(n_nodes) <= num_words * 32
+
+
+def bitset_init(num_words: int) -> jnp.ndarray:
+    return jnp.zeros((num_words,), jnp.uint32)
+
+
+def _slots(bits: jnp.ndarray, ids: jnp.ndarray):
+    nb = bits.shape[0] * 32
+    slot = ids % nb  # identity when the filter is exact (ids < nb)
+    return slot // 32, (slot % 32).astype(jnp.uint32)
+
+
+def bitset_contains(bits: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Membership probe. ``ids`` must be non-negative; callers mask INVALID
+    lanes themselves (an INVALID id probes a junk bucket)."""
+    w, b = _slots(bits, ids)
+    word = jnp.take(bits, w, axis=0)
+    return ((word >> b) & jnp.uint32(1)).astype(bool)
+
+
+# Below this many word*tile cells, marking uses a dense broadcast-OR
+# (word-equality matrix x bitmask, summed per word) instead of a scatter.
+# XLA lowers vmapped scatters to sequential per-update loops — on CPU that
+# made scatter the single hottest op of the search loop; the broadcast is
+# pure vectorized compare/sum. Scatter remains for huge hash-bucketed
+# filters where the dense matrix would dwarf the tile.
+_DENSE_ADD_CELLS = 1 << 22
+
+
+def bitset_add(bits: jnp.ndarray, ids: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Set the bits of ``ids`` where ``mask``.
+
+    Accumulates by addition (jnp has no scatter-or), which is exact iff
+    masked slots are pairwise distinct and currently clear — the calling
+    convention is: probe with ``bitset_contains`` first, dedup the tile,
+    then add.
+    """
+    w, b = _slots(bits, ids)
+    m = jnp.where(mask, jnp.uint32(1) << b, jnp.uint32(0))
+    n_words = bits.shape[0]
+    if n_words * ids.shape[0] <= _DENSE_ADD_CELLS:
+        hit = w[None, :] == jnp.arange(n_words)[:, None]      # (W, T)
+        return bits + jnp.sum(jnp.where(hit, m[None, :], 0), axis=1,
+                              dtype=jnp.uint32)
+    wi = jnp.where(mask, w, n_words)  # out-of-bounds -> dropped
+    return bits.at[wi].add(m, mode="drop")
+
+
+def first_slot_occurrence(bits: jnp.ndarray, ids: jnp.ndarray,
+                          valid: jnp.ndarray) -> jnp.ndarray:
+    """Mask of entries that are the first occurrence of their *slot* in the
+    tile. Needed before ``bitset_add`` in the hash-bucketed regime, where two
+    distinct ids can share a bucket (in the exact regime an id-level dedup
+    implies slot uniqueness). Stable slot-sort, O(T log T): equal slots form
+    runs in original order, each run's head is its first occurrence."""
+    nb = bits.shape[0] * 32
+    slot = jnp.where(valid, ids % nb, nb)  # invalid entries sort to the end
+    order = jnp.argsort(slot, stable=True)
+    sorted_slots = slot[order]
+    head = jnp.concatenate([jnp.ones((1,), bool),
+                            sorted_slots[1:] != sorted_slots[:-1]])
+    return jnp.zeros_like(valid).at[order].set(head) & valid

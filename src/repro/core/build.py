@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..utils import INVALID_ID, cdiv
+from ..utils import INVALID_ID
 from .beam_search import SearchConfig, beam_search_batch
 from .distances import gather_dist, point_dist
 from .graph import Graph, medoid

@@ -16,10 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..utils import INVALID_ID
 from .beam_search import SearchConfig, beam_search_batch, topk_from_state
 from .build import BuildConfig, build_vamana
-from .graph import Graph, medoid, start_points
+from .graph import Graph, start_points
 from .range_search import RangeConfig, RangeResult, range_search_compacted, range_search_fused
 
 

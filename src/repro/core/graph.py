@@ -47,6 +47,20 @@ class Graph:
         rows = jnp.take(self.neighbors, safe, axis=0)
         return jnp.where(valid[..., None], rows, INVALID_ID)
 
+    def lane_padded(self, multiple: int = 128) -> "Graph":
+        """Copy with the degree axis INVALID-padded up to ``multiple``.
+
+        The fused expand kernel maps adjacency rows onto (1, R) VMEM blocks;
+        TPU lane tiling wants R to be a multiple of 128. Pad once at index
+        load time (padding inside the jitted search loop would re-concat
+        every iteration)."""
+        r = self.max_degree
+        r_pad = -(-r // multiple) * multiple
+        if r_pad == r:
+            return self
+        pad = jnp.full((self.num_nodes, r_pad - r), INVALID_ID, jnp.int32)
+        return Graph(neighbors=jnp.concatenate([self.neighbors, pad], axis=1))
+
 
 def from_lists(lists: list[list[int]], max_degree: Optional[int] = None) -> Graph:
     """Build a Graph from python adjacency lists (testing convenience)."""

@@ -10,7 +10,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..utils import INVALID_ID, cdiv
 from .distances import pairwise_dist

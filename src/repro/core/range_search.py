@@ -28,8 +28,20 @@ from ..utils import INVALID_ID, next_pow2
 from .beam_search import (
     BeamState,
     SearchConfig,
+    _expand_tile,
+    _f32_ascending_key,
+    _f32_from_key,
+    _point_norms,
     beam_search_batch,
     in_range_count,
+)
+from .bitset import (
+    bitset_add,
+    bitset_contains,
+    bitset_exact,
+    bitset_init,
+    bitset_num_words,
+    first_slot_occurrence,
 )
 from .distances import gather_dist
 from .graph import Graph
@@ -81,12 +93,16 @@ class GreedyState:
     rounds: jnp.ndarray     # () int32
     overflow: jnp.ndarray   # () bool
     n_dist: jnp.ndarray     # () int32
+    seen_bits: jnp.ndarray  # (W,) uint32 — result-membership bitset
 
 
-def _greedy_init(st: BeamState, r, cap: int) -> GreedyState:
+def _greedy_init(st: BeamState, r, cap: int, num_words: int,
+                 exact_bits: bool) -> GreedyState:
     """Seed the result buffer with every in-range node whose exact distance is
     already known: the visited log plus unexpanded in-range beam entries
-    (disjoint by construction — expanded beam nodes are in the log)."""
+    (disjoint by construction — expanded beam nodes are in the log). The
+    result membership is mirrored into a bitset so the per-expansion "already
+    a result?" test is an O(1) probe, not an O(result_cap) broadcast."""
     v_ok = st.visited_dists <= r
     b_ok = (st.dists <= r) & (~st.expanded) & (st.ids != INVALID_ID)
     ids = jnp.concatenate([jnp.where(v_ok, st.visited_ids, INVALID_ID),
@@ -95,12 +111,18 @@ def _greedy_init(st: BeamState, r, cap: int) -> GreedyState:
                              jnp.where(b_ok, st.dists, jnp.inf)])
     # pack in-range entries to the front, closest first (paper pops
     # closest-first; our FIFO expansion then visits in that order)
-    dists, ids = jax.lax.sort((dists, ids), num_keys=1, is_stable=True)
+    _, ids, dists = jax.lax.sort((_f32_ascending_key(dists), ids, dists),
+                                 num_keys=1, is_stable=True)
     k = min(cap, ids.shape[0])
     res_ids = jnp.full((cap,), INVALID_ID, jnp.int32).at[:k].set(ids[:k])
     res_dists = jnp.full((cap,), jnp.inf, jnp.float32).at[:k].set(dists[:k])
     total = jnp.sum(jnp.isfinite(dists))
     count = jnp.minimum(total, cap)
+    bits = bitset_init(num_words)
+    seed_ok = res_ids != INVALID_ID  # unique ids by construction
+    if not exact_bits:  # hashed regime: collapse colliding buckets first
+        seed_ok = first_slot_occurrence(bits, res_ids, seed_ok)
+    bits = bitset_add(bits, res_ids, seed_ok)
     return GreedyState(
         res_ids=res_ids,
         res_dists=res_dists,
@@ -109,13 +131,18 @@ def _greedy_init(st: BeamState, r, cap: int) -> GreedyState:
         rounds=jnp.asarray(0, jnp.int32),
         overflow=(total > cap),
         n_dist=jnp.asarray(0, jnp.int32),
+        seen_bits=bits,
     )
 
 
-def _greedy_step(points, graph: Graph, q, r, cap: int, metric: str, gs: GreedyState) -> GreedyState:
+def _greedy_step_reference(points, graph: Graph, q, r, cap: int,
+                           scfg: SearchConfig, gs: GreedyState) -> GreedyState:
+    """Single-node greedy step (``expand_width=1``): the pre-fusion dataflow,
+    kept verbatim as the baseline (membership test is an O(R * cap)
+    broadcast against the result buffer; ``seen_bits`` carried untouched)."""
     node = gs.res_ids[gs.expand_ptr]
     nbrs = graph.out_neighbors(node)  # (R,)
-    nd = gather_dist(points, nbrs, q, metric)
+    nd = gather_dist(points, nbrs, q, scfg.metric)
     rr = jnp.arange(nbrs.shape[0])
     dup_in_row = jnp.any(
         (nbrs[:, None] == nbrs[None, :]) & (rr[None, :] < rr[:, None]) & (nbrs[:, None] != INVALID_ID),
@@ -136,23 +163,121 @@ def _greedy_step(points, graph: Graph, q, r, cap: int, metric: str, gs: GreedySt
         rounds=gs.rounds + 1,
         overflow=gs.overflow | (gs.res_count + n_new > cap),
         n_dist=gs.n_dist + jnp.sum(nbrs != INVALID_ID).astype(jnp.int32),
+        seen_bits=gs.seen_bits,
     )
 
 
-@partial(jax.jit, static_argnames=("cap", "rounds", "metric"))
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class _PackedGreedyState:
+    """Loop carry of the fused (E >= 2) greedy phase. ``res`` packs
+    ``[id, uint32-distance-key]`` per row so the append is ONE bounded
+    scatter instead of two (XLA scatter cost is per-update overhead, not
+    bytes — the two-buffer form profiled as ~40% of the greedy loop; a
+    batched ``dynamic_update_slice`` window write was also tried and lost,
+    since a per-lane start index turns DUS into a whole-buffer scatter
+    under vmap). Unpacked into ``GreedyState`` after the loop."""
+
+    res: jnp.ndarray        # (K, 2) int32 — [id, dist key (bitcast)]
+    res_count: jnp.ndarray  # () int32
+    expand_ptr: jnp.ndarray # () int32
+    rounds: jnp.ndarray     # () int32
+    overflow: jnp.ndarray   # () bool
+    n_dist: jnp.ndarray     # () int32
+    seen_bits: jnp.ndarray  # (W,) uint32
+
+
+def _pack_greedy(gs: GreedyState) -> _PackedGreedyState:
+    key = jax.lax.bitcast_convert_type(_f32_ascending_key(gs.res_dists),
+                                       jnp.int32)
+    return _PackedGreedyState(
+        res=jnp.stack([gs.res_ids, key], axis=1),
+        res_count=gs.res_count, expand_ptr=gs.expand_ptr, rounds=gs.rounds,
+        overflow=gs.overflow, n_dist=gs.n_dist, seen_bits=gs.seen_bits)
+
+
+def _unpack_greedy(ps: _PackedGreedyState) -> GreedyState:
+    return GreedyState(
+        res_ids=ps.res[:, 0],
+        res_dists=_f32_from_key(
+            jax.lax.bitcast_convert_type(ps.res[:, 1], jnp.uint32)),
+        res_count=ps.res_count, expand_ptr=ps.expand_ptr, rounds=ps.rounds,
+        overflow=ps.overflow, n_dist=ps.n_dist, seen_bits=ps.seen_bits)
+
+
+def _greedy_step(points, graph: Graph, q, r, cap: int, scfg: SearchConfig,
+                 gs: _PackedGreedyState, point_norms=None) -> _PackedGreedyState:
+    """Expand the next E result-buffer entries through the fused expand path
+    (same kernel as phase 1), appending fresh in-range neighbors.
+
+    The membership probe is the bitset — the reference path's O(R * cap)
+    result-buffer broadcast is the dominant cost this replaces."""
+    E = scfg.eff_expand_width
+    lane = jnp.arange(E)
+    e_cnt = jnp.minimum(jnp.asarray(E, jnp.int32), gs.res_count - gs.expand_ptr)
+    lane_ok = lane < e_cnt
+    ridx = jnp.minimum(gs.expand_ptr + lane, cap - 1)
+    nodes = jnp.where(lane_ok, jnp.take(gs.res[:, 0], ridx), INVALID_ID)
+
+    nbr_ids, nd, nd_inc = _expand_tile(points, graph, nodes, q, scfg,
+                                       point_norms)
+    valid = nbr_ids != INVALID_ID
+    seen = bitset_contains(gs.seen_bits, jnp.where(valid, nbr_ids, 0)) & valid
+    new = valid & ~seen & (nd <= r)
+    if not bitset_exact(points.shape[0], gs.seen_bits.shape[0]):
+        new = first_slot_occurrence(gs.seen_bits, nbr_ids, new)
+
+    pos = gs.res_count + jnp.cumsum(new.astype(jnp.int32)) - 1
+    write_pos = jnp.where(new & (pos < cap), pos, cap)  # cap == OOB -> dropped
+    key = jax.lax.bitcast_convert_type(_f32_ascending_key(nd), jnp.int32)
+    rows = jnp.stack([nbr_ids, key], axis=1)             # (T, 2)
+    res = gs.res.at[write_pos].set(rows, mode="drop")
+    n_new = jnp.sum(new.astype(jnp.int32))
+    return _PackedGreedyState(
+        res=res,
+        res_count=jnp.minimum(gs.res_count + n_new, cap),
+        expand_ptr=gs.expand_ptr + e_cnt,
+        rounds=gs.rounds + e_cnt,
+        overflow=gs.overflow | (gs.res_count + n_new > cap),
+        n_dist=gs.n_dist + nd_inc,
+        # mark every fresh in-range neighbor, including cap-dropped ones (the
+        # buffer only ever grows, so a dropped node could never land later)
+        seen_bits=bitset_add(gs.seen_bits, nbr_ids, new),
+    )
+
+
+@partial(jax.jit, static_argnames=("cap", "rounds", "scfg"))
 def greedy_search(
     points, graph: Graph, q, r, st: BeamState,
-    cap: int, rounds: int, metric: str, active: bool | jnp.ndarray = True,
+    cap: int, rounds: int, scfg: SearchConfig, active: bool | jnp.ndarray = True,
 ) -> GreedyState:
-    """Paper Alg. 2 from a finished beam state. ``active=False`` lanes no-op."""
-    gs = _greedy_init(st, r, cap)
+    """Paper Alg. 2 from a finished beam state. ``active=False`` lanes no-op.
+
+    ``rounds`` stays an *expansion* budget: each iteration advances
+    ``expand_ptr`` by up to ``scfg.expand_width`` and charges that many
+    rounds (the last iteration may overshoot by at most E - 1).
+    """
+    num_words = bitset_num_words(points.shape[0], scfg.bitset_cap_bits)
+    gs = _greedy_init(st, r, cap, num_words,
+                      bitset_exact(points.shape[0], num_words))
     if not isinstance(active, jnp.ndarray):
         active = jnp.asarray(active)
 
-    def cond(g: GreedyState):
+    def cond(g):
         return active & (g.expand_ptr < g.res_count) & (g.rounds < rounds)
 
-    gs = jax.lax.while_loop(cond, lambda g: _greedy_step(points, graph, q, r, cap, metric, g), gs)
+    if scfg.eff_expand_width == 1:  # paper-faithful single-node reference
+        gs = jax.lax.while_loop(
+            cond,
+            lambda g: _greedy_step_reference(points, graph, q, r, cap, scfg, g),
+            gs)
+    else:
+        pnorms = _point_norms(points, scfg)
+        ps = jax.lax.while_loop(
+            cond,
+            lambda g: _greedy_step(points, graph, q, r, cap, scfg, g, pnorms),
+            _pack_greedy(gs))
+        gs = _unpack_greedy(ps)
     gs = dataclasses.replace(gs, overflow=gs.overflow | (gs.expand_ptr < gs.res_count))
     return gs
 
@@ -208,7 +333,7 @@ def range_search_fused(
     # greedy: phase 2 only for saturated lanes (masked, not compacted)
     active = jax.vmap(partial(_needs_phase2, r=r, lam=cfg.lam))(st)
     gfn = lambda q_, st_, a_: greedy_search(
-        points, graph, q_, r, st_, cfg.result_cap, cfg.frontier_rounds, cfg.search.metric, a_
+        points, graph, q_, r, st_, cfg.result_cap, cfg.frontier_rounds, cfg.search, a_
     )
     gs = jax.vmap(gfn)(queries, st, active)
     b_ids, b_dists, b_count, b_over = jax.vmap(partial(_beam_results, r=r, cap=cfg.result_cap))(st)
@@ -273,30 +398,30 @@ def range_search_compacted(
         # restart with widening enabled, survivors only (paper Alg. 5)
         st2 = beam_search_batch(points, graph, sub_q, start_ids, rj,
                                 cfg.search, es_radius)
-        s_ids, s_dists, s_count, s_over = jax.vmap(
+        d_ids, d_dists, d_count, d_over = jax.vmap(
             partial(_beam_results, r=rj, cap=cfg.result_cap))(st2)
-        sub = (np.asarray(s_ids), np.asarray(s_dists), np.asarray(s_count),
-               np.asarray(s_over), np.asarray(st2.n_dist))
+        sub = (d_ids, d_dists, d_count, d_over, st2.n_dist)
     else:
         sub_st = jax.tree.map(lambda x: x[pad], st)
         gfn = lambda q_, st_, a_: greedy_search(
             points, graph, q_, rj, st_, cfg.result_cap, cfg.frontier_rounds,
-            cfg.search.metric, a_)
+            cfg.search, a_)
         gs = jax.vmap(gfn)(sub_q, sub_st, lane_on)
-        sub = (np.asarray(gs.res_ids), np.asarray(gs.res_dists),
-               np.asarray(gs.res_count), np.asarray(gs.overflow),
-               np.asarray(gs.n_dist))
+        sub = (gs.res_ids, gs.res_dists, gs.res_count, gs.overflow, gs.n_dist)
 
-    ids = np.array(base.ids)
-    dists = np.array(base.dists)
-    count = np.array(base.count)
-    over = np.array(base.overflow)
-    ndist = np.array(base.n_dist)
-    ids[sel] = sub[0][:n_active]
-    dists[sel] = sub[1][:n_active]
-    count[sel] = sub[2][:n_active]
-    over[sel] = sub[3][:n_active]
-    ndist[sel] += sub[4][:n_active]
+    # one batched transfer for everything the host-side merge needs (the
+    # per-leaf np.array() calls each synced the device separately)
+    ids, dists, count, over, ndist, s_ids, s_dists, s_count, s_over, s_nd = (
+        jax.device_get((base.ids, base.dists, base.count, base.overflow,
+                        base.n_dist) + sub))
+    ids, dists, count, over, ndist = (
+        np.array(ids), np.array(dists), np.array(count), np.array(over),
+        np.array(ndist))  # device_get leaves may be read-only views
+    ids[sel] = s_ids[:n_active]
+    dists[sel] = s_dists[:n_active]
+    count[sel] = s_count[:n_active]
+    over[sel] = s_over[:n_active]
+    ndist[sel] += s_nd[:n_active]
     phase2 = jnp.asarray(active)
     return RangeResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
                        count=jnp.asarray(count), overflow=jnp.asarray(over),

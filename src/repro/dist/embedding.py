@@ -9,7 +9,6 @@ one-hot-matmul identity that GSPMD uses for sharded gathers.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -69,12 +69,19 @@ def build_sharded(
     points,
     n_shards: int,
     build_fn: Callable,   # (shard_points (n, d)) -> (Graph, start_ids (k,))
+    lane_pad: int = 0,
 ) -> ShardedCorpus:
     """Partition ``points`` into ``n_shards`` contiguous blocks and build one
     sub-index per block with ``build_fn``. A short last block is padded to
     the common shard size only *after* its graph is built, so the pad rows
     have no incoming edges (search can never visit them, under any metric)
-    and the stacked arrays stay rectangular."""
+    and the stacked arrays stay rectangular.
+
+    ``lane_pad > 0`` pads every sub-index's degree axis to that multiple
+    (``Graph.lane_padded``) so the stacked adjacency is ready for the fused
+    Pallas expand kernel (``SearchConfig.use_expand_kernel``), whose VMEM
+    blocks want R on a 128-lane boundary — done once here rather than per
+    search dispatch."""
     pts = np.asarray(points)
     n_total, d = pts.shape
     n = cdiv(n_total, n_shards)
@@ -82,6 +89,8 @@ def build_sharded(
     for s in range(n_shards):
         block = pts[s * n:(s + 1) * n]
         graph, start_ids = build_fn(jnp.asarray(block))
+        if lane_pad:
+            graph = graph.lane_padded(lane_pad)
         neighbors = np.asarray(graph.neighbors)
         if block.shape[0] < n:  # pad points AND adjacency (INVALID = no edge)
             n_pad = n - block.shape[0]

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
-Three kernels (DESIGN.md §7), each with ``kernel.py`` (pallas_call +
+Four kernels (DESIGN.md §7), each with ``kernel.py`` (pallas_call +
 BlockSpec), ``ops.py`` (jit wrapper with an XLA fallback), ``ref.py``
 (pure-jnp oracle):
 
@@ -9,6 +9,9 @@ BlockSpec), ``ops.py`` (jit wrapper with an XLA fallback), ``ref.py``
   ``retrieval_cand``.
 * ``gatherdist`` — scalar-prefetch row gather + fused distance (beam
   expansion's irregular memory pattern).
+* ``expand``     — fused multi-node frontier expansion: adjacency gather +
+  neighbor-vector DMA gather + MXU distances + one-pass tile dedup (the
+  search loop's per-iteration hot path).
 * ``flashattn``  — flash attention fwd with GQA, sliding window, soft-cap
   (LM serving).
 
@@ -16,11 +19,13 @@ CPU tests run ``interpret=True``; dry-run lowering uses the XLA fallback
 (``use_pallas=False``) since Pallas TPU custom calls don't lower on the CPU
 host platform.
 """
+from .expand import expand_frontier, expand_frontier_ref
 from .flashattn import flash_attention, flash_attention_ref
 from .gatherdist import gatherdist, gatherdist_ref
 from .rangescan import rangescan, rangescan_ref
 
 __all__ = [
+    "expand_frontier", "expand_frontier_ref",
     "flash_attention", "flash_attention_ref",
     "gatherdist", "gatherdist_ref",
     "rangescan", "rangescan_ref",

@@ -1,0 +1,4 @@
+from .ops import expand_frontier
+from .ref import expand_frontier_1, expand_frontier_ref
+
+__all__ = ["expand_frontier", "expand_frontier_1", "expand_frontier_ref"]

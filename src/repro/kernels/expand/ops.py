@@ -1,0 +1,48 @@
+"""jit'd public wrapper for the expand kernel (clamp + dispatch).
+
+``use_pallas=False`` routes to the pure-jnp oracle — the XLA path the search
+loop uses on hosts where Pallas TPU custom calls do not lower (CPU CI, dry
+runs). On a real TPU set ``use_pallas=True, interpret=False``; for kernel
+unit tests ``interpret=True`` emulates the DMAs on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import expand_pallas
+from .ref import expand_frontier_ref
+
+
+@partial(jax.jit, static_argnames=("metric", "use_pallas", "interpret"))
+def expand_frontier(
+    points: jnp.ndarray,     # (N, d)
+    neighbors: jnp.ndarray,  # (N, R) int32 adjacency (INVALID_ID padded)
+    frontier: jnp.ndarray,   # (Q, E) int32 nodes to expand (INVALID_ID padded)
+    queries: jnp.ndarray,    # (Q, d)
+    *,
+    metric: str = "l2",
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused frontier expansion.
+
+    Returns ``(ids (Q, E*R), dists (Q, E*R), n_dist (Q,))`` where each
+    query's tile is first-occurrence-deduped and INVALID/+inf padded, and
+    ``n_dist`` counts distances computed (pre-dedup).
+    """
+    if not use_pallas:
+        return expand_frontier_ref(points, neighbors, frontier, queries,
+                                   metric=metric)
+    n = points.shape[0]
+    qn, e = frontier.shape
+    f_ok = (frontier >= 0) & (frontier < n)
+    fid = jnp.where(f_ok, frontier, 0).reshape(-1)
+    fval = f_ok.astype(jnp.int32).reshape(-1)
+    ids, dists, cnts = expand_pallas(
+        points, neighbors, fid, fval, queries,
+        expand_width=e, metric=metric, interpret=interpret,
+    )
+    return ids, dists, cnts

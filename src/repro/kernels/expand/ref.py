@@ -1,0 +1,77 @@
+"""Pure-jnp oracle for the fused frontier-expand kernel.
+
+Semantics (shared with the Pallas kernel):
+
+* frontier entries that are INVALID_ID or out of range yield all-INVALID
+  rows (no distances, no n_dist contribution);
+* every valid adjacency entry gets a distance (this is what ``n_dist``
+  counts — it is the number of distance computations performed, duplicates
+  included, matching the unfused path's accounting);
+* only the **first occurrence** of each neighbor id within the flattened
+  E*R tile survives; later duplicates are masked to INVALID/+inf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...utils import INVALID_ID
+
+
+def expand_frontier_1(
+    points: jnp.ndarray,     # (N, d) corpus (any float dtype; math in f32)
+    neighbors: jnp.ndarray,  # (N, R) int32 adjacency, INVALID_ID padded
+    frontier: jnp.ndarray,   # (E,) int32 nodes to expand (INVALID_ID padded)
+    q: jnp.ndarray,          # (d,) query
+    metric: str = "l2",
+    point_norms: jnp.ndarray | None = None,  # (N,) precomputed |x|^2 (l2)
+):
+    """Single-query fused expansion -> (ids (E*R,), dists (E*R,), n_dist ()).
+
+    Distances use the kernel's matmul form, ``|x|^2 + |q|^2 - 2 x.q``, when
+    ``point_norms`` is supplied (the search loop precomputes them once per
+    corpus): one (T, d) x (d,) GEMV plus a T-float norm gather replaces
+    three elementwise passes over the gathered tile — the tile read is the
+    loop's bandwidth floor, so passes over it are what matter.
+    """
+    n = points.shape[0]
+    f_ok = (frontier >= 0) & (frontier < n)
+    rows = jnp.take(neighbors, jnp.where(f_ok, frontier, 0), axis=0)  # (E, R)
+    flat = jnp.where(f_ok[:, None], rows, INVALID_ID).reshape(-1)     # (E*R,)
+
+    valid = (flat >= 0) & (flat < n)
+    safe = jnp.where(valid, flat, 0)
+    vecs = jnp.take(points, safe, axis=0).astype(jnp.float32)  # (E*R, d)
+    qf = q.astype(jnp.float32)
+    if metric == "l2" and point_norms is not None:
+        dots = vecs @ qf
+        xn = jnp.take(point_norms, safe).astype(jnp.float32)
+        d = jnp.maximum(xn + jnp.sum(qf * qf) - 2.0 * dots, 0.0)
+    elif metric == "l2":
+        diff = vecs - qf[None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    else:  # ip
+        d = -(vecs @ qf)
+
+    # first-occurrence dedup as one vectorized (T, T) compare — the same
+    # one-pass mask the kernel computes. (A sort-based O(T log T) dedup was
+    # tried and lost in-loop: XLA's sort comparator costs far more per
+    # element than a broadcast compare at tile sizes of a few hundred.)
+    t = jnp.arange(flat.shape[0])
+    dup = jnp.any(
+        (flat[:, None] == flat[None, :])
+        & (t[None, :] < t[:, None])
+        & valid[None, :] & valid[:, None],
+        axis=1,
+    )
+    keep = valid & ~dup
+    ids = jnp.where(keep, flat, INVALID_ID)
+    dists = jnp.where(keep, d, jnp.inf)
+    return ids, dists, jnp.sum(valid).astype(jnp.int32)
+
+
+def expand_frontier_ref(points, neighbors, frontier, queries, *, metric: str = "l2"):
+    """Batched oracle: frontier (Q, E), queries (Q, d) ->
+    (ids (Q, E*R), dists (Q, E*R), n_dist (Q,))."""
+    fn = lambda f, q: expand_frontier_1(points, neighbors, f, q, metric)
+    return jax.vmap(fn)(frontier, queries)

@@ -21,13 +21,9 @@ import sys  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
-import jax  # noqa: E402
-
 from ..analysis.hlo import analyze_module  # noqa: E402
-from ..analysis.roofline import (  # noqa: E402
-    analytic_model_flops, make_report, save_reports,
-)
-from ..configs import REGISTRY, all_cells, get_arch  # noqa: E402
+from ..analysis.roofline import analytic_model_flops, make_report  # noqa: E402
+from ..configs import all_cells, get_arch  # noqa: E402
 from ..dist.sharding import activation_sharding  # noqa: E402
 from .mesh import make_production_mesh, mesh_devices  # noqa: E402
 from .steps import build_cell  # noqa: E402

@@ -34,6 +34,8 @@ def main(argv=None):
     p.add_argument("--mode", default="greedy",
                    choices=["beam", "doubling", "greedy"])
     p.add_argument("--beam", type=int, default=32)
+    p.add_argument("--expand-width", type=int, default=4,
+                   help="frontier nodes expanded per search iteration")
     p.add_argument("--early-stop", action="store_true")
     p.add_argument("--max-batch", type=int, default=128)
     args = p.parse_args(argv)
@@ -60,7 +62,8 @@ def main(argv=None):
                         max_beam=args.beam * (8 if args.mode == "doubling" else 1),
                         visit_cap=512, metric=ds.metric,
                         es_metric=ES_D_VISITED if args.early_stop else 0,
-                        es_visit_limit=20)
+                        es_visit_limit=20,
+                        expand_width=args.expand_width)
     rcfg = RangeConfig(search=scfg, mode=args.mode, result_cap=2048)
     srv = RangeServer(eng, rcfg,
                       ServerConfig(max_batch=args.max_batch,

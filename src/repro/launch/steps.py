@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,6 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.common import ArchSpec, ShapeSpec
-from ..core.range_search import RangeConfig
 from ..dist.sharding import bind_shardings, mesh_axes, spec_tree
 from ..layers.common import cast_tree
 from ..models import gcn as gcn_mod

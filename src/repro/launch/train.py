@@ -25,7 +25,6 @@ from ..data.recsys import RecsysDataConfig, recsys_batches
 from ..models import gcn as gcn_mod
 from ..models import recsys as rec_mod
 from ..models import transformer as tf_mod
-from ..optim.adamw import AdamWConfig
 from ..train import Trainer, TrainerConfig
 
 

@@ -18,12 +18,11 @@ KV-cache reduction that lets deepseek-v2 serve 128k contexts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..dist.sharding import DP, TP, shard_activation
 from .common import dense_init, split_keys
 from .norm import rms_norm
 from .rope import apply_rope

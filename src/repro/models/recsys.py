@@ -18,7 +18,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..layers.common import dense_init, embed_init, split_keys
+from ..layers.common import embed_init, split_keys
 from ..layers.interactions import (
     FieldAttnConfig, dot_interaction, field_attention, init_field_attention,
 )

@@ -26,7 +26,6 @@ sequence parallelism); attention/FFN internals are head-/ffn-sharded over
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax

@@ -8,7 +8,6 @@ memory accounting shows up directly in the dry-run memory_analysis.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax

@@ -56,6 +56,9 @@ class ServerConfig:
     max_wait_s: float = 0.005
     default_radius: float = 1.0
     es_radius_factor: float = 0.0   # >0 enables early stopping at factor*r
+    expand_width: int = 0           # >0 overrides SearchConfig.expand_width
+                                    # (ops knob: retune the frontier width
+                                    # without rebuilding the engine config)
 
 
 class RangeServer:
@@ -69,6 +72,9 @@ class RangeServer:
         sharded: Optional[ShardedCorpus] = None,
     ):
         self.engine = engine
+        if server_cfg.expand_width > 0:
+            cfg = dataclasses.replace(cfg, search=dataclasses.replace(
+                cfg.search, expand_width=server_cfg.expand_width))
         self.cfg = cfg
         self.scfg = server_cfg
         self.mesh = mesh

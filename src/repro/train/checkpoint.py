@@ -19,7 +19,7 @@ import json
 import os
 import shutil
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,11 +15,9 @@ import dataclasses
 import json
 import os
 import signal
-import time
 from typing import Any, Callable, Iterator, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..dist.sharding import activation_sharding, bind_shardings, spec_tree

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.analysis.hlo import analyze_module, parse_collectives
+from repro.analysis.hlo import analyze_module
 from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
 

@@ -8,11 +8,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    ES_D_VISITED, BuildConfig, Graph, RangeConfig, RangeSearchEngine,
-    SearchConfig, average_precision, beam_search_batch, build_knn_graph,
-    build_vamana, exact_range_search, exact_topk, from_lists, medoid,
-    range_search_compacted, range_search_fused, recall_at_k, robust_prune,
-    zero_result_accuracy,
+    ES_D_VISITED, BuildConfig, RangeConfig, RangeSearchEngine, SearchConfig, average_precision, beam_search_batch, build_vamana, exact_range_search, exact_topk, from_lists, recall_at_k, robust_prune, zero_result_accuracy,
 )
 from repro.core.radius import default_grid, match_histogram, select_radius, sweep
 from repro.utils import INVALID_ID
@@ -174,6 +170,38 @@ def test_early_stopping_cuts_work_not_results(corpus):
     assert zero_result_accuracy(np.asarray(gt[2]), np.asarray(res1.count)) > 0.9
 
 
+_EXPAND_CORPUS: dict = {}
+
+
+def _expand_corpus():
+    """Small cached Vamana index for the expand-width property test (the
+    hypothesis stub can't drive pytest fixtures)."""
+    if not _EXPAND_CORPUS:
+        pts = _toy(500, seed=7)
+        graph = build_vamana(pts, BuildConfig(max_degree=12, beam=24,
+                                              insert_batch=256))
+        _EXPAND_CORPUS["v"] = (pts, RangeSearchEngine.from_graph(pts, graph),
+                               pts[:48] + 0.01)
+    return _EXPAND_CORPUS["v"]
+
+
+@given(st.integers(2, 8), st.floats(2.0, 3.5))
+@settings(max_examples=6, deadline=None)
+def test_expand_width_matches_single_node_ap(e, r):
+    """Multi-node expansion (fused path) must match the single-node
+    reference loop's AP within tolerance — E is a perf knob, not an
+    accuracy knob."""
+    pts, eng, qs = _expand_corpus()
+    gt = exact_range_search(pts, qs, r)
+    aps = {}
+    for ew in (1, e):
+        cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16,
+                                              visit_cap=128, expand_width=ew),
+                          mode="greedy")
+        aps[ew], _ = _ap(eng, qs, r, cfg, gt)
+    assert aps[e] >= aps[1] - 0.02, aps
+
+
 # ---------------------------------------------------------------------------
 # Vamana build
 # ---------------------------------------------------------------------------
@@ -252,6 +280,16 @@ def test_graph_out_neighbors_invalid_safe():
     g = from_lists([[1, 2], [0], [0, 1]])
     rows = g.out_neighbors(jnp.asarray([0, INVALID_ID], jnp.int32))
     assert np.asarray(rows)[1].tolist() == [INVALID_ID, INVALID_ID]
+
+
+def test_graph_lane_padded():
+    g = from_lists([[1, 2], [0], [0, 1]])
+    gp = g.lane_padded(8)
+    assert gp.max_degree == 8 and gp.num_nodes == g.num_nodes
+    np.testing.assert_array_equal(np.asarray(gp.neighbors[:, :2]),
+                                  np.asarray(g.neighbors))
+    assert (np.asarray(gp.neighbors[:, 2:]) == INVALID_ID).all()
+    assert g.lane_padded(2) is g  # already aligned -> no copy
 
 
 @given(st.integers(2, 40), st.integers(1, 8))

@@ -1,7 +1,6 @@
 """Data pipelines: determinism, paper-matched corpus signatures."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 

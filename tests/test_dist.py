@@ -9,7 +9,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ENV = dict(os.environ,
            XLA_FLAGS="--xla_force_host_platform_device_count=8",
@@ -80,7 +79,8 @@ def test_sharded_embedding_and_engine():
                           jnp.float32)
         qs = np.asarray(pts[:32]) + 0.01
         rcfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32,
-                                               visit_cap=128),
+                                               visit_cap=128,
+                                               expand_width=4),
                            mode="greedy", result_cap=256)
         corpus = build_sharded(np.asarray(pts), 4,
                                lambda p: (build_knn_graph(p, k=12), medoid(p)[None]))
@@ -144,7 +144,8 @@ def test_sharded_matches_host_union_exactly():
                           jnp.float32)
         qs = jnp.asarray(np.asarray(pts[:16]) + 0.02)
         rcfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16,
-                                               visit_cap=64),
+                                               visit_cap=64,
+                                               expand_width=2),
                            mode="greedy", result_cap=128)
         corpus = build_sharded(np.asarray(pts), 4,
                                lambda p: (build_knn_graph(p, k=8), medoid(p)[None]))

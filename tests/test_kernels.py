@@ -5,8 +5,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
-    flash_attention, flash_attention_ref, gatherdist, gatherdist_ref,
-    rangescan, rangescan_ref,
+    expand_frontier, expand_frontier_ref, flash_attention, flash_attention_ref,
+    gatherdist, gatherdist_ref, rangescan, rangescan_ref,
 )
 from repro.utils import INVALID_ID
 
@@ -71,6 +71,69 @@ def test_gatherdist_matches_ref(metric, n, d, q, r):
     want = gatherdist_ref(pts, ids, qs, metric=metric)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=5e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# expand (fused frontier expansion)
+# ---------------------------------------------------------------------------
+
+def _expand_fixture(n, r, d, q, e, seed=0):
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (n, d), jnp.float32)
+    adj = np.array(jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                      (n, r), 0, n, jnp.int32))
+    adj[:, -max(1, r // 4):] = INVALID_ID      # INVALID-padded adjacency rows
+    if r >= 2:
+        adj[0, 1] = adj[0, 0]                  # duplicate neighbor in-row
+        adj[1, :2] = adj[0, :2]                # duplicates across rows
+    qs = jax.random.normal(jax.random.PRNGKey(seed + 2), (q, d), jnp.float32)
+    fr = np.array(jax.random.randint(jax.random.PRNGKey(seed + 3),
+                                     (q, e), 0, n, jnp.int32))
+    if e >= 2:
+        fr[0, 1] = fr[0, 0]                    # duplicate frontier node
+        fr[-1, -1] = INVALID_ID                # padded frontier lane
+    return pts, jnp.asarray(adj), jnp.asarray(fr), qs
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("n,r,d,q,e", [
+    (150, 8, 32, 6, 4),
+    (64, 5, 17, 3, 2),    # ragged degree/dim
+    (40, 4, 16, 1, 6),    # E > eligible variety, single query
+])
+def test_expand_matches_ref(metric, n, r, d, q, e):
+    pts, adj, fr, qs = _expand_fixture(n, r, d, q, e)
+    ids, dd, nd = expand_frontier(pts, adj, fr, qs, metric=metric,
+                                  use_pallas=True, interpret=True)
+    rids, rd, rnd = expand_frontier_ref(pts, adj, fr, qs, metric=metric)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+    # kernel uses the matmul (MXU) distance form; ref uses the diff form
+    np.testing.assert_allclose(np.asarray(dd), np.asarray(rd),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(nd), np.asarray(rnd))
+
+
+def test_expand_dedups_within_tile():
+    """Duplicate adjacency entries and duplicate frontier nodes must survive
+    exactly once across the whole E*R tile."""
+    pts, adj, fr, qs = _expand_fixture(100, 6, 16, 4, 3)
+    ids, dd, _ = expand_frontier(pts, adj, fr, qs, use_pallas=True,
+                                 interpret=True)
+    for row in np.asarray(ids):
+        live = row[row != INVALID_ID]
+        assert len(np.unique(live)) == len(live)
+    # invalid frontier lane contributes an all-INVALID row
+    last = np.asarray(ids)[-1].reshape(3, -1)[-1]
+    assert (last == INVALID_ID).all()
+
+
+def test_expand_bf16_corpus():
+    pts, adj, fr, qs = _expand_fixture(80, 6, 32, 4, 2)
+    a = expand_frontier(pts.astype(jnp.bfloat16), adj, fr, qs,
+                        use_pallas=True, interpret=True)
+    b = expand_frontier_ref(pts.astype(jnp.bfloat16), adj, fr, qs)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                               rtol=5e-2, atol=5e-2)
 
 
 # ---------------------------------------------------------------------------

@@ -6,11 +6,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.layers import (
-    BagConfig, FieldAttnConfig, GQAConfig, MLAConfig, MLPConfig, MoEConfig,
-    apply_rope, dot_interaction, embedding_bag, field_attention,
-    fm_interaction, gather_scatter, gqa_attention, init_field_attention,
-    init_gqa, init_mla, init_moe, init_mlp, layer_norm, mla_attention, mlp,
-    moe_layer, multi_field_lookup, rms_norm, sym_norm_weights,
+    BagConfig, FieldAttnConfig, GQAConfig, MLAConfig, MoEConfig, apply_rope, dot_interaction, embedding_bag, field_attention, fm_interaction, gather_scatter, gqa_attention, init_field_attention, init_gqa, init_mla, init_moe, mla_attention, moe_layer, multi_field_lookup, rms_norm, sym_norm_weights,
 )
 
 

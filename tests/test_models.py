@@ -13,10 +13,7 @@ from repro.data.graphs import NeighborSampler, make_sbm_graph, range_graph_datas
 from repro.data.lm import LMDataConfig, lm_batch
 from repro.data.recsys import RecsysDataConfig, recsys_batch
 from repro.models import (
-    GCNConfig, RecsysConfig, TransformerConfig, decode_step, forward,
-    gcn_batched_graphs, gcn_loss, greedy_token, init_gcn, init_recsys,
-    init_transformer, logits_from_hidden, loss_fn, prefill, recsys_forward,
-    recsys_loss, init_cache,
+    GCNConfig, decode_step, forward, gcn_batched_graphs, gcn_loss, greedy_token, init_gcn, init_recsys, init_transformer, logits_from_hidden, loss_fn, prefill, recsys_forward, recsys_loss,
 )
 from repro.optim import AdamWConfig, init_adamw, make_train_step
 

@@ -1,9 +1,7 @@
 """Trainer fault-tolerance + RangeServer behaviour tests."""
 import functools
-import glob
 import json
 import os
-import shutil
 import signal
 
 import jax
