@@ -24,6 +24,11 @@ SMOKE_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_smoke.json")
 
 
+# mixed-radius gate: max AP a heterogeneous batch may lose vs dispatching
+# each radius level as its own homogeneous batch (recorded in floors too)
+MAX_MIXED_AP_GAP = 0.005
+
+
 def smoke(n: int, min_qps: float, min_ap: float) -> int:
     """CI gate: one tiny corpus through ``range_search_compacted``; exits
     nonzero when QPS falls below ``min_qps`` (order-of-magnitude regression
@@ -38,9 +43,12 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
     the multi-node/bitset rework accelerates — and what serving traffic pays
     for. (At near-zero match counts the search is gather-bandwidth-bound and
     E barely matters; that regime is covered by qps_precision.py.)"""
+    import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import RangeConfig, SearchConfig, exact_range_search
+    from repro.core import (
+        RangeConfig, SearchConfig, average_precision, exact_range_search,
+    )
 
     from .common import ap_of, get_dataset, get_engine, run_range
 
@@ -75,12 +83,53 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
     print(f"[smoke] expand_width=1 baseline: qps={base['qps']:.1f} "
           f"ap={base['ap']:.4f} -> E=4 speedup {speedup:.2f}x")
 
+    # -- mixed-radius row: heterogeneous batches are the serving regime -----
+    # per-query radii log-spaced across the match distribution (from the
+    # capture-curve sweep: the span whose mean counts cover ~2..~512
+    # matches/query), round-robin across lanes so every micro-batch mixes
+    # near-duplicate-tight and recommendation-wide radii
+    lo_i = int(np.argmin(np.abs(mean_counts - 2.0)))
+    hi_i = int(np.argmin(np.abs(mean_counts - 512.0)))
+    n_distinct = 8
+    levels = np.geomspace(float(prof.radii[lo_i]), float(prof.radii[hi_i]),
+                          n_distinct).astype(np.float32)
+    radii = levels[np.arange(qs.shape[0]) % n_distinct]
+    gt_mix = exact_range_search(pts, qs, jnp.asarray(radii), ds.metric)
+    mix_cfg = cfg  # same E=4 config as the main row: the two stay comparable
+    mix_qps, mix_res = run_range(eng, qs, jnp.asarray(radii), mix_cfg)
+    mix_ap = ap_of(mix_res, gt_mix)
+    # homogeneous-dispatch reference: each radius level served in its own
+    # batch (what a radius-bucketing server would do); the mixed batch must
+    # match its AP — heterogeneity is free accuracy-wise
+    hom_ids = np.zeros_like(np.asarray(mix_res.ids))
+    hom_counts = np.zeros_like(np.asarray(mix_res.count))
+    for k, lv in enumerate(levels):
+        lanes = np.nonzero(np.arange(qs.shape[0]) % n_distinct == k)[0]
+        sub = eng.range(qs[lanes], float(lv), mix_cfg)
+        hom_ids[lanes] = np.asarray(sub.ids)
+        hom_counts[lanes] = np.asarray(sub.count)
+    hom_ap = average_precision(np.asarray(gt_mix[0]), np.asarray(gt_mix[2]),
+                               hom_ids, hom_counts)
+    ap_gap = abs(mix_ap - hom_ap)
+    mixed = dict(
+        qps=round(mix_qps, 2), ap=round(mix_ap, 4),
+        ap_homogeneous=round(hom_ap, 4), ap_gap=round(ap_gap, 5),
+        radius_lo=float(levels[0]), radius_hi=float(levels[-1]),
+        n_distinct_radii=n_distinct,
+        mean_matches=round(float(np.asarray(gt_mix[2]).mean()), 1),
+    )
+    print(f"[smoke] mixed-radius batch: qps={mix_qps:.1f} ap={mix_ap:.4f} "
+          f"(homogeneous dispatch ap={hom_ap:.4f}, gap={ap_gap:.5f}; "
+          f"radii {levels[0]:.3g}..{levels[-1]:.3g})")
+
     record = dict(
         bench="smoke", n=n, n_queries=int(qs.shape[0]), radius=float(r),
         mean_matches=round(float(np.asarray(gt[2]).mean()), 1),
         config=dataclasses.asdict(cfg), **rec,
         baseline_expand1=base, speedup_vs_expand1=round(speedup, 3),
-        floors=dict(min_qps=min_qps, min_ap=min_ap),
+        mixed_radius=mixed,
+        floors=dict(min_qps=min_qps, min_ap=min_ap,
+                    max_mixed_ap_gap=MAX_MIXED_AP_GAP),
         timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
     )
     with open(SMOKE_JSON, "w") as f:
@@ -90,6 +139,10 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
 
     if rec["qps"] < min_qps or rec["ap"] < min_ap:
         print("[smoke] FAIL: below regression floor")
+        return 1
+    if ap_gap > MAX_MIXED_AP_GAP:
+        print("[smoke] FAIL: mixed-radius batch AP deviates from "
+              "homogeneous dispatch")
         return 1
     return 0
 

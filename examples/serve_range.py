@@ -3,6 +3,11 @@ service): build an index, start the RangeServer, drive batched requests
 through admission -> micro-batching -> two-phase search -> responses.
 
   PYTHONPATH=src python examples/serve_range.py [--n 20000 --queries 512]
+  PYTHONPATH=src python examples/serve_range.py --mixed-radius
+
+``--mixed-radius`` submits requests whose radii span the corpus's match
+distribution — the server micro-batches them together and answers each
+request at its own radius (the paper's radius-heterogeneous traffic).
 
 This is a thin CLI over repro.launch.serve; see that module for the knobs.
 """

@@ -1,10 +1,13 @@
 """range-engine — the paper's own system as a config (11th, bonus row).
 
 A production range-retrieval deployment: corpus sharded over the model axis
-(one Vamana sub-index per shard), query batches sharded over data, fused
-single-program search (beam -> greedy) per cell, union merge. The dry-run
-lowers the shard_map program on the 256/512-chip meshes — proving the
-paper's system itself distributes, not just the ML architectures around it.
+(one Vamana sub-index per shard), query batches sharded over data — each
+query carrying its *own* radius (the radii vector shards with the batch;
+serving traffic mixes duplicate-detection-tight and recommendation-wide
+thresholds in one micro-batch) — fused single-program search
+(beam -> greedy) per cell, union merge. The dry-run lowers the shard_map
+program on the 256/512-chip meshes — proving the paper's system itself
+distributes, not just the ML architectures around it.
 """
 import dataclasses
 

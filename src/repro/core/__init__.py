@@ -9,6 +9,7 @@ from .beam_search import (
     SearchConfig,
     beam_search,
     beam_search_batch,
+    broadcast_radius,
     topk_from_state,
 )
 from .build import BuildConfig, build_knn_graph, build_vamana, robust_prune

@@ -485,6 +485,26 @@ def _step(points, graph: Graph, q, r, es_radius, cfg: SearchConfig, st: BeamStat
     )
 
 
+def broadcast_radius(r, n: int, default: float = jnp.inf) -> jnp.ndarray:
+    """Normalize a radius argument to a per-query ``(n,)`` float32 vector.
+
+    Accepts ``None`` (-> ``default``, broadcast), a python/np scalar, a 0-d
+    array (broadcast to every lane), or an ``(n,)`` vector (returned as-is).
+    Every layer of the query path normalizes through here, so scalar call
+    sites keep working and all-equal vectors are *the same program* as the
+    scalar broadcast — the backbone of the oracle harness's bitwise
+    scalar/vector equivalence check.
+    """
+    if r is None:
+        r = default
+    r = jnp.asarray(r, jnp.float32)
+    if r.ndim == 0:
+        return jnp.broadcast_to(r, (n,))
+    if r.shape != (n,):
+        raise ValueError(f"radius vector has shape {r.shape}, expected ({n},)")
+    return r
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def beam_search(
     points: jnp.ndarray,
@@ -495,7 +515,8 @@ def beam_search(
     cfg: SearchConfig,
     es_radius: Optional[jnp.ndarray] = None,
 ) -> BeamState:
-    """Run the search loop for one query. vmap over ``q`` for batches."""
+    """Run the search loop for one query (``r``/``es_radius`` are scalars;
+    the batch entry point below carries them per-lane)."""
     esr = jnp.asarray(jnp.inf, jnp.float32) if es_radius is None else jnp.asarray(es_radius, jnp.float32)
     r = jnp.asarray(r, jnp.float32)
     pnorms = _point_norms(points, cfg)
@@ -514,13 +535,17 @@ def beam_search_batch(
     graph: Graph,
     queries: jnp.ndarray,  # (Q, d)
     start_ids: jnp.ndarray,
-    r: jnp.ndarray,
+    r: jnp.ndarray,        # scalar or (Q,) per-query radii
     cfg: SearchConfig,
-    es_radius: Optional[jnp.ndarray] = None,
+    es_radius: Optional[jnp.ndarray] = None,  # scalar or (Q,)
 ) -> BeamState:
-    esr = jnp.asarray(jnp.inf, jnp.float32) if es_radius is None else jnp.asarray(es_radius, jnp.float32)
-    fn = lambda q: beam_search(points, graph, q, start_ids, jnp.asarray(r, jnp.float32), cfg, esr)
-    return jax.vmap(fn)(queries)
+    """Batched search; ``r`` and ``es_radius`` are per-lane vmap axes, so a
+    single micro-batch may mix radii freely (scalars broadcast)."""
+    n = queries.shape[0]
+    rv = broadcast_radius(r, n)
+    esv = broadcast_radius(es_radius, n)
+    fn = lambda q, r_, es_: beam_search(points, graph, q, start_ids, r_, cfg, es_)
+    return jax.vmap(fn)(queries, rv, esv)
 
 
 def topk_from_state(st: BeamState, k: int):

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .beam_search import SearchConfig, beam_search_batch, topk_from_state
+from .beam_search import SearchConfig, beam_search_batch, broadcast_radius, topk_from_state
 from .build import BuildConfig, build_vamana
 from .graph import Graph, start_points
 from .range_search import RangeConfig, RangeResult, range_search_compacted, range_search_fused
@@ -59,13 +59,20 @@ class RangeSearchEngine:
                                jnp.asarray(jnp.inf, jnp.float32), cfg)
         return topk_from_state(st, k)
 
-    def range(self, queries: jnp.ndarray, r: float,
+    def range(self, queries: jnp.ndarray, r,
               cfg: Optional[RangeConfig] = None,
-              es_radius: Optional[float] = None,
+              es_radius=None,
               compacted: bool = True) -> RangeResult:
+        """Range search. ``r`` (and ``es_radius``) may be a scalar, applied
+        to every query, or a ``(Q,)`` vector giving each query its own
+        radius; scalars broadcast, so the two forms answer identically when
+        all radii are equal."""
         cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
         if cfg.search.metric != self.metric:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(cfg.search, metric=self.metric))
+        n = queries.shape[0]
+        r = broadcast_radius(r, n)
+        es_radius = None if es_radius is None else broadcast_radius(es_radius, n)
         fn = range_search_compacted if compacted else range_search_fused
         return fn(self.points, self.graph, queries, self.start_ids, r, cfg, es_radius)
 

@@ -26,12 +26,14 @@ def exact_range_search(
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (ids (Q, cap), dists (Q, cap), counts (Q,)).
 
-    ``counts`` is exact even when it exceeds ``cap``; ids/dists keep the
-    ``cap`` closest in-range points (sorted ascending).
+    ``r`` is a scalar radius shared by the batch or a ``(Q,)`` vector of
+    per-query radii. ``counts`` is exact even when it exceeds ``cap``;
+    ids/dists keep the ``cap`` closest in-range points (sorted ascending).
     """
     n, d = points.shape
     q = queries.shape[0]
     r = jnp.asarray(r, jnp.float32)
+    rb = r[:, None] if r.ndim == 1 else r  # (Q, 1) broadcasts against (Q, block)
     nb = cdiv(n, block)
     npad = nb * block
     pts = jnp.pad(points, ((0, npad - n), (0, 0)))
@@ -42,7 +44,7 @@ def exact_range_search(
         blk = jax.lax.dynamic_slice_in_dim(pts, start, block, axis=0)
         bd = pairwise_dist(queries, blk, metric)  # (Q, block)
         bids = start + jnp.arange(block, dtype=jnp.int32)
-        ok = (bd <= r) & (bids[None, :] < n)
+        ok = (bd <= rb) & (bids[None, :] < n)
         counts = counts + jnp.sum(ok, axis=1).astype(jnp.int32)
         bd = jnp.where(ok, bd, jnp.inf)
         bi_ids = jnp.where(ok, bids[None, :], INVALID_ID)

@@ -33,6 +33,7 @@ from .beam_search import (
     _f32_from_key,
     _point_norms,
     beam_search_batch,
+    broadcast_radius,
     in_range_count,
 )
 from .bitset import (
@@ -253,10 +254,15 @@ def greedy_search(
 ) -> GreedyState:
     """Paper Alg. 2 from a finished beam state. ``active=False`` lanes no-op.
 
+    ``r`` is this query's own radius — a python scalar or a () float array
+    (the batched callers vmap a (Q,) radius vector down to one scalar per
+    lane; nothing here assumes the batch shares a radius).
+
     ``rounds`` stays an *expansion* budget: each iteration advances
     ``expand_ptr`` by up to ``scfg.expand_width`` and charges that many
     rounds (the last iteration may overshoot by at most E - 1).
     """
+    r = jnp.asarray(r, jnp.float32)
     num_words = bitset_num_words(points.shape[0], scfg.bitset_cap_bits)
     gs = _greedy_init(st, r, cap, num_words,
                       bitset_exact(points.shape[0], num_words))
@@ -316,27 +322,29 @@ def range_search_fused(
     graph: Graph,
     queries: jnp.ndarray,
     start_ids: jnp.ndarray,
-    r: jnp.ndarray,
+    r: jnp.ndarray,               # scalar or (Q,) per-query radii
     cfg: RangeConfig,
-    es_radius: Optional[jnp.ndarray] = None,
+    es_radius: Optional[jnp.ndarray] = None,  # scalar or (Q,)
 ) -> RangeResult:
-    r = jnp.asarray(r, jnp.float32)
+    r = broadcast_radius(r, queries.shape[0])
     st = beam_search_batch(points, graph, queries, start_ids, r, cfg.search, es_radius)
 
     if cfg.mode in ("beam", "doubling"):
-        ids, dists, count, over = jax.vmap(partial(_beam_results, r=r, cap=cfg.result_cap))(st)
+        ids, dists, count, over = jax.vmap(
+            lambda st_, r_: _beam_results(st_, r_, cfg.result_cap))(st, r)
         phase2 = (st.active_width > cfg.search.beam) if cfg.mode == "doubling" else jnp.zeros_like(st.done)
         return RangeResult(ids=ids, dists=dists, count=count, overflow=over,
                            n_visited=st.n_visited, n_dist=st.n_dist,
                            es_stopped=st.es_stopped, phase2=phase2)
 
     # greedy: phase 2 only for saturated lanes (masked, not compacted)
-    active = jax.vmap(partial(_needs_phase2, r=r, lam=cfg.lam))(st)
-    gfn = lambda q_, st_, a_: greedy_search(
-        points, graph, q_, r, st_, cfg.result_cap, cfg.frontier_rounds, cfg.search, a_
+    active = jax.vmap(lambda st_, r_: _needs_phase2(st_, r_, cfg.lam))(st, r)
+    gfn = lambda q_, r_, st_, a_: greedy_search(
+        points, graph, q_, r_, st_, cfg.result_cap, cfg.frontier_rounds, cfg.search, a_
     )
-    gs = jax.vmap(gfn)(queries, st, active)
-    b_ids, b_dists, b_count, b_over = jax.vmap(partial(_beam_results, r=r, cap=cfg.result_cap))(st)
+    gs = jax.vmap(gfn)(queries, r, st, active)
+    b_ids, b_dists, b_count, b_over = jax.vmap(
+        lambda st_, r_: _beam_results(st_, r_, cfg.result_cap))(st, r)
     ids = jnp.where(active[:, None], gs.res_ids, b_ids)
     dists = jnp.where(active[:, None], gs.res_dists, b_dists)
     count = jnp.where(active, gs.res_count, b_count)
@@ -355,17 +363,20 @@ def range_search_compacted(
     graph: Graph,
     queries: jnp.ndarray,
     start_ids: jnp.ndarray,
-    r: float,
+    r,                    # scalar or (Q,) per-query radii
     cfg: RangeConfig,
-    es_radius: Optional[float] = None,
+    es_radius=None,       # scalar or (Q,)
 ) -> RangeResult:
     """Phase 1 over the whole batch; phase 2 over the compacted survivors.
 
     The survivor subset is padded to the next power of two, so jit compiles at
     most O(log Q) phase-2 variants. This bounds the batched-while straggler
     effect: lanes with zero results never enter the expensive loop at all.
+    Compaction carries each survivor's *own* radius (and early-stop radius)
+    into phase 2, so a micro-batch may mix radii freely.
     """
-    rj = jnp.asarray(r, jnp.float32)
+    rj = broadcast_radius(r, queries.shape[0])
+    esj = None if es_radius is None else broadcast_radius(es_radius, queries.shape[0])
     # phase 1 runs at the BASE beam for every mode (for doubling this is the
     # §Perf iteration C3 change: in-place widening inside the batched while
     # made every lane wait for the widest one — a 10x QPS straggler penalty;
@@ -374,8 +385,9 @@ def range_search_compacted(
     p1_search = cfg.search if cfg.mode != "doubling" else dataclasses.replace(
         cfg.search, max_beam=cfg.search.beam,
         visit_cap=min(cfg.search.visit_cap, 4 * cfg.search.beam))
-    st = beam_search_batch(points, graph, queries, start_ids, rj, p1_search, es_radius)
-    b_ids, b_dists, b_count, b_over = jax.vmap(partial(_beam_results, r=rj, cap=cfg.result_cap))(st)
+    st = beam_search_batch(points, graph, queries, start_ids, rj, p1_search, esj)
+    b_ids, b_dists, b_count, b_over = jax.vmap(
+        lambda st_, r_: _beam_results(st_, r_, cfg.result_cap))(st, rj)
     base = RangeResult(ids=b_ids, dists=b_dists, count=b_count, overflow=b_over,
                        n_visited=st.n_visited, n_dist=st.n_dist,
                        es_stopped=st.es_stopped,
@@ -383,7 +395,7 @@ def range_search_compacted(
     if cfg.mode == "beam":
         return base
 
-    active = np.asarray(jax.vmap(partial(_needs_phase2, r=rj, lam=cfg.lam))(st))
+    active = np.asarray(jax.vmap(lambda st_, r_: _needs_phase2(st_, r_, cfg.lam))(st, rj))
     n_active = int(active.sum())
     if n_active == 0:
         return base
@@ -392,21 +404,24 @@ def range_search_compacted(
     bucket = next_pow2(n_active)
     pad = np.concatenate([sel, np.full(bucket - n_active, sel[0], dtype=sel.dtype)])
     sub_q = queries[pad]
+    sub_r = rj[pad]
+    sub_es = None if esj is None else esj[pad]
     lane_on = jnp.asarray(np.arange(bucket) < n_active)
 
     if cfg.mode == "doubling":
-        # restart with widening enabled, survivors only (paper Alg. 5)
-        st2 = beam_search_batch(points, graph, sub_q, start_ids, rj,
-                                cfg.search, es_radius)
+        # restart with widening enabled, survivors only (paper Alg. 5),
+        # each at its own radius
+        st2 = beam_search_batch(points, graph, sub_q, start_ids, sub_r,
+                                cfg.search, sub_es)
         d_ids, d_dists, d_count, d_over = jax.vmap(
-            partial(_beam_results, r=rj, cap=cfg.result_cap))(st2)
+            lambda st_, r_: _beam_results(st_, r_, cfg.result_cap))(st2, sub_r)
         sub = (d_ids, d_dists, d_count, d_over, st2.n_dist)
     else:
         sub_st = jax.tree.map(lambda x: x[pad], st)
-        gfn = lambda q_, st_, a_: greedy_search(
-            points, graph, q_, rj, st_, cfg.result_cap, cfg.frontier_rounds,
+        gfn = lambda q_, r_, st_, a_: greedy_search(
+            points, graph, q_, r_, st_, cfg.result_cap, cfg.frontier_rounds,
             cfg.search, a_)
-        gs = jax.vmap(gfn)(sub_q, sub_st, lane_on)
+        gs = jax.vmap(gfn)(sub_q, sub_r, sub_st, lane_on)
         sub = (gs.res_ids, gs.res_dists, gs.res_count, gs.overflow, gs.n_dist)
 
     # one batched transfer for everything the host-side merge needs (the

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..core.beam_search import broadcast_radius
 from ..core.graph import Graph
 from ..core.range_search import RangeConfig, RangeResult, range_search_fused
 from ..utils import INVALID_ID, cdiv
@@ -139,7 +140,12 @@ def sharded_range_search(
     data_axis="data",
 ) -> RangeResult:
     """Union range search over every shard of ``corpus``; returns a global
-    ``RangeResult`` (ids are corpus-global, counts summed across shards)."""
+    ``RangeResult`` (ids are corpus-global, counts summed across shards).
+
+    ``r``/``es_radius`` are a shared scalar or per-query ``(Q,)`` vectors;
+    radii shard along the data axis with their queries and broadcast to
+    every shard along the model axis (each shard answers every query at
+    that query's own radius)."""
     if corpus.n_total <= 0:
         raise ValueError("ShardedCorpus.n_total must be the true corpus size")
     s_total = corpus.n_shards
@@ -152,19 +158,28 @@ def sharded_range_search(
 
     queries = jnp.asarray(queries)
     n_q = queries.shape[0]
+    # normalize radii to (Q,) vectors so one shard_map signature serves both
+    # forms (es None -> +inf, which never triggers early stopping)
+    radii = broadcast_radius(r, n_q)
+    es_vec = broadcast_radius(es_radius, n_q)
     dp_size = _axis_size(mesh, data_axis)
     q_pad = cdiv(n_q, dp_size) * dp_size
     if q_pad != n_q:  # replicate-pad the batch to the data-axis multiple
         queries = jnp.concatenate(
             [queries, jnp.broadcast_to(queries[:1],
                                        (q_pad - n_q,) + queries.shape[1:])])
+        radii = jnp.concatenate(
+            [radii, jnp.broadcast_to(radii[:1], (q_pad - n_q,))])
+        es_vec = jnp.concatenate(
+            [es_vec, jnp.broadcast_to(es_vec[:1], (q_pad - n_q,))])
 
-    def local_fn(points, neighbors, start_ids, offsets, qs):
-        # points (s_loc, n, d), qs (q_loc, d): search every local shard
+    def local_fn(points, neighbors, start_ids, offsets, qs, rs, es):
+        # points (s_loc, n, d), qs (q_loc, d), rs/es (q_loc,):
+        # search every local shard at each query's own radius
         ids, dists, cnts, overs, nvis, ndis, ess, ph2 = ([] for _ in range(8))
         for s in range(s_loc):
             res = range_search_fused(points[s], Graph(neighbors=neighbors[s]),
-                                     qs, start_ids[s], r, cfg, es_radius)
+                                     qs, start_ids[s], rs, cfg, es)
             gids = _remap_global(res.ids, offsets[s], corpus.n_total)
             ids.append(gids)
             dists.append(jnp.where(gids == INVALID_ID, jnp.inf, res.dists))
@@ -207,14 +222,14 @@ def sharded_range_search(
     fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(model_axis, None, None), P(model_axis, None, None),
-                  P(model_axis, None), P(model_axis), mat),
+                  P(model_axis, None), P(model_axis), mat, row, row),
         out_specs=RangeResult(ids=mat, dists=mat, count=row, overflow=row,
                               n_visited=row, n_dist=row, es_stopped=row,
                               phase2=row),
         check_vma=False,
     )
     out = fn(corpus.points, corpus.neighbors, corpus.start_ids,
-             corpus.offsets, queries)
+             corpus.offsets, queries, radii, es_vec)
     if q_pad != n_q:
         out = jax.tree.map(lambda x: x[:n_q], out)
     return out

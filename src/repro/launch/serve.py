@@ -1,11 +1,15 @@
 """Serving launcher: build an index over a corpus and serve range queries.
 
   PYTHONPATH=src python -m repro.launch.serve --profile bigann-like \\
-      --n 20000 --queries 512 --mode greedy --early-stop
+      --n 20000 --queries 512 --mode greedy --early-stop --mixed-radius
 
 Builds the synthetic corpus, selects a radius with the paper's Sec.-3
 methodology, builds the Vamana index, starts the RangeServer and drives a
 batch of requests through it, reporting QPS / AP / early-stop stats.
+``--mixed-radius`` spreads per-request radii across the corpus's match
+distribution (real traffic mixes duplicate-detection-tight and
+recommendation-wide thresholds); the server batches them together and
+answers each request at its own radius.
 """
 from __future__ import annotations
 
@@ -38,6 +42,9 @@ def main(argv=None):
                    help="frontier nodes expanded per search iteration")
     p.add_argument("--early-stop", action="store_true")
     p.add_argument("--max-batch", type=int, default=128)
+    p.add_argument("--mixed-radius", action="store_true",
+                   help="per-request radii spread across the match "
+                        "distribution instead of one shared radius")
     args = p.parse_args(argv)
 
     print(f"[serve] corpus {args.profile} n={args.n}")
@@ -68,14 +75,27 @@ def main(argv=None):
     srv = RangeServer(eng, rcfg,
                       ServerConfig(max_batch=args.max_batch,
                                    es_radius_factor=1.5 if args.early_stop else 0.0))
+    if args.mixed_radius:
+        # spread per-request radii across the sweep grid around the selected
+        # radius: tight (near-duplicate) through wide (recommendation) lanes
+        # interleaved in the same micro-batches
+        lo = float(prof.radii[max(gi - 6, 0)])
+        hi = float(prof.radii[min(gi + 4, len(prof.radii) - 1)])
+        radii = np.linspace(lo, hi, args.queries).astype(np.float32)
+        rng = np.random.default_rng(0)
+        rng.shuffle(radii)  # mix radii *within* batches, not across them
+        print(f"[serve] mixed radii in [{lo:.4g}, {hi:.4g}]")
+    else:
+        radii = np.full(args.queries, r, np.float32)
     for i in range(args.queries):
-        srv.submit(Request(req_id=i, query=qs[i], radius=r))
+        srv.submit(Request(req_id=i, query=qs[i], radius=float(radii[i])))
     t0 = time.perf_counter()
     resp = srv.run_until_drained()
     dt = time.perf_counter() - t0
     qps = args.queries / dt
 
-    gt_ids, _, gt_counts = exact_range_search(pts, jnp.asarray(qs), r, ds.metric)
+    gt_ids, _, gt_counts = exact_range_search(pts, jnp.asarray(qs),
+                                              jnp.asarray(radii), ds.metric)
     res_ids = np.full((args.queries, 4096), 2**31 - 1, np.int64)
     counts = np.zeros(args.queries, np.int64)
     for rp in resp:
@@ -89,6 +109,10 @@ def main(argv=None):
           f"(batched); AP={ap:.4f}")
     print(f"[serve] latency p50={lat[len(lat)//2]*1e3:.1f}ms "
           f"p99={lat[int(len(lat)*0.99)]*1e3:.1f}ms; stats={srv.stats}")
+    disp = srv.radius_dispersion()
+    print(f"[serve] radius dispersion mean={disp['mean']:.4g} "
+          f"std={disp['std']:.4g} range=[{disp['min']:.4g}, {disp['max']:.4g}] "
+          f"mixed_batches={disp['mixed_radius_batches']}")
     return 0
 
 

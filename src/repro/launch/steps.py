@@ -355,7 +355,10 @@ def build_engine_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
         c = ShardedCorpus(points=points, neighbors=neighbors,
                           start_ids=start_ids, offsets=offsets,
                           n_total=s_shards * n)
-        res = sharded_range_search(mesh, c, queries, 1.0, ecfg.range_cfg,
+        # per-query radius vector (serving traffic mixes radii per batch);
+        # the dry-run thereby lowers the data-sharded radii operand too
+        radii = jnp.full((queries.shape[0],), 1.0, jnp.float32)
+        res = sharded_range_search(mesh, c, queries, radii, ecfg.range_cfg,
                                    model_axis=tp, data_axis=dp)
         return res.ids, res.dists, res.count
 

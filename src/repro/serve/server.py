@@ -4,7 +4,9 @@ Production anatomy (single-process simulation of the real service):
 
 * **admission queue** — requests land with an id + deadline; the batcher
   drains up to ``max_batch`` or until ``max_wait_s`` passes (micro-batching:
-  the standard accelerator-serving latency/throughput knob).
+  the standard accelerator-serving latency/throughput knob). Radii are
+  per-request: a micro-batch freely mixes radii, each lane answered at its
+  own (the paper's queries are radius-heterogeneous by nature).
 * **bucketed dispatch** — batches are padded to power-of-two sizes so jit
   compiles O(log B) programs total.
 * **two-phase compaction execution** — phase 1 (uniform beam search) over
@@ -35,7 +37,7 @@ from ..utils import INVALID_ID, next_pow2
 class Request:
     req_id: int
     query: np.ndarray
-    radius: float
+    radius: float           # per-request; requests with different radii batch together
     deadline: float = float("inf")
 
 
@@ -48,6 +50,7 @@ class Response:
     overflow: bool
     es_stopped: bool
     latency_s: float
+    radius: float = float("nan")  # the radius this request was answered at
 
 
 @dataclasses.dataclass
@@ -80,7 +83,15 @@ class RangeServer:
         self.mesh = mesh
         self.sharded = sharded
         self.queue: deque[tuple[Request, float]] = deque()
-        self.stats = {"served": 0, "batches": 0, "es_stopped": 0, "overflow": 0}
+        self.stats = {
+            "served": 0, "batches": 0, "es_stopped": 0, "overflow": 0,
+            # radius-dispersion counters: mixed-radius batches are the
+            # heterogeneous-traffic regime the per-query radius path exists
+            # for; the running moments let dashboards derive mean/std
+            "mixed_radius_batches": 0,
+            "radius_min": float("inf"), "radius_max": float("-inf"),
+            "radius_sum": 0.0, "radius_sumsq": 0.0,
+        }
 
     # -- admission -------------------------------------------------------
     def submit(self, req: Request):
@@ -100,28 +111,38 @@ class RangeServer:
                 break
         return out
 
-    def _execute(self, queries: np.ndarray, r: float):
-        es = self.scfg.es_radius_factor * r if self.scfg.es_radius_factor > 0 else None
+    def _execute(self, queries: np.ndarray, radii: np.ndarray):
+        es = (self.scfg.es_radius_factor * jnp.asarray(radii)
+              if self.scfg.es_radius_factor > 0 else None)
         qs = jnp.asarray(queries)
+        rs = jnp.asarray(radii)
         if self.sharded is not None and self.mesh is not None:
-            return sharded_range_search(self.mesh, self.sharded, qs, r, self.cfg, es)
+            return sharded_range_search(self.mesh, self.sharded, qs, rs, self.cfg, es)
         return range_search_compacted(self.engine.points, self.engine.graph, qs,
-                                      self.engine.start_ids, r, self.cfg, es)
+                                      self.engine.start_ids, rs, self.cfg, es)
 
     def step(self) -> list[Response]:
-        """Serve one micro-batch from the queue."""
+        """Serve one micro-batch from the queue.
+
+        Requests batch regardless of radius: the radius vector rides
+        alongside the query matrix (padded identically), and every layer
+        below answers each lane at its own radius.
+        """
         batch = self._drain()
         if not batch:
             return []
         reqs = [b[0] for b in batch]
         arrive = [b[1] for b in batch]
-        r = reqs[0].radius if reqs[0].radius is not None else self.scfg.default_radius
         n = len(reqs)
         bucket = next_pow2(n)
         q = np.stack([rq.query for rq in reqs])
+        radii = np.asarray(
+            [self.scfg.default_radius if rq.radius is None else rq.radius
+             for rq in reqs], np.float32)
         if bucket > n:  # pad to bucket with repeats (masked out of responses)
             q = np.concatenate([q, np.repeat(q[:1], bucket - n, axis=0)])
-        res = self._execute(q, r)
+            radii = np.concatenate([radii, np.repeat(radii[:1], bucket - n)])
+        res = self._execute(q, radii)
         now = time.perf_counter()
         out = []
         ids = np.asarray(res.ids)
@@ -140,12 +161,28 @@ class RangeServer:
                 overflow=bool(over[i]),
                 es_stopped=bool(ess[i]),
                 latency_s=now - arrive[i],
+                radius=float(radii[i]),
             ))
         self.stats["served"] += n
         self.stats["batches"] += 1
         self.stats["es_stopped"] += int(ess[:n].sum())
         self.stats["overflow"] += int(over[:n].sum())
+        rb = radii[:n].astype(np.float64)
+        self.stats["mixed_radius_batches"] += int(rb.min() != rb.max())
+        self.stats["radius_min"] = min(self.stats["radius_min"], float(rb.min()))
+        self.stats["radius_max"] = max(self.stats["radius_max"], float(rb.max()))
+        self.stats["radius_sum"] += float(rb.sum())
+        self.stats["radius_sumsq"] += float((rb * rb).sum())
         return out
+
+    def radius_dispersion(self) -> dict:
+        """Mean/std/min/max of served radii + mixed-batch count (monitoring)."""
+        n = max(self.stats["served"], 1)
+        mean = self.stats["radius_sum"] / n
+        var = max(self.stats["radius_sumsq"] / n - mean * mean, 0.0)
+        return dict(mean=mean, std=var ** 0.5,
+                    min=self.stats["radius_min"], max=self.stats["radius_max"],
+                    mixed_radius_batches=self.stats["mixed_radius_batches"])
 
     def run_until_drained(self) -> list[Response]:
         out = []

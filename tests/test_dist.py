@@ -178,6 +178,50 @@ def test_sharded_matches_host_union_exactly():
     """)
 
 
+def test_sharded_mixed_radius_per_lane():
+    """Per-query radii through the shard_map program: a mixed-radius batch
+    must answer each lane exactly as a homogeneous batch at that lane's
+    radius does, and an all-equal radius vector must be bitwise-identical
+    to the scalar call (the radius vector shards along data with its
+    queries and broadcasts to every model-axis shard)."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import RangeConfig, SearchConfig, build_knn_graph
+        from repro.core.graph import medoid
+        from repro.dist.sharded_engine import build_sharded, sharded_range_search
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        pts = jnp.asarray(np.random.default_rng(2).standard_normal((1600, 8)),
+                          jnp.float32)
+        qs = jnp.asarray(np.asarray(pts[:16]) + 0.02)
+        rcfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16,
+                                               visit_cap=64, expand_width=2),
+                           mode="greedy", result_cap=128)
+        corpus = build_sharded(np.asarray(pts), 4,
+                               lambda p: (build_knn_graph(p, k=8), medoid(p)[None]))
+        r_a, r_b = 1.5, 3.5
+        radii = jnp.asarray(np.where(np.arange(16) % 2, r_b, r_a), jnp.float32)
+        mixed = sharded_range_search(mesh, corpus, qs, radii, rcfg)
+        hom_a = sharded_range_search(mesh, corpus, qs, r_a, rcfg)
+        hom_b = sharded_range_search(mesh, corpus, qs, r_b, rcfg)
+        for name in ("ids", "dists", "count", "overflow"):
+            got = np.asarray(getattr(mixed, name))
+            wa = np.asarray(getattr(hom_a, name))
+            wb = np.asarray(getattr(hom_b, name))
+            for q in range(16):
+                want = wb[q] if q % 2 else wa[q]
+                np.testing.assert_array_equal(got[q], want, err_msg=f"{name}[{q}]")
+        assert int(np.asarray(mixed.count).sum()) > 0  # not vacuous
+        # all-equal vector == scalar, bitwise, across every result field
+        vec = sharded_range_search(mesh, corpus, qs, jnp.full((16,), r_a), rcfg)
+        for name in ("ids", "dists", "count", "overflow", "n_visited",
+                     "n_dist", "es_stopped", "phase2"):
+            np.testing.assert_array_equal(np.asarray(getattr(vec, name)),
+                                          np.asarray(getattr(hom_a, name)),
+                                          err_msg=name)
+        print("OK")
+    """)
+
+
 def test_spec_tree_divisibility_fallback():
     run_sub("""
         import jax, jax.numpy as jnp

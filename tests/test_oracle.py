@@ -1,0 +1,264 @@
+"""Brute-force oracle + property/metamorphic harness for range retrieval.
+
+Everything here exercises the *per-query radius* contract: each query in a
+batch carries its own radius, and every layer must answer each lane at its
+own r. Two oracles back the checks:
+
+* ``exact_range_search`` (core.ground_truth) — the blocked matmul-form
+  exact scan; source of AP ground truth and counts.
+* a diff-form ``point_dist`` scan — bit-identical to the arithmetic the
+  search's ``gather_dist`` uses, so membership and returned-distance checks
+  hold to 1e-5 instead of the matmul form's ~1e-3 cancellation error.
+
+The harness's backbone invariant: a radius *vector* with all-equal entries
+must reproduce the scalar-radius outputs **bitwise** (scalar call sites
+normalize through the same broadcast, so hetero- and homogeneous batches run
+the same program).
+
+Heavier randomized sweeps are marked ``slow`` and excluded from the default
+pytest run (see pyproject addopts); CI runs them in a dedicated step.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BuildConfig, RangeConfig, RangeSearchEngine, SearchConfig,
+    average_precision, build_vamana, exact_range_search,
+)
+from repro.core.distances import point_dist
+from repro.utils import INVALID_ID
+
+MODES = ("beam", "doubling", "greedy")
+METRICS = ("l2", "ip")
+EXPAND_WIDTHS = (1, 4)
+
+# AP-vs-oracle floors, calibrated on the fixed corpus below with margin
+# (beam is the paper's weak baseline by design; ip graphs navigate worse)
+AP_FLOOR = {
+    ("beam", "l2"): 0.30, ("doubling", "l2"): 0.70, ("greedy", "l2"): 0.70,
+    ("beam", "ip"): 0.28, ("doubling", "ip"): 0.42, ("greedy", "ip"): 0.40,
+}
+
+
+def _toy(n=600, d=10, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((8, d)).astype(np.float32) * 3
+    pts = (centers[rng.integers(0, 8, n)] +
+           rng.standard_normal((n, d)).astype(np.float32) * 0.4)
+    return jnp.asarray(pts)
+
+
+_CORPUS: dict = {}
+
+
+def _corpus(metric):
+    """(pts, engine, queries, exact (Q, N) diff-form dists), cached per
+    metric. Module-level cache instead of a fixture so the hypothesis stub
+    (plain-function wrappers) can share it too."""
+    if metric not in _CORPUS:
+        pts = _toy()
+        graph = build_vamana(pts, BuildConfig(max_degree=16, beam=32,
+                                              insert_batch=256, metric=metric))
+        eng = RangeSearchEngine.from_graph(pts, graph, metric=metric)
+        qs = pts[:32] + 0.01
+        exact = np.asarray(point_dist(pts[None, :, :],
+                                      np.asarray(qs)[:, None, :], metric))
+        _CORPUS[metric] = (pts, eng, qs, exact)
+    return _CORPUS[metric]
+
+
+def _mixed_radii(exact, lo_q=0.02, hi_q=0.10):
+    """Per-query radii at per-lane quantiles of that lane's own distance
+    distribution — every lane targets a different match count."""
+    q = exact.shape[0]
+    quant = np.linspace(lo_q, hi_q, q)
+    return np.array([np.quantile(exact[i], quant[i]) for i in range(q)],
+                    np.float32)
+
+
+def _cfg(mode, metric, expand_width, result_cap=512):
+    return RangeConfig(
+        search=SearchConfig(beam=16, max_beam=64 if mode == "doubling" else 16,
+                            visit_cap=128, metric=metric,
+                            expand_width=expand_width),
+        mode=mode, result_cap=result_cap)
+
+
+def _rows(res):
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    return ids, dists, np.asarray(res.count), np.asarray(res.overflow)
+
+
+def _check_invariants(res, exact, radii, atol=1e-5):
+    """(a) membership, (b) exact distances, (c) count bookkeeping.
+
+    Tolerance is 1e-5 absolute plus 1e-6 relative: the oracle's broadcast
+    scan and the search's gathered tiles sum f32 terms in different orders,
+    which costs ~1 ulp — O(1e-7) relative, visible only at ip's O(100)
+    magnitudes."""
+    ids, dists, count, over = _rows(res)
+    for i in range(ids.shape[0]):
+        valid = ids[i] != INVALID_ID
+        got = ids[i][valid]
+        # (a) every returned id is truly in range (diff-form, same arithmetic
+        # as the search's own decisions)
+        tol = atol + 1e-6 * abs(float(radii[i]))
+        assert np.all(exact[i, got] <= radii[i] + tol), (
+            f"lane {i}: out-of-range ids at r={radii[i]}")
+        # (b) returned dists are the exact distances
+        np.testing.assert_allclose(dists[i][valid], exact[i, got], rtol=1e-6,
+                                   atol=atol)
+        # (c) count == number of valid rows (overflow lanes cap the buffer,
+        # count still equals the rows actually returned)
+        if not over[i]:
+            assert count[i] == valid.sum(), f"lane {i}"
+        else:
+            assert valid.sum() <= count[i]
+
+
+def _assert_bitwise_equal(a, b, context=""):
+    for name in ("ids", "dists", "count", "overflow", "n_visited", "n_dist",
+                 "es_stopped", "phase2"):
+        av, bv = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        assert np.array_equal(av, bv), f"{context}: {name} differs"
+
+
+# ---------------------------------------------------------------------------
+# oracle invariants: all modes x metrics x expand widths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("expand_width", EXPAND_WIDTHS)
+def test_oracle_invariants(mode, metric, expand_width):
+    pts, eng, qs, exact = _corpus(metric)
+    radii = _mixed_radii(exact)
+    cfg = _cfg(mode, metric, expand_width)
+    res = eng.range(qs, jnp.asarray(radii), cfg)
+    _check_invariants(res, exact, radii)
+
+    # (d) AP against the exact oracle clears the mode floor
+    gt = exact_range_search(pts, qs, jnp.asarray(radii), metric)
+    ap = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
+                           np.asarray(res.ids), np.asarray(res.count))
+    assert ap >= AP_FLOOR[(mode, metric)], (mode, metric, expand_width, ap)
+
+    # (e) all-equal radius vector is bitwise-identical to the scalar call
+    r0 = float(np.median(radii))
+    res_s = eng.range(qs, r0, cfg)
+    res_v = eng.range(qs, jnp.full(qs.shape[0], r0, jnp.float32), cfg)
+    _assert_bitwise_equal(res_s, res_v, f"{mode}/{metric}/E={expand_width}")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_fused_matches_compacted_mixed_radii(mode):
+    """The single-program path answers mixed-radius batches like the
+    host-compacted path (same sets; compaction is a perf decision)."""
+    pts, eng, qs, exact = _corpus("l2")
+    radii = jnp.asarray(_mixed_radii(exact))
+    cfg = _cfg(mode, "l2", 4)
+    a = eng.range(qs, radii, cfg, compacted=True)
+    b = eng.range(qs, radii, cfg, compacted=False)
+    np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
+    for ra, rb in zip(np.asarray(a.ids), np.asarray(b.ids)):
+        assert set(ra[ra != INVALID_ID]) == set(rb[rb != INVALID_ID])
+
+
+# ---------------------------------------------------------------------------
+# metamorphic properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ("beam", "greedy"))
+def test_radius_monotonicity(mode):
+    """r1 <= r2 per lane => result set at r1 is a subset of the set at r2,
+    up to result_cap/budget overflow (flagged lanes are exempt: a capped
+    buffer legitimately drops members). Doubling is excluded by design —
+    its widening schedule changes the traversal itself with r."""
+    pts, eng, qs, exact = _corpus("l2")
+    r1 = _mixed_radii(exact, 0.02, 0.06)
+    r2 = (r1 * 1.5).astype(np.float32)
+    cfg = _cfg(mode, "l2", 4)
+    a = eng.range(qs, jnp.asarray(r1), cfg)
+    b = eng.range(qs, jnp.asarray(r2), cfg)
+    ids_a, _, _, _ = _rows(a)
+    ids_b, _, _, over_b = _rows(b)
+    for i in range(ids_a.shape[0]):
+        if over_b[i]:
+            continue
+        sa = set(ids_a[i][ids_a[i] != INVALID_ID])
+        sb = set(ids_b[i][ids_b[i] != INVALID_ID])
+        assert sa <= sb, f"lane {i}: {sorted(sa - sb)} lost when r grew"
+
+
+def test_lane_permutation_invariance():
+    """Shuffling (queries, radii) shuffles the outputs identically — no lane
+    reads another lane's radius."""
+    pts, eng, qs, exact = _corpus("l2")
+    radii = _mixed_radii(exact)
+    cfg = _cfg("greedy", "l2", 4)
+    res = eng.range(qs, jnp.asarray(radii), cfg)
+    perm = np.random.default_rng(1).permutation(qs.shape[0])
+    res_p = eng.range(qs[perm], jnp.asarray(radii[perm]), cfg)
+    for name in ("ids", "dists", "count", "overflow"):
+        np.testing.assert_array_equal(np.asarray(getattr(res, name))[perm],
+                                      np.asarray(getattr(res_p, name)),
+                                      err_msg=name)
+
+
+def test_padding_invariance():
+    """Appending pad lanes (the server's bucket padding) never perturbs the
+    real lanes' outputs."""
+    pts, eng, qs, exact = _corpus("l2")
+    radii = _mixed_radii(exact)
+    n = qs.shape[0]
+    cfg = _cfg("greedy", "l2", 4)
+    res = eng.range(qs, jnp.asarray(radii), cfg)
+    q_pad = jnp.concatenate([qs, jnp.broadcast_to(qs[:1], (5,) + qs.shape[1:])])
+    r_pad = np.concatenate([radii, np.repeat(radii[:1], 5)])
+    res_p = eng.range(q_pad, jnp.asarray(r_pad), cfg)
+    for name in ("ids", "dists", "count", "overflow"):
+        np.testing.assert_array_equal(np.asarray(getattr(res, name)),
+                                      np.asarray(getattr(res_p, name))[:n],
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# randomized property sweeps (hypothesis; the stub provides seeded draws)
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.01, 0.12), st.floats(1.1, 2.5), st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_random_radii_invariants(lo_q, spread, seed):
+    """Random per-lane radius assignments keep the oracle invariants."""
+    pts, eng, qs, exact = _corpus("l2")
+    rng = np.random.default_rng(seed)
+    base = np.quantile(exact, lo_q, axis=1)
+    radii = (base * rng.uniform(1.0, spread, qs.shape[0])).astype(np.float32)
+    cfg = _cfg("greedy", "l2", 4)
+    res = eng.range(qs, jnp.asarray(radii), cfg)
+    _check_invariants(res, exact, radii)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2), st.integers(0, 1), st.floats(0.01, 0.15),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_slow_sweep_all_modes(mode_i, metric_i, lo_q, seed):
+    """Heavier randomized sweep over modes x metrics (off the fast path)."""
+    mode, metric = MODES[mode_i], METRICS[metric_i]
+    pts, eng, qs, exact = _corpus(metric)
+    rng = np.random.default_rng(seed)
+    base = np.quantile(exact, max(lo_q, 1.5 / exact.shape[1]), axis=1)
+    radii = (base * rng.uniform(1.0, 1.5, qs.shape[0])).astype(np.float32)
+    cfg = _cfg(mode, metric, int(rng.integers(1, 6)))
+    res = eng.range(qs, jnp.asarray(radii), cfg)
+    _check_invariants(res, exact, radii)
+    # scalar/vector bitwise equivalence at a random shared radius
+    r0 = float(np.median(radii))
+    _assert_bitwise_equal(
+        eng.range(qs, r0, cfg),
+        eng.range(qs, jnp.full(qs.shape[0], r0, jnp.float32), cfg),
+        f"slow {mode}/{metric}")

@@ -10,8 +10,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    RangeConfig, RangeSearchEngine, SearchConfig, average_precision,
-    build_knn_graph, exact_range_search,
+    BuildConfig, RangeConfig, RangeSearchEngine, SearchConfig,
+    average_precision, build_knn_graph, build_vamana, exact_range_search,
 )
 from repro.data.lm import LMDataConfig, lm_batches
 from repro.models import TransformerConfig, init_transformer, loss_fn
@@ -159,6 +159,53 @@ def test_server_end_to_end_ap(small_engine):
         counts[r.req_id] = len(r.ids)
     ap = average_precision(np.asarray(gt[0]), np.asarray(gt[2]), ids, counts)
     assert ap > 0.8
+
+
+@pytest.fixture(scope="module")
+def clustered_engine():
+    """Well-navigable Vamana index on clustered data: greedy range search
+    recovers exact in-range sets here, so per-radius oracle equality is a
+    meaningful (non-flaky) server assertion."""
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((8, 12)).astype(np.float32) * 3
+    pts = jnp.asarray(centers[rng.integers(0, 8, 1200)] +
+                      rng.standard_normal((1200, 12)).astype(np.float32) * 0.4)
+    g = build_vamana(pts, BuildConfig(max_degree=24, beam=48, insert_batch=256,
+                                      two_pass=True))
+    return pts, RangeSearchEngine.from_graph(pts, g)
+
+
+def test_server_mixed_radius_batch_per_request_ground_truth(clustered_engine):
+    """Regression test for the batch radius coercion bug: the server used to
+    apply ``reqs[0].radius`` to the whole micro-batch, silently answering
+    every other request at the first one's radius. Two requests with radii
+    (r_small, r_large) in ONE batch must each get exactly their own
+    radius's oracle set."""
+    pts, eng = clustered_engine
+    q = np.asarray(pts[0]) + 0.01
+    r_small, r_large = 1.0, 8.0
+    cfg = RangeConfig(search=SearchConfig(beam=64, max_beam=64, visit_cap=256),
+                      mode="greedy", result_cap=512)
+    srv = RangeServer(eng, cfg, ServerConfig(max_batch=32))
+    srv.submit(Request(req_id=0, query=q, radius=r_small))
+    srv.submit(Request(req_id=1, query=q, radius=r_large))
+    resp = sorted(srv.run_until_drained(), key=lambda x: x.req_id)
+    assert srv.stats["batches"] == 1  # both served from ONE micro-batch
+    assert srv.stats["mixed_radius_batches"] == 1
+
+    gt = {}
+    for r in (r_small, r_large):
+        ids, _, counts = exact_range_search(pts, jnp.asarray(q)[None], r)
+        gt[r] = set(np.asarray(ids)[0][: int(counts[0])].tolist())
+    assert gt[r_small] < gt[r_large]  # radii chosen to answer differently
+
+    assert resp[0].radius == r_small and resp[1].radius == r_large
+    assert set(resp[0].ids.tolist()) == gt[r_small]
+    assert set(resp[1].ids.tolist()) == gt[r_large]
+    # per-request dists honor the request's own radius
+    assert len(resp[0].ids) and resp[0].dists.max() <= r_small + 1e-5
+    assert len(resp[1].ids) and resp[1].dists.max() <= r_large + 1e-5
+    assert resp[1].dists.max() > r_small  # large lane really used its radius
 
 
 def test_server_results_sorted_and_deduped(small_engine):
