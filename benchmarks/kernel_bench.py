@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS, corpus_bytes_per_distance
+from repro.core import quantize_corpus
 from repro.kernels import (
     expand_frontier, expand_frontier_ref, flash_attention_ref,
     gatherdist_ref, rangescan_ref,
@@ -53,7 +54,9 @@ def run():
         rows.append(["rangescan", f"{q}x{n}x{d}", t * 1e3,
                      flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
 
-    # gatherdist: beam expansion shapes
+    # gatherdist: beam expansion shapes, f32 rows vs the int8 quantized
+    # corpus (codes + 12B metadata — the v5e memory term drops ~4x; that
+    # roofline column, not the CPU wall ms, is the claim of record)
     for (q, r, n, d) in [(256, 32, 100_000, 128), (1024, 64, 100_000, 96)]:
         pts = jax.random.normal(key, (n, d), jnp.float32)
         qs = jax.random.normal(key, (q, d), jnp.float32)
@@ -64,6 +67,13 @@ def run():
         byts = 4.0 * (q * r * d + q * d + q * r)
         rows.append(["gatherdist", f"{q}x{r}x{d}", t * 1e3,
                      flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
+        qc = quantize_corpus(pts)
+        f8 = jax.jit(lambda i, u: gatherdist_ref(qc, i, u))
+        t8 = _wall(lambda: f8(ids, qs))
+        byts8 = (q * r * corpus_bytes_per_distance(d, "int8")
+                 + 4.0 * (q * d + q * r))
+        rows.append(["gatherdist(int8)", f"{q}x{r}x{d}", t8 * 1e3,
+                     flops / PEAK_FLOPS * 1e6, byts8 / HBM_BW * 1e6])
 
     # expand: fused multi-node frontier expansion vs the unfused dataflow
     def unfused_expand(points, neighbors, frontier, queries):
@@ -96,6 +106,21 @@ def run():
                      flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
         rows.append(["expand(unfused)", f"{q}x{e}x{r}x{d}", t_u * 1e3,
                      flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
+        # int8 corpus through both dataflows (certified lower-bound
+        # distances): the unfused-int8 row routes unfused_expand through
+        # the same quantized gather, so fused-vs-unfused at int8 isolates
+        # the fusion while int8-vs-f32 per dataflow isolates the dtype
+        qc = quantize_corpus(pts)
+        f_fused8 = jax.jit(lambda g, f, u: expand_frontier_ref(qc, g, f, u))
+        f_unfused8 = jax.jit(lambda g, f, u: unfused_expand(qc, g, f, u))
+        t_f8 = _wall(lambda: f_fused8(nbrs, fr, qs))
+        t_u8 = _wall(lambda: f_unfused8(nbrs, fr, qs))
+        byts8 = (q * e * r * corpus_bytes_per_distance(d, "int8")
+                 + 4.0 * (q * d + q * e * r * 2))
+        rows.append(["expand(fused,int8)", f"{q}x{e}x{r}x{d}", t_f8 * 1e3,
+                     flops / PEAK_FLOPS * 1e6, byts8 / HBM_BW * 1e6])
+        rows.append(["expand(unfused,int8)", f"{q}x{e}x{r}x{d}", t_u8 * 1e3,
+                     flops / PEAK_FLOPS * 1e6, byts8 / HBM_BW * 1e6])
 
     # the Pallas expand kernel itself: interpret mode on CPU (the DMAs are
     # emulated — wall time is an upper bound, not a TPU prediction)
@@ -111,6 +136,17 @@ def run():
     rows.append(["expand(pallas)" + ("[interp]" if interp else ""),
                  "4x4x16x64", t_k * 1e3,
                  flops / PEAK_FLOPS * 1e6, byts / HBM_BW * 1e6])
+    # the int8 Pallas expand kernel (MXU int8 matmul + accumulator dequant),
+    # same interpret-mode caveat
+    qc_small = quantize_corpus(pts)
+    t_k8 = _wall(lambda: expand_frontier(qc_small, nbrs, fr, qs,
+                                         use_pallas=True, interpret=interp),
+                 iters=1)
+    byts8 = (4 * 4 * 16 * corpus_bytes_per_distance(64, "int8")
+             + 4.0 * (4 * 64 + 4 * 4 * 16 * 2))
+    rows.append(["expand(pallas,int8)" + ("[interp]" if interp else ""),
+                 "4x4x16x64", t_k8 * 1e3,
+                 flops / PEAK_FLOPS * 1e6, byts8 / HBM_BW * 1e6])
 
     # flashattn: prefill + decode shapes (small batch; CPU wall time)
     for (b, hq, hkv, sq, skv, dh) in [(1, 8, 2, 1024, 1024, 128),

@@ -28,6 +28,24 @@ SMOKE_JSON = os.path.join(os.path.dirname(os.path.dirname(
 # each radius level as its own homogeneous batch (recorded in floors too)
 MAX_MIXED_AP_GAP = 0.005
 
+# quantized-corpus gates. The AP gap bounds what int8 storage + guard-band
+# rerank may cost in result quality end to end — it is deterministic on the
+# fixed smoke corpus and the real correctness contract (the oracle tests
+# additionally prove exact post-rerank sets). The perf gate is the
+# *roofline term* the quantization exists for: hot-loop corpus bytes per
+# distance must drop >= 3x (int8 codes + 12B metadata vs 4d f32 — the
+# binding constraint of the TPU deployment, README "Memory footprint &
+# quantization"). Wall-clock QPS ratios (end-to-end and hot-path) are
+# RECORDED but not gated: across repeated runs on shared 2-core CI boxes
+# they swing ~0.7-1.8x with the cache regime and noisy neighbors (measured;
+# see the record's note), which would make any fixed floor flaky. On the
+# XLA CPU backend the e2e ratio hovers around 0.9-1.0x — the loop is
+# dominated by dtype-independent merge/scatter work and gathers stay
+# cache-resident at smoke scale; the e2e payoff belongs to the TPU path
+# (Pallas int8 kernels + the HBM cut this gate pins).
+MAX_QUANTIZED_AP_GAP = 0.01
+MIN_QUANTIZED_BYTES_REDUCTION = 3.0
+
 
 def smoke(n: int, min_qps: float, min_ap: float) -> int:
     """CI gate: one tiny corpus through ``range_search_compacted``; exits
@@ -122,14 +140,33 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
           f"(homogeneous dispatch ap={hom_ap:.4f}, gap={ap_gap:.5f}; "
           f"radii {levels[0]:.3g}..{levels[-1]:.3g})")
 
+    # -- quantized-corpus row: int8 two-pass vs f32, same graph --------------
+    # measured on gist-like (d=256): the gather-bound regime the quantized
+    # pipeline targets — corpus bytes per distance dominate as d grows
+    quantized = _quantized_row(n)
+    print(f"[smoke] quantized (gist-like d={quantized['dim']}): "
+          f"e2e int8 {quantized['engine']['qps_int8']:.1f} qps vs f32 "
+          f"{quantized['engine']['qps_f32']:.1f} "
+          f"({quantized['engine']['speedup']:.2f}x), "
+          f"ap gap {quantized['engine']['ap_gap']:+.4f}, "
+          f"rerank band {quantized['engine']['rerank_per_query']:.1f}/query")
+    print(f"[smoke] quantized hot path (bulk gather+distance): int8 "
+          f"{quantized['hot_path']['speedup']:.2f}x f32 "
+          f"({quantized['hot_path']['bytes_per_dist_f32']:.0f} -> "
+          f"{quantized['hot_path']['bytes_per_dist_int8']:.0f} "
+          f"bytes/distance)")
+
     record = dict(
         bench="smoke", n=n, n_queries=int(qs.shape[0]), radius=float(r),
         mean_matches=round(float(np.asarray(gt[2]).mean()), 1),
         config=dataclasses.asdict(cfg), **rec,
         baseline_expand1=base, speedup_vs_expand1=round(speedup, 3),
         mixed_radius=mixed,
+        quantized=quantized,
         floors=dict(min_qps=min_qps, min_ap=min_ap,
-                    max_mixed_ap_gap=MAX_MIXED_AP_GAP),
+                    max_mixed_ap_gap=MAX_MIXED_AP_GAP,
+                    max_quantized_ap_gap=MAX_QUANTIZED_AP_GAP,
+                    min_quantized_bytes_reduction=MIN_QUANTIZED_BYTES_REDUCTION),
         timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
     )
     with open(SMOKE_JSON, "w") as f:
@@ -144,7 +181,100 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
         print("[smoke] FAIL: mixed-radius batch AP deviates from "
               "homogeneous dispatch")
         return 1
+    if quantized["engine"]["ap_gap"] > MAX_QUANTIZED_AP_GAP:
+        print("[smoke] FAIL: quantized-corpus AP gap above floor")
+        return 1
+    hp = quantized["hot_path"]
+    if (hp["bytes_per_dist_f32"] / hp["bytes_per_dist_int8"]
+            < MIN_QUANTIZED_BYTES_REDUCTION):
+        print("[smoke] FAIL: int8 bytes-per-distance reduction below floor")
+        return 1
     return 0
+
+
+def _quantized_row(n: int) -> dict:
+    """Int8-corpus two-pass vs f32 on the same graph: e2e QPS + AP gap +
+    rerank-band rate, plus the bulk gather+distance hot-path ratio and the
+    bytes-per-distance table (see the MIN_QUANTIZED_BYTES_REDUCTION note
+    for why the byte cut, not a wall-clock ratio, is the gated claim)."""
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.roofline import corpus_bytes_per_distance
+    from repro.core import (
+        RangeConfig, RangeSearchEngine, SearchConfig, exact_range_search,
+    )
+    from repro.kernels import gatherdist_ref
+    from repro.utils import block_until_ready
+
+    from .common import ap_of, get_dataset, get_engine, run_range
+
+    profile = "gist-like"
+    ds, pts, qs, _, prof, _ = get_dataset(profile, n)
+    qs = qs[:128]
+    mean_counts = np.asarray(prof.counts).mean(axis=0)
+    r = float(prof.radii[int(np.argmin(np.abs(mean_counts - 128.0)))])
+    gt = exact_range_search(pts, qs, r, ds.metric)
+    eng = get_engine(profile, n)
+    # same graph and entry points; only the corpus storage differs
+    eng_i8 = _dc.replace(
+        RangeSearchEngine.from_graph(pts, eng.graph, metric=ds.metric,
+                                     corpus_dtype="int8"),
+        start_ids=eng.start_ids)
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
+                                          metric=ds.metric, expand_width=4),
+                      mode="greedy", result_cap=2048)
+    qps_f, res_f = run_range(eng, qs, r, cfg)
+    qps_q, res_q = run_range(eng_i8, qs, r, cfg)
+    ap_f, ap_q = ap_of(res_f, gt), ap_of(res_q, gt)
+
+    # hot path: the in-loop bulk gather+distance op (tile shapes of the
+    # fused expand: Q lanes x E*R candidates each), f32 rows vs int8
+    # codes+metadata — the corpus-bytes roofline term itself
+    t_tile = 128
+    ids = jax.random.randint(jax.random.PRNGKey(0), (qs.shape[0], t_tile),
+                             0, pts.shape[0], jnp.int32)
+    f_f32 = jax.jit(lambda i, q: gatherdist_ref(pts, i, q, metric=ds.metric))
+    f_i8 = jax.jit(lambda i, q: gatherdist_ref(eng_i8.points, i, q,
+                                               metric=ds.metric))
+    def wall(fn):
+        block_until_ready(fn())
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+    t_f = wall(lambda: f_f32(ids, qs))
+    t_q = wall(lambda: f_i8(ids, qs))
+    d = int(pts.shape[1])
+    return dict(
+        profile=profile, dim=d, radius=r,
+        engine=dict(
+            qps_f32=round(qps_f, 2), qps_int8=round(qps_q, 2),
+            speedup=round(qps_q / max(qps_f, 1e-9), 3),
+            ap_f32=round(ap_f, 4), ap_int8=round(ap_q, 4),
+            ap_gap=round(ap_f - ap_q, 5),
+            rerank_per_query=round(
+                float(np.asarray(res_q.n_rerank).mean()), 1),
+            mean_count=round(float(np.asarray(res_q.count).mean()), 1),
+        ),
+        hot_path=dict(
+            tile=f"{qs.shape[0]}x{t_tile}x{d}",
+            ms_f32=round(t_f * 1e3, 3), ms_int8=round(t_q * 1e3, 3),
+            speedup=round(t_f / max(t_q, 1e-9), 3),
+            bytes_per_dist_f32=corpus_bytes_per_distance(d, "float32"),
+            bytes_per_dist_int8=corpus_bytes_per_distance(d, "int8"),
+            note="wall ratios are cache-regime/noise dependent on CPU CI "
+                 "(measured swing ~0.7-1.8x run to run) and are recorded, "
+                 "not gated; the gated perf claim is the bytes/distance "
+                 "roofline cut, which the Pallas int8 kernels realize on "
+                 "TPU HBM",
+        ),
+    )
 
 
 def main(argv=None):

@@ -3,6 +3,12 @@
 
 We time phase 1 alone (the shared beam search) and the full pipeline; the
 difference is phase-2 cost. Run per profile at a fixed configuration.
+
+The int8 quantized corpus adds a third phase: the exact rerank of the
+radius guard band. Its cost is isolated as ``t(rerank on) - t(rerank off)``
+(``RangeConfig.rerank`` toggles only that stage), so the two-pass split is
+visible in the same table — quantized rows carry the corpus dtype in the
+profile column and a nonzero ``rerank_s``.
 """
 from __future__ import annotations
 
@@ -12,7 +18,8 @@ import time
 import numpy as np
 
 from repro.core import (
-    ES_D_VISITED, RangeConfig, SearchConfig, beam_search_batch,
+    ES_D_VISITED, RangeConfig, RangeSearchEngine, SearchConfig,
+    beam_search_batch,
 )
 from repro.utils import block_until_ready
 from .common import QUICK_PROFILES, ap_of, get_dataset, get_engine, print_table
@@ -53,12 +60,40 @@ def run(n: int = 10_000, beam: int = 32):
                 t_full = _time(lambda: eng.range(qs, r, cfg, es_radius=esr))
                 _, res = (None, eng.range(qs, r, cfg, es_radius=esr))
                 rows.append([prof_name, mode, "es" if es else "no-es",
-                             t_phase1, max(t_full - t_phase1, 0.0), t_full,
-                             ap_of(res, gt)])
+                             t_phase1, max(t_full - t_phase1, 0.0), 0.0,
+                             t_full, ap_of(res, gt)])
+
+    # quantized two-pass rows (first quick profile): rerank phase isolated
+    # by toggling RangeConfig.rerank — searches are identical either way
+    prof_name = QUICK_PROFILES[0]
+    ds, pts, qs, r, _, gt = get_dataset(prof_name, n)
+    eng = get_engine(prof_name, n)
+    eng8 = dataclasses.replace(
+        RangeSearchEngine.from_graph(pts, eng.graph, metric=ds.metric,
+                                     corpus_dtype="int8"),
+        start_ids=eng.start_ids)
+    scfg = SearchConfig(beam=beam, max_beam=beam, visit_cap=4 * beam,
+                        metric=ds.metric)
+    t_phase1 = _time(lambda: beam_search_batch(
+        eng8.points, eng8.graph, qs, eng8.start_ids,
+        jnp.asarray(r, jnp.float32), scfg))
+    for mode in ("greedy", "doubling"):
+        cfg = RangeConfig(
+            search=dataclasses.replace(
+                scfg, max_beam=beam * (16 if mode == "doubling" else 1),
+                visit_cap=16 * beam if mode == "doubling" else 4 * beam),
+            mode=mode, result_cap=2048)
+        t_norr = _time(lambda: eng8.range(
+            qs, r, dataclasses.replace(cfg, rerank=False)))
+        t_full = _time(lambda: eng8.range(qs, r, cfg))
+        res = eng8.range(qs, r, cfg)
+        rows.append([f"{prof_name}[int8]", mode, "no-es",
+                     t_phase1, max(t_norr - t_phase1, 0.0),
+                     max(t_full - t_norr, 0.0), t_full, ap_of(res, gt)])
     print_table("Fig8: phase time breakdown (seconds, batch of "
                 f"{256} queries)",
                 ["profile", "mode", "early_stop", "phase1_s", "phase2_s",
-                 "total_s", "ap"], rows)
+                 "rerank_s", "total_s", "ap"], rows)
     return rows
 
 

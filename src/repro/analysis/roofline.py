@@ -28,6 +28,41 @@ HBM_BW = 819e9           # bytes/s / chip
 ICI_BW = 50e9            # bytes/s / link
 
 
+# ---------------------------------------------------------------------------
+# Corpus-gather roofline (the search loop's dominant term)
+# ---------------------------------------------------------------------------
+
+def corpus_bytes_per_distance(dim: int, corpus_dtype: str = "float32") -> float:
+    """HBM bytes gathered per in-loop distance computation.
+
+    f32/bf16 rows stream ``itemsize * dim``; the int8 quantized corpus
+    streams 1-byte codes plus the [scale, |x_hat|^2, err] metadata row
+    (``core.corpus.META_BYTES`` — the same constant
+    ``core.corpus.bytes_per_vector`` uses). This is the denominator of the
+    search loop's arithmetic intensity — the number the quantized pipeline
+    exists to shrink."""
+    if corpus_dtype == "int8":
+        from ..core.corpus import META_BYTES
+        return dim + float(META_BYTES)
+    return float(jnp_itemsize(corpus_dtype)) * dim
+
+
+def search_arithmetic_intensity(dim: int,
+                                corpus_dtype: str = "float32") -> float:
+    """FLOPs per HBM byte for the in-loop distance (l2 matmul form: one MXU
+    dot (2d) + the rank-1 norm correction (~3 flops)). TPU v5e's machine
+    balance is ``PEAK_FLOPS / HBM_BW`` ~ 240 flops/byte, so the gather term
+    stays memory-bound at every storage dtype — which is why bytes-per-
+    distance, not FLOPs, sets the QPS ceiling, and why int8's ~4x byte cut
+    is worth a guard-band rerank."""
+    flops = 2.0 * dim + 3.0
+    return flops / corpus_bytes_per_distance(dim, corpus_dtype)
+
+
+def jnp_itemsize(dtype_name: str) -> int:
+    return {"float32": 4, "bfloat16": 2, "int8": 1}[dtype_name]
+
+
 @dataclasses.dataclass
 class RooflineReport:
     arch_id: str

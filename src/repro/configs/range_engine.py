@@ -25,12 +25,17 @@ class EngineDeployConfig:
     dim: int = 128
     max_degree: int = 32
     metric: str = "l2"
-    corpus_dtype: str = "float32"     # NOTE (§Perf C, refuted on the XLA
-                                      # path): bf16 storage + f32 cast
-                                      # *raised* the memory term 1.4x (the
-                                      # cast materializes f32 copies); the
-                                      # fused Pallas gatherdist kernel is
-                                      # how bf16 storage pays off on TPU.
+    # corpus storage dtype. "int8" is the production setting for
+    # billion-point shards: each shard quantizes locally (core.corpus) and
+    # the query path runs the two-pass pipeline — guard-banded approximate
+    # search on int8 codes (d + 12 hot bytes/vector vs 4d for f32), exact
+    # f32 rerank of the radius boundary band only. (The earlier §Perf C
+    # bf16 note still holds for the XLA path: a bare storage cast without
+    # the fused kernels *raised* the memory term 1.4x; the int8 pipeline
+    # avoids that by dequantizing in-register in both the XLA reference and
+    # the Pallas int8 kernels.) Kept f32 here so the dry-run baseline stays
+    # comparable across PRs; flip via replace() for the quantized deploy.
+    corpus_dtype: str = "float32"
     range_cfg: RangeConfig = dataclasses.field(default_factory=lambda: RangeConfig(
         search=SearchConfig(beam=64, max_beam=64, visit_cap=256,
                             # multi-node frontier expansion; the TPU deploy
@@ -39,6 +44,25 @@ class EngineDeployConfig:
                             # devices, where Pallas TPU calls don't exist)
                             expand_width=4),
         mode="greedy", result_cap=1024, frontier_rounds=2048))
+
+    def __post_init__(self):
+        # keep the declarative SearchConfig knob in lockstep with the
+        # deploy-level one (engine cells and builders consult either; the
+        # server validates it against the corpus it actually serves). The
+        # non-default side wins, so setting EITHER knob to "int8"/"bfloat16"
+        # propagates; setting both to conflicting non-defaults is an error,
+        # never a silent override.
+        s = self.range_cfg.search.corpus_dtype
+        if s != self.corpus_dtype:
+            if s != "float32" and self.corpus_dtype != "float32":
+                raise ValueError(
+                    f"corpus_dtype={self.corpus_dtype!r} conflicts with "
+                    f"range_cfg.search.corpus_dtype={s!r}")
+            unified = s if self.corpus_dtype == "float32" else self.corpus_dtype
+            object.__setattr__(self, "corpus_dtype", unified)
+            object.__setattr__(self, "range_cfg", dataclasses.replace(
+                self.range_cfg, search=dataclasses.replace(
+                    self.range_cfg.search, corpus_dtype=unified)))
 
 
 def reduced() -> EngineDeployConfig:

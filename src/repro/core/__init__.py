@@ -13,6 +13,20 @@ from .beam_search import (
     topk_from_state,
 )
 from .build import BuildConfig, build_knn_graph, build_vamana, robust_prune
+from .corpus import (
+    CORPUS_DTYPES,
+    Corpus,
+    QuantizedCorpus,
+    bytes_per_vector,
+    corpus_cast,
+    corpus_dim,
+    corpus_dtype_name,
+    corpus_size,
+    lower_bound_dists,
+    quantize_corpus,
+    query_quant_err,
+    upper_bound_dists,
+)
 from .distances import gather_dist, pairwise_dist, point_dist
 from .engine import RangeSearchEngine
 from .graph import Graph, from_lists, medoid, random_regular

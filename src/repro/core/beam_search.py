@@ -68,6 +68,7 @@ from .bitset import (
     bitset_num_words,
     first_slot_occurrence,
 )
+from .corpus import CORPUS_DTYPES, corpus_size
 from .distances import gather_dist
 from .graph import Graph
 
@@ -97,6 +98,11 @@ class SearchConfig:
     expand_width: int = 4
     bitset_cap_bits: int = DEFAULT_BITSET_CAP_BITS  # seen-filter memory bound
     use_expand_kernel: bool = False  # Pallas expand kernel (real TPU only)
+    # declared corpus storage dtype: "float32" | "bfloat16" | "int8". The
+    # search itself dispatches on the corpus *value* (array vs
+    # QuantizedCorpus); this knob is what deploy configs / builders consult
+    # when materializing the corpus (engine.build, build_sharded, serve CLI).
+    corpus_dtype: str = "float32"
 
     def __post_init__(self):
         if self.beam < 1 or self.max_beam < self.beam:
@@ -107,6 +113,9 @@ class SearchConfig:
             raise ValueError("expand_width must be >= 1")
         if self.bitset_cap_bits < 32:
             raise ValueError("bitset_cap_bits must be >= 32")
+        if self.corpus_dtype not in CORPUS_DTYPES:
+            raise ValueError(
+                f"corpus_dtype must be one of {CORPUS_DTYPES}")
 
     @property
     def eff_expand_width(self) -> int:
@@ -201,7 +210,7 @@ def init_state(
 ) -> BeamState:
     """Seed the beam with the start points (usually the medoid)."""
     L, V = cfg.max_beam, cfg.visit_cap
-    W = bitset_num_words(points.shape[0], cfg.bitset_cap_bits)
+    W = bitset_num_words(corpus_size(points), cfg.bitset_cap_bits)
     s = start_ids.astype(jnp.int32)
     sd = gather_dist(points, s, q, cfg.metric)
     # de-duplicate identical start slots (keep first). Slot-level equality ==
@@ -444,7 +453,7 @@ def _step(points, graph: Graph, q, r, es_radius, cfg: SearchConfig, st: BeamStat
     # is expanded twice. Candidates truncated straight off the merge stay
     # unmarked and may be rediscovered — the unfused reference's semantics.
     mark = entrant & (m_ids != INVALID_ID)
-    if not bitset_exact(points.shape[0], st.visited_bits.shape[0]):
+    if not bitset_exact(corpus_size(points), st.visited_bits.shape[0]):
         # hashed regime: distinct ids may share a bucket; keep one per slot
         mark = first_slot_occurrence(st.visited_bits, m_ids, mark)
     bits = bitset_add(st.visited_bits, m_ids, mark)

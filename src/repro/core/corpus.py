@@ -1,0 +1,266 @@
+"""Quantized corpus storage for the range engine (the two-pass pipeline).
+
+The engine's dominant roofline term is gathering corpus vectors from HBM for
+every distance in the search loop (``distances.gather_dist`` note, README
+VMEM math). An int8 corpus cuts that term ~4x: the hot loop gathers
+1-byte codes plus a 12-byte metadata row instead of ``4 d`` bytes, and all
+in-loop range tests run on *approximate* distances. Range retrieval makes
+this safe in a way top-k search cannot: the decision is a threshold test
+against ``r``, so approximate distances suffice everywhere except inside a
+**provable error band** around the radius boundary, and only that band is
+reranked against the exact f32 vectors (``range_search`` two-pass stage).
+
+Scheme — the per-row extension of the symmetric absmax quantizer in
+``dist.compression``:
+
+    codes[i]  = round(x[i] / scales[i]),  scales[i] = max|x[i]| / 127
+    x_hat[i]  = codes[i] * scales[i]
+
+Per-element error is at most ``scales[i] / 2`` (absmax scaling never
+clips), bounding the row's L2 reconstruction error by ``scales[i] *
+sqrt(d) / 2``. We store something ~1.7x tighter: the *actual* error
+
+    err[i] = ||x[i] - x_hat[i]||_2   (computed exactly at quantize time)
+
+which is itself a valid bound (it IS the error; ``_SLACK`` covers the f32
+rounding of computing and applying it) — the worst-case half-step-
+everywhere bound assumes an adversarial row, while real rows sit near the
+``scale * sqrt(d/12)`` RMS.
+
+**Guard band as lower-bound distances.** Rather than widening the radius,
+the quantized distance paths return the per-candidate *certified lower
+bound* of the true distance:
+
+* **l2** (squared form, like the radii): with ``g_i = err[i] + err_q``
+  (``err_q`` = the query-side quantization error of the backend that
+  computed ``d_hat``: the int8 MXU kernels quantize the query and subtract
+  their own exact ``err_q``; the XLA path keeps the query in f32, so its
+  ``err_q`` is 0 and its band is ~2x narrower),
+
+      |sqrt(d_true) - sqrt(d_hat)| <= g_i
+      d_lb = max(sqrt(d_hat) - g_i, 0)^2        (lower_bound_dists)
+      d_ub = (sqrt(d_lb) + 2 G_i)^2             (upper_bound_dists)
+
+* **ip** (``d = -x.q``): ``|d_true - d_hat| <= eps_i = err[i] * ||q|| +
+  ||x_hat[i]|| * err_q``, so ``d_lb = d_hat - eps_i``, ``d_ub = d_lb +
+  2 Eps_i``.
+
+The upper-bound recovery uses the *envelope* ``G_i = err[i] + err_q >=
+g_i`` (worst case over backends), so one rerank covers results whose
+distances came from either path — mixing ``gather_dist`` (XLA) and the
+Pallas kernels inside one search stays sound, at the price of a slightly
+conservative ambiguity test on the XLA path.
+
+Then ``d_lb <= d_true <= d_ub`` always, and every existing threshold test
+``dist <= r`` in the search loop — beam extraction, λ-saturation, greedy
+in-range appends — becomes a *keep-band* test automatically, against the
+caller's ORIGINAL radius: no false negatives (``d_true <= r`` implies
+``d_lb <= r``), each candidate guarded by its own row's error rather than a
+corpus-wide worst case. The rerank stage then splits kept candidates by the
+recovered upper bound: ``d_ub <= r`` is a *sure* member (provably in
+range), the rest are *ambiguous* and get one batched exact f32 gather —
+zero false negatives inside the band, zero false positives after rerank.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.compression import GUARD_SLACK as _SLACK, quantize_int8_rows
+
+CORPUS_DTYPES = ("float32", "bfloat16", "int8")
+
+# hot-loop metadata bytes gathered per int8 row: the (N, 3) f32
+# [scale, |x_hat|^2, err] row. Single source of truth for every
+# bytes-per-distance accounting site (bytes_per_vector here,
+# analysis.roofline.corpus_bytes_per_distance, the README table).
+META_BYTES = 12
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedCorpus:
+    """Int8 corpus codes + per-vector metadata (+ optional exact vectors).
+
+    ``meta`` packs ``[scale, |x_hat|^2, err]`` per row so kernels gather
+    one 12-byte metadata row per candidate alongside the 1-byte/dim codes
+    (one DMA, not three). ``raw`` is the exact corpus the rerank stage
+    gathers from; ``raw=None`` disables reranking (capacity-constrained
+    deployments keep the certified-superset semantics instead)."""
+
+    codes: jnp.ndarray            # (N, d) int8
+    meta: jnp.ndarray             # (N, 3) f32 — [scale, |x_hat|^2, err]
+    raw: Optional[jnp.ndarray]    # (N, d) f32/bf16 exact vectors, or None
+
+    @property
+    def shape(self):
+        # mirror ndarray so shape-only call sites need no dispatch
+        return self.codes.shape
+
+    @property
+    def scales(self) -> jnp.ndarray:
+        return self.meta[..., 0]
+
+    @property
+    def sqnorms(self) -> jnp.ndarray:
+        return self.meta[..., 1]
+
+    @property
+    def errs(self) -> jnp.ndarray:
+        return self.meta[..., 2]
+
+
+Corpus = Union[jnp.ndarray, QuantizedCorpus]
+
+
+def quantize_corpus(points: jnp.ndarray, keep_raw: bool = True) -> QuantizedCorpus:
+    """Per-vector symmetric absmax int8 quantization of an (N, d) corpus."""
+    points = jnp.asarray(points)
+    codes, scales = quantize_int8_rows(points.astype(jnp.float32))
+    deq = codes.astype(jnp.float32) * scales[:, None]
+    sqnorms = jnp.sum(deq * deq, axis=-1)
+    err = jnp.sqrt(jnp.sum((points.astype(jnp.float32) - deq) ** 2, axis=-1))
+    return QuantizedCorpus(
+        codes=codes,
+        meta=jnp.stack([scales, sqnorms, err], axis=-1),
+        raw=points if keep_raw else None,
+    )
+
+
+def corpus_cast(points: jnp.ndarray, corpus_dtype: str) -> Corpus:
+    """Cast an f32 corpus to its storage dtype (the ``corpus_dtype`` knob)."""
+    if corpus_dtype not in CORPUS_DTYPES:
+        raise ValueError(
+            f"corpus_dtype {corpus_dtype!r} not in {CORPUS_DTYPES}")
+    if corpus_dtype == "int8":
+        return quantize_corpus(points)
+    return jnp.asarray(points).astype(jnp.dtype(corpus_dtype))
+
+
+def corpus_dtype_name(points: Corpus) -> str:
+    if isinstance(points, QuantizedCorpus):
+        return "int8"
+    return str(jnp.asarray(points).dtype)
+
+
+def corpus_size(points: Corpus) -> int:
+    return (points.codes if isinstance(points, QuantizedCorpus)
+            else points).shape[0]
+
+
+def corpus_dim(points: Corpus) -> int:
+    return (points.codes if isinstance(points, QuantizedCorpus)
+            else points).shape[-1]
+
+
+def bytes_per_vector(points: Corpus) -> int:
+    """Hot-loop HBM bytes gathered per distance (the roofline term)."""
+    d = corpus_dim(points)
+    if isinstance(points, QuantizedCorpus):
+        return d + META_BYTES  # int8 codes + the f32 metadata row
+    return d * jnp.dtype(points.dtype).itemsize
+
+
+def query_quant_err(q: jnp.ndarray) -> jnp.ndarray:
+    """Exact L2 query-side quantization error ``||q - q_hat||``.
+
+    The int8 MXU kernels quantize the query with the same absmax scheme
+    mirrored here, so this is *their* exact error; the XLA reference path
+    keeps the query in f32 (error 0 <= this). The bound charges it
+    unconditionally so one envelope covers both backends. Broadcasts over
+    leading batch dims; reduces the trailing feature dim. Costs O(d) per
+    query — loop-invariant, hoisted by XLA out of the search loop.
+    """
+    qf = q.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(qf), axis=-1), 1e-12) / 127.0
+    q_hat = jnp.clip(jnp.round(qf / scale[..., None]), -127, 127) * scale[..., None]
+    return jnp.sqrt(jnp.sum((qf - q_hat) ** 2, axis=-1))
+
+
+def lower_bound_dists(meta: jnp.ndarray, d_hat: jnp.ndarray,
+                      err_q: jnp.ndarray, q_norm: jnp.ndarray,
+                      metric: str) -> jnp.ndarray:
+    """Certified lower bound of the true distance from the approximate one.
+
+    ``meta`` is the gathered (..., 3) metadata rows of the candidates,
+    ``d_hat`` their (...,) approximate distances, ``err_q``/``q_norm`` the
+    (broadcastable) query-side error and query L2 norm. The result is what
+    the quantized search paths hand to every ``dist <= r`` test — see the
+    module docstring for why that makes the plain radius a keep band."""
+    if metric == "l2":
+        g = (meta[..., 2] + err_q) * (1.0 + _SLACK)
+        return jnp.maximum(jnp.sqrt(jnp.maximum(d_hat, 0.0)) - g, 0.0) ** 2
+    eps = (meta[..., 2] * q_norm
+           + jnp.sqrt(jnp.maximum(meta[..., 1], 0.0)) * err_q) * (1.0 + _SLACK)
+    return d_hat - eps
+
+
+def quantized_gather_lb(corpus: QuantizedCorpus, safe_ids: jnp.ndarray,
+                        q: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """The XLA quantized hot path, shared by every reference backend:
+    int8 row gather (the ~4x HBM saving) + in-register dequantization +
+    certified lower bound. ``safe_ids`` is any (..., R) int32 pre-clamped
+    to [0, N); ``q`` is (..., d), broadcastable against the ids' batch
+    dims. The query stays exact f32 on this path, so ``err_q = 0`` (see
+    the module docstring; the int8 MXU kernels subtract their own)."""
+    codes = jnp.take(corpus.codes, safe_ids, axis=0)      # (..., R, d) int8
+    meta = jnp.take(corpus.meta, safe_ids, axis=0)        # (..., R, 3)
+    vecs = codes.astype(jnp.float32) * meta[..., 0:1]
+    qf = q.astype(jnp.float32)
+    if metric == "l2":
+        diff = vecs - qf[..., None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    else:  # ip
+        d = -jnp.sum(vecs * qf[..., None, :], axis=-1)
+    return lower_bound_dists(
+        d_hat=d, meta=meta, err_q=jnp.float32(0.0),
+        q_norm=jnp.sqrt(jnp.sum(qf * qf, axis=-1))[..., None], metric=metric)
+
+
+def upper_bound_dists(corpus: QuantizedCorpus, ids: jnp.ndarray,
+                      d_lb: jnp.ndarray, q: jnp.ndarray,
+                      metric: str) -> jnp.ndarray:
+    """Certified upper bound recovered from a stored lower bound.
+
+    ``ids`` (any int32 shape, pre-clamped to [0, N)) are one query's
+    candidates and ``d_lb`` their ``lower_bound_dists`` values; ``q`` is
+    that query. ``d_ub <= r`` proves membership (the sure-accept side of
+    the band); the rest of the kept candidates are ambiguous and must be
+    exact-reranked. Valid even where the l2 lower bound clamped to zero."""
+    meta = jnp.take(corpus.meta, ids, axis=0)           # (..., 3)
+    err_q = query_quant_err(q)
+    if metric == "l2":
+        g = (meta[..., 2] + err_q) * (1.0 + _SLACK)
+        return (jnp.sqrt(jnp.maximum(d_lb, 0.0)) + 2.0 * g) ** 2
+    q_norm = jnp.sqrt(jnp.sum(q.astype(jnp.float32) ** 2, axis=-1))
+    eps = (meta[..., 2] * q_norm
+           + jnp.sqrt(jnp.maximum(meta[..., 1], 0.0)) * err_q) * (1.0 + _SLACK)
+    return d_lb + 2.0 * eps
+
+
+def pad_corpus_rows(corpus: QuantizedCorpus, n_pad: int,
+                    far: float) -> QuantizedCorpus:
+    """Append ``n_pad`` sentinel rows (sharding's short-last-shard padding).
+
+    Pad rows get zero codes with zero scale and zero error (a ``far`` raw
+    value would register a huge per-row error and place the row inside
+    every rerank band) and a ``far`` stored sqnorm, which keeps the
+    matmul-form distance defense; on the diff-form path pad rows rely on
+    build_sharded's unreachability guarantee alone (no graph edge ever
+    reaches them)."""
+    if n_pad <= 0:
+        return corpus
+    n, d = corpus.codes.shape
+    pad_meta = jnp.broadcast_to(jnp.asarray([0.0, far, 0.0], jnp.float32),
+                                (n_pad, 3))
+    return QuantizedCorpus(
+        codes=jnp.concatenate(
+            [corpus.codes, jnp.zeros((n_pad, d), jnp.int8)]),
+        meta=jnp.concatenate([corpus.meta, pad_meta]),
+        raw=None if corpus.raw is None else jnp.concatenate(
+            [corpus.raw,
+             jnp.full((n_pad, d), far, corpus.raw.dtype)]),
+    )

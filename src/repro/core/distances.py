@@ -19,6 +19,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .corpus import QuantizedCorpus, quantized_gather_lb
+
 METRICS = ("l2", "ip")
 
 
@@ -49,13 +51,26 @@ def pairwise_dist(queries: jnp.ndarray, points: jnp.ndarray, metric: str = "l2")
 
 @partial(jax.jit, static_argnames=("metric",))
 def gather_dist(
-    points: jnp.ndarray,  # (N, d) database
+    points,               # (N, d) database array, or a QuantizedCorpus
     ids: jnp.ndarray,     # (..., R) int32 candidate ids (may contain INVALID)
     q: jnp.ndarray,       # (..., d) query, broadcastable against ids' batch dims
     metric: str = "l2",
 ) -> jnp.ndarray:
-    """Distances from q to points[ids]; padded/invalid ids get +inf."""
+    """Distances from q to points[ids]; padded/invalid ids get +inf.
+
+    A ``QuantizedCorpus`` yields each candidate's *certified lower bound*
+    (``core.corpus.lower_bound_dists``): the int8 rows dequantize
+    in-register and the bound subtracts the row's own reconstruction error,
+    so every downstream ``dist <= r`` test keeps a provable superset at the
+    caller's original radius (the rerank stage trims the boundary band).
+    """
     _check(metric)
+    if isinstance(points, QuantizedCorpus):
+        n = points.codes.shape[0]
+        valid = ids < n
+        safe = jnp.where(valid, ids, 0)
+        d = quantized_gather_lb(points, safe, q, metric)
+        return jnp.where(valid, d, jnp.inf)
     n = points.shape[0]
     valid = ids < n
     safe = jnp.where(valid, ids, 0)

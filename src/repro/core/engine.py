@@ -18,6 +18,7 @@ import numpy as np
 
 from .beam_search import SearchConfig, beam_search_batch, broadcast_radius, topk_from_state
 from .build import BuildConfig, build_vamana
+from .corpus import Corpus, bytes_per_vector, corpus_cast, corpus_dim, corpus_dtype_name, corpus_size
 from .graph import Graph, start_points
 from .range_search import RangeConfig, RangeResult, range_search_compacted, range_search_fused
 
@@ -25,9 +26,16 @@ from .range_search import RangeConfig, RangeResult, range_search_compacted, rang
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class RangeSearchEngine:
-    """An in-memory graph index over a vector corpus."""
+    """An in-memory graph index over a vector corpus.
 
-    points: jnp.ndarray    # (N, d)
+    ``points`` is a ``Corpus``: a plain (N, d) array (f32/bf16 storage) or a
+    ``QuantizedCorpus`` (int8 codes + scales + raw vectors) — the whole
+    query path dispatches on the value. Graph *construction* always runs on
+    exact f32 vectors; ``corpus_dtype`` controls only what the built engine
+    stores and the search loop gathers.
+    """
+
+    points: Corpus         # (N, d) array or QuantizedCorpus
     graph: Graph
     start_ids: jnp.ndarray # (S,) search entry points (medoid by default)
     metric: str = dataclasses.field(metadata=dict(static=True), default="l2")
@@ -36,18 +44,23 @@ class RangeSearchEngine:
     @staticmethod
     def build(points: jnp.ndarray, build_cfg: Optional[BuildConfig] = None,
               metric: str = "l2", seed: int = 0,
-              n_starts: int = 4) -> "RangeSearchEngine":
+              n_starts: int = 4,
+              corpus_dtype: Optional[str] = None) -> "RangeSearchEngine":
         cfg = build_cfg or BuildConfig(metric=metric)
         graph = build_vamana(points, cfg, seed=seed)
-        return RangeSearchEngine(points=points, graph=graph,
-                                 start_ids=start_points(points, metric, n_starts),
-                                 metric=metric)
+        return RangeSearchEngine.from_graph(points, graph, metric=metric,
+                                            n_starts=n_starts,
+                                            corpus_dtype=corpus_dtype)
 
     @staticmethod
     def from_graph(points: jnp.ndarray, graph: Graph, metric: str = "l2",
-                   n_starts: int = 4) -> "RangeSearchEngine":
+                   n_starts: int = 4,
+                   corpus_dtype: Optional[str] = None) -> "RangeSearchEngine":
+        starts = start_points(points, metric, n_starts)
+        if corpus_dtype is not None:
+            points = corpus_cast(points, corpus_dtype)
         return RangeSearchEngine(points=points, graph=graph,
-                                 start_ids=start_points(points, metric, n_starts),
+                                 start_ids=starts,
                                  metric=metric)
 
     # -- queries -------------------------------------------------------------
@@ -80,10 +93,12 @@ class RangeSearchEngine:
     def stats(self) -> dict:
         deg = np.asarray(self.graph.degrees())
         return dict(
-            num_points=int(self.points.shape[0]),
-            dim=int(self.points.shape[1]),
+            num_points=corpus_size(self.points),
+            dim=corpus_dim(self.points),
             max_degree=int(self.graph.max_degree),
             mean_degree=float(deg.mean()),
             min_degree=int(deg.min()),
             metric=self.metric,
+            corpus_dtype=corpus_dtype_name(self.points),
+            hot_bytes_per_vector=int(bytes_per_vector(self.points)),
         )

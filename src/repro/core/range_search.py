@@ -44,7 +44,8 @@ from .bitset import (
     bitset_num_words,
     first_slot_occurrence,
 )
-from .distances import gather_dist
+from .corpus import QuantizedCorpus, corpus_size, upper_bound_dists
+from .distances import gather_dist, point_dist
 from .graph import Graph
 
 
@@ -57,6 +58,11 @@ class RangeConfig:
     result_cap: int = 1024        # K_cap: per-query result buffer
     frontier_rounds: int = 4096   # greedy expansion budget (expansions/query)
     lam: float = 1.0              # λ threshold for entering phase 2
+    # quantized-corpus two-pass: exact-rerank the guard-band boundary after
+    # the approximate search (requires the corpus to carry raw vectors).
+    # False keeps the guard-banded superset (keep band d_hat <= r + eps) —
+    # the pre-rerank membership the oracle superset test pins down.
+    rerank: bool = True
 
     def __post_init__(self):
         if self.mode not in ("beam", "doubling", "greedy"):
@@ -78,6 +84,7 @@ class RangeResult:
     n_dist: jnp.ndarray    # (Q,) int32 — total distance computations
     es_stopped: jnp.ndarray  # (Q,) bool
     phase2: jnp.ndarray    # (Q,) bool — query took the second phase
+    n_rerank: jnp.ndarray  # (Q,) int32 — guard-band candidates exact-reranked
 
 
 # ---------------------------------------------------------------------------
@@ -137,10 +144,25 @@ def _greedy_init(st: BeamState, r, cap: int, num_words: int,
 
 
 def _greedy_step_reference(points, graph: Graph, q, r, cap: int,
-                           scfg: SearchConfig, gs: GreedyState) -> GreedyState:
+                           scfg: SearchConfig, gs: GreedyState,
+                           exact_bits: bool = False) -> GreedyState:
     """Single-node greedy step (``expand_width=1``): the pre-fusion dataflow,
-    kept verbatim as the baseline (membership test is an O(R * cap)
-    broadcast against the result buffer; ``seen_bits`` carried untouched)."""
+    kept as the baseline the fused path is measured against.
+
+    Membership testing has a fast path: when the discovery bitset is
+    *exact* (one bit per corpus node — ``bitset_exact``), probing
+    ``seen_bits`` is semantically identical to the original O(R * cap)
+    broadcast against the result buffer, because ``_greedy_init`` seeds the
+    bitset with exactly the buffer's members and this step mirrors every
+    append into it. (Cap-dropped neighbors are marked too; re-encountering
+    one under the broadcast would re-count it as "new" and re-drop it —
+    same buffer, count, and overflow flag either way, since the buffer only
+    grows. Verified by the E=1-vs-fused parity test in tests/test_oracle.py,
+    which pins the two dataflows to identical result sets on both f32 and
+    quantized corpora.) In the *hashed* regime distinct ids share buckets,
+    where a probe could report false membership — there the reference keeps
+    the paper-faithful broadcast, so ``expand_width=1`` stays a valid
+    baseline at every corpus scale."""
     node = gs.res_ids[gs.expand_ptr]
     nbrs = graph.out_neighbors(node)  # (R,)
     nd = gather_dist(points, nbrs, q, scfg.metric)
@@ -149,7 +171,11 @@ def _greedy_step_reference(points, graph: Graph, q, r, cap: int,
         (nbrs[:, None] == nbrs[None, :]) & (rr[None, :] < rr[:, None]) & (nbrs[:, None] != INVALID_ID),
         axis=1,
     )
-    seen = jnp.any((nbrs[:, None] == gs.res_ids[None, :]) & (nbrs[:, None] != INVALID_ID), axis=1)
+    if exact_bits:
+        seen = bitset_contains(gs.seen_bits,
+                               jnp.where(nbrs != INVALID_ID, nbrs, 0))
+    else:
+        seen = jnp.any((nbrs[:, None] == gs.res_ids[None, :]) & (nbrs[:, None] != INVALID_ID), axis=1)
     new = (nd <= r) & (~dup_in_row) & (~seen) & (nbrs != INVALID_ID)
     pos = gs.res_count + jnp.cumsum(new.astype(jnp.int32)) - 1
     write_pos = jnp.where(new & (pos < cap), pos, cap)  # cap == OOB -> dropped
@@ -164,7 +190,8 @@ def _greedy_step_reference(points, graph: Graph, q, r, cap: int,
         rounds=gs.rounds + 1,
         overflow=gs.overflow | (gs.res_count + n_new > cap),
         n_dist=gs.n_dist + jnp.sum(nbrs != INVALID_ID).astype(jnp.int32),
-        seen_bits=gs.seen_bits,
+        seen_bits=bitset_add(gs.seen_bits, nbrs, new) if exact_bits
+        else gs.seen_bits,
     )
 
 
@@ -225,7 +252,7 @@ def _greedy_step(points, graph: Graph, q, r, cap: int, scfg: SearchConfig,
     valid = nbr_ids != INVALID_ID
     seen = bitset_contains(gs.seen_bits, jnp.where(valid, nbr_ids, 0)) & valid
     new = valid & ~seen & (nd <= r)
-    if not bitset_exact(points.shape[0], gs.seen_bits.shape[0]):
+    if not bitset_exact(corpus_size(points), gs.seen_bits.shape[0]):
         new = first_slot_occurrence(gs.seen_bits, nbr_ids, new)
 
     pos = gs.res_count + jnp.cumsum(new.astype(jnp.int32)) - 1
@@ -263,9 +290,10 @@ def greedy_search(
     rounds (the last iteration may overshoot by at most E - 1).
     """
     r = jnp.asarray(r, jnp.float32)
-    num_words = bitset_num_words(points.shape[0], scfg.bitset_cap_bits)
-    gs = _greedy_init(st, r, cap, num_words,
-                      bitset_exact(points.shape[0], num_words))
+    n_corpus = corpus_size(points)
+    num_words = bitset_num_words(n_corpus, scfg.bitset_cap_bits)
+    exact_bits = bitset_exact(n_corpus, num_words)
+    gs = _greedy_init(st, r, cap, num_words, exact_bits)
     if not isinstance(active, jnp.ndarray):
         active = jnp.asarray(active)
 
@@ -275,7 +303,8 @@ def greedy_search(
     if scfg.eff_expand_width == 1:  # paper-faithful single-node reference
         gs = jax.lax.while_loop(
             cond,
-            lambda g: _greedy_step_reference(points, graph, q, r, cap, scfg, g),
+            lambda g: _greedy_step_reference(points, graph, q, r, cap, scfg, g,
+                                             exact_bits),
             gs)
     else:
         pnorms = _point_norms(points, scfg)
@@ -313,12 +342,61 @@ def _needs_phase2(st: BeamState, r, lam: float) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Quantized-corpus two-pass: certified-lower-bound search + boundary rerank
+# ---------------------------------------------------------------------------
+#
+# The quantized distance paths return certified LOWER bounds of the true
+# distances (core.corpus), so the search loop's plain ``dist <= r`` tests
+# already keep a provable per-candidate superset at the caller's radius —
+# no radius plumbing. The stage below recovers each kept candidate's upper
+# bound: ``ub <= r`` proves membership, the rest are ambiguous and get one
+# batched exact f32 gather.
+
+def _rerank_lane(points: QuantizedCorpus, q, r, ids, dists, metric: str):
+    """Exact-rerank one query's guard-band boundary.
+
+    Kept candidates split by the recovered per-vector upper bound:
+    ``ub <= r`` are provably in range and pass through untouched; the rest
+    (the *ambiguous band*) get one batched f32 gather against the raw
+    corpus and the exact test ``d <= r``. Survivors are stable-compacted to
+    the front. Returns (ids, dists, count, n_ambiguous).
+    """
+    k = ids.shape[0]
+    valid = ids != INVALID_ID
+    safe = jnp.where(valid, ids, 0)
+    ub = upper_bound_dists(points, safe, dists, q, metric)        # (K,)
+    amb = valid & (ub > r)
+    exact = gather_dist(points.raw, jnp.where(amb, ids, INVALID_ID), q, metric)
+    keep = valid & jnp.where(amb, exact <= r, True)
+    new_d = jnp.where(amb & keep, exact, dists)
+    # stable left-compaction (one bounded scatter; positions are unique)
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    wp = jnp.where(keep, pos, k)                                  # k == dropped
+    out_ids = jnp.full((k,), INVALID_ID, jnp.int32).at[wp].set(ids, mode="drop")
+    out_d = jnp.full((k,), jnp.inf, jnp.float32).at[wp].set(new_d, mode="drop")
+    return (out_ids, out_d, jnp.sum(keep.astype(jnp.int32)),
+            jnp.sum(amb.astype(jnp.int32)))
+
+
+def _rerank_fused(points: QuantizedCorpus, queries, r: jnp.ndarray,
+                  res: RangeResult, metric: str) -> RangeResult:
+    """In-program rerank over the whole result buffer (the fused path has no
+    host sync to compact through; the compacted QPS path reranks only the
+    ambiguous (lane, slot) pairs — see ``_rerank_host``)."""
+    fn = lambda q_, r_, i_, d_: _rerank_lane(points, q_, r_, i_, d_, metric)
+    ids, dists, count, n_amb = jax.vmap(fn)(queries, r, res.ids, res.dists)
+    return dataclasses.replace(
+        res, ids=ids, dists=dists, count=count,
+        n_dist=res.n_dist + n_amb, n_rerank=res.n_rerank + n_amb)
+
+
+# ---------------------------------------------------------------------------
 # Fused single-program batch (used by dry-run lowering + single-dispatch serve)
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("cfg",))
 def range_search_fused(
-    points: jnp.ndarray,
+    points,                       # (N, d) array or QuantizedCorpus
     graph: Graph,
     queries: jnp.ndarray,
     start_ids: jnp.ndarray,
@@ -327,39 +405,110 @@ def range_search_fused(
     es_radius: Optional[jnp.ndarray] = None,  # scalar or (Q,)
 ) -> RangeResult:
     r = broadcast_radius(r, queries.shape[0])
+    # a quantized corpus searches on certified lower-bound distances, so
+    # these r-threshold tests keep a per-candidate superset at the caller's
+    # radius; the rerank stage below trims the boundary band exactly
     st = beam_search_batch(points, graph, queries, start_ids, r, cfg.search, es_radius)
+    zeros = jnp.zeros_like(st.n_visited)
 
     if cfg.mode in ("beam", "doubling"):
         ids, dists, count, over = jax.vmap(
             lambda st_, r_: _beam_results(st_, r_, cfg.result_cap))(st, r)
         phase2 = (st.active_width > cfg.search.beam) if cfg.mode == "doubling" else jnp.zeros_like(st.done)
-        return RangeResult(ids=ids, dists=dists, count=count, overflow=over,
-                           n_visited=st.n_visited, n_dist=st.n_dist,
-                           es_stopped=st.es_stopped, phase2=phase2)
-
-    # greedy: phase 2 only for saturated lanes (masked, not compacted)
-    active = jax.vmap(lambda st_, r_: _needs_phase2(st_, r_, cfg.lam))(st, r)
-    gfn = lambda q_, r_, st_, a_: greedy_search(
-        points, graph, q_, r_, st_, cfg.result_cap, cfg.frontier_rounds, cfg.search, a_
-    )
-    gs = jax.vmap(gfn)(queries, r, st, active)
-    b_ids, b_dists, b_count, b_over = jax.vmap(
-        lambda st_, r_: _beam_results(st_, r_, cfg.result_cap))(st, r)
-    ids = jnp.where(active[:, None], gs.res_ids, b_ids)
-    dists = jnp.where(active[:, None], gs.res_dists, b_dists)
-    count = jnp.where(active, gs.res_count, b_count)
-    over = jnp.where(active, gs.overflow, b_over)
-    return RangeResult(ids=ids, dists=dists, count=count, overflow=over,
-                       n_visited=st.n_visited, n_dist=st.n_dist + jnp.where(active, gs.n_dist, 0),
-                       es_stopped=st.es_stopped, phase2=active)
+        res = RangeResult(ids=ids, dists=dists, count=count, overflow=over,
+                          n_visited=st.n_visited, n_dist=st.n_dist,
+                          es_stopped=st.es_stopped, phase2=phase2,
+                          n_rerank=zeros)
+    else:
+        # greedy: phase 2 only for saturated lanes (masked, not compacted)
+        active = jax.vmap(lambda st_, r_: _needs_phase2(st_, r_, cfg.lam))(st, r)
+        gfn = lambda q_, r_, st_, a_: greedy_search(
+            points, graph, q_, r_, st_, cfg.result_cap, cfg.frontier_rounds, cfg.search, a_
+        )
+        gs = jax.vmap(gfn)(queries, r, st, active)
+        b_ids, b_dists, b_count, b_over = jax.vmap(
+            lambda st_, r_: _beam_results(st_, r_, cfg.result_cap))(st, r)
+        ids = jnp.where(active[:, None], gs.res_ids, b_ids)
+        dists = jnp.where(active[:, None], gs.res_dists, b_dists)
+        count = jnp.where(active, gs.res_count, b_count)
+        over = jnp.where(active, gs.overflow, b_over)
+        res = RangeResult(ids=ids, dists=dists, count=count, overflow=over,
+                          n_visited=st.n_visited, n_dist=st.n_dist + jnp.where(active, gs.n_dist, 0),
+                          es_stopped=st.es_stopped, phase2=active,
+                          n_rerank=zeros)
+    if (isinstance(points, QuantizedCorpus) and cfg.rerank
+            and points.raw is not None):
+        res = _rerank_fused(points, queries, r, res, cfg.search.metric)
+    return res
 
 
 # ---------------------------------------------------------------------------
 # Two-phase pipeline with host-side query compaction (the QPS path)
 # ---------------------------------------------------------------------------
 
+def _maybe_rerank_host(points, queries, rj: jnp.ndarray,
+                       res: RangeResult, cfg: RangeConfig) -> RangeResult:
+    """Host-compacted boundary rerank for the QPS path.
+
+    The ambiguous band is collected as flat (lane, slot) pairs across the
+    whole batch and padded to the next power of two, so the exact pass is
+    ONE batched f32 gather whose size tracks the actual band population
+    (O(log) compiled variants) — zero-band batches pay a single vectorized
+    threshold test and no gather at all.
+    """
+    if not (isinstance(points, QuantizedCorpus) and cfg.rerank
+            and points.raw is not None):
+        return res
+    metric = cfg.search.metric
+    ids = np.array(jax.device_get(res.ids))
+    dists = np.array(jax.device_get(res.dists))
+    valid = ids != INVALID_ID
+    safe = np.where(valid, ids, 0)
+    ub = np.asarray(jax.vmap(
+        lambda i_, d_, q_: upper_bound_dists(points, i_, d_, q_, metric))(
+            jnp.asarray(safe), jnp.asarray(dists), queries))
+    amb = valid & (ub > np.asarray(rj)[:, None])
+    n_rerank = amb.sum(axis=1).astype(np.int32)
+    if not amb.any():
+        return res
+    lanes_p, slots_p = np.nonzero(amb)
+    bucket = next_pow2(len(lanes_p))
+    pad = bucket - len(lanes_p)
+    ids_p = np.concatenate([ids[lanes_p, slots_p],
+                            np.zeros(pad, np.int32)])
+    lanes_pp = np.concatenate([lanes_p, np.zeros(pad, lanes_p.dtype)])
+    exact_p = np.asarray(_exact_pairs(points.raw, queries,
+                                      jnp.asarray(ids_p, jnp.int32),
+                                      jnp.asarray(lanes_pp, jnp.int32),
+                                      metric))
+    rnp = np.asarray(rj)
+    exact = np.full(ids.shape, np.inf, np.float32)
+    exact[lanes_p, slots_p] = exact_p[:len(lanes_p)]
+    keep = valid & np.where(amb, exact <= rnp[:, None], True)
+    new_d = np.where(amb & keep, exact, dists)
+    # stable left-compaction of the survivors, vectorized over lanes
+    order = np.argsort(~keep, axis=1, kind="stable")
+    out_ids = np.take_along_axis(np.where(keep, ids, INVALID_ID), order, axis=1)
+    out_d = np.take_along_axis(np.where(keep, new_d, np.inf), order, axis=1)
+    return dataclasses.replace(
+        res,
+        ids=jnp.asarray(out_ids),
+        dists=jnp.asarray(out_d),
+        count=jnp.asarray(keep.sum(axis=1).astype(np.int32)),
+        n_dist=res.n_dist + jnp.asarray(n_rerank),
+        n_rerank=res.n_rerank + jnp.asarray(n_rerank))
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def _exact_pairs(raw, queries, ids_p, lanes_p, metric: str):
+    """Exact f32 distances for flat (corpus id, query lane) pairs."""
+    vecs = jnp.take(raw, ids_p, axis=0).astype(jnp.float32)
+    qv = jnp.take(queries, lanes_p, axis=0).astype(jnp.float32)
+    return point_dist(vecs, qv, metric)
+
+
 def range_search_compacted(
-    points: jnp.ndarray,
+    points,               # (N, d) array or QuantizedCorpus
     graph: Graph,
     queries: jnp.ndarray,
     start_ids: jnp.ndarray,
@@ -381,7 +530,9 @@ def range_search_compacted(
     # §Perf iteration C3 change: in-place widening inside the batched while
     # made every lane wait for the widest one — a 10x QPS straggler penalty;
     # the paper's restart-style doubling now runs on the compacted survivors
-    # only, like greedy)
+    # only, like greedy). A quantized corpus searches on certified
+    # lower-bound distances (superset at rj); _maybe_rerank_host trims the
+    # boundary band exactly.
     p1_search = cfg.search if cfg.mode != "doubling" else dataclasses.replace(
         cfg.search, max_beam=cfg.search.beam,
         visit_cap=min(cfg.search.visit_cap, 4 * cfg.search.beam))
@@ -391,14 +542,15 @@ def range_search_compacted(
     base = RangeResult(ids=b_ids, dists=b_dists, count=b_count, overflow=b_over,
                        n_visited=st.n_visited, n_dist=st.n_dist,
                        es_stopped=st.es_stopped,
-                       phase2=jnp.zeros_like(st.done))
+                       phase2=jnp.zeros_like(st.done),
+                       n_rerank=jnp.zeros_like(st.n_visited))
     if cfg.mode == "beam":
-        return base
+        return _maybe_rerank_host(points, queries, rj, base, cfg)
 
     active = np.asarray(jax.vmap(lambda st_, r_: _needs_phase2(st_, r_, cfg.lam))(st, rj))
     n_active = int(active.sum())
     if n_active == 0:
-        return base
+        return _maybe_rerank_host(points, queries, rj, base, cfg)
 
     sel = np.nonzero(active)[0]
     bucket = next_pow2(n_active)
@@ -438,7 +590,9 @@ def range_search_compacted(
     over[sel] = s_over[:n_active]
     ndist[sel] += s_nd[:n_active]
     phase2 = jnp.asarray(active)
-    return RangeResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
-                       count=jnp.asarray(count), overflow=jnp.asarray(over),
-                       n_visited=base.n_visited, n_dist=jnp.asarray(ndist),
-                       es_stopped=base.es_stopped, phase2=phase2)
+    merged = RangeResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+                         count=jnp.asarray(count), overflow=jnp.asarray(over),
+                         n_visited=base.n_visited, n_dist=jnp.asarray(ndist),
+                         es_stopped=base.es_stopped, phase2=phase2,
+                         n_rerank=jnp.zeros_like(base.n_visited))
+    return _maybe_rerank_host(points, queries, rj, merged, cfg)

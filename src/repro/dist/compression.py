@@ -12,6 +12,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# Relative slack applied to the quantized-corpus guard-band error bounds
+# (core.corpus and the Pallas int8 kernels — this module is importable from
+# both without a cycle): the bounds are derived in real arithmetic but
+# evaluated in f32 (~1e-7 relative rounding, plus kernel-vs-host reduction-
+# order differences of the same magnitude). 1e-4 is orders of magnitude
+# more than enough and costs a negligible band widening. The rerank's
+# upper-bound recovery assumes every producer used AT LEAST this slack, so
+# all lower-bound sites must share the constant.
+GUARD_SLACK = 1e-4
+
 
 def quantize_int8(x):
     """(q int8, scale) with symmetric per-tensor absmax scaling."""
@@ -19,6 +29,19 @@ def quantize_int8(x):
     scale = jnp.maximum(amax, 1e-12) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale
+
+
+def quantize_int8_rows(x):
+    """(q (N, d) int8, scales (N,) f32): the per-row extension of
+    ``quantize_int8``. Each row carries its own absmax scale, so the
+    element-wise error is bounded by ``scales[i] / 2`` *per row* — the
+    bound the quantized-corpus guard band (``core.corpus``) is derived
+    from. ``scale = amax / 127`` means no value clips: round(x/scale) is
+    always within [-127, 127]."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scales = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scales[..., None]), -127, 127).astype(jnp.int8)
+    return q, scales
 
 
 def dequantize_int8(q, scale):

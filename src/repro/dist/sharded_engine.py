@@ -30,6 +30,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.beam_search import broadcast_radius
+from ..core.corpus import corpus_cast, pad_corpus_rows
 from ..core.graph import Graph
 from ..core.range_search import RangeConfig, RangeResult, range_search_fused
 from ..utils import INVALID_ID, cdiv
@@ -37,10 +38,22 @@ from .compat import shard_map
 from .sharding import _axis_size
 
 
+def _points_leaf(points):
+    """Representative array leaf of a corpus (works for stacked
+    QuantizedCorpus pytrees and plain arrays alike)."""
+    return jax.tree.leaves(points)[0]
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class ShardedCorpus:
-    """Stacked per-shard sub-indices (leading axis = shard)."""
+    """Stacked per-shard sub-indices (leading axis = shard).
+
+    ``points`` is either a stacked (S, n, d) array or a stacked
+    ``QuantizedCorpus`` whose every leaf carries the shard axis in front
+    (codes (S, n, d), meta (S, n, 3), raw (S, n, d)) — each shard
+    quantizes *locally*, so its guard band is as tight as its own
+    per-vector errors allow."""
 
     points: Any     # (S, n, d) — shard blocks (pad rows edge-free/unreachable)
     neighbors: Any  # (S, n, R) int32 — per-shard graph adjacency
@@ -51,11 +64,11 @@ class ShardedCorpus:
 
     @property
     def n_shards(self) -> int:
-        return self.points.shape[0]
+        return _points_leaf(self.points).shape[0]
 
     @property
     def shard_size(self) -> int:
-        return self.points.shape[1]
+        return _points_leaf(self.points).shape[1]
 
 
 # Sentinel coordinates for rows padding a short last shard. The value never
@@ -71,6 +84,7 @@ def build_sharded(
     n_shards: int,
     build_fn: Callable,   # (shard_points (n, d)) -> (Graph, start_ids (k,))
     lane_pad: int = 0,
+    corpus_dtype: str = "float32",
 ) -> ShardedCorpus:
     """Partition ``points`` into ``n_shards`` contiguous blocks and build one
     sub-index per block with ``build_fn``. A short last block is padded to
@@ -82,7 +96,12 @@ def build_sharded(
     (``Graph.lane_padded``) so the stacked adjacency is ready for the fused
     Pallas expand kernel (``SearchConfig.use_expand_kernel``), whose VMEM
     blocks want R on a 128-lane boundary — done once here rather than per
-    search dispatch."""
+    search dispatch.
+
+    ``corpus_dtype`` controls per-shard storage: graphs always build on the
+    exact f32 block; "int8" then quantizes each shard *locally* (per-shard
+    scales and guard-band maxima, computed before any pad rows are appended
+    so sentinel values cannot widen the band)."""
     pts = np.asarray(points)
     n_total, d = pts.shape
     n = cdiv(n_total, n_shards)
@@ -93,19 +112,24 @@ def build_sharded(
         if lane_pad:
             graph = graph.lane_padded(lane_pad)
         neighbors = np.asarray(graph.neighbors)
-        if block.shape[0] < n:  # pad points AND adjacency (INVALID = no edge)
-            n_pad = n - block.shape[0]
-            block = np.concatenate(
-                [block, np.full((n_pad, d), _FAR, dtype=pts.dtype)], axis=0)
+        n_pad = n - block.shape[0]
+        stored = corpus_cast(jnp.asarray(block), corpus_dtype)
+        if n_pad:  # pad points AND adjacency (INVALID = no edge)
+            if corpus_dtype == "int8":
+                stored = pad_corpus_rows(stored, n_pad, _FAR)
+            else:
+                stored = jnp.concatenate(
+                    [stored,
+                     jnp.full((n_pad, d), _FAR, dtype=stored.dtype)], axis=0)
             neighbors = np.concatenate(
                 [neighbors,
                  np.full((n_pad, neighbors.shape[1]), INVALID_ID, np.int32)],
                 axis=0)
-        blocks.append(jnp.asarray(block))
+        blocks.append(stored)
         nbrs.append(jnp.asarray(neighbors))
         starts.append(jnp.asarray(start_ids, jnp.int32).reshape(-1))
     return ShardedCorpus(
-        points=jnp.stack(blocks),
+        points=jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
         neighbors=jnp.stack(nbrs),
         start_ids=jnp.stack(starts),
         offsets=jnp.arange(n_shards, dtype=jnp.int32) * n,
@@ -174,11 +198,15 @@ def sharded_range_search(
             [es_vec, jnp.broadcast_to(es_vec[:1], (q_pad - n_q,))])
 
     def local_fn(points, neighbors, start_ids, offsets, qs, rs, es):
-        # points (s_loc, n, d), qs (q_loc, d), rs/es (q_loc,):
-        # search every local shard at each query's own radius
-        ids, dists, cnts, overs, nvis, ndis, ess, ph2 = ([] for _ in range(8))
+        # points (s_loc, n, d) (or a stacked QuantizedCorpus), qs (q_loc, d),
+        # rs/es (q_loc,): search every local shard at each query's own
+        # radius. A quantized shard carries its own scales/guard maxima, so
+        # the per-shard search guard-bands rs locally and reranks its own
+        # boundary — the union merge then sees exact per-shard results.
+        ids, dists, cnts, overs, nvis, ndis, ess, ph2, nrr = ([] for _ in range(9))
         for s in range(s_loc):
-            res = range_search_fused(points[s], Graph(neighbors=neighbors[s]),
+            shard_pts = jax.tree.map(lambda x: x[s], points)
+            res = range_search_fused(shard_pts, Graph(neighbors=neighbors[s]),
                                      qs, start_ids[s], rs, cfg, es)
             gids = _remap_global(res.ids, offsets[s], corpus.n_total)
             ids.append(gids)
@@ -191,6 +219,7 @@ def sharded_range_search(
             ndis.append(res.n_dist)
             ess.append(res.es_stopped)
             ph2.append(res.phase2)
+            nrr.append(res.n_rerank)
         ids = jnp.concatenate(ids, axis=1)      # (q_loc, s_loc*K)
         dists = jnp.concatenate(dists, axis=1)
 
@@ -215,17 +244,25 @@ def sharded_range_search(
                 sum(e.astype(jnp.int32) for e in ess), model_axis) > 0,
             phase2=jax.lax.psum(
                 sum(p.astype(jnp.int32) for p in ph2), model_axis) > 0,
+            n_rerank=jax.lax.psum(sum(nrr), model_axis),
         )
 
     row = P(data_axis)
     mat = P(data_axis, None)
+    # the corpus spec shards every leaf's leading (shard) axis along the
+    # model axis — a tree of specs so a stacked QuantizedCorpus (leaves of
+    # differing rank, incl. per-shard () guard maxima) lays out the same
+    # way as a plain (S, n, d) array
+    pts_spec = jax.tree.map(
+        lambda leaf: P(model_axis, *([None] * (leaf.ndim - 1))),
+        corpus.points)
     fn = shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(model_axis, None, None), P(model_axis, None, None),
+        in_specs=(pts_spec, P(model_axis, None, None),
                   P(model_axis, None), P(model_axis), mat, row, row),
         out_specs=RangeResult(ids=mat, dists=mat, count=row, overflow=row,
                               n_visited=row, n_dist=row, es_stopped=row,
-                              phase2=row),
+                              phase2=row, n_rerank=row),
         check_vma=False,
     )
     out = fn(corpus.points, corpus.neighbors, corpus.start_ids,

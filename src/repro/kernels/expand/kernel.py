@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...dist.compression import GUARD_SLACK
 from ...utils import INVALID_ID
 
 
@@ -112,6 +113,159 @@ def _expand_kernel(
     dist_ref[0, :] = jnp.where(keep, dist, jnp.inf)
     cnt_ref[0, 0] = jnp.sum((n_ok & f_ok).astype(jnp.int32))
     tile_ref[pl.ds(e * adj.shape[0], adj.shape[0])] = kept
+
+
+def _expand_kernel_int8(
+    fid_ref,    # (Q*E,) int32 scalar-prefetch: clamped frontier ids
+    fval_ref,   # (Q*E,) int32 scalar-prefetch: frontier validity flags
+    adj_ref,    # (1, R) the frontier node's adjacency row
+    codes_ref,  # (N, d) int8 corpus codes, ANY/HBM — gathered by manual DMA
+    meta_ref,   # (N, 3) f32 [scale, |x_hat|^2, err] per row, ANY/HBM
+    q_ref,      # (1, d) the query row (f32)
+    ids_ref,    # (1, R) int32 out
+    dist_ref,   # (1, R) f32 out
+    cnt_ref,    # (1, 1) int32 out
+    cvec_ref,   # (R, d) int8 VMEM scratch: gathered neighbor codes
+    mvec_ref,   # (R, 3) f32 VMEM scratch: gathered neighbor metadata
+    tile_ref,   # (E*R,) int32 VMEM scratch: per-query surviving-id tile
+    sem,        # DMA semaphore
+    *,
+    n_nodes: int,
+    expand_width: int,
+    metric: str,
+):
+    """Int8 variant of ``_expand_kernel``: gathers 1-byte codes + a 12-byte
+    metadata row per neighbor (quartering the dominant HBM gather term),
+    quantizes the query once per step, runs the R distances as ONE int8 x
+    int8 MXU matmul with an int32 accumulator, and dequantizes the
+    accumulator by ``scale_row * scale_query``. The emitted distances are
+    the certified lower bounds of ``core.corpus.lower_bound_dists`` — the
+    per-row stored error plus this kernel's own exact query-quantization
+    error — so the search loop's threshold tests stay supersets at the
+    caller's radius, identically to the XLA reference path."""
+    qi = pl.program_id(0)
+    e = pl.program_id(1)
+    i = qi * expand_width + e
+
+    @pl.when(e == 0)
+    def _reset_tile():
+        tile_ref[...] = jnp.full_like(tile_ref, INVALID_ID)
+
+    adj = adj_ref[0, :]                       # (R,) neighbor ids
+    n_ok = (adj >= 0) & (adj < n_nodes)
+    safe = jnp.where(n_ok, adj, 0)
+
+    def gather(r, _):
+        cp = pltpu.make_async_copy(codes_ref.at[safe[r]], cvec_ref.at[r], sem)
+        cp.start()
+        cp.wait()
+        cm = pltpu.make_async_copy(meta_ref.at[safe[r]], mvec_ref.at[r], sem)
+        cm.start()
+        cm.wait()
+        return 0
+
+    jax.lax.fori_loop(0, adj.shape[0], gather, 0)
+
+    # quantize the query (symmetric absmax, matching the corpus scheme)
+    q = q_ref[0, :].astype(jnp.float32)       # (d,)
+    q_scale = jnp.maximum(jnp.max(jnp.abs(q)), 1e-12) / 127.0
+    qc_f = jnp.clip(jnp.round(q / q_scale), -127, 127)
+    qc = qc_f.astype(jnp.int8)
+    q_err = jnp.sqrt(jnp.sum((q - qc_f * q_scale) ** 2))  # exact err_q
+
+    idot = jax.lax.dot_general(
+        cvec_ref[...], qc[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )[:, 0]                                   # (R,) int32 MXU, exact
+    scales = mvec_ref[:, 0]                   # (R,)
+    errs = mvec_ref[:, 2]                     # (R,) per-row |x - x_hat|
+    dots = idot.astype(jnp.float32) * (scales * q_scale)
+    # certified lower bound (core.corpus.lower_bound_dists, inlined): the
+    # in-kernel distance is between DEQUANTIZED row and query, so both the
+    # row's stored error and this kernel's own query error are subtracted
+    if metric == "l2":
+        xn = mvec_ref[:, 1]
+        qn = jnp.sum((qc_f * q_scale) ** 2)
+        d_hat = jnp.maximum(xn + qn - 2.0 * dots, 0.0)
+        g = (errs + q_err) * (1.0 + GUARD_SLACK)
+        dist = jnp.maximum(jnp.sqrt(d_hat) - g, 0.0) ** 2
+    else:  # ip
+        q_norm = jnp.sqrt(jnp.sum(q * q))
+        xnorm = jnp.sqrt(jnp.maximum(mvec_ref[:, 1], 0.0))
+        eps = (errs * q_norm + xnorm * q_err) * (1.0 + GUARD_SLACK)
+        dist = -dots - eps
+
+    # dedup: earlier rows of this query's tile, then first-in-row wins
+    prev = tile_ref[...]                      # (E*R,)
+    seen_prev = jnp.any(adj[:, None] == prev[None, :], axis=1)
+    rr = jnp.arange(adj.shape[0])
+    dup_row = jnp.any(
+        (adj[:, None] == adj[None, :]) & (rr[None, :] < rr[:, None])
+        & n_ok[:, None] & n_ok[None, :],
+        axis=1,
+    )
+    f_ok = fval_ref[i] > 0
+    keep = n_ok & (~seen_prev) & (~dup_row) & f_ok
+
+    kept = jnp.where(keep, adj, INVALID_ID)
+    ids_ref[0, :] = kept
+    dist_ref[0, :] = jnp.where(keep, dist, jnp.inf)
+    cnt_ref[0, 0] = jnp.sum((n_ok & f_ok).astype(jnp.int32))
+    tile_ref[pl.ds(e * adj.shape[0], adj.shape[0])] = kept
+
+
+def expand_pallas_int8(
+    codes: jnp.ndarray,      # (N, d) int8 corpus codes
+    meta: jnp.ndarray,       # (N, 3) f32 [scale, |x_hat|^2, err]
+    neighbors: jnp.ndarray,  # (N, R) int32
+    fid: jnp.ndarray,        # (Q*E,) int32, pre-clamped to [0, N)
+    fval: jnp.ndarray,       # (Q*E,) int32 validity flags
+    queries: jnp.ndarray,    # (Q, d) f32
+    *,
+    expand_width: int,
+    metric: str = "l2",
+    interpret: bool = False,
+):
+    n, d = codes.shape
+    r = neighbors.shape[1]
+    qn = queries.shape[0]
+    e = expand_width
+    kernel = functools.partial(
+        _expand_kernel_int8, n_nodes=n, expand_width=e, metric=metric
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(qn, e),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda qi, ei, fid_ref, fval_ref:
+                         (fid_ref[qi * e + ei], 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, d), lambda qi, ei, fid_ref, fval_ref: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, r), lambda qi, ei, fid_ref, fval_ref: (qi, ei)),
+            pl.BlockSpec((1, r), lambda qi, ei, fid_ref, fval_ref: (qi, ei)),
+            pl.BlockSpec((1, 1), lambda qi, ei, fid_ref, fval_ref: (qi, ei)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((r, d), jnp.int8),
+            pltpu.VMEM((r, 3), jnp.float32),
+            pltpu.VMEM((e * r,), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    ids, dists, cnts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, e * r), jnp.int32),
+            jax.ShapeDtypeStruct((qn, e * r), jnp.float32),
+            jax.ShapeDtypeStruct((qn, e), jnp.int32),
+        ],
+        interpret=interpret,
+    )(fid, fval, neighbors, codes, meta, queries)
+    return ids, dists, jnp.sum(cnts, axis=1)
 
 
 def expand_pallas(

@@ -12,13 +12,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import expand_pallas
+from .kernel import expand_pallas, expand_pallas_int8
 from .ref import expand_frontier_ref
 
 
 @partial(jax.jit, static_argnames=("metric", "use_pallas", "interpret"))
 def expand_frontier(
-    points: jnp.ndarray,     # (N, d)
+    points,                  # (N, d) array, or a core.corpus.QuantizedCorpus
     neighbors: jnp.ndarray,  # (N, R) int32 adjacency (INVALID_ID padded)
     frontier: jnp.ndarray,   # (Q, E) int32 nodes to expand (INVALID_ID padded)
     queries: jnp.ndarray,    # (Q, d)
@@ -32,15 +32,27 @@ def expand_frontier(
     Returns ``(ids (Q, E*R), dists (Q, E*R), n_dist (Q,))`` where each
     query's tile is first-occurrence-deduped and INVALID/+inf padded, and
     ``n_dist`` counts distances computed (pre-dedup).
+
+    A quantized corpus (duck-typed via ``.codes``) routes to the int8
+    kernel: int8 code gather + int8 MXU matmul + accumulator dequant. The
+    kernel quantizes the query too, so its distances differ from the XLA
+    reference's (which keeps the query in f32) by at most the
+    ``query_quant_err`` term of the guard-band envelope.
     """
+    quant = getattr(points, "codes", None) is not None
     if not use_pallas:
         return expand_frontier_ref(points, neighbors, frontier, queries,
                                    metric=metric)
-    n = points.shape[0]
+    n = (points.codes if quant else points).shape[0]
     qn, e = frontier.shape
     f_ok = (frontier >= 0) & (frontier < n)
     fid = jnp.where(f_ok, frontier, 0).reshape(-1)
     fval = f_ok.astype(jnp.int32).reshape(-1)
+    if quant:
+        return expand_pallas_int8(
+            points.codes, points.meta, neighbors, fid, fval, queries,
+            expand_width=e, metric=metric, interpret=interpret,
+        )
     ids, dists, cnts = expand_pallas(
         points, neighbors, fid, fval, queries,
         expand_width=e, metric=metric, interpret=interpret,

@@ -19,7 +19,9 @@ from ...utils import INVALID_ID
 
 
 def expand_frontier_1(
-    points: jnp.ndarray,     # (N, d) corpus (any float dtype; math in f32)
+    points,                  # (N, d) corpus (any float dtype; math in f32)
+                             # or a core.corpus.QuantizedCorpus (duck-typed
+                             # via .codes to keep kernels import-cycle-free)
     neighbors: jnp.ndarray,  # (N, R) int32 adjacency, INVALID_ID padded
     frontier: jnp.ndarray,   # (E,) int32 nodes to expand (INVALID_ID padded)
     q: jnp.ndarray,          # (d,) query
@@ -33,16 +35,31 @@ def expand_frontier_1(
     corpus): one (T, d) x (d,) GEMV plus a T-float norm gather replaces
     three elementwise passes over the gathered tile — the tile read is the
     loop's bandwidth floor, so passes over it are what matter.
+
+    An int8 quantized corpus gathers 1-byte codes + a 12-byte metadata row
+    per candidate (the ~4x HBM saving), dequantizes in-register, and
+    returns each candidate's *certified lower-bound* distance
+    (``core.corpus.lower_bound_dists``) so the search loop's ``dist <= r``
+    tests keep a provable superset at the original radius.
     """
-    n = points.shape[0]
+    quant = getattr(points, "codes", None) is not None
+    n = (points.codes if quant else points).shape[0]
     f_ok = (frontier >= 0) & (frontier < n)
     rows = jnp.take(neighbors, jnp.where(f_ok, frontier, 0), axis=0)  # (E, R)
     flat = jnp.where(f_ok[:, None], rows, INVALID_ID).reshape(-1)     # (E*R,)
 
     valid = (flat >= 0) & (flat < n)
     safe = jnp.where(valid, flat, 0)
-    vecs = jnp.take(points, safe, axis=0).astype(jnp.float32)  # (E*R, d)
     qf = q.astype(jnp.float32)
+    if quant:
+        from ...core.corpus import quantized_gather_lb
+        d = quantized_gather_lb(points, safe, qf, metric)
+        dup = _first_occurrence_dup(flat, valid)
+        keep = valid & ~dup
+        ids = jnp.where(keep, flat, INVALID_ID)
+        dists = jnp.where(keep, d, jnp.inf)
+        return ids, dists, jnp.sum(valid).astype(jnp.int32)
+    vecs = jnp.take(points, safe, axis=0).astype(jnp.float32)  # (E*R, d)
     if metric == "l2" and point_norms is not None:
         dots = vecs @ qf
         xn = jnp.take(point_norms, safe).astype(jnp.float32)
@@ -53,21 +70,25 @@ def expand_frontier_1(
     else:  # ip
         d = -(vecs @ qf)
 
-    # first-occurrence dedup as one vectorized (T, T) compare — the same
-    # one-pass mask the kernel computes. (A sort-based O(T log T) dedup was
-    # tried and lost in-loop: XLA's sort comparator costs far more per
-    # element than a broadcast compare at tile sizes of a few hundred.)
+    dup = _first_occurrence_dup(flat, valid)
+    keep = valid & ~dup
+    ids = jnp.where(keep, flat, INVALID_ID)
+    dists = jnp.where(keep, d, jnp.inf)
+    return ids, dists, jnp.sum(valid).astype(jnp.int32)
+
+
+def _first_occurrence_dup(flat: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """First-occurrence dedup as one vectorized (T, T) compare — the same
+    one-pass mask the kernel computes. (A sort-based O(T log T) dedup was
+    tried and lost in-loop: XLA's sort comparator costs far more per
+    element than a broadcast compare at tile sizes of a few hundred.)"""
     t = jnp.arange(flat.shape[0])
-    dup = jnp.any(
+    return jnp.any(
         (flat[:, None] == flat[None, :])
         & (t[None, :] < t[:, None])
         & valid[None, :] & valid[:, None],
         axis=1,
     )
-    keep = valid & ~dup
-    ids = jnp.where(keep, flat, INVALID_ID)
-    dists = jnp.where(keep, d, jnp.inf)
-    return ids, dists, jnp.sum(valid).astype(jnp.int32)
 
 
 def expand_frontier_ref(points, neighbors, frontier, queries, *, metric: str = "l2"):

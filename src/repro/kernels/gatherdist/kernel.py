@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...dist.compression import GUARD_SLACK
+
 
 def _gatherdist_kernel(
     ids_ref,    # (C,) int32 scalar-prefetch: candidate row ids (clamped)
@@ -43,6 +45,75 @@ def _gatherdist_kernel(
         out_ref[0] = jnp.sum(diff * diff)
     else:
         out_ref[0] = -jnp.sum(x * q)
+
+
+def _gatherdist_kernel_int8(
+    ids_ref,    # (C,) int32 scalar-prefetch: candidate row ids (clamped)
+    qidx_ref,   # (C,) int32 scalar-prefetch: query index per candidate
+    x_ref,      # (1, d) the gathered int8 code row
+    m_ref,      # (1, 3) the row's [scale, |x_hat|^2, err] metadata
+    q_ref,      # (1, d) the query row (f32)
+    out_ref,    # (1,) f32 distance
+    *,
+    metric: str,
+):
+    """Int8 variant: the row stream is 1-byte codes + a 12-byte metadata
+    row (~4x less HBM per distance than f32 rows); the reduction is an int8
+    x int8 MXU dot whose int32 accumulator is dequantized by
+    ``row_scale * query_scale``, then lowered to the certified lower bound
+    (``core.corpus.lower_bound_dists``) — same arithmetic as the int8
+    expand kernel, so the two agree bitwise on shared candidates."""
+    q = q_ref[0, :].astype(jnp.float32)
+    q_scale = jnp.maximum(jnp.max(jnp.abs(q)), 1e-12) / 127.0
+    qc_f = jnp.clip(jnp.round(q / q_scale), -127, 127)
+    q_err = jnp.sqrt(jnp.sum((q - qc_f * q_scale) ** 2))
+    idot = jax.lax.dot_general(
+        x_ref[0:1, :], qc_f.astype(jnp.int8)[:, None],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )[0, 0]
+    dots = idot.astype(jnp.float32) * (m_ref[0, 0] * q_scale)
+    if metric == "l2":
+        qn = jnp.sum((qc_f * q_scale) ** 2)
+        d_hat = jnp.maximum(m_ref[0, 1] + qn - 2.0 * dots, 0.0)
+        g = (m_ref[0, 2] + q_err) * (1.0 + GUARD_SLACK)
+        out_ref[0] = jnp.maximum(jnp.sqrt(d_hat) - g, 0.0) ** 2
+    else:
+        q_norm = jnp.sqrt(jnp.sum(q * q))
+        xnorm = jnp.sqrt(jnp.maximum(m_ref[0, 1], 0.0))
+        eps = (m_ref[0, 2] * q_norm + xnorm * q_err) * (1.0 + GUARD_SLACK)
+        out_ref[0] = -dots - eps
+
+
+def gatherdist_pallas_int8(
+    codes: jnp.ndarray,     # (N, d) int8
+    meta: jnp.ndarray,      # (N, 3) f32 [scale, |x_hat|^2, err]
+    ids: jnp.ndarray,       # (C,) int32, pre-clamped to [0, N)
+    qidx: jnp.ndarray,      # (C,) int32 query row per candidate
+    queries: jnp.ndarray,   # (Q, d) f32
+    *,
+    metric: str = "l2",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    c = ids.shape[0]
+    d = codes.shape[1]
+    kernel = functools.partial(_gatherdist_kernel_int8, metric=metric)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids_ref, qidx_ref: (ids_ref[i], 0)),
+            pl.BlockSpec((1, 3), lambda i, ids_ref, qidx_ref: (ids_ref[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids_ref, qidx_ref: (qidx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, ids_ref, qidx_ref: (i,)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=interpret,
+    )(ids, qidx, codes, meta, queries)
 
 
 def gatherdist_pallas(

@@ -7,10 +7,20 @@ from ...utils import INVALID_ID
 
 
 def gatherdist_ref(points, ids, queries, *, metric: str = "l2"):
-    """(Q, R) distances from queries[i] to points[ids[i, j]]; INVALID -> inf."""
-    n = points.shape[0]
+    """(Q, R) distances from queries[i] to points[ids[i, j]]; INVALID -> inf.
+
+    ``points`` may be a quantized corpus (duck-typed via ``.codes``): rows
+    dequantize in-register, the query stays f32, and the result is each
+    candidate's certified lower bound (``core.corpus.lower_bound_dists``) —
+    the same contract as the int8 kernel's quantized-query arithmetic."""
+    quant = getattr(points, "codes", None) is not None
+    n = (points.codes if quant else points).shape[0]
     valid = (ids != INVALID_ID) & (ids < n)
     safe = jnp.where(valid, ids, 0)
+    if quant:
+        from ...core.corpus import quantized_gather_lb
+        d = quantized_gather_lb(points, safe, queries, metric)
+        return jnp.where(valid, d, jnp.inf)
     vecs = jnp.take(points, safe, axis=0).astype(jnp.float32)  # (Q, R, d)
     q = queries.astype(jnp.float32)[:, None, :]
     if metric == "l2":

@@ -40,6 +40,11 @@ def main(argv=None):
     p.add_argument("--beam", type=int, default=32)
     p.add_argument("--expand-width", type=int, default=4,
                    help="frontier nodes expanded per search iteration")
+    p.add_argument("--corpus-dtype", default="float32",
+                   choices=["float32", "bfloat16", "int8"],
+                   help="corpus storage dtype: int8 runs the quantized "
+                        "two-pass pipeline (guard-banded search + exact "
+                        "boundary rerank)")
     p.add_argument("--early-stop", action="store_true")
     p.add_argument("--max-batch", type=int, default=128)
     p.add_argument("--mixed-radius", action="store_true",
@@ -61,7 +66,7 @@ def main(argv=None):
     t0 = time.perf_counter()
     eng = RangeSearchEngine.build(
         pts, BuildConfig(max_degree=32, beam=64, metric=ds.metric),
-        metric=ds.metric)
+        metric=ds.metric, corpus_dtype=args.corpus_dtype)
     print(f"[serve] index built in {time.perf_counter() - t0:.1f}s "
           f"{eng.stats()}")
 
@@ -70,7 +75,8 @@ def main(argv=None):
                         visit_cap=512, metric=ds.metric,
                         es_metric=ES_D_VISITED if args.early_stop else 0,
                         es_visit_limit=20,
-                        expand_width=args.expand_width)
+                        expand_width=args.expand_width,
+                        corpus_dtype=args.corpus_dtype)
     rcfg = RangeConfig(search=scfg, mode=args.mode, result_cap=2048)
     srv = RangeServer(eng, rcfg,
                       ServerConfig(max_batch=args.max_batch,
@@ -113,6 +119,13 @@ def main(argv=None):
     print(f"[serve] radius dispersion mean={disp['mean']:.4g} "
           f"std={disp['std']:.4g} range=[{disp['min']:.4g}, {disp['max']:.4g}] "
           f"mixed_batches={disp['mixed_radius_batches']}")
+    if args.corpus_dtype == "int8":
+        served = max(srv.stats["served"], 1)
+        print(f"[serve] quantized corpus: "
+              f"{eng.stats()['hot_bytes_per_vector']} hot bytes/vector "
+              f"(f32: {4 * ds.points.shape[1]}), "
+              f"guard-band reranks/query="
+              f"{srv.stats['reranked'] / served:.2f}")
     return 0
 
 

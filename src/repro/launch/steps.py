@@ -343,9 +343,19 @@ def build_engine_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
     ecfg = arch.model_cfg
     s_shards = mesh.shape[tp]
     n, d, r_deg = ecfg.shard_corpus, ecfg.dim, ecfg.max_degree
-    cdt = jnp.dtype(getattr(ecfg, "corpus_dtype", "float32"))
+    cdt = getattr(ecfg, "corpus_dtype", "float32")
+    if cdt == "int8":
+        # quantized deploy: per-shard int8 codes + metadata + the raw f32
+        # vectors the boundary rerank gathers from (core.corpus layout)
+        from ..core.corpus import QuantizedCorpus
+        pts_struct = QuantizedCorpus(
+            codes=jax.ShapeDtypeStruct((s_shards, n, d), jnp.int8),
+            meta=jax.ShapeDtypeStruct((s_shards, n, 3), jnp.float32),
+            raw=jax.ShapeDtypeStruct((s_shards, n, d), jnp.float32))
+    else:
+        pts_struct = jax.ShapeDtypeStruct((s_shards, n, d), jnp.dtype(cdt))
     corpus = ShardedCorpus(
-        points=jax.ShapeDtypeStruct((s_shards, n, d), cdt),
+        points=pts_struct,
         neighbors=jax.ShapeDtypeStruct((s_shards, n, r_deg), jnp.int32),
         start_ids=jax.ShapeDtypeStruct((s_shards, 1), jnp.int32),
         offsets=jax.ShapeDtypeStruct((s_shards,), jnp.int32),
@@ -365,7 +375,12 @@ def build_engine_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
     q = jax.ShapeDtypeStruct((shape.global_batch, d), jnp.float32)
     args = (corpus.points, corpus.neighbors, corpus.start_ids,
             corpus.offsets, q)
-    shard = (_ns(mesh, tp, None, None), _ns(mesh, tp, None, None),
+    # per-leaf shardings so the quantized corpus pytree (leaves of mixed
+    # rank) lays its shard axis along tp exactly like the plain array
+    pts_shard = jax.tree.map(
+        lambda leaf: _ns(mesh, tp, *([None] * (leaf.ndim - 1))),
+        corpus.points)
+    shard = (pts_shard, _ns(mesh, tp, None, None),
              _ns(mesh, tp, None), _ns(mesh, tp), _ns(mesh, dp, None))
     return Cell(arch.arch_id, shape.name, fn, args, shard,
                 meta={"queries": shape.global_batch,

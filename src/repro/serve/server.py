@@ -27,6 +27,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.corpus import corpus_dtype_name
 from ..core.engine import RangeSearchEngine
 from ..core.range_search import RangeConfig, range_search_compacted
 from ..dist.sharded_engine import ShardedCorpus, sharded_range_search
@@ -78,6 +79,17 @@ class RangeServer:
         if server_cfg.expand_width > 0:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(
                 cfg.search, expand_width=server_cfg.expand_width))
+        # the declarative SearchConfig.corpus_dtype is a deploy contract:
+        # what the config promises must be what the served corpus actually
+        # stores (an f32 corpus behind an "int8" config would silently
+        # serve at 4x the planned HBM budget, and vice versa would skip
+        # the planned rerank stage)
+        served = sharded.points if sharded is not None else engine.points
+        actual = corpus_dtype_name(served)
+        if cfg.search.corpus_dtype != actual:
+            raise ValueError(
+                f"SearchConfig.corpus_dtype={cfg.search.corpus_dtype!r} but "
+                f"the served corpus stores {actual!r}")
         self.cfg = cfg
         self.scfg = server_cfg
         self.mesh = mesh
@@ -85,6 +97,12 @@ class RangeServer:
         self.queue: deque[tuple[Request, float]] = deque()
         self.stats = {
             "served": 0, "batches": 0, "es_stopped": 0, "overflow": 0,
+            # quantized-corpus two-pass: candidates that fell in the radius
+            # guard band and were exact-reranked (0 on f32/bf16 corpora);
+            # the band hit rate is what capacity planning watches — a wide
+            # band means the corpus scales are too coarse for the traffic's
+            # radii
+            "reranked": 0,
             # radius-dispersion counters: mixed-radius batches are the
             # heterogeneous-traffic regime the per-query radius path exists
             # for; the running moments let dashboards derive mean/std
@@ -167,6 +185,7 @@ class RangeServer:
         self.stats["batches"] += 1
         self.stats["es_stopped"] += int(ess[:n].sum())
         self.stats["overflow"] += int(over[:n].sum())
+        self.stats["reranked"] += int(np.asarray(res.n_rerank)[:n].sum())
         rb = radii[:n].astype(np.float64)
         self.stats["mixed_radius_batches"] += int(rb.min() != rb.max())
         self.stats["radius_min"] = min(self.stats["radius_min"], float(rb.min()))

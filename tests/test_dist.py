@@ -222,6 +222,66 @@ def test_sharded_mixed_radius_per_lane():
     """)
 
 
+def test_sharded_quantized_two_pass():
+    """Locally-quantized int8 shards through the shard_map program: the
+    union result must contain only exactly-in-range ids (post-rerank, per
+    the brute-force oracle) and must equal running the same per-shard
+    quantized two-pass searches on the host (tree-sliced shards) with a
+    numpy union-merge — including the summed rerank-band counters."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import RangeConfig, SearchConfig, build_knn_graph
+        from repro.core.graph import Graph, medoid
+        from repro.core.range_search import range_search_fused
+        from repro.dist.sharded_engine import build_sharded, sharded_range_search
+        from repro.utils import INVALID_ID
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        pts = jnp.asarray(np.random.default_rng(3).standard_normal((1600, 8)),
+                          jnp.float32)
+        qs = jnp.asarray(np.asarray(pts[:16]) + 0.02)
+        rcfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16,
+                                               visit_cap=64, expand_width=2),
+                           mode="greedy", result_cap=128)
+        corpus = build_sharded(np.asarray(pts), 4,
+                               lambda p: (build_knn_graph(p, k=8), medoid(p)[None]),
+                               corpus_dtype="int8")
+        r = 2.5
+        res = sharded_range_search(mesh, corpus, qs, r, rcfg)
+        ids = np.asarray(res.ids); cnt = np.asarray(res.count)
+        d2 = np.sum((np.asarray(pts)[None, :, :]
+                     - np.asarray(qs)[:, None, :]) ** 2, axis=-1)
+        for q in range(16):  # zero false positives after the in-shard rerank
+            got = ids[q][ids[q] != INVALID_ID]
+            assert np.all(d2[q, got] <= r + 1e-5), q
+        assert int(cnt.sum()) > 0
+        assert int(np.asarray(res.n_rerank).sum()) >= 0
+
+        # host reference: per-shard fused searches on tree-sliced shards
+        all_ids, all_dists, total, nrr = [], [], 0, 0
+        for s in range(4):
+            shard = jax.tree.map(lambda x: x[s], corpus.points)
+            rr = range_search_fused(shard, Graph(neighbors=corpus.neighbors[s]),
+                                    qs, corpus.start_ids[s], r, rcfg)
+            gids = np.where(np.asarray(rr.ids) == INVALID_ID, INVALID_ID,
+                            np.asarray(rr.ids) + int(corpus.offsets[s]))
+            all_ids.append(gids); all_dists.append(np.asarray(rr.dists))
+            total = total + np.asarray(rr.count)
+            nrr = nrr + np.asarray(rr.n_rerank)
+        hids = np.concatenate(all_ids, axis=1)
+        hdists = np.concatenate(all_dists, axis=1)
+        order = np.argsort(hdists, axis=1, kind="stable")
+        hids = np.take_along_axis(hids, order, axis=1)[:, :rcfg.result_cap]
+        want_count = np.minimum(total, rcfg.result_cap)
+        np.testing.assert_array_equal(cnt, want_count)
+        np.testing.assert_array_equal(np.asarray(res.n_rerank), nrr)
+        for q in range(16):
+            k = want_count[q]
+            assert set(ids[q, :k]) == set(hids[q, :k]), q
+            assert (ids[q, k:] == INVALID_ID).all()
+        print("OK")
+    """)
+
+
 def test_spec_tree_divisibility_fallback():
     run_sub("""
         import jax, jax.numpy as jnp

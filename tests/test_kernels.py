@@ -4,11 +4,26 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import quantize_corpus, query_quant_err
 from repro.kernels import (
     expand_frontier, expand_frontier_ref, flash_attention, flash_attention_ref,
     gatherdist, gatherdist_ref, rangescan, rangescan_ref,
 )
 from repro.utils import INVALID_ID
+
+
+def _int8_tol(pts, qs, d_ref, metric):
+    """Allowed kernel-vs-ref gap for int8 distances: the kernel quantizes
+    the query (and subtracts its exact error), the XLA ref keeps it f32 —
+    both certified lower bounds, differing by at most ~2 * err_q *
+    (sqrt(d_max) + err_q) per candidate in the l2 sqrt domain, and
+    ~2 * err_q * max||x|| for ip."""
+    eq = float(np.max(np.asarray(query_quant_err(qs))))
+    if metric == "ip":
+        nmax = float(np.max(np.linalg.norm(np.asarray(pts), axis=1)))
+        return 2.5 * eq * nmax + 1e-4
+    dmax = float(np.nanmax(np.where(np.isfinite(d_ref), np.abs(d_ref), 0.0)))
+    return 4.0 * eq * (np.sqrt(max(dmax, 1e-9)) + eq) + 1e-4
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +88,41 @@ def test_gatherdist_matches_ref(metric, n, d, q, r):
                                rtol=5e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("n,d,q,r", [(100, 32, 6, 9), (64, 16, 3, 5)])
+def test_gatherdist_int8_matches_ref(metric, n, d, q, r):
+    """Int8 kernel vs int8 XLA ref: ids/masking identical; distances agree
+    within the query-quantization envelope (the kernel quantizes the query,
+    the ref does not — both certified lower bounds)."""
+    pts = jax.random.normal(jax.random.PRNGKey(0), (n, d), jnp.float32)
+    qs = jax.random.normal(jax.random.PRNGKey(1), (q, d), jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(2), (q, r), 0, n, jnp.int32)
+    ids = ids.at[0, 0].set(INVALID_ID)
+    qc = quantize_corpus(pts)
+    got = np.asarray(gatherdist(qc, ids, qs, metric=metric, interpret=True))
+    want = np.asarray(gatherdist_ref(qc, ids, qs, metric=metric))
+    np.testing.assert_array_equal(np.isfinite(got), np.isfinite(want))
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin],
+                               atol=_int8_tol(pts, qs, want, metric),
+                               rtol=1e-3)
+
+
+def test_gatherdist_int8_certified_lower_bound():
+    """Both int8 paths must lower-bound the exact f32 distances — the
+    contract every in-loop `dist <= r` test relies on."""
+    pts = jax.random.normal(jax.random.PRNGKey(3), (80, 24), jnp.float32)
+    qs = jax.random.normal(jax.random.PRNGKey(4), (5, 24), jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(5), (5, 7), 0, 80, jnp.int32)
+    qc = quantize_corpus(pts)
+    for metric in ("l2", "ip"):
+        exact = np.asarray(gatherdist_ref(pts, ids, qs, metric=metric))
+        for lb in (np.asarray(gatherdist_ref(qc, ids, qs, metric=metric)),
+                   np.asarray(gatherdist(qc, ids, qs, metric=metric,
+                                         interpret=True))):
+            assert np.all(lb <= exact + 1e-5), metric
+
+
 # ---------------------------------------------------------------------------
 # expand (fused frontier expansion)
 # ---------------------------------------------------------------------------
@@ -124,6 +174,47 @@ def test_expand_dedups_within_tile():
     # invalid frontier lane contributes an all-INVALID row
     last = np.asarray(ids)[-1].reshape(3, -1)[-1]
     assert (last == INVALID_ID).all()
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("n,r,d,q,e", [
+    (150, 8, 32, 6, 4),
+    (64, 5, 17, 3, 2),    # ragged degree/dim
+])
+def test_expand_int8_matches_ref(metric, n, r, d, q, e):
+    """Int8 expand kernel (MXU int8 matmul + accumulator dequant) vs the
+    int8 XLA ref: identical ids/dedup/n_dist; distances within the
+    query-quantization envelope."""
+    pts, adj, fr, qs = _expand_fixture(n, r, d, q, e)
+    qc = quantize_corpus(pts)
+    ids, dd, nd = expand_frontier(qc, adj, fr, qs, metric=metric,
+                                  use_pallas=True, interpret=True)
+    rids, rd, rnd = expand_frontier_ref(qc, adj, fr, qs, metric=metric)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+    np.testing.assert_array_equal(np.asarray(nd), np.asarray(rnd))
+    got, want = np.asarray(dd), np.asarray(rd)
+    np.testing.assert_array_equal(np.isfinite(got), np.isfinite(want))
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin],
+                               atol=_int8_tol(pts, qs, want, metric),
+                               rtol=1e-3)
+
+
+def test_expand_int8_dedups_and_lower_bounds():
+    """Dedup semantics carry over to the int8 kernel, and its distances
+    lower-bound the exact f32 ones."""
+    pts, adj, fr, qs = _expand_fixture(100, 6, 16, 4, 3)
+    qc = quantize_corpus(pts)
+    ids, dd, _ = expand_frontier(qc, adj, fr, qs, use_pallas=True,
+                                 interpret=True)
+    for row in np.asarray(ids):
+        live = row[row != INVALID_ID]
+        assert len(np.unique(live)) == len(live)
+    exact_ids, exact_dd, _ = expand_frontier_ref(pts, adj, fr, qs)
+    # same surviving ids as the f32 path (dedup is distance-independent)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(exact_ids))
+    fin = np.isfinite(np.asarray(exact_dd))
+    assert np.all(np.asarray(dd)[fin] <= np.asarray(exact_dd)[fin] + 1e-5)
 
 
 def test_expand_bf16_corpus():

@@ -18,16 +18,21 @@ the same program).
 Heavier randomized sweeps are marked ``slow`` and excluded from the default
 pytest run (see pyproject addopts); CI runs them in a dedicated step.
 """
+import dataclasses
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     BuildConfig, RangeConfig, RangeSearchEngine, SearchConfig,
-    average_precision, build_vamana, exact_range_search,
+    average_precision, beam_search_batch, build_vamana, exact_range_search,
+    greedy_search, quantize_corpus,
 )
 from repro.core.distances import point_dist
+from repro.core.range_search import _needs_phase2
 from repro.utils import INVALID_ID
 
 MODES = ("beam", "doubling", "greedy")
@@ -121,7 +126,7 @@ def _check_invariants(res, exact, radii, atol=1e-5):
 
 def _assert_bitwise_equal(a, b, context=""):
     for name in ("ids", "dists", "count", "overflow", "n_visited", "n_dist",
-                 "es_stopped", "phase2"):
+                 "es_stopped", "phase2", "n_rerank"):
         av, bv = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
         assert np.array_equal(av, bv), f"{context}: {name} differs"
 
@@ -165,6 +170,133 @@ def test_fused_matches_compacted_mixed_radii(mode):
     np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
     for ra, rb in zip(np.asarray(a.ids), np.asarray(b.ids)):
         assert set(ra[ra != INVALID_ID]) == set(rb[rb != INVALID_ID])
+
+
+# ---------------------------------------------------------------------------
+# quantized corpus: guard-band two-pass oracle
+# ---------------------------------------------------------------------------
+
+_QENGINE: dict = {}
+
+
+def _qengine(metric):
+    """Int8 engine sharing the f32 engine's graph and entry points, so the
+    only difference under test is corpus storage + the two-pass pipeline."""
+    pts, eng, qs, exact = _corpus(metric)
+    if metric not in _QENGINE:
+        _QENGINE[metric] = RangeSearchEngine(
+            points=quantize_corpus(pts), graph=eng.graph,
+            start_ids=eng.start_ids, metric=metric)
+    return pts, eng, _QENGINE[metric], qs, exact
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("compacted", (True, False))
+def test_quantized_guard_band_oracle(mode, metric, compacted):
+    """The quantized two-pass contract, against the exact-distance oracle,
+    with mixed per-query radii:
+
+    (a) *membership superset before rerank*: the post-rerank set is a
+        subset of the rerank-disabled (certified keep-band) set;
+    (b) *zero false positives after rerank*: every returned id is exactly
+        in range;
+    (c) *zero false negatives inside the guard band*: the post-rerank set
+        EQUALS the keep-band set filtered by the exact oracle — no true
+        member the approximate search discovered is ever dropped;
+    (d) returned distances never exceed the exact distance (they are
+        certified lower bounds, replaced by exact values in the band);
+    (e) AP stays within the quantization budget of the f32 engine on the
+        same graph.
+    """
+    pts, eng_f, eng_q, qs, exact = _qengine(metric)
+    radii = _mixed_radii(exact)
+    cfg = _cfg(mode, metric, 4)
+    res = eng_q.range(qs, jnp.asarray(radii), cfg, compacted=compacted)
+    res_pre = eng_q.range(qs, jnp.asarray(radii),
+                          dataclasses.replace(cfg, rerank=False),
+                          compacted=compacted)
+    ids, dists, count, over = _rows(res)
+    ids_pre, _, _, over_pre = _rows(res_pre)
+    assert np.asarray(res.n_rerank).sum() > 0  # the band is exercised
+    for i in range(ids.shape[0]):
+        got = ids[i][ids[i] != INVALID_ID]
+        tol = 1e-5 + 1e-6 * abs(float(radii[i]))
+        # (b) exact membership
+        assert np.all(exact[i, got] <= radii[i] + tol), f"lane {i}"
+        # (d) lower-bound property of returned distances
+        d_i = dists[i][ids[i] != INVALID_ID]
+        assert np.all(d_i <= exact[i, got] + tol), f"lane {i}"
+        if over[i] or over_pre[i]:
+            continue  # capped buffers may drop members legitimately
+        s_post = set(got.tolist())
+        s_pre = set(ids_pre[i][ids_pre[i] != INVALID_ID].tolist())
+        # (a) superset before rerank
+        assert s_post <= s_pre, f"lane {i}"
+        # (c) exact set equality after rerank
+        want = {j for j in s_pre if exact[i, j] <= radii[i] + tol}
+        assert s_post == want, f"lane {i}: {sorted(s_post ^ want)}"
+        assert count[i] == len(s_post)
+
+    # (e) AP parity with the f32 engine on the same graph
+    gt = exact_range_search(pts, qs, jnp.asarray(radii), metric)
+    res_f = eng_f.range(qs, jnp.asarray(radii), cfg, compacted=compacted)
+    ap_q = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
+                             np.asarray(res.ids), np.asarray(res.count))
+    ap_f = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
+                             np.asarray(res_f.ids), np.asarray(res_f.count))
+    assert ap_q >= ap_f - 0.01, (mode, metric, ap_q, ap_f)
+
+
+def test_quantized_fused_matches_compacted():
+    """Both rerank implementations (in-program full-buffer vs host-side
+    pair compaction) produce the same sets — compaction is a perf choice."""
+    pts, _, eng_q, qs, exact = _qengine("l2")
+    radii = jnp.asarray(_mixed_radii(exact))
+    cfg = _cfg("greedy", "l2", 4)
+    a = eng_q.range(qs, radii, cfg, compacted=True)
+    b = eng_q.range(qs, radii, cfg, compacted=False)
+    np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
+    np.testing.assert_array_equal(np.asarray(a.n_rerank),
+                                  np.asarray(b.n_rerank))
+    for ra, rb in zip(np.asarray(a.ids), np.asarray(b.ids)):
+        assert set(ra[ra != INVALID_ID]) == set(rb[rb != INVALID_ID])
+
+
+@pytest.mark.parametrize("quantized", (False, True))
+def test_greedy_reference_matches_fused(quantized):
+    """Pins the greedy E=1 reference dataflow (including its exact-bitset
+    membership fast path — see _greedy_step_reference) to the fused E>=2
+    path: from identical phase-1 states, both must produce identical result
+    SETS (append order may differ), so ``expand_width=1`` stays a valid
+    baseline under f32 and quantized corpora alike."""
+    pts, eng_f, eng_q, qs, exact = _qengine("l2")
+    eng = eng_q if quantized else eng_f
+    radii = jnp.asarray(_mixed_radii(exact))
+    cap, rounds = 2048, 8192  # ample: no cap/budget overflow in the toy set
+    scfg4 = SearchConfig(beam=16, max_beam=16, visit_cap=128, metric="l2",
+                         expand_width=4)
+    scfg1 = dataclasses.replace(scfg4, expand_width=1)
+    st = beam_search_batch(eng.points, eng.graph, qs, eng.start_ids,
+                           radii, scfg4)
+    active = jax.vmap(lambda st_, r_: _needs_phase2(st_, r_, 1.0))(st, radii)
+    run = lambda scfg: jax.vmap(
+        lambda q_, r_, st_, a_: greedy_search(
+            eng.points, eng.graph, q_, r_, st_, cap, rounds, scfg, a_)
+    )(qs, radii, st, active)
+    g1, g4 = run(scfg1), run(scfg4)
+    np.testing.assert_array_equal(np.asarray(g1.res_count),
+                                  np.asarray(g4.res_count))
+    np.testing.assert_array_equal(np.asarray(g1.overflow),
+                                  np.asarray(g4.overflow))
+    # active lanes must finish within cap/budget for set equality to be the
+    # contract (inactive lanes no-op and keep their seed buffers)
+    assert not (np.asarray(g1.overflow) & np.asarray(active)).any()
+    assert np.asarray(active).any()
+    ids1, ids4 = np.asarray(g1.res_ids), np.asarray(g4.res_ids)
+    for i in range(ids1.shape[0]):
+        assert (set(ids1[i][ids1[i] != INVALID_ID])
+                == set(ids4[i][ids4[i] != INVALID_ID])), f"lane {i}"
 
 
 # ---------------------------------------------------------------------------

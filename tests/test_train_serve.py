@@ -217,3 +217,29 @@ def test_server_results_sorted_and_deduped(small_engine):
     (resp,) = srv.run_until_drained()
     assert len(np.unique(resp.ids)) == len(resp.ids)
     assert resp.count == len(resp.ids) or resp.overflow
+
+
+def test_server_corpus_dtype_contract(small_engine):
+    """SearchConfig.corpus_dtype must match what the served corpus stores
+    (the declarative knob is validated at the serving boundary), and an
+    int8 engine surfaces the guard-band rerank counter in server stats."""
+    pts, eng = small_engine
+    cfg_i8 = RangeConfig(search=SearchConfig(beam=16, max_beam=16,
+                                             visit_cap=64,
+                                             corpus_dtype="int8"),
+                         mode="greedy", result_cap=128)
+    with pytest.raises(ValueError, match="corpus_dtype"):
+        RangeServer(eng, cfg_i8)  # f32 engine behind an int8 config
+    eng_i8 = RangeSearchEngine.from_graph(pts, eng.graph,
+                                          corpus_dtype="int8")
+    srv = RangeServer(eng_i8, cfg_i8)
+    for i in range(8):
+        srv.submit(Request(req_id=i, query=np.asarray(pts[i]) + 0.01,
+                           radius=4.0))
+    resp = srv.run_until_drained()
+    assert len(resp) == 8
+    assert srv.stats["reranked"] >= 0
+    d2 = np.sum((np.asarray(pts)[None] - np.stack(
+        [np.asarray(pts[i]) + 0.01 for i in range(8)])[:, None]) ** 2, axis=-1)
+    for r in resp:  # post-rerank: exactly-in-range only
+        assert np.all(d2[r.req_id, r.ids] <= 4.0 + 1e-5)
