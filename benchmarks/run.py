@@ -46,6 +46,14 @@ MAX_MIXED_AP_GAP = 0.005
 MAX_QUANTIZED_AP_GAP = 0.01
 MIN_QUANTIZED_BYTES_REDUCTION = 3.0
 
+# live-churn gate: after 10% churn (inserts + tombstoned deletes) and a
+# consolidation pass, AP on the live set may trail a FRESH static rebuild of
+# the same live set by at most this much — the acceptance bound on what
+# streaming mutation costs versus batch reindexing. Deterministic on the
+# fixed smoke corpus; wall-clock mutation rates are recorded, not gated
+# (same CI-noise rationale as the quantized row).
+MAX_CHURN_AP_GAP = 0.02
+
 
 def smoke(n: int, min_qps: float, min_ap: float) -> int:
     """CI gate: one tiny corpus through ``range_search_compacted``; exits
@@ -140,6 +148,17 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
           f"(homogeneous dispatch ap={hom_ap:.4f}, gap={ap_gap:.5f}; "
           f"radii {levels[0]:.3g}..{levels[-1]:.3g})")
 
+    # -- churn row: live mutation vs a fresh static rebuild ------------------
+    churn = _churn_row(n)
+    print(f"[smoke] churn 10%: live ap={churn['ap_live']:.4f} vs fresh "
+          f"rebuild ap={churn['ap_rebuild']:.4f} "
+          f"(gap {churn['ap_gap']:+.4f}, floor {MAX_CHURN_AP_GAP}); "
+          f"query qps live {churn['qps_live']:.1f} vs static "
+          f"{churn['qps_static']:.1f}; "
+          f"{churn['inserts_per_s']:.0f} inserts/s, "
+          f"{churn['deletes_per_s']:.0f} deletes/s, consolidation "
+          f"{churn['consolidate_s']:.2f}s")
+
     # -- quantized-corpus row: int8 two-pass vs f32, same graph --------------
     # measured on gist-like (d=256): the gather-bound regime the quantized
     # pipeline targets — corpus bytes per distance dominate as d grows
@@ -163,10 +182,12 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
         baseline_expand1=base, speedup_vs_expand1=round(speedup, 3),
         mixed_radius=mixed,
         quantized=quantized,
+        churn=churn,
         floors=dict(min_qps=min_qps, min_ap=min_ap,
                     max_mixed_ap_gap=MAX_MIXED_AP_GAP,
                     max_quantized_ap_gap=MAX_QUANTIZED_AP_GAP,
-                    min_quantized_bytes_reduction=MIN_QUANTIZED_BYTES_REDUCTION),
+                    min_quantized_bytes_reduction=MIN_QUANTIZED_BYTES_REDUCTION,
+                    max_churn_ap_gap=MAX_CHURN_AP_GAP),
         timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
     )
     with open(SMOKE_JSON, "w") as f:
@@ -189,7 +210,127 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
             < MIN_QUANTIZED_BYTES_REDUCTION):
         print("[smoke] FAIL: int8 bytes-per-distance reduction below floor")
         return 1
+    if churn["ap_gap"] > MAX_CHURN_AP_GAP:
+        print("[smoke] FAIL: churned live index trails a fresh rebuild by "
+              "more than the AP floor")
+        return 1
     return 0
+
+
+def _churn_row(n: int) -> dict:
+    """10% churn against the live index, scored vs a fresh static rebuild.
+
+    Starting from the cached static engine's graph: insert n/10 fresh
+    vectors, tombstone n/10 of the originals, consolidate, then compare AP
+    on the exact live-set oracle against an engine REBUILT from scratch on
+    the same live set — the gap is what streaming mutation costs vs batch
+    reindexing (gated at MAX_CHURN_AP_GAP). Mutation rates and query QPS
+    under tombstones are recorded alongside."""
+    import time as _time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (
+        RangeConfig, RangeSearchEngine, SearchConfig, average_precision,
+        exact_range_search,
+    )
+    from repro.live import LiveConfig, LiveIndex
+    from repro.utils import INVALID_ID, block_until_ready
+
+    from .common import get_dataset, run_range
+
+    ds, pts, qs, _, prof, _ = get_dataset("bigann-like", n)
+    qs = qs[:128]
+    mean_counts = np.asarray(prof.counts).mean(axis=0)
+    r = float(prof.radii[int(np.argmin(np.abs(mean_counts - 128.0)))])
+    k = max(n // 10, 1)
+
+    # two-pass builds on BOTH sides: the single-pass batch build leaves
+    # ~10% zero-in-degree (unreachable) nodes, and which points end up
+    # orphaned is a per-build roll — at ap ~0.87 that seed variance (~0.03)
+    # swamps the ~0.01 churn effect this gate exists to measure. The second
+    # α pass reattaches orphans (both graphs reach ap ~0.99), so the gap is
+    # churn damage, not orphan luck.
+    live = LiveIndex.create(pts, LiveConfig(capacity=n + k, insert_batch=128),
+                            _churn_build_cfg(ds.metric), metric=ds.metric)
+    rng = np.random.default_rng(0)
+    fresh = (np.asarray(pts)[rng.integers(0, n, k)]
+             + rng.standard_normal((k, pts.shape[1])).astype(np.float32)
+             * 0.05 * np.asarray(pts).std())
+    t0 = _time.perf_counter()
+    live.insert(fresh)
+    t_ins = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    live.delete(rng.choice(n, k, replace=False))
+    t_del = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    live.consolidate()
+    t_cons = _time.perf_counter() - t0
+
+    # exact oracle on the live set; both contenders answer in ext-id space
+    ext, vecs = live.live_vectors()
+    gt = exact_range_search(jnp.asarray(vecs), qs, r, ds.metric)
+    lut = np.full(live.next_ext_id + 1, INVALID_ID, np.int64)
+    lut[ext] = np.arange(len(ext))
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
+                                          metric=ds.metric, expand_width=4),
+                      mode="greedy", result_cap=1024)
+
+    def live_qps():
+        fn = lambda: live.range(qs, r, cfg)
+        block_until_ready(fn().dists)
+        ts = []
+        res = None
+        for _ in range(2):
+            t0 = _time.perf_counter()
+            res = fn()
+            block_until_ready(res.dists)
+            ts.append(_time.perf_counter() - t0)
+        return qs.shape[0] / float(np.median(ts)), res
+
+    qps_live, res_live = live_qps()
+    ids_live = np.asarray(res_live.ids)
+    rows_live = np.where(ids_live != INVALID_ID,
+                         lut[np.minimum(ids_live, live.next_ext_id)],
+                         np.int64(INVALID_ID))
+    ap_live = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
+                                rows_live, np.asarray(res_live.count))
+
+    # fresh static rebuild on the same live set (row ids == oracle ids)
+    t0 = _time.perf_counter()
+    eng_fresh = RangeSearchEngine.build(jnp.asarray(vecs),
+                                        _churn_build_cfg(ds.metric),
+                                        metric=ds.metric)
+    t_rebuild = _time.perf_counter() - t0
+    qps_static, res_fresh = run_range(eng_fresh, qs, r, cfg)
+    ap_rebuild = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
+                                   np.asarray(res_fresh.ids),
+                                   np.asarray(res_fresh.count))
+    return dict(
+        n=n, churn_frac=round(k / n, 3), radius=r,
+        ap_live=round(ap_live, 4), ap_rebuild=round(ap_rebuild, 4),
+        ap_gap=round(ap_rebuild - ap_live, 5),
+        qps_live=round(qps_live, 2), qps_static=round(qps_static, 2),
+        inserts_per_s=round(k / max(t_ins, 1e-9), 1),
+        deletes_per_s=round(k / max(t_del, 1e-9), 1),
+        consolidate_s=round(t_cons, 3),
+        rebuild_s=round(t_rebuild, 3),
+        epochs=live.epoch,
+        note="ap_gap (live vs fresh rebuild on the identical live set) is "
+             "the gated claim; mutation rates and the QPS pair are "
+             "recorded for trajectory tracking, not gated (CI wall-clock "
+             "noise)",
+    )
+
+
+def _churn_build_cfg(metric: str):
+    """Build config shared by the churn row's initial live graph AND its
+    fresh-rebuild contender (the comparison must hold everything but the
+    mutation path fixed). two_pass: see the note in _churn_row."""
+    from repro.core import BuildConfig
+    return BuildConfig(max_degree=24, beam=48, insert_batch=512,
+                       metric=metric, two_pass=True)
 
 
 def _quantized_row(n: int) -> dict:

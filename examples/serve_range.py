@@ -4,10 +4,18 @@ through admission -> micro-batching -> two-phase search -> responses.
 
   PYTHONPATH=src python examples/serve_range.py [--n 20000 --queries 512]
   PYTHONPATH=src python examples/serve_range.py --mixed-radius
+  PYTHONPATH=src python examples/serve_range.py --churn 0.1
 
 ``--mixed-radius`` submits requests whose radii span the corpus's match
 distribution — the server micro-batches them together and answers each
 request at its own radius (the paper's radius-heterogeneous traffic).
+
+``--churn 0.1`` demos the LIVE engine (repro.live): insert and delete
+requests for 10% of the corpus ride the same admission queue as the query
+traffic; the server coalesces each micro-batch's mutations, consolidates
+when the tombstone fraction crosses the threshold, and answers queries
+against consistent epoch snapshots. AP is scored against the exact oracle
+on the final live set.
 
 This is a thin CLI over repro.launch.serve; see that module for the knobs.
 """

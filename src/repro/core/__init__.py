@@ -12,7 +12,13 @@ from .beam_search import (
     broadcast_radius,
     topk_from_state,
 )
-from .build import BuildConfig, build_knn_graph, build_vamana, robust_prune
+from .build import (
+    BuildConfig,
+    build_knn_graph,
+    build_vamana,
+    insert_batch_step,
+    robust_prune,
+)
 from .corpus import (
     CORPUS_DTYPES,
     Corpus,
@@ -21,9 +27,14 @@ from .corpus import (
     corpus_cast,
     corpus_dim,
     corpus_dtype_name,
+    corpus_raw,
+    corpus_set_rows,
     corpus_size,
+    corpus_take_rows,
+    corpus_with_capacity,
     lower_bound_dists,
     quantize_corpus,
+    quantize_rows,
     query_quant_err,
     upper_bound_dists,
 )
@@ -36,6 +47,7 @@ from .radius import RadiusProfile, default_grid, match_histogram, select_radius,
 from .range_search import (
     RangeConfig,
     RangeResult,
+    filter_tombstoned,
     greedy_search,
     range_search_compacted,
     range_search_fused,

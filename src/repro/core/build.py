@@ -133,14 +133,20 @@ def _pack_reverse(dst_flat: jnp.ndarray, src_flat: jnp.ndarray, rev_cap: int):
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("cfg", "alpha"))
-def _insert_batch(
+def insert_batch_step(
     points: jnp.ndarray,
     nbr_rows: jnp.ndarray,      # (N, R) current adjacency
     batch_ids: jnp.ndarray,     # (B,) padded with INVALID
-    start_id: jnp.ndarray,
+    start_ids: jnp.ndarray,     # (S,) search entry points
     cfg: BuildConfig,
     alpha: float,
 ) -> jnp.ndarray:
+    """One fixed-shape Vamana insert batch: search + RobustPrune + reverse
+    edges with overflow pruning. ``points`` must already hold the batch rows
+    (exact f32 vectors). Shared by the offline build below and the live
+    streaming-insert path (``repro.live``), which calls it against a
+    pre-allocated capacity so every incremental step reuses one compiled
+    program."""
     graph = Graph(neighbors=nbr_rows)
     R = cfg.max_degree
     n = points.shape[0]
@@ -148,8 +154,8 @@ def _insert_batch(
     safe_ids = jnp.where(active, batch_ids, 0)
     qs = jnp.take(points, safe_ids, axis=0)  # (B, d)
 
-    # 1. search the current graph from the medoid
-    st = beam_search_batch(points, graph, qs, start_id[None], jnp.asarray(jnp.inf, jnp.float32), cfg.search_cfg)
+    # 1. search the current graph from the entry points (medoid at build)
+    st = beam_search_batch(points, graph, qs, start_ids, jnp.asarray(jnp.inf, jnp.float32), cfg.search_cfg)
 
     # 2. RobustPrune over visited ∪ beam candidates
     cand_ids = jnp.concatenate([st.visited_ids, st.ids], axis=1)
@@ -217,7 +223,8 @@ def build_vamana(
             take = min(bsize, n - done, B)
             batch = np.full((B,), INVALID_ID, dtype=np.int32)
             batch[:take] = order[done : done + take]
-            nbr_rows = _insert_batch(points, nbr_rows, jnp.asarray(batch), start, cfg, alpha)
+            nbr_rows = insert_batch_step(points, nbr_rows, jnp.asarray(batch),
+                                         start[None], cfg, alpha)
             done += take
             bsize = min(bsize * 2, B)
             if verbose:

@@ -116,16 +116,28 @@ class QuantizedCorpus:
 Corpus = Union[jnp.ndarray, QuantizedCorpus]
 
 
+def quantize_rows(vecs: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize (B, d) f32 rows -> (codes (B, d) int8, meta (B, 3) f32).
+
+    The per-row [scale, |x_hat|^2, err] metadata matches ``quantize_corpus``
+    exactly (err is the EXACT reconstruction L2, not a bound), so rows
+    written into a live corpus one batch at a time carry the same certified
+    guard band as rows quantized at build time."""
+    vecs = jnp.asarray(vecs).astype(jnp.float32)
+    codes, scales = quantize_int8_rows(vecs)
+    deq = codes.astype(jnp.float32) * scales[:, None]
+    sqnorms = jnp.sum(deq * deq, axis=-1)
+    err = jnp.sqrt(jnp.sum((vecs - deq) ** 2, axis=-1))
+    return codes, jnp.stack([scales, sqnorms, err], axis=-1)
+
+
 def quantize_corpus(points: jnp.ndarray, keep_raw: bool = True) -> QuantizedCorpus:
     """Per-vector symmetric absmax int8 quantization of an (N, d) corpus."""
     points = jnp.asarray(points)
-    codes, scales = quantize_int8_rows(points.astype(jnp.float32))
-    deq = codes.astype(jnp.float32) * scales[:, None]
-    sqnorms = jnp.sum(deq * deq, axis=-1)
-    err = jnp.sqrt(jnp.sum((points.astype(jnp.float32) - deq) ** 2, axis=-1))
+    codes, meta = quantize_rows(points)
     return QuantizedCorpus(
         codes=codes,
-        meta=jnp.stack([scales, sqnorms, err], axis=-1),
+        meta=meta,
         raw=points if keep_raw else None,
     )
 
@@ -239,6 +251,82 @@ def upper_bound_dists(corpus: QuantizedCorpus, ids: jnp.ndarray,
     eps = (meta[..., 2] * q_norm
            + jnp.sqrt(jnp.maximum(meta[..., 1], 0.0)) * err_q) * (1.0 + _SLACK)
     return d_lb + 2.0 * eps
+
+
+# -- live-index row mutation helpers ----------------------------------------
+#
+# The live subsystem (repro.live) pre-allocates the corpus at a fixed
+# capacity and fills rows behind a watermark; these helpers are the only
+# places that write corpus rows after construction. All are functional
+# (jnp ``.at[]`` updates) so every mutation batch yields a fresh snapshot.
+
+def corpus_with_capacity(points: Corpus, capacity: int,
+                         far: float = 1e30) -> Corpus:
+    """Pre-allocate ``points`` up to ``capacity`` rows with unreachable
+    sentinel rows (same convention as the sharded pad rows: no graph edge
+    ever points at them, and their ``far`` coordinates rank last under l2
+    even against a hypothetical scan)."""
+    n = corpus_size(points)
+    if capacity < n:
+        raise ValueError(f"capacity {capacity} < corpus size {n}")
+    if capacity == n:
+        return points
+    if isinstance(points, QuantizedCorpus):
+        return pad_corpus_rows(points, capacity - n, far)
+    d = points.shape[-1]
+    return jnp.concatenate(
+        [points, jnp.full((capacity - n, d), far, dtype=points.dtype)])
+
+
+def corpus_set_rows(points: Corpus, slots: jnp.ndarray, vecs: jnp.ndarray,
+                    active: jnp.ndarray) -> Corpus:
+    """Write ``vecs`` (B, d) f32 into rows ``slots`` (B,) where ``active``.
+
+    Inactive lanes are dropped (out-of-bounds scatter), so a fixed-width
+    insert batch can be partially filled without recompiling. A quantized
+    corpus quantizes the rows on the way in — int8 corpora stay int8, and
+    each new row carries its own exact ``err`` metadata (same scheme as
+    build-time quantization), so the certified guard band keeps holding
+    under streaming inserts."""
+    n = corpus_size(points)
+    wp = jnp.where(active, slots, n)  # n == OOB -> dropped
+    if isinstance(points, QuantizedCorpus):
+        codes, meta = quantize_rows(vecs)
+        raw = points.raw
+        if raw is not None:
+            raw = raw.at[wp].set(vecs.astype(raw.dtype), mode="drop")
+        return QuantizedCorpus(
+            codes=points.codes.at[wp].set(codes, mode="drop"),
+            meta=points.meta.at[wp].set(meta, mode="drop"),
+            raw=raw,
+        )
+    return points.at[wp].set(vecs.astype(points.dtype), mode="drop")
+
+
+def corpus_take_rows(points: Corpus, idx: jnp.ndarray) -> Corpus:
+    """Gather corpus rows (consolidation's live-set compaction)."""
+    if isinstance(points, QuantizedCorpus):
+        return QuantizedCorpus(
+            codes=jnp.take(points.codes, idx, axis=0),
+            meta=jnp.take(points.meta, idx, axis=0),
+            raw=None if points.raw is None else jnp.take(points.raw, idx,
+                                                         axis=0),
+        )
+    return jnp.take(points, idx, axis=0)
+
+
+def corpus_raw(points: Corpus) -> jnp.ndarray:
+    """The exact-vector view used by graph construction/mutation (build
+    searches + RobustPrune always run on exact vectors). Quantized corpora
+    must carry ``raw`` to be mutable."""
+    if isinstance(points, QuantizedCorpus):
+        if points.raw is None:
+            raise ValueError(
+                "a QuantizedCorpus without raw vectors cannot back graph "
+                "mutation (build/insert need exact vectors); quantize with "
+                "keep_raw=True")
+        return points.raw
+    return points
 
 
 def pad_corpus_rows(corpus: QuantizedCorpus, n_pad: int,

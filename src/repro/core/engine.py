@@ -75,11 +75,14 @@ class RangeSearchEngine:
     def range(self, queries: jnp.ndarray, r,
               cfg: Optional[RangeConfig] = None,
               es_radius=None,
-              compacted: bool = True) -> RangeResult:
+              compacted: bool = True,
+              tombstones=None) -> RangeResult:
         """Range search. ``r`` (and ``es_radius``) may be a scalar, applied
         to every query, or a ``(Q,)`` vector giving each query its own
         radius; scalars broadcast, so the two forms answer identically when
-        all radii are equal."""
+        all radii are equal. ``tombstones`` is the live subsystem's packed
+        dead-slot bitset: deleted slots still route the traversal but never
+        appear in results."""
         cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
         if cfg.search.metric != self.metric:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(cfg.search, metric=self.metric))
@@ -87,7 +90,8 @@ class RangeSearchEngine:
         r = broadcast_radius(r, n)
         es_radius = None if es_radius is None else broadcast_radius(es_radius, n)
         fn = range_search_compacted if compacted else range_search_fused
-        return fn(self.points, self.graph, queries, self.start_ids, r, cfg, es_radius)
+        return fn(self.points, self.graph, queries, self.start_ids, r, cfg,
+                  es_radius, tombstones)
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> dict:

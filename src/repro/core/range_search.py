@@ -342,6 +342,48 @@ def _needs_phase2(st: BeamState, r, lam: float) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Tombstone filtering (live indices — repro.live)
+# ---------------------------------------------------------------------------
+#
+# Lazy deletes are a packed bitset over corpus slots. Deleted nodes keep
+# their vectors and their edges, so the traversal routes THROUGH them
+# exactly as before (phase-1 beam, widening triggers, and the greedy
+# expansion frontier are all computed on the unfiltered sets — a tombstone
+# never perturbs the walk); only at the result stage are dead candidates
+# dropped. Applied BEFORE the quantized rerank so the exact pass never
+# wastes gathers on dead candidates.
+
+def _drop_dead_lane(tombstones: jnp.ndarray, ids: jnp.ndarray,
+                    dists: jnp.ndarray):
+    """Drop tombstoned ids from one query's result buffer (stable
+    left-compaction, one bounded scatter — same shape as ``_rerank_lane``)."""
+    k = ids.shape[0]
+    valid = ids != INVALID_ID
+    dead = bitset_contains(tombstones, jnp.where(valid, ids, 0)) & valid
+    keep = valid & ~dead
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    wp = jnp.where(keep, pos, k)                                  # k == dropped
+    out_ids = jnp.full((k,), INVALID_ID, jnp.int32).at[wp].set(ids, mode="drop")
+    out_d = jnp.full((k,), jnp.inf, jnp.float32).at[wp].set(dists, mode="drop")
+    return out_ids, out_d, jnp.sum(keep.astype(jnp.int32))
+
+
+@jax.jit
+def filter_tombstoned(tombstones: jnp.ndarray, res: RangeResult) -> RangeResult:
+    """Remove tombstoned ids from a batched ``RangeResult`` and recount.
+
+    ``tombstones`` is a packed ``(W,) uint32`` bitset over corpus slots
+    (``core.bitset``); it must be EXACT (one bit per slot — the live index
+    sizes it off its fixed capacity), since a false-positive probe here
+    would silently drop a live result. ``overflow`` is left as-is: it
+    reports buffer pressure during the search, where dead candidates
+    legitimately occupied slots."""
+    fn = lambda i_, d_: _drop_dead_lane(tombstones, i_, d_)
+    ids, dists, count = jax.vmap(fn)(res.ids, res.dists)
+    return dataclasses.replace(res, ids=ids, dists=dists, count=count)
+
+
+# ---------------------------------------------------------------------------
 # Quantized-corpus two-pass: certified-lower-bound search + boundary rerank
 # ---------------------------------------------------------------------------
 #
@@ -403,6 +445,7 @@ def range_search_fused(
     r: jnp.ndarray,               # scalar or (Q,) per-query radii
     cfg: RangeConfig,
     es_radius: Optional[jnp.ndarray] = None,  # scalar or (Q,)
+    tombstones: Optional[jnp.ndarray] = None,  # (W,) uint32 dead-slot bitset
 ) -> RangeResult:
     r = broadcast_radius(r, queries.shape[0])
     # a quantized corpus searches on certified lower-bound distances, so
@@ -436,6 +479,8 @@ def range_search_fused(
                           n_visited=st.n_visited, n_dist=st.n_dist + jnp.where(active, gs.n_dist, 0),
                           es_stopped=st.es_stopped, phase2=active,
                           n_rerank=zeros)
+    if tombstones is not None:  # live index: drop dead results, keep routing
+        res = filter_tombstoned(tombstones, res)
     if (isinstance(points, QuantizedCorpus) and cfg.rerank
             and points.raw is not None):
         res = _rerank_fused(points, queries, r, res, cfg.search.metric)
@@ -515,6 +560,7 @@ def range_search_compacted(
     r,                    # scalar or (Q,) per-query radii
     cfg: RangeConfig,
     es_radius=None,       # scalar or (Q,)
+    tombstones=None,      # (W,) uint32 dead-slot bitset (live indices)
 ) -> RangeResult:
     """Phase 1 over the whole batch; phase 2 over the compacted survivors.
 
@@ -525,6 +571,14 @@ def range_search_compacted(
     into phase 2, so a micro-batch may mix radii freely.
     """
     rj = broadcast_radius(r, queries.shape[0])
+
+    def finish(res: RangeResult) -> RangeResult:
+        # result-stage tombstone drop (traversal above ran unfiltered),
+        # then the quantized boundary rerank on what survived
+        if tombstones is not None:
+            res = filter_tombstoned(tombstones, res)
+        return _maybe_rerank_host(points, queries, rj, res, cfg)
+
     esj = None if es_radius is None else broadcast_radius(es_radius, queries.shape[0])
     # phase 1 runs at the BASE beam for every mode (for doubling this is the
     # §Perf iteration C3 change: in-place widening inside the batched while
@@ -545,12 +599,12 @@ def range_search_compacted(
                        phase2=jnp.zeros_like(st.done),
                        n_rerank=jnp.zeros_like(st.n_visited))
     if cfg.mode == "beam":
-        return _maybe_rerank_host(points, queries, rj, base, cfg)
+        return finish(base)
 
     active = np.asarray(jax.vmap(lambda st_, r_: _needs_phase2(st_, r_, cfg.lam))(st, rj))
     n_active = int(active.sum())
     if n_active == 0:
-        return _maybe_rerank_host(points, queries, rj, base, cfg)
+        return finish(base)
 
     sel = np.nonzero(active)[0]
     bucket = next_pow2(n_active)
@@ -595,4 +649,4 @@ def range_search_compacted(
                          n_visited=base.n_visited, n_dist=jnp.asarray(ndist),
                          es_stopped=base.es_stopped, phase2=phase2,
                          n_rerank=jnp.zeros_like(base.n_visited))
-    return _maybe_rerank_host(points, queries, rj, merged, cfg)
+    return finish(merged)

@@ -159,6 +159,7 @@ def sharded_range_search(
     r,
     cfg: RangeConfig,
     es_radius: Optional[float] = None,
+    tombstones=None,
     *,
     model_axis="model",
     data_axis="data",
@@ -169,7 +170,14 @@ def sharded_range_search(
     ``r``/``es_radius`` are a shared scalar or per-query ``(Q,)`` vectors;
     radii shard along the data axis with their queries and broadcast to
     every shard along the model axis (each shard answers every query at
-    that query's own radius)."""
+    that query's own radius).
+
+    ``tombstones`` (optional) is a stacked ``(S, W)`` uint32 dead-slot
+    bitset, one exact bitset per shard in shard-local slot space (the live
+    subsystem's per-shard tombstones). Each shard's fused search filters its
+    own dead slots at the result stage — deleted points still route the
+    per-shard walk but never reach the union merge, so counts and the
+    merged top-``result_cap`` are live-only."""
     if corpus.n_total <= 0:
         raise ValueError("ShardedCorpus.n_total must be the true corpus size")
     s_total = corpus.n_shards
@@ -197,17 +205,21 @@ def sharded_range_search(
         es_vec = jnp.concatenate(
             [es_vec, jnp.broadcast_to(es_vec[:1], (q_pad - n_q,))])
 
-    def local_fn(points, neighbors, start_ids, offsets, qs, rs, es):
+    def local_fn(points, neighbors, start_ids, offsets, qs, rs, es,
+                 tombs=None):
         # points (s_loc, n, d) (or a stacked QuantizedCorpus), qs (q_loc, d),
         # rs/es (q_loc,): search every local shard at each query's own
         # radius. A quantized shard carries its own scales/guard maxima, so
         # the per-shard search guard-bands rs locally and reranks its own
         # boundary — the union merge then sees exact per-shard results.
+        # tombs (s_loc, W): each shard filters its own dead slots inside the
+        # fused search (result stage only), so the merge below is live-only.
         ids, dists, cnts, overs, nvis, ndis, ess, ph2, nrr = ([] for _ in range(9))
         for s in range(s_loc):
             shard_pts = jax.tree.map(lambda x: x[s], points)
             res = range_search_fused(shard_pts, Graph(neighbors=neighbors[s]),
-                                     qs, start_ids[s], rs, cfg, es)
+                                     qs, start_ids[s], rs, cfg, es,
+                                     None if tombs is None else tombs[s])
             gids = _remap_global(res.ids, offsets[s], corpus.n_total)
             ids.append(gids)
             dists.append(jnp.where(gids == INVALID_ID, jnp.inf, res.dists))
@@ -256,17 +268,22 @@ def sharded_range_search(
     pts_spec = jax.tree.map(
         lambda leaf: P(model_axis, *([None] * (leaf.ndim - 1))),
         corpus.points)
-    fn = shard_map(
-        local_fn, mesh=mesh,
-        in_specs=(pts_spec, P(model_axis, None, None),
-                  P(model_axis, None), P(model_axis), mat, row, row),
-        out_specs=RangeResult(ids=mat, dists=mat, count=row, overflow=row,
-                              n_visited=row, n_dist=row, es_stopped=row,
-                              phase2=row, n_rerank=row),
-        check_vma=False,
-    )
-    out = fn(corpus.points, corpus.neighbors, corpus.start_ids,
-             corpus.offsets, queries, radii, es_vec)
+    out_spec = RangeResult(ids=mat, dists=mat, count=row, overflow=row,
+                           n_visited=row, n_dist=row, es_stopped=row,
+                           phase2=row, n_rerank=row)
+    base_specs = (pts_spec, P(model_axis, None, None),
+                  P(model_axis, None), P(model_axis), mat, row, row)
+    args = (corpus.points, corpus.neighbors, corpus.start_ids,
+            corpus.offsets, queries, radii, es_vec)
+    if tombstones is None:
+        fn = shard_map(local_fn, mesh=mesh, in_specs=base_specs,
+                       out_specs=out_spec, check_vma=False)
+        out = fn(*args)
+    else:
+        fn = shard_map(local_fn, mesh=mesh,
+                       in_specs=base_specs + (P(model_axis, None),),
+                       out_specs=out_spec, check_vma=False)
+        out = fn(*args, jnp.asarray(tombstones, jnp.uint32))
     if q_pad != n_q:
         out = jax.tree.map(lambda x: x[:n_q], out)
     return out

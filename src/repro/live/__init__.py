@@ -1,0 +1,15 @@
+"""Live-update index subsystem: streaming inserts, tombstoned deletes, and
+background consolidation over the frozen range-retrieval engine."""
+from .consolidate import consolidate_index
+from .index import FAR, LiveConfig, LiveIndex, LiveSnapshot, externalize_ids
+from .sharded import LiveShardedIndex
+
+__all__ = [
+    "FAR",
+    "LiveConfig",
+    "LiveIndex",
+    "LiveSnapshot",
+    "LiveShardedIndex",
+    "consolidate_index",
+    "externalize_ids",
+]

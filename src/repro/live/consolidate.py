@@ -1,0 +1,154 @@
+"""Background consolidation: rewire around tombstones, then compact.
+
+FreshDiskANN-style delete processing, adapted to the fixed-shape batch
+idiom of ``core.build``:
+
+1. **Delete-aware rewiring.** For every live node with at least one
+   tombstoned out-neighbor, the new candidate set is its live one-hop
+   neighbors plus the live neighbors of each dead neighbor (the patch-
+   through that preserves graph navigability when a routing node leaves).
+   Candidate sets that still fit the degree bound are kept verbatim;
+   overflowing ones go through RobustPrune (α-domination) against exact
+   distances — the same pruning the offline build and the insert path use.
+   Only the rows that actually touch a tombstone are processed, compacted
+   to power-of-two buckets so jit compiles O(log N) variants (the
+   query-compaction trick from ``range_search``).
+
+2. **Compaction.** Live rows move to the front of the capacity (slots
+   change, external ids — owned by ``LiveIndex`` — do not), neighbor ids
+   are remapped, freed slots return to the unborn-sentinel state, entry
+   points are re-selected over the surviving rows, and the tombstone bitset
+   resets to empty.
+
+Two consecutive tombstoned hops are not patched through (single-hop
+patching, as in FreshDiskANN): the occasional lost edge costs a little
+recall until the next insert/consolidation, never correctness — results
+are filtered against the exact live set regardless.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.build import BuildConfig, robust_prune
+from ..core.corpus import (
+    Corpus,
+    corpus_raw,
+    corpus_size,
+    corpus_take_rows,
+    corpus_with_capacity,
+)
+from ..core.distances import gather_dist
+from ..core.graph import start_points
+from ..utils import INVALID_ID, next_pow2
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _prune_rows(points: jnp.ndarray, node_ids: jnp.ndarray,
+                cand: jnp.ndarray, cfg: BuildConfig) -> jnp.ndarray:
+    """RobustPrune a (P, C) candidate batch down to (P, R) rows.
+
+    ``cand`` rows are already deduped/self-free/live-only (host side);
+    distances are computed exactly here. Chunked ``lax.map`` bounds the
+    O(C^2) dedup matrix RobustPrune builds internally."""
+    def one(args):
+        nid, row = args
+        pvec = jnp.take(points, nid, axis=0)
+        dists = gather_dist(points, row, pvec, cfg.metric)
+        return robust_prune(points, pvec, row, dists, cfg.alpha,
+                            cfg.max_degree, cfg.metric, self_id=nid)
+    return jax.lax.map(one, (node_ids, cand), batch_size=64)
+
+
+def _rewire(nbrs: np.ndarray, dead: np.ndarray, live_count: int,
+            points: jnp.ndarray, cfg: BuildConfig) -> tuple[np.ndarray, dict]:
+    """Replace dead out-neighbors by patching through to their live
+    neighbors. Pure-numpy candidate construction; pruning on device."""
+    n_cap, R = nbrs.shape
+    valid = nbrs != INVALID_ID
+    safe = np.where(valid, nbrs, 0)
+    nbr_dead = valid & dead[safe]
+    born = np.arange(n_cap) < live_count
+    patch = born & ~dead & nbr_dead.any(axis=1)
+    idx = np.nonzero(patch)[0]
+    if idx.size == 0:
+        return nbrs, dict(n_rewired=0, n_pruned=0)
+
+    sub = nbrs[idx]                                   # (P, R)
+    sub_valid = sub != INVALID_ID
+    sub_safe = np.where(sub_valid, sub, 0)
+    sub_dead = sub_valid & dead[sub_safe]
+    one_hop = np.where(sub_valid & ~sub_dead, sub, INVALID_ID)
+    # live neighbors of each dead neighbor (two-dead hops dropped)
+    hop2 = nbrs[sub_safe]                             # (P, R, R)
+    hop2 = np.where(sub_dead[:, :, None], hop2, INVALID_ID).reshape(idx.size, -1)
+    h_valid = hop2 != INVALID_ID
+    hop2 = np.where(h_valid & ~dead[np.where(h_valid, hop2, 0)],
+                    hop2, INVALID_ID)
+    cand = np.concatenate([one_hop, hop2], axis=1)    # (P, R + R*R)
+    cand = np.where(cand == idx[:, None], INVALID_ID, cand)  # drop self
+    # per-row dedup, first occurrence wins (stable sort + adjacent compare)
+    order = np.argsort(cand, axis=1, kind="stable")
+    srt = np.take_along_axis(cand, order, axis=1)
+    dup_sorted = np.zeros_like(srt, bool)
+    dup_sorted[:, 1:] = (srt[:, 1:] == srt[:, :-1]) & (srt[:, 1:] != INVALID_ID)
+    dup = np.zeros_like(dup_sorted)
+    np.put_along_axis(dup, order, dup_sorted, axis=1)
+    cand = np.where(dup, INVALID_ID, cand)
+    counts = (cand != INVALID_ID).sum(axis=1)
+
+    out = nbrs.copy()
+    # rows that still fit: keep verbatim (valid ids packed to the front)
+    fits = counts <= R
+    packed = np.sort(cand[fits], axis=1)[:, :R]       # INVALID sorts last
+    out[idx[fits]] = packed
+    # overflowing rows: RobustPrune on device, pow2-bucketed
+    over = np.nonzero(~fits)[0]
+    if over.size:
+        bucket = next_pow2(over.size)
+        sel = np.concatenate([over, np.repeat(over[:1], bucket - over.size)])
+        pruned = np.asarray(_prune_rows(
+            points, jnp.asarray(idx[sel], jnp.int32),
+            jnp.asarray(cand[sel], jnp.int32), cfg))
+        out[idx[over]] = pruned[:over.size]
+    return out, dict(n_rewired=int(idx.size), n_pruned=int(over.size))
+
+
+def consolidate_index(points: Corpus, neighbors: jnp.ndarray,
+                      dead: np.ndarray, live_count: int, cfg: BuildConfig,
+                      metric: str, n_starts: int, far: float = 1e30):
+    """Full consolidation pass.
+
+    Returns ``(points, neighbors, start_ids, perm, stats)`` where ``perm``
+    (n_live,) lists the OLD slots of the surviving rows in their new slot
+    order (new slot i holds old slot perm[i]) — the caller remaps its
+    slot-keyed metadata (external ids) with it.
+    """
+    capacity = corpus_size(points)
+    raw = corpus_raw(points)
+    nbrs = np.asarray(neighbors)
+    rewired, stats = _rewire(nbrs, dead, live_count, raw, cfg)
+
+    born = np.arange(capacity) < live_count
+    perm = np.nonzero(born & ~dead)[0]
+    n_live = perm.shape[0]
+    if n_live == 0:
+        raise ValueError("consolidation would empty the index")
+    mapping = np.full(capacity, INVALID_ID, np.int32)
+    mapping[perm] = np.arange(n_live, dtype=np.int32)
+
+    sub = rewired[perm]
+    sub_valid = sub != INVALID_ID
+    new_rows = np.where(sub_valid, mapping[np.where(sub_valid, sub, 0)],
+                        INVALID_ID)  # dead/unborn targets -> INVALID (defense)
+    new_nbrs = np.full((capacity, nbrs.shape[1]), INVALID_ID, np.int32)
+    new_nbrs[:n_live] = new_rows
+
+    live_pts = corpus_take_rows(points, jnp.asarray(perm, jnp.int32))
+    new_points = corpus_with_capacity(live_pts, capacity, far)
+    new_starts = start_points(corpus_raw(live_pts).astype(jnp.float32),
+                              metric, n_starts)
+    return (new_points, jnp.asarray(new_nbrs), new_starts, perm, stats)

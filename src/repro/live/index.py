@@ -1,0 +1,459 @@
+"""LiveIndex: a mutable range-retrieval index over a pre-allocated capacity.
+
+The paper's engine (and every layer above it) assumes a frozen Vamana graph;
+the stated applications — duplicate detection, facial recognition — churn
+continuously. This module makes the index mutable without giving up any of
+the fixed-shape jitted machinery:
+
+* **Capacity + watermark.** The corpus and adjacency are pre-allocated at a
+  fixed ``capacity`` (``N_cap`` rows); ``live_count`` is the high-water mark.
+  Rows past the watermark are unreachable sentinels (no in-edges, ``far``
+  coordinates — the same convention as the sharded pad rows), so the search
+  programs never recompile as the index grows: every mutation step runs at
+  the same shapes.
+
+* **Streaming inserts** reuse the offline build's batch machinery
+  (``core.build.insert_batch_step``: beam search + RobustPrune + reverse-edge
+  patching with overflow pruning) as incremental steps — one jitted program
+  compiled once per (capacity, insert_batch) pair, executed per batch of
+  inserts. New rows are written behind the watermark first (quantized on the
+  way in for int8 corpora, with exact per-row ``err`` metadata), then wired
+  into the graph. External ids are assigned monotonically and survive
+  consolidation; internal slots are an implementation detail.
+
+* **Lazy deletes** set bits in a packed tombstone bitset (``core.bitset``,
+  sized exactly over the capacity — never hashed, a false positive would
+  drop live results). Deleted nodes keep their vectors and edges: the
+  traversal routes *through* them unperturbed (FreshDiskANN semantics), and
+  ``core.range_search.filter_tombstoned`` drops them at the result stage.
+
+* **Background consolidation** (``repro.live.consolidate``) rewires the
+  in-graph around tombstoned nodes with delete-aware RobustPrune and
+  compacts the live rows to the front of the capacity, reclaiming slots,
+  once the tombstone fraction crosses ``LiveConfig.consolidate_at``.
+
+* **Epoch/snapshot layer.** Every mutation batch bumps ``epoch`` and (being
+  functional ``jnp`` updates) yields fresh arrays; ``snapshot()`` captures a
+  consistent ``(graph, corpus, tombstones, epoch)`` view that stays valid —
+  and immutable — no matter how the index mutates afterwards. The server
+  refreshes its view only at micro-batch boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.build import BuildConfig, build_vamana, insert_batch_step
+from ..core.corpus import (
+    Corpus,
+    corpus_cast,
+    corpus_dtype_name,
+    corpus_raw,
+    corpus_set_rows,
+    corpus_with_capacity,
+)
+from ..core.engine import RangeSearchEngine
+from ..core.graph import Graph, start_points
+from ..core.range_search import (
+    RangeConfig,
+    RangeResult,
+    range_search_compacted,
+    range_search_fused,
+)
+from ..core.beam_search import SearchConfig
+from ..utils import INVALID_ID, cdiv
+from .consolidate import consolidate_index
+
+# Sentinel coordinate for unborn rows (matches dist.sharded_engine._FAR).
+FAR = 1e30
+
+_set_rows = jax.jit(corpus_set_rows)
+
+
+def externalize_ids(ext_ids: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Map a result buffer of slot ids to external ids (INVALID passes
+    through). Shared by the single-index snapshot and the sharded router —
+    any change to the clamping/INVALID handling belongs here."""
+    ids = np.asarray(ids)
+    valid = ids != INVALID_ID
+    return np.where(valid,
+                    np.asarray(ext_ids)[np.where(valid, ids, 0)],
+                    np.int64(INVALID_ID)).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveConfig:
+    """Static configuration of a live index."""
+
+    capacity: int                 # N_cap: pre-allocated corpus rows
+    insert_batch: int = 128       # fixed width of the jitted insert step
+    consolidate_at: float = 0.25  # tombstone fraction that triggers rewiring
+    n_starts: int = 4             # search entry points
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if self.insert_batch < 1:
+            raise ValueError("insert_batch must be >= 1")
+        if not (0.0 < self.consolidate_at <= 1.0):
+            raise ValueError("consolidate_at must be in (0, 1]")
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveSnapshot:
+    """An immutable, consistent view of the index at one epoch.
+
+    Everything a query needs travels together: search the snapshot and the
+    answer is coherent even while the owning ``LiveIndex`` keeps mutating
+    (jnp arrays are immutable; mutations produce new arrays)."""
+
+    points: Corpus            # (N_cap, d) corpus (rows past watermark: FAR)
+    graph: Graph              # (N_cap, R) adjacency
+    start_ids: jnp.ndarray    # (S,) entry slots
+    tombstones: jnp.ndarray   # (W,) uint32 exact dead-slot bitset
+    ext_ids: np.ndarray       # (N_cap,) int64 slot -> external id (host)
+    live_count: int           # watermark (born slots, incl. tombstoned)
+    n_dead: int               # tombstoned slots
+    epoch: int
+    metric: str
+
+    @property
+    def n_live(self) -> int:
+        return self.live_count - self.n_dead
+
+    def range(self, queries, r, cfg: Optional[RangeConfig] = None,
+              es_radius=None, compacted: bool = True) -> RangeResult:
+        """Range search over the live set; returned ids are EXTERNAL ids.
+
+        Tombstoned slots still route the walk (the filter is result-stage
+        only) and unborn slots are unreachable, so the traversal is the
+        frozen engine's program at the snapshot's shapes."""
+        cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
+        if cfg.search.metric != self.metric:
+            cfg = dataclasses.replace(cfg, search=dataclasses.replace(
+                cfg.search, metric=self.metric))
+        fn = range_search_compacted if compacted else range_search_fused
+        res = fn(self.points, self.graph, jnp.asarray(queries),
+                 self.start_ids, r, cfg, es_radius, self.tombstones)
+        return self._externalize(res)
+
+    def _externalize(self, res: RangeResult) -> RangeResult:
+        return dataclasses.replace(res,
+                                   ids=externalize_ids(self.ext_ids, res.ids))
+
+    def as_engine(self) -> RangeSearchEngine:
+        """Slot-id engine view (introspection / stats); queries through the
+        engine see slot ids and NO tombstone filter — use ``range``."""
+        return RangeSearchEngine(points=self.points, graph=self.graph,
+                                 start_ids=self.start_ids, metric=self.metric)
+
+
+class LiveIndex:
+    """Mutable wrapper around the immutable engine state (host orchestrator).
+
+    All array state is functional (every mutation produces new jnp arrays),
+    so any ``snapshot()`` taken earlier remains consistent. The host keeps
+    two pieces of bookkeeping the arrays cannot answer in O(1): the
+    ``ext -> slot`` hash index for delete routing, and the dead-slot set for
+    idempotent deletes.
+    """
+
+    def __init__(self, *, points: Corpus, neighbors: jnp.ndarray,
+                 start_ids: jnp.ndarray, ext_ids: np.ndarray,
+                 tombstones: jnp.ndarray, live_count: int, next_ext_id: int,
+                 epoch: int, metric: str, build_cfg: BuildConfig,
+                 cfg: LiveConfig, dead_slots: Optional[set] = None):
+        self.points = points
+        self.neighbors = neighbors
+        self.start_ids = start_ids
+        self.ext_ids = ext_ids
+        self.tombstones = tombstones
+        self.live_count = int(live_count)
+        self.next_ext_id = int(next_ext_id)
+        self.epoch = int(epoch)
+        self.metric = metric
+        self.build_cfg = build_cfg
+        self.cfg = cfg
+        self._dead: set[int] = set() if dead_slots is None else set(dead_slots)
+        self._slot_of: dict[int, int] = {
+            int(ext_ids[s]): s for s in range(self.live_count)
+            if ext_ids[s] != INVALID_ID}
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def create(points, cfg: LiveConfig,
+               build_cfg: Optional[BuildConfig] = None, metric: str = "l2",
+               corpus_dtype: str = "float32", seed: int = 0,
+               first_ext_id: int = 0,
+               graph: Optional[Graph] = None) -> "LiveIndex":
+        """Build the initial frozen index, then pre-allocate it to capacity.
+
+        ``first_ext_id`` offsets external-id assignment (the sharded router
+        hands each shard a disjoint id space). Passing ``graph`` skips the
+        Vamana build and promotes an existing frozen index to a live one
+        (it must have been built on these exact ``points``)."""
+        pts = jnp.asarray(points, jnp.float32)
+        n0 = pts.shape[0]
+        if n0 > cfg.capacity:
+            raise ValueError(f"initial corpus {n0} exceeds capacity "
+                             f"{cfg.capacity}")
+        bcfg = build_cfg or BuildConfig(metric=metric)
+        if graph is None:
+            graph = build_vamana(pts, bcfg, seed=seed)
+        elif graph.num_nodes != n0:
+            raise ValueError("graph was not built on these points")
+        starts = start_points(pts, metric, cfg.n_starts)
+        stored = corpus_with_capacity(corpus_cast(pts, corpus_dtype),
+                                      cfg.capacity, FAR)
+        if corpus_dtype == "int8":
+            corpus_raw(stored)  # live int8 requires raw vectors — fail early
+        nbrs = jnp.concatenate(
+            [graph.neighbors,
+             jnp.full((cfg.capacity - n0, graph.max_degree), INVALID_ID,
+                      jnp.int32)]) if cfg.capacity > n0 else graph.neighbors
+        ext = np.full(cfg.capacity, INVALID_ID, np.int64)
+        ext[:n0] = first_ext_id + np.arange(n0)
+        return LiveIndex(
+            points=stored, neighbors=nbrs, start_ids=starts, ext_ids=ext,
+            tombstones=jnp.zeros((cdiv(cfg.capacity, 32),), jnp.uint32),
+            live_count=n0, next_ext_id=first_ext_id + n0, epoch=0,
+            metric=metric, build_cfg=bcfg, cfg=cfg)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.cfg.capacity
+
+    @property
+    def n_dead(self) -> int:
+        return len(self._dead)
+
+    @property
+    def n_live(self) -> int:
+        return self.live_count - self.n_dead
+
+    @property
+    def free_slots(self) -> int:
+        return self.capacity - self.live_count
+
+    def tombstone_frac(self) -> float:
+        return self.n_dead / max(self.live_count, 1)
+
+    def corpus_dtype(self) -> str:
+        return corpus_dtype_name(self.points)
+
+    def stats(self) -> dict:
+        return dict(capacity=self.capacity, live_count=self.live_count,
+                    n_live=self.n_live, n_dead=self.n_dead,
+                    free_slots=self.free_slots, epoch=self.epoch,
+                    tombstone_frac=round(self.tombstone_frac(), 4),
+                    metric=self.metric, corpus_dtype=self.corpus_dtype())
+
+    def live_vectors(self) -> tuple[np.ndarray, np.ndarray]:
+        """(external ids (M,), exact f32 vectors (M, d)) of the live set —
+        the reference the churn-vs-oracle harness scans."""
+        slots = np.array([s for s in range(self.live_count)
+                          if s not in self._dead], np.int64)
+        raw = np.asarray(corpus_raw(self.points), np.float32)
+        if slots.size == 0:
+            return slots, np.zeros((0, raw.shape[1]), np.float32)
+        return self.ext_ids[slots], raw[slots]
+
+    # -- snapshots -----------------------------------------------------------
+    def snapshot(self) -> LiveSnapshot:
+        return LiveSnapshot(points=self.points, graph=Graph(self.neighbors),
+                            start_ids=self.start_ids,
+                            tombstones=self.tombstones,
+                            ext_ids=self.ext_ids.copy(),
+                            live_count=self.live_count, n_dead=self.n_dead,
+                            epoch=self.epoch, metric=self.metric)
+
+    def range(self, queries, r, cfg: Optional[RangeConfig] = None,
+              es_radius=None, compacted: bool = True) -> RangeResult:
+        return self.snapshot().range(queries, r, cfg, es_radius, compacted)
+
+    # -- mutation: inserts ---------------------------------------------------
+    def insert(self, vecs, ext_ids=None) -> np.ndarray:
+        """Insert ``vecs`` (k, d); returns their assigned external ids.
+
+        Rows are written behind the watermark (quantized on the way in when
+        the corpus is int8), then wired into the graph by the shared
+        fixed-shape build step in ``insert_batch`` chunks — reverse edges
+        included, overflowing rows RobustPruned. One epoch per call."""
+        vecs = np.asarray(vecs, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        k = vecs.shape[0]
+        if k == 0:
+            return np.zeros((0,), np.int64)
+        if self.live_count + k > self.capacity and self._dead:
+            self.consolidate()  # reclaim tombstoned slots before giving up
+        if self.live_count + k > self.capacity:
+            raise ValueError(
+                f"insert of {k} rows exceeds capacity {self.capacity} "
+                f"(live_count={self.live_count}); consolidation could not "
+                f"reclaim enough slots")
+        if ext_ids is None:
+            ext_ids = self.next_ext_id + np.arange(k, dtype=np.int64)
+        else:
+            ext_ids = np.asarray(ext_ids, np.int64)
+            if ext_ids.shape != (k,):
+                raise ValueError("ext_ids must have one id per inserted row")
+            dup = [int(e) for e in ext_ids if int(e) in self._slot_of]
+            if dup:
+                raise ValueError(f"external ids already present: {dup[:5]}")
+        B = self.cfg.insert_batch
+        d = vecs.shape[1]
+        for off in range(0, k, B):
+            chunk = vecs[off:off + B]
+            b = chunk.shape[0]
+            slots = np.arange(self.live_count, self.live_count + b,
+                              dtype=np.int32)
+            # fixed-width padded write (inactive lanes scatter-dropped)
+            slots_p = np.zeros(B, np.int32)
+            slots_p[:b] = slots
+            vecs_p = np.zeros((B, d), np.float32)
+            vecs_p[:b] = chunk
+            active = np.arange(B) < b
+            self.points = _set_rows(self.points, jnp.asarray(slots_p),
+                                    jnp.asarray(vecs_p), jnp.asarray(active))
+            batch = np.full(B, INVALID_ID, np.int32)
+            batch[:b] = slots
+            self.neighbors = insert_batch_step(
+                corpus_raw(self.points), self.neighbors, jnp.asarray(batch),
+                self.start_ids, self.build_cfg, self.build_cfg.alpha)
+            for j, s in enumerate(slots):
+                e = int(ext_ids[off + j])
+                self.ext_ids[s] = e
+                self._slot_of[e] = int(s)
+            self.live_count += b
+        self.next_ext_id = max(self.next_ext_id, int(ext_ids.max()) + 1)
+        self.epoch += 1
+        return ext_ids
+
+    # -- mutation: deletes ---------------------------------------------------
+    def delete(self, ext_ids) -> int:
+        """Tombstone the given external ids (lazy delete). Unknown or
+        already-deleted ids are skipped; returns how many were newly
+        tombstoned. The vectors and edges stay until consolidation, so
+        deleted nodes keep routing searches."""
+        ext_ids = np.atleast_1d(np.asarray(ext_ids, np.int64))
+        slots = []
+        for e in ext_ids:
+            s = self._slot_of.get(int(e))
+            if s is not None and s not in self._dead:
+                slots.append(s)
+                self._dead.add(s)
+        if slots:
+            from ..core.bitset import bitset_add  # local: avoid cycle at import
+            sl = jnp.asarray(np.asarray(slots, np.int32))
+            # fresh unique slots with clear bits: the add is exact
+            self.tombstones = bitset_add(self.tombstones, sl,
+                                         jnp.ones(sl.shape, bool))
+            self.epoch += 1
+        return len(slots)
+
+    # -- consolidation -------------------------------------------------------
+    def maybe_consolidate(self) -> bool:
+        """Consolidate iff the tombstone fraction crossed the threshold."""
+        if (self._dead and self.n_live > 0
+                and self.tombstone_frac() >= self.cfg.consolidate_at):
+            self.consolidate()
+            return True
+        return False
+
+    def consolidate(self) -> dict:
+        """Rewire around tombstoned nodes (delete-aware RobustPrune) and
+        compact live rows to the front of the capacity. External ids are
+        stable; slots move. One epoch.
+
+        A fully-deleted index is a no-op (nothing live to rebuild entry
+        points from; the tombstones keep filtering every result) — the
+        serving path must never crash on legitimate delete-everything
+        traffic."""
+        if not self._dead or self.n_live == 0:
+            return dict(n_rewired=0, n_live=self.n_live, reclaimed=0)
+        dead = np.zeros(self.capacity, bool)
+        dead[np.asarray(sorted(self._dead), np.int64)] = True
+        out = consolidate_index(
+            self.points, self.neighbors, dead, self.live_count,
+            self.build_cfg, self.metric, self.cfg.n_starts, far=FAR)
+        new_points, new_neighbors, new_starts, perm, stats = out
+        reclaimed = self.live_count - perm.shape[0]
+        self.points = new_points
+        self.neighbors = new_neighbors
+        self.start_ids = new_starts
+        ext = np.full(self.capacity, INVALID_ID, np.int64)
+        ext[:perm.shape[0]] = self.ext_ids[perm]
+        self.ext_ids = ext
+        self.live_count = int(perm.shape[0])
+        self.tombstones = jnp.zeros_like(self.tombstones)
+        self._dead = set()
+        self._slot_of = {int(ext[s]): s for s in range(self.live_count)}
+        self.epoch += 1
+        return dict(reclaimed=reclaimed, n_live=self.live_count, **stats)
+
+    # -- checkpoint round-trip ----------------------------------------------
+    def save(self, manager, step: Optional[int] = None) -> str:
+        """Write the full mutable state through ``train.CheckpointManager``
+        (atomic, keep-k). ``step`` defaults to the current epoch."""
+        from ..core.corpus import QuantizedCorpus
+        state = dict(
+            neighbors=self.neighbors,
+            start_ids=self.start_ids,
+            tombstones=self.tombstones,
+            ext_ids=self.ext_ids,
+            counters=np.asarray(
+                [self.live_count, self.next_ext_id, self.epoch], np.int64),
+        )
+        if isinstance(self.points, QuantizedCorpus):
+            state["codes"] = self.points.codes
+            state["meta"] = self.points.meta
+            state["raw"] = self.points.raw
+        else:
+            state["points"] = self.points
+        extra = dict(
+            kind="live_index", metric=self.metric,
+            corpus_dtype=self.corpus_dtype(),
+            live=dataclasses.asdict(self.cfg),
+            build=dataclasses.asdict(self.build_cfg),
+        )
+        return manager.save(self.epoch if step is None else step, state,
+                            extra=extra)
+
+    @staticmethod
+    def restore(manager, step: Optional[int] = None) -> "LiveIndex":
+        """Rebuild a ``LiveIndex`` from a checkpoint written by ``save``.
+
+        Host-side bookkeeping (the ext->slot hash index and the dead-slot
+        set) is reconstructed from the arrays."""
+        from ..core.bitset import bitset_contains
+        from ..core.corpus import QuantizedCorpus
+        flat, manifest = manager.restore_flat(step)
+        extra = manifest["extra"]
+        if extra.get("kind") != "live_index":
+            raise ValueError("checkpoint was not written by LiveIndex.save")
+        if "points" in flat:
+            points = flat["points"]
+        else:
+            points = QuantizedCorpus(codes=flat["codes"], meta=flat["meta"],
+                                     raw=flat["raw"])
+        live_count, next_ext_id, epoch = (int(x) for x in
+                                          np.asarray(flat["counters"]))
+        tomb = jnp.asarray(flat["tombstones"], jnp.uint32)
+        born = jnp.arange(live_count, dtype=jnp.int32)
+        dead = set(np.nonzero(np.asarray(
+            bitset_contains(tomb, born)))[0].tolist()) if live_count else set()
+        return LiveIndex(
+            points=points,
+            neighbors=jnp.asarray(flat["neighbors"], jnp.int32),
+            start_ids=jnp.asarray(flat["start_ids"], jnp.int32),
+            ext_ids=np.asarray(flat["ext_ids"], np.int64),
+            tombstones=tomb, live_count=live_count, next_ext_id=next_ext_id,
+            epoch=epoch, metric=extra["metric"],
+            build_cfg=BuildConfig(**extra["build"]),
+            cfg=LiveConfig(**extra["live"]), dead_slots=dead)

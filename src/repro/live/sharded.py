@@ -1,0 +1,172 @@
+"""Sharded live index: shard-routed mutations + per-shard tombstones.
+
+One ``LiveIndex`` per shard, each with its own pre-allocated capacity,
+insert stream, tombstone bitset, and consolidation schedule. The router
+owns the global external-id space and the ``ext -> shard`` ownership map:
+
+* **inserts** route to the owning shard — the one with the most free
+  capacity (least-loaded placement; contiguous-block ids are a build-time
+  artifact the live system drops). The shard assigns slots locally and the
+  router records ownership.
+* **deletes** route by ownership and tombstone only the owning shard's
+  bitset.
+* **queries** stack the per-shard snapshots into a ``ShardedCorpus`` (+ a
+  stacked ``(S, W)`` tombstone plane) and dispatch one
+  ``dist.sharded_range_search`` program: every shard filters its own dead
+  slots at the result stage, the union merge sees live candidates only.
+  The stacked view is cached per epoch vector, so serving traffic pays the
+  stack cost once per mutation batch, not per query.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.build import BuildConfig
+from ..core.range_search import RangeConfig, RangeResult
+from ..dist.sharded_engine import ShardedCorpus, sharded_range_search
+from .index import LiveConfig, LiveIndex, externalize_ids
+
+
+class LiveShardedIndex:
+    """Router over per-shard ``LiveIndex`` sub-indices (uniform capacity)."""
+
+    def __init__(self, shards: list[LiveIndex]):
+        if not shards:
+            raise ValueError("need at least one shard")
+        cap = shards[0].capacity
+        deg = shards[0].neighbors.shape[1]
+        for sh in shards[1:]:
+            if sh.capacity != cap or sh.neighbors.shape[1] != deg:
+                raise ValueError("shards must share capacity and max degree")
+            if sh.metric != shards[0].metric:
+                raise ValueError("shards must share the metric")
+        self.shards = shards
+        self.next_ext_id = max(sh.next_ext_id for sh in shards)
+        self._owner: dict[int, int] = {}
+        for si, sh in enumerate(shards):
+            for e in sh._slot_of:
+                self._owner[e] = si
+        self._view_cache: Optional[tuple] = None
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def create(points, n_shards: int, cfg: LiveConfig,
+               build_cfg: Optional[BuildConfig] = None, metric: str = "l2",
+               corpus_dtype: str = "float32", seed: int = 0) -> "LiveShardedIndex":
+        """Partition ``points`` into contiguous blocks, one live sub-index
+        per block; ``cfg.capacity`` is the PER-SHARD capacity."""
+        pts = np.asarray(points, np.float32)
+        n = -(-pts.shape[0] // n_shards)
+        shards = []
+        for s in range(n_shards):
+            block = pts[s * n:(s + 1) * n]
+            shards.append(LiveIndex.create(
+                block, cfg, build_cfg=build_cfg, metric=metric,
+                corpus_dtype=corpus_dtype, seed=seed + s,
+                first_ext_id=s * n))
+        idx = LiveShardedIndex(shards)
+        idx.next_ext_id = pts.shape[0]
+        return idx
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_live(self) -> int:
+        return sum(sh.n_live for sh in self.shards)
+
+    def epochs(self) -> tuple:
+        return tuple(sh.epoch for sh in self.shards)
+
+    def stats(self) -> dict:
+        return dict(n_shards=self.n_shards, n_live=self.n_live,
+                    epochs=list(self.epochs()),
+                    shards=[sh.stats() for sh in self.shards])
+
+    def live_vectors(self) -> tuple[np.ndarray, np.ndarray]:
+        pairs = [sh.live_vectors() for sh in self.shards]
+        return (np.concatenate([p[0] for p in pairs]),
+                np.concatenate([p[1] for p in pairs]))
+
+    # -- mutation ------------------------------------------------------------
+    def insert(self, vecs) -> np.ndarray:
+        """Route to the owning (least-loaded) shard; a batch larger than one
+        shard's free space splits greedily across shards by free capacity
+        (tombstoned slots count as free — the shard's insert reclaims them
+        by consolidating when it must)."""
+        vecs = np.asarray(vecs, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        k = vecs.shape[0]
+        if k == 0:
+            return np.zeros((0,), np.int64)
+        free = [sh.capacity - sh.n_live for sh in self.shards]
+        if sum(free) < k:
+            raise ValueError(f"insert of {k} rows exceeds the fleet's free "
+                             f"capacity {sum(free)}")
+        ext = self.next_ext_id + np.arange(k, dtype=np.int64)
+        off = 0
+        while off < k:
+            si = int(np.argmax(free))
+            take = min(k - off, free[si])
+            self.shards[si].insert(vecs[off:off + take],
+                                   ext_ids=ext[off:off + take])
+            for e in ext[off:off + take]:
+                self._owner[int(e)] = si
+            free[si] -= take
+            off += take
+        self.next_ext_id += k
+        return ext
+
+    def delete(self, ext_ids) -> int:
+        """Tombstone each id in its owning shard's bitset."""
+        ext_ids = np.atleast_1d(np.asarray(ext_ids, np.int64))
+        per_shard: dict[int, list[int]] = {}
+        for e in ext_ids:
+            si = self._owner.get(int(e))
+            if si is not None:
+                per_shard.setdefault(si, []).append(int(e))
+        return sum(self.shards[si].delete(np.asarray(ids, np.int64))
+                   for si, ids in per_shard.items())
+
+    def maybe_consolidate(self) -> int:
+        """Per-shard threshold check; returns shards consolidated."""
+        return sum(int(sh.maybe_consolidate()) for sh in self.shards)
+
+    # -- queries -------------------------------------------------------------
+    def _stacked_view(self):
+        """(ShardedCorpus, tombstones (S, W), flat ext ids (S*cap,)), cached
+        per epoch vector (rebuilt only after a mutation batch)."""
+        key = self.epochs()
+        if self._view_cache is not None and self._view_cache[0] == key:
+            return self._view_cache[1]
+        cap = self.shards[0].capacity
+        corpus = ShardedCorpus(
+            points=jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[sh.points for sh in self.shards]),
+            neighbors=jnp.stack([sh.neighbors for sh in self.shards]),
+            start_ids=jnp.stack([sh.start_ids for sh in self.shards]),
+            offsets=jnp.arange(self.n_shards, dtype=jnp.int32) * cap,
+            n_total=self.n_shards * cap,
+        )
+        tomb = jnp.stack([sh.tombstones for sh in self.shards])
+        flat_ext = np.concatenate([sh.ext_ids for sh in self.shards])
+        view = (corpus, tomb, flat_ext)
+        self._view_cache = (key, view)
+        return view
+
+    def range(self, mesh, queries, r, cfg: RangeConfig,
+              es_radius=None) -> RangeResult:
+        """Union range search over all shards; returned ids are EXTERNAL."""
+        corpus, tomb, flat_ext = self._stacked_view()
+        res = sharded_range_search(mesh, corpus, jnp.asarray(queries), r,
+                                   cfg, es_radius, tombstones=tomb)
+        return dataclasses.replace(res,
+                                   ids=externalize_ids(flat_ext, res.ids))

@@ -6,7 +6,10 @@ Production anatomy (single-process simulation of the real service):
   drains up to ``max_batch`` or until ``max_wait_s`` passes (micro-batching:
   the standard accelerator-serving latency/throughput knob). Radii are
   per-request: a micro-batch freely mixes radii, each lane answered at its
-  own (the paper's queries are radius-heterogeneous by nature).
+  own (the paper's queries are radius-heterogeneous by nature). Admission is
+  **bounded**: beyond ``max_queue`` pending requests, ``submit`` rejects
+  (and counts) instead of growing the deque without limit — queue growth
+  under overload is a latency bomb, load shedding is the production answer.
 * **bucketed dispatch** — batches are padded to power-of-two sizes so jit
   compiles O(log B) programs total.
 * **two-phase compaction execution** — phase 1 (uniform beam search) over
@@ -14,6 +17,13 @@ Production anatomy (single-process simulation of the real service):
   greedy/doubling phase (core.range_search_compacted).
 * **multi-shard** — given a mesh + ShardedCorpus, dispatch goes through
   dist.sharded_range_search and merges per-shard unions.
+* **live mutation** — given a ``repro.live.LiveIndex``, requests may carry
+  ``op="insert"`` / ``op="delete"`` alongside queries in the same admission
+  queue. The batcher applies a micro-batch's mutations first (coalesced in
+  arrival order), triggers threshold consolidation, then refreshes its
+  **epoch snapshot** and answers the batch's queries against that one
+  consistent ``(graph, corpus, tombstones, epoch)`` view — queries never
+  observe a half-applied mutation batch. Returned ids are external ids.
 * per-request stats (visited, distance comps, early-stopped) surface in the
   response for monitoring.
 """
@@ -37,9 +47,11 @@ from ..utils import INVALID_ID, next_pow2
 @dataclasses.dataclass
 class Request:
     req_id: int
-    query: np.ndarray
-    radius: float           # per-request; requests with different radii batch together
+    query: Optional[np.ndarray] = None  # query/insert: the vector
+    radius: Optional[float] = None      # per-request; batches mix radii freely
     deadline: float = float("inf")
+    op: str = "query"                   # query | insert | delete
+    delete_ids: Optional[np.ndarray] = None  # delete: external ids to remove
 
 
 @dataclasses.dataclass
@@ -52,6 +64,8 @@ class Response:
     es_stopped: bool
     latency_s: float
     radius: float = float("nan")  # the radius this request was answered at
+    op: str = "query"
+    epoch: int = 0                # index epoch the request was served/applied at
 
 
 @dataclasses.dataclass
@@ -63,19 +77,29 @@ class ServerConfig:
     expand_width: int = 0           # >0 overrides SearchConfig.expand_width
                                     # (ops knob: retune the frontier width
                                     # without rebuilding the engine config)
+    max_queue: int = 8192           # admission bound; 0 disables admission
+                                    # entirely (drain-only maintenance mode)
+    auto_consolidate: bool = True   # live engines: threshold consolidation
+                                    # between micro-batches
 
 
 class RangeServer:
     def __init__(
         self,
-        engine: RangeSearchEngine,
+        engine: Optional[RangeSearchEngine],
         cfg: RangeConfig,
         server_cfg: ServerConfig = ServerConfig(),
         *,
         mesh=None,
         sharded: Optional[ShardedCorpus] = None,
+        live=None,
     ):
+        """``live`` is a ``repro.live.LiveIndex``; it supersedes ``engine``
+        (pass ``engine=None``) and enables insert/delete requests."""
+        if engine is None and live is None:
+            raise ValueError("need an engine or a live index")
         self.engine = engine
+        self.live = live
         if server_cfg.expand_width > 0:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(
                 cfg.search, expand_width=server_cfg.expand_width))
@@ -84,7 +108,12 @@ class RangeServer:
         # stores (an f32 corpus behind an "int8" config would silently
         # serve at 4x the planned HBM budget, and vice versa would skip
         # the planned rerank stage)
-        served = sharded.points if sharded is not None else engine.points
+        if live is not None:
+            served = live.points
+        elif sharded is not None:
+            served = sharded.points
+        else:
+            served = engine.points
         actual = corpus_dtype_name(served)
         if cfg.search.corpus_dtype != actual:
             raise ValueError(
@@ -95,8 +124,14 @@ class RangeServer:
         self.mesh = mesh
         self.sharded = sharded
         self.queue: deque[tuple[Request, float]] = deque()
+        self._view = live.snapshot() if live is not None else None
         self.stats = {
             "served": 0, "batches": 0, "es_stopped": 0, "overflow": 0,
+            # bounded admission: requests shed at the queue limit (the
+            # overload signal capacity planning alarms on)
+            "rejected": 0,
+            # live mutation counters; epoch mirrors the served snapshot
+            "inserts": 0, "deletes": 0, "consolidations": 0, "epoch": 0,
             # quantized-corpus two-pass: candidates that fell in the radius
             # guard band and were exact-reranked (0 on f32/bf16 corpora);
             # the band hit rate is what capacity planning watches — a wide
@@ -112,8 +147,25 @@ class RangeServer:
         }
 
     # -- admission -------------------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> bool:
+        """Admit a request; returns False (and counts the shed) when the
+        queue is at ``max_queue``. Malformed requests are rejected HERE, at
+        the client's call site — one bad request admitted into a micro-batch
+        would otherwise take down every other request batched with it."""
+        if req.op not in ("query", "insert", "delete"):
+            raise ValueError(f"unknown op {req.op!r}")
+        if req.op in ("insert", "delete") and self.live is None:
+            raise ValueError(f"{req.op!r} requests need a live index")
+        if req.op == "delete":
+            if req.delete_ids is None:
+                raise ValueError("delete requests need delete_ids")
+        elif req.query is None:
+            raise ValueError(f"{req.op!r} requests need a query vector")
+        if len(self.queue) >= self.scfg.max_queue:
+            self.stats["rejected"] += 1
+            return False
         self.queue.append((req, time.perf_counter()))
+        return True
 
     def pending(self) -> int:
         return len(self.queue)
@@ -129,11 +181,55 @@ class RangeServer:
                 break
         return out
 
+    # -- mutation ------------------------------------------------------------
+    def _apply_mutations(self, muts: list[tuple[Request, float]]) -> list[Response]:
+        """Apply a micro-batch's mutations: ONE coalesced insert batch, then
+        ONE coalesced delete batch.
+
+        Reordering within the micro-batch is sound because external ids are
+        never reused: insert-then-delete of the same id inside one batch
+        lands in the same final state either way, and a delete can never
+        precede "its" insert across the reorder (the id did not exist when
+        the delete was submitted). Coalescing is what makes churn traffic
+        cheap — each batch pays one fixed-shape insert step and one bitset
+        update instead of one dispatch per request."""
+        out = []
+        ins = [(rq, t) for rq, t in muts if rq.op == "insert"]
+        dels = [(rq, t) for rq, t in muts if rq.op == "delete"]
+        if ins:
+            ext = self.live.insert(np.stack([rq.query for rq, _ in ins]))
+            self.stats["inserts"] += len(ins)
+            now = time.perf_counter()
+            for (rq, arrive), e in zip(ins, ext):
+                ids = np.asarray([e], np.int64)
+                out.append(Response(
+                    req_id=rq.req_id, ids=ids,
+                    dists=np.zeros(1, np.float32), count=1,
+                    overflow=False, es_stopped=False,
+                    latency_s=now - arrive, op="insert",
+                    epoch=self.live.epoch))
+        if dels:
+            per_req = [np.atleast_1d(np.asarray(rq.delete_ids, np.int64))
+                       for rq, _ in dels]
+            self.stats["deletes"] += self.live.delete(np.concatenate(per_req))
+            now = time.perf_counter()
+            for (rq, arrive), ids in zip(dels, per_req):
+                out.append(Response(
+                    req_id=rq.req_id, ids=ids,
+                    dists=np.zeros(len(ids), np.float32), count=len(ids),
+                    overflow=False, es_stopped=False,
+                    latency_s=now - arrive, op="delete",
+                    epoch=self.live.epoch))
+        return out
+
+    # -- execution -----------------------------------------------------------
     def _execute(self, queries: np.ndarray, radii: np.ndarray):
         es = (self.scfg.es_radius_factor * jnp.asarray(radii)
               if self.scfg.es_radius_factor > 0 else None)
         qs = jnp.asarray(queries)
         rs = jnp.asarray(radii)
+        if self.live is not None:
+            return self._view.range(qs, rs, self.cfg, es)
         if self.sharded is not None and self.mesh is not None:
             return sharded_range_search(self.mesh, self.sharded, qs, rs, self.cfg, es)
         return range_search_compacted(self.engine.points, self.engine.graph, qs,
@@ -142,13 +238,31 @@ class RangeServer:
     def step(self) -> list[Response]:
         """Serve one micro-batch from the queue.
 
-        Requests batch regardless of radius: the radius vector rides
-        alongside the query matrix (padded identically), and every layer
-        below answers each lane at its own radius.
+        Mutations in the batch apply first (in arrival order); the epoch
+        snapshot then advances ONCE and every query in the batch is answered
+        against that view — a consistent ``(graph, corpus, tombstones,
+        epoch)`` even as later batches keep mutating. Requests batch
+        regardless of radius: the radius vector rides alongside the query
+        matrix (padded identically), and every layer below answers each lane
+        at its own radius.
         """
         batch = self._drain()
         if not batch:
             return []
+        out = []
+        if self.live is not None:
+            muts = [b for b in batch if b[0].op != "query"]
+            batch = [b for b in batch if b[0].op == "query"]
+            if muts:
+                out.extend(self._apply_mutations(muts))
+                if (self.scfg.auto_consolidate
+                        and self.live.maybe_consolidate()):
+                    self.stats["consolidations"] += 1
+                self._view = self.live.snapshot()
+            self.stats["epoch"] = self._view.epoch
+            self.stats["batches"] += 1 if (muts and not batch) else 0
+        if not batch:
+            return out
         reqs = [b[0] for b in batch]
         arrive = [b[1] for b in batch]
         n = len(reqs)
@@ -162,12 +276,12 @@ class RangeServer:
             radii = np.concatenate([radii, np.repeat(radii[:1], bucket - n)])
         res = self._execute(q, radii)
         now = time.perf_counter()
-        out = []
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         counts = np.asarray(res.count)
         over = np.asarray(res.overflow)
         ess = np.asarray(res.es_stopped)
+        epoch = self._view.epoch if self._view is not None else 0
         for i, rq in enumerate(reqs):
             row = ids[i]
             valid = row != INVALID_ID
@@ -180,6 +294,7 @@ class RangeServer:
                 es_stopped=bool(ess[i]),
                 latency_s=now - arrive[i],
                 radius=float(radii[i]),
+                epoch=epoch,
             ))
         self.stats["served"] += n
         self.stats["batches"] += 1

@@ -103,6 +103,35 @@ class CheckpointManager:
         steps = self.completed_steps()
         return steps[-1] if steps else None
 
+    def manifest(self, step: Optional[int] = None) -> dict:
+        """The manifest of a completed step (paths + the ``extra`` metadata
+        recorded at save time — e.g. the live index's static config)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no completed checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+
+    def restore_flat(self, step: Optional[int] = None,
+                     shardings: Optional[dict] = None) -> tuple[dict, dict]:
+        """Template-free restore: ``({path: array}, manifest)``.
+
+        For states whose *structure* is only known from the checkpoint
+        itself (the live index rebuilds its wrapper from the manifest's
+        ``extra``); ``restore`` below remains the template-shaped API.
+        ``shardings`` is an optional flat ``{path: Sharding}`` dict."""
+        manifest = self.manifest(step)
+        d = os.path.join(self.dir, f"step_{manifest['step']:010d}")
+        flat = {}
+        for path in manifest["paths"]:
+            arr = np.load(os.path.join(d, path + ".npy"))
+            if shardings is not None and shardings.get(path) is not None:
+                flat[path] = jax.device_put(arr, shardings[path])
+            else:
+                flat[path] = jnp.asarray(arr)
+        return flat, manifest
+
     def restore(self, template, step: Optional[int] = None,
                 shardings=None) -> tuple[dict, int]:
         """Load into ``template``'s structure; optionally reshard each leaf.
@@ -110,18 +139,6 @@ class CheckpointManager:
         ``shardings``: pytree of jax.sharding.Sharding matching template (or
         None for default placement). Returns (state, step).
         """
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no completed checkpoint in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
         flat_shard = _flatten(shardings) if shardings is not None else None
-        flat = {}
-        for path in manifest["paths"]:
-            arr = np.load(os.path.join(d, path + ".npy"))
-            if flat_shard is not None and flat_shard.get(path) is not None:
-                flat[path] = jax.device_put(arr, flat_shard[path])
-            else:
-                flat[path] = jnp.asarray(arr)
-        return _unflatten(flat, template), step
+        flat, manifest = self.restore_flat(step, flat_shard)
+        return _unflatten(flat, template), manifest["step"]

@@ -1,0 +1,323 @@
+"""Live-update subsystem tests: churn vs the exact oracle.
+
+The backbone invariant: after ANY interleaving of inserts and deletes, the
+live index's range results (external ids) equal ``exact_range_search``
+restricted to the live set — fused == compacted == sharded, on f32 and int8
+corpora, with mixed per-query radii. The corpus is clustered and the graph
+two-pass-built so greedy range search recovers exact in-range sets (the same
+well-navigable recipe the server oracle tests rely on); equality is then a
+meaningful, non-flaky assertion.
+
+Heavier randomized interleavings run under the ``slow`` marker (pyproject
+addopts keep them off the fast path; CI runs them in their own step).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BuildConfig, RangeConfig, SearchConfig, build_vamana
+from repro.core.distances import point_dist
+from repro.live import LiveConfig, LiveIndex, LiveShardedIndex
+from repro.train import CheckpointManager
+from repro.utils import INVALID_ID
+
+D = 10
+BCFG = BuildConfig(max_degree=24, beam=48, insert_batch=256, two_pass=True)
+LCFG = LiveConfig(capacity=1024, insert_batch=64, consolidate_at=0.25)
+CFG = RangeConfig(search=SearchConfig(beam=64, max_beam=64, visit_cap=256),
+                  mode="greedy", result_cap=512)
+
+
+def _clustered(n, seed=0, scale=0.4):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((8, D)).astype(np.float32) * 3
+    return (centers[rng.integers(0, 8, n)]
+            + rng.standard_normal((n, D)).astype(np.float32) * scale)
+
+
+_BASE: dict = {}
+
+
+def _base():
+    """(initial points (700, D), prebuilt graph, stream points (120, D)),
+    built once — every test creates its own cheap LiveIndex from the cached
+    graph so mutations never leak between tests."""
+    if not _BASE:
+        pts = _clustered(700, seed=0)
+        _BASE["pts"] = pts
+        _BASE["graph"] = build_vamana(jnp.asarray(pts), BCFG)
+        _BASE["stream"] = _clustered(120, seed=7)
+    return _BASE["pts"], _BASE["graph"], _BASE["stream"]
+
+
+def _live(corpus_dtype="float32"):
+    pts, graph, _ = _base()
+    return LiveIndex.create(pts, LCFG, BCFG, corpus_dtype=corpus_dtype,
+                            graph=graph)
+
+
+def _sets(res):
+    ids = np.asarray(res.ids)
+    return [set(row[row != INVALID_ID].tolist()) for row in ids]
+
+
+def _oracle_sets(live, qs, radii):
+    """Exact diff-form oracle restricted to the live set, keyed by ext id."""
+    ext, vecs = live.live_vectors()
+    exact = np.asarray(point_dist(vecs[None], np.asarray(qs)[:, None], "l2"))
+    return [set(ext[exact[i] <= radii[i]].tolist()) for i in range(len(qs))]
+
+
+def _mixed_radii(qs, lo=1.0, hi=6.0, seed=3):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, len(qs)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# acceptance invariants
+# ---------------------------------------------------------------------------
+
+def test_insert_then_query_finds_new_point_at_exact_distance():
+    live = _live()
+    _, _, stream = _base()
+    new = stream[:40]
+    ids = live.insert(new)
+    assert ids.shape == (40,) and live.n_live == 740
+    qs = new[:8] + 0.001
+    res = live.range(qs, 0.5, CFG)
+    res_f = live.range(qs, 0.5, CFG, compacted=False)
+    got, got_f = _sets(res), _sets(res_f)
+    d_exact = np.sum((new[:8] - qs) ** 2, axis=1)
+    rows_ids = np.asarray(res.ids)
+    rows_d = np.asarray(res.dists)
+    for i in range(8):
+        assert ids[i] in got[i], f"lane {i}: fresh insert not found"
+        assert got[i] == got_f[i]
+        j = int(np.nonzero(rows_ids[i] == ids[i])[0][0])
+        np.testing.assert_allclose(rows_d[i, j], d_exact[i], atol=1e-5)
+
+
+def test_delete_then_query_never_returns_deleted():
+    live = _live()
+    pts, _, _ = _base()
+    doomed = np.arange(0, 50)
+    assert live.delete(doomed) == 50
+    assert live.delete(doomed) == 0  # idempotent
+    qs = pts[:16] + 0.01  # query AT deleted points: their slots must route,
+    res = live.range(qs, _mixed_radii(qs), CFG)  # never answer
+    for i, got in enumerate(_sets(res)):
+        assert not (got & set(doomed.tolist())), f"lane {i}"
+    # tombstoned nodes still ROUTE: results equal the live-set oracle even
+    # though the query's nearest neighbors (its own deleted copies) are gone
+    radii = _mixed_radii(qs)
+    want = _oracle_sets(live, qs, radii)
+    got = _sets(live.range(qs, jnp.asarray(radii), CFG))
+    over = np.asarray(live.range(qs, jnp.asarray(radii), CFG).overflow)
+    for i in range(len(qs)):
+        if not over[i]:
+            assert got[i] == want[i], f"lane {i}"
+
+
+@pytest.mark.parametrize("corpus_dtype", ("float32", "int8"))
+def test_churn_oracle_equivalence(corpus_dtype):
+    """Interleaved inserts/deletes; results == oracle on the live set at
+    mixed per-query radii; fused == compacted."""
+    live = _live(corpus_dtype)
+    pts, _, stream = _base()
+    rng = np.random.default_rng(11)
+    ids0 = live.insert(stream[:30])
+    live.delete(rng.choice(700, 40, replace=False))
+    ids1 = live.insert(stream[30:60])
+    live.delete(ids0[:10])                      # delete some fresh inserts
+    live.delete(rng.choice(700, 30, replace=False))
+    assert live.epoch == 5
+    qs = np.concatenate([pts[100:116] + 0.01, stream[30:38] + 0.01])
+    radii = _mixed_radii(qs)
+    res_c = live.range(qs, jnp.asarray(radii), CFG)
+    res_f = live.range(qs, jnp.asarray(radii), CFG, compacted=False)
+    want = _oracle_sets(live, qs, radii)
+    got_c, got_f = _sets(res_c), _sets(res_f)
+    over = np.asarray(res_c.overflow)
+    for i in range(len(qs)):
+        assert got_c[i] == got_f[i], f"lane {i}: fused != compacted"
+        if not over[i]:
+            assert got_c[i] == want[i], f"lane {i}: oracle mismatch"
+    # the surviving fresh inserts answer; the deleted ones never do
+    all_got = set().union(*got_c)
+    assert not (all_got & set(ids0[:10].tolist()))
+    assert set(ids1.tolist()) & all_got
+
+
+def test_sharded_churn_matches_oracle():
+    """Per-shard tombstones + shard-routed mutations through the shard_map
+    union merge (single device, 2 shards along the model axis)."""
+    pts, _, stream = _base()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sl = LiveShardedIndex.create(
+        pts, 2, LiveConfig(capacity=512, insert_batch=64), BCFG)
+    rng = np.random.default_rng(5)
+    new_ids = sl.insert(stream[:40])
+    assert sl.delete(np.concatenate([new_ids[:8],
+                                     rng.choice(700, 50, replace=False)])) == 58
+    qs = np.concatenate([pts[200:212] + 0.01, stream[8:12] + 0.01])
+    radii = _mixed_radii(qs)
+    res = sl.range(mesh, qs, jnp.asarray(radii), CFG)
+    want = _oracle_sets(sl, qs, radii)
+    got = _sets(res)
+    over = np.asarray(res.overflow)
+    for i in range(len(qs)):
+        if not over[i]:
+            assert got[i] == want[i], f"lane {i}"
+    # the batch routed to ONE owning shard; deletes hit their owners' bitsets
+    owners = {sl._owner[int(e)] for e in new_ids}
+    assert len(owners) == 1
+    owner = owners.pop()
+    assert sl.shards[owner].live_count == 350 + 40
+    assert sum(sh.n_dead for sh in sl.shards) == 58
+
+
+def test_sharded_insert_splits_across_shards_when_one_fills():
+    """A batch larger than the owning shard's free capacity splits greedily
+    across shards instead of failing (regression: the router used to hand
+    the whole batch to one shard)."""
+    pts, _, stream = _base()
+    sl = LiveShardedIndex.create(
+        pts, 2, LiveConfig(capacity=400, insert_batch=64), BCFG)
+    # each shard holds 350, free 50 -> a 90-row batch MUST span both
+    ids = sl.insert(np.concatenate([stream, _clustered(90, seed=9)])[:90])
+    owners = {sl._owner[int(e)] for e in ids}
+    assert owners == {0, 1}
+    assert sl.n_live == 790
+    with pytest.raises(ValueError, match="free capacity"):
+        sl.insert(_clustered(50, seed=10))  # fleet has only 10 free
+
+
+def test_consolidation_rewires_compacts_and_preserves_results():
+    live = _live()
+    pts, _, stream = _base()
+    rng = np.random.default_rng(2)
+    live.insert(stream[:50])
+    live.delete(rng.choice(700, 200, replace=False))  # 26.7% > threshold
+    qs = pts[300:316] + 0.01
+    radii = _mixed_radii(qs)
+    want = _oracle_sets(live, qs, radii)
+    before = live.live_vectors()
+    assert live.maybe_consolidate()           # frac crossed consolidate_at
+    assert not live.maybe_consolidate()       # tombstones all reclaimed
+    st = live.stats()
+    assert st["n_dead"] == 0 and st["live_count"] == 550
+    assert st["free_slots"] == LCFG.capacity - 550  # slots reclaimed
+    after = live.live_vectors()
+    np.testing.assert_array_equal(np.sort(before[0]), np.sort(after[0]))
+    got = _sets(live.range(qs, jnp.asarray(radii), CFG))
+    over = np.asarray(live.range(qs, jnp.asarray(radii), CFG).overflow)
+    for i in range(len(qs)):
+        if not over[i]:
+            assert got[i] == want[i], f"lane {i}: results moved under consolidation"
+
+
+def test_insert_beyond_capacity_consolidates_or_raises():
+    pts, graph, stream = _base()
+    live = LiveIndex.create(pts, LiveConfig(capacity=720, insert_batch=64),
+                            BCFG, graph=graph)
+    with pytest.raises(ValueError, match="capacity"):
+        live.insert(stream[:40])              # no tombstones to reclaim
+    live.delete(np.arange(100))
+    ids = live.insert(stream[:40])            # auto-consolidation freed slots
+    assert live.live_count == 640 and live.n_live == 640
+    got = set().union(*_sets(live.range(stream[:4] + 0.001, 0.5, CFG)))
+    assert set(ids[:4].tolist()) <= got
+
+
+def test_delete_everything_never_crashes_consolidation():
+    """Legitimate delete-everything traffic: consolidation no-ops on an
+    empty live set (regression: it used to raise, killing the server's
+    auto-consolidate path), tombstones keep filtering, queries answer
+    empty."""
+    pts, graph, _ = _base()
+    live = LiveIndex.create(pts, LCFG, BCFG, graph=graph)
+    assert live.delete(np.arange(700)) == 700
+    assert live.n_live == 0 and live.tombstone_frac() == 1.0
+    assert not live.maybe_consolidate()          # skipped, not crashed
+    assert live.consolidate()["reclaimed"] == 0  # explicit call: no-op
+    res = live.range(pts[:4] + 0.01, 10.0, CFG)
+    assert int(np.asarray(res.count).sum()) == 0
+
+
+def test_live_checkpoint_roundtrip(tmp_path):
+    """Mutable state (watermark, tombstones, ext ids, int8 corpus) survives
+    the atomic checkpoint; the restored index answers bitwise-identically
+    and keeps mutating from where it left off."""
+    live = _live("int8")
+    pts, _, stream = _base()
+    live.insert(stream[:30])
+    live.delete(np.arange(40))
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    live.save(cm)
+    live2 = LiveIndex.restore(cm)
+    assert live2.stats() == live.stats()
+    qs = pts[:12] + 0.01
+    radii = _mixed_radii(qs)
+    r1 = live.range(qs, jnp.asarray(radii), CFG)
+    r2 = live2.range(qs, jnp.asarray(radii), CFG)
+    for name in ("ids", "dists", "count", "overflow", "n_rerank"):
+        np.testing.assert_array_equal(np.asarray(getattr(r1, name)),
+                                      np.asarray(getattr(r2, name)), name)
+    ids_a = live.insert(stream[30:40])
+    ids_b = live2.insert(stream[30:40])
+    np.testing.assert_array_equal(ids_a, ids_b)  # same id stream continues
+    assert live2.delete(ids_b[:3]) == 3
+
+
+def test_frozen_engine_unaffected_by_tombstone_arg_absence():
+    """The tombstones plumbing is strictly additive: a frozen engine search
+    (tombstones=None) and a live search with ZERO tombstones agree."""
+    pts, graph, _ = _base()
+    live = _live()
+    qs = pts[:8] + 0.01
+    radii = _mixed_radii(qs)
+    from repro.core import RangeSearchEngine
+    eng = RangeSearchEngine.from_graph(jnp.asarray(pts), graph)
+    res_e = eng.range(qs, jnp.asarray(radii), CFG)
+    res_l = live.range(qs, jnp.asarray(radii), CFG)
+    for a, b in zip(_sets(res_e), _sets(res_l)):
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# randomized interleavings (hypothesis; the stub provides seeded draws)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+@settings(max_examples=6, deadline=None)
+def test_slow_random_interleavings(seed, n_ops):
+    """Any random interleaving of insert/delete batches keeps the oracle
+    equality (modulo overflow lanes) on both corpus dtypes."""
+    rng = np.random.default_rng(seed)
+    dtype = ("float32", "int8")[seed % 2]
+    live = _live(dtype)
+    _, _, stream = _base()
+    fresh: list[int] = []
+    off = 0
+    for _ in range(n_ops):
+        if rng.random() < 0.5 and off < 100:
+            take = int(rng.integers(5, 20))
+            ids = live.insert(_clustered(take, seed=int(rng.integers(1 << 30))))
+            fresh.extend(ids.tolist())
+            off += take
+        else:
+            pool = np.asarray(live.live_vectors()[0])
+            live.delete(rng.choice(pool, size=min(15, len(pool)),
+                                   replace=False))
+    qs = live.live_vectors()[1][rng.integers(0, live.n_live, 10)] + 0.01
+    radii = _mixed_radii(qs, seed=seed % 100)
+    res = live.range(qs, jnp.asarray(radii), CFG)
+    want = _oracle_sets(live, qs, radii)
+    got = _sets(res)
+    over = np.asarray(res.overflow)
+    for i in range(len(qs)):
+        if not over[i]:
+            assert got[i] == want[i], f"lane {i}"

@@ -219,6 +219,64 @@ def test_server_results_sorted_and_deduped(small_engine):
     assert resp.count == len(resp.ids) or resp.overflow
 
 
+def test_server_bounded_admission_queue(small_engine):
+    """Admission is bounded: beyond max_queue, submit sheds the request
+    (returns False, counts it) instead of growing the deque without limit —
+    the production bugfix for unbounded queue growth under overload."""
+    pts, eng = small_engine
+    cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16, visit_cap=64),
+                      mode="greedy", result_cap=128)
+    srv = RangeServer(eng, cfg, ServerConfig(max_batch=8, max_queue=4))
+    admitted = [srv.submit(Request(req_id=i, query=np.asarray(pts[i]),
+                                   radius=1.0)) for i in range(7)]
+    assert admitted == [True] * 4 + [False] * 3
+    assert srv.pending() == 4 and srv.stats["rejected"] == 3
+    resp = srv.run_until_drained()
+    assert sorted(r.req_id for r in resp) == [0, 1, 2, 3]  # shed ones never served
+    assert srv.submit(Request(req_id=9, query=np.asarray(pts[0]),
+                              radius=1.0))  # queue drained -> admitting again
+
+
+def test_server_live_mutation_requests(clustered_engine):
+    """insert/delete requests ride the same admission queue as queries; the
+    batch's mutations apply first, then its queries are answered against
+    ONE consistent epoch snapshot (fresh point found at its exact distance,
+    deleted point never returned)."""
+    from repro.live import LiveConfig, LiveIndex
+    pts, eng = clustered_engine
+    live = LiveIndex.create(pts, LiveConfig(capacity=1500, insert_batch=64),
+                            BuildConfig(max_degree=24, beam=48,
+                                        insert_batch=256, two_pass=True),
+                            graph=eng.graph)
+    cfg = RangeConfig(search=SearchConfig(beam=64, max_beam=64, visit_cap=256),
+                      mode="greedy", result_cap=512)
+    srv = RangeServer(None, cfg, ServerConfig(max_batch=16), live=live)
+    with pytest.raises(ValueError, match="live"):
+        RangeServer(eng, cfg).submit(Request(req_id=0, op="delete",
+                                             delete_ids=np.asarray([1])))
+    fresh = np.asarray(pts[0]) * 0.5 + 3.0
+    srv.submit(Request(req_id=0, op="insert", query=fresh))
+    srv.submit(Request(req_id=1, op="delete",
+                       delete_ids=np.asarray([3, 4, 4])))
+    srv.submit(Request(req_id=2, query=fresh + 0.001, radius=1.0))
+    srv.submit(Request(req_id=3, query=np.asarray(pts[3]), radius=1.0))
+    resp = {r.req_id: r for r in srv.run_until_drained()}
+    assert len(resp) == 4
+    new_id = int(resp[0].ids[0])
+    assert new_id == 1200 and resp[0].op == "insert"
+    assert resp[1].op == "delete" and srv.stats["deletes"] == 2
+    # the SAME batch's query sees the insert at its exact distance...
+    assert new_id in resp[2].ids.tolist()
+    j = resp[2].ids.tolist().index(new_id)
+    np.testing.assert_allclose(resp[2].dists[j],
+                               float(np.sum((fresh + 0.001 - fresh) ** 2)),
+                               atol=1e-5)
+    # ...and never the tombstoned points
+    assert not ({3, 4} & set(resp[3].ids.tolist()))
+    assert resp[2].epoch == resp[3].epoch == live.epoch  # one snapshot
+    assert srv.stats["inserts"] == 1 and srv.stats["epoch"] == live.epoch
+
+
 def test_server_corpus_dtype_contract(small_engine):
     """SearchConfig.corpus_dtype must match what the served corpus stores
     (the declarative knob is validated at the serving boundary), and an
