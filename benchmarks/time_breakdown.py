@@ -57,8 +57,8 @@ def run(n: int = 10_000, beam: int = 32):
                         scfg, max_beam=beam * (16 if mode == "doubling" else 1),
                         visit_cap=16 * beam if mode == "doubling" else 4 * beam),
                     mode=mode, result_cap=2048)
-                t_full = _time(lambda: eng.range(qs, r, cfg, es_radius=esr))
-                _, res = (None, eng.range(qs, r, cfg, es_radius=esr))
+                t_full = _time(lambda: eng.range(qs, r, cfg=cfg, es_radius=esr))
+                _, res = (None, eng.range(qs, r, cfg=cfg, es_radius=esr))
                 rows.append([prof_name, mode, "es" if es else "no-es",
                              t_phase1, max(t_full - t_phase1, 0.0), 0.0,
                              t_full, ap_of(res, gt)])
@@ -85,8 +85,8 @@ def run(n: int = 10_000, beam: int = 32):
             mode=mode, result_cap=2048)
         t_norr = _time(lambda: eng8.range(
             qs, r, dataclasses.replace(cfg, rerank=False)))
-        t_full = _time(lambda: eng8.range(qs, r, cfg))
-        res = eng8.range(qs, r, cfg)
+        t_full = _time(lambda: eng8.range(qs, r, cfg=cfg))
+        res = eng8.range(qs, r, cfg=cfg)
         rows.append([f"{prof_name}[int8]", mode, "no-es",
                      t_phase1, max(t_norr - t_phase1, 0.0),
                      max(t_full - t_norr, 0.0), t_full, ap_of(res, gt)])

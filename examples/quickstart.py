@@ -61,9 +61,9 @@ def main():
             mode="greedy", result_cap=2048), 1.5 * r),
     }
     for name, (cfg, esr) in variants.items():
-        block_until_ready(eng.range(qs, r, cfg, es_radius=esr))  # warmup
+        block_until_ready(eng.range(qs, r, cfg=cfg, es_radius=esr))  # warmup
         t0 = time.perf_counter()
-        res = eng.range(qs, r, cfg, es_radius=esr)
+        res = eng.range(qs, r, cfg=cfg, es_radius=esr)
         block_until_ready(res)
         dt = time.perf_counter() - t0
         ap = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),

@@ -76,9 +76,9 @@ def main():
     cfg_r = RangeConfig(search=SearchConfig(beam=32, max_beam=32,
                                             visit_cap=128, metric="ip"),
                         mode="greedy", result_cap=512)
-    block_until_ready(eng.range(q_emb, r, cfg_r))
+    block_until_ready(eng.range(q_emb, r, cfg=cfg_r))
     t0 = time.perf_counter()
-    res = eng.range(q_emb, r, cfg_r)
+    res = eng.range(q_emb, r, cfg=cfg_r)
     block_until_ready(res)
     t_g = time.perf_counter() - t0
     ap_g = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),

@@ -64,6 +64,49 @@ class EngineDeployConfig:
                 self.range_cfg, search=dataclasses.replace(
                     self.range_cfg.search, corpus_dtype=unified)))
 
+    def overrides(self, **kw) -> "EngineDeployConfig":
+        """One explicit merge point for deploy-time knob changes.
+
+        Each keyword is routed to the level that owns it — an
+        ``EngineDeployConfig`` field, a ``RangeConfig`` field, or a
+        ``SearchConfig`` field — and a new config is returned with
+        everything else untouched. This replaces the scattered ad-hoc
+        ``dataclasses.replace`` chains (and the deprecated
+        ``ServerConfig.expand_width`` side channel): the deploy config is
+        the single source of truth for what the engine serves with.
+
+        Keys owned by two levels resolve top-down (deploy > range >
+        search): ``lam`` sets the RangeConfig phase-2 trigger, and the
+        cross-level contracts propagate — ``metric`` sets both the deploy
+        field and ``search.metric``; ``corpus_dtype`` sets the deploy field
+        and ``__post_init__`` syncs it into the search config. Unknown keys
+        raise ``TypeError`` (a typo'd override must never silently no-op).
+        """
+        deploy_f = {f.name for f in dataclasses.fields(EngineDeployConfig)}
+        range_f = {f.name for f in dataclasses.fields(RangeConfig)} - {"search"}
+        search_f = {f.name for f in dataclasses.fields(SearchConfig)}
+        d_kw, r_kw, s_kw = {}, {}, {}
+        for k, v in kw.items():
+            if k in deploy_f:
+                d_kw[k] = v
+                if k == "metric":
+                    s_kw[k] = v
+                if k == "corpus_dtype":
+                    s_kw[k] = v  # keep both sides of the post_init contract
+            elif k in range_f:
+                r_kw[k] = v
+            elif k in search_f:
+                s_kw[k] = v
+            else:
+                raise TypeError(f"overrides() got unknown knob {k!r}")
+        rc = d_kw.pop("range_cfg", self.range_cfg)
+        if s_kw:
+            rc = dataclasses.replace(rc, search=dataclasses.replace(
+                rc.search, **s_kw))
+        if r_kw:
+            rc = dataclasses.replace(rc, **r_kw)
+        return dataclasses.replace(self, range_cfg=rc, **d_kw)
+
 
 def reduced() -> EngineDeployConfig:
     return EngineDeployConfig(

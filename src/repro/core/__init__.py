@@ -45,10 +45,16 @@ from .ground_truth import exact_range_search, exact_topk, range_counts_at
 from .metrics import average_precision, recall_at_k, zero_result_accuracy
 from .radius import RadiusProfile, default_grid, match_histogram, select_radius, sweep
 from .range_search import (
+    GreedyState,
     RangeConfig,
     RangeResult,
     filter_tombstoned,
+    finalize_results,
+    greedy_lane_done,
+    greedy_resume_batch,
     greedy_search,
+    greedy_seed_batch,
+    range_phase1,
     range_search_compacted,
     range_search_fused,
 )

@@ -10,6 +10,7 @@ per-shard results for the multi-shard production layout (one
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -72,7 +73,7 @@ class RangeSearchEngine:
                                jnp.asarray(jnp.inf, jnp.float32), cfg)
         return topk_from_state(st, k)
 
-    def range(self, queries: jnp.ndarray, r,
+    def range(self, queries: jnp.ndarray, r, *args,
               cfg: Optional[RangeConfig] = None,
               es_radius=None,
               compacted: bool = True,
@@ -82,7 +83,19 @@ class RangeSearchEngine:
         radius; scalars broadcast, so the two forms answer identically when
         all radii are equal. ``tombstones`` is the live subsystem's packed
         dead-slot bitset: deleted slots still route the traversal but never
-        appear in results."""
+        appear in results. Everything past ``(queries, r)`` is keyword-only
+        (shared order with the ``range_search_*`` module entry points); a
+        positional ``cfg`` still works for one release behind a
+        ``DeprecationWarning``."""
+        if args:
+            warnings.warn(
+                "RangeSearchEngine.range: positional arguments past "
+                "(queries, r) are deprecated; pass cfg= (and es_radius=, "
+                "compacted=, tombstones=) by keyword",
+                DeprecationWarning, stacklevel=2)
+            if len(args) > 1 or cfg is not None:
+                raise TypeError("range() got unexpected positional arguments")
+            cfg = args[0]
         cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
         if cfg.search.metric != self.metric:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(cfg.search, metric=self.metric))
@@ -90,8 +103,9 @@ class RangeSearchEngine:
         r = broadcast_radius(r, n)
         es_radius = None if es_radius is None else broadcast_radius(es_radius, n)
         fn = range_search_compacted if compacted else range_search_fused
-        return fn(self.points, self.graph, queries, self.start_ids, r, cfg,
-                  es_radius, tombstones)
+        return fn(corpus=self.points, graph=self.graph, queries=queries,
+                  start_ids=self.start_ids, r=r, cfg=cfg,
+                  es_radius=es_radius, tombstones=tombstones)
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> dict:

@@ -17,6 +17,7 @@ XLA program (no host sync) for dry-run lowering and single-dispatch serving.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional
 
@@ -274,6 +275,38 @@ def _greedy_step(points, graph: Graph, q, r, cap: int, scfg: SearchConfig,
     )
 
 
+def _greedy_run(points, graph: Graph, q, r, gs: GreedyState, cap: int,
+                stop_at, scfg: SearchConfig, active) -> GreedyState:
+    """Advance one lane's greedy continuation until its frontier is empty or
+    ``gs.rounds`` reaches ``stop_at`` (a traced per-lane value). This is the
+    loop shared by the run-to-completion path (``greedy_search``) and the
+    checkpoint/resume path (``greedy_resume_batch``): the carry is the full
+    ``GreedyState``, so stopping at round s and re-entering later replays
+    exactly the same expansion sequence as one uninterrupted run."""
+    n_corpus = corpus_size(points)
+    num_words = bitset_num_words(n_corpus, scfg.bitset_cap_bits)
+    exact_bits = bitset_exact(n_corpus, num_words)
+    if not isinstance(active, jnp.ndarray):
+        active = jnp.asarray(active)
+    stop_at = jnp.asarray(stop_at, jnp.int32)
+
+    def cond(g):
+        return active & (g.expand_ptr < g.res_count) & (g.rounds < stop_at)
+
+    if scfg.eff_expand_width == 1:  # paper-faithful single-node reference
+        return jax.lax.while_loop(
+            cond,
+            lambda g: _greedy_step_reference(points, graph, q, r, cap, scfg, g,
+                                             exact_bits),
+            gs)
+    pnorms = _point_norms(points, scfg)
+    ps = jax.lax.while_loop(
+        cond,
+        lambda g: _greedy_step(points, graph, q, r, cap, scfg, g, pnorms),
+        _pack_greedy(gs))
+    return _unpack_greedy(ps)
+
+
 @partial(jax.jit, static_argnames=("cap", "rounds", "scfg"))
 def greedy_search(
     points, graph: Graph, q, r, st: BeamState,
@@ -294,27 +327,78 @@ def greedy_search(
     num_words = bitset_num_words(n_corpus, scfg.bitset_cap_bits)
     exact_bits = bitset_exact(n_corpus, num_words)
     gs = _greedy_init(st, r, cap, num_words, exact_bits)
-    if not isinstance(active, jnp.ndarray):
-        active = jnp.asarray(active)
-
-    def cond(g):
-        return active & (g.expand_ptr < g.res_count) & (g.rounds < rounds)
-
-    if scfg.eff_expand_width == 1:  # paper-faithful single-node reference
-        gs = jax.lax.while_loop(
-            cond,
-            lambda g: _greedy_step_reference(points, graph, q, r, cap, scfg, g,
-                                             exact_bits),
-            gs)
-    else:
-        pnorms = _point_norms(points, scfg)
-        ps = jax.lax.while_loop(
-            cond,
-            lambda g: _greedy_step(points, graph, q, r, cap, scfg, g, pnorms),
-            _pack_greedy(gs))
-        gs = _unpack_greedy(ps)
+    gs = _greedy_run(points, graph, q, r, gs, cap, rounds, scfg, active)
     gs = dataclasses.replace(gs, overflow=gs.overflow | (gs.expand_ptr < gs.res_count))
     return gs
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/resume greedy API (continuous-batching serving)
+# ---------------------------------------------------------------------------
+#
+# ``GreedyState`` is a complete checkpoint of a lane's phase-2 search: the
+# result buffer, expansion pointer, round counter, and discovery bitset
+# together determine every future expansion. The pair below exposes that as
+# a batched seed/advance surface so a serving scheduler can run phase 2 in
+# bounded ``slice_rounds`` increments, rotating finished lanes out of the
+# device batch while stragglers keep their state — the lane compaction of
+# ``range_search_compacted`` generalized from one-shot to persistent.
+
+@partial(jax.jit, static_argnames=("cap", "scfg"))
+def greedy_seed_batch(corpus, st: BeamState, r, cap: int,
+                      scfg: SearchConfig) -> GreedyState:
+    """Checkpointable phase-2 seeds for a batch of finished beam states.
+
+    Returns a batched ``GreedyState`` (one lane per query) identical to what
+    ``greedy_search`` starts from; advance it with ``greedy_resume_batch``.
+    """
+    n_corpus = corpus_size(corpus)
+    num_words = bitset_num_words(n_corpus, scfg.bitset_cap_bits)
+    exact_bits = bitset_exact(n_corpus, num_words)
+    rj = broadcast_radius(r, st.ids.shape[0])
+    return jax.vmap(
+        lambda st_, r_: _greedy_init(st_, r_, cap, num_words, exact_bits)
+    )(st, rj)
+
+
+@partial(jax.jit, static_argnames=("cap", "rounds", "slice_rounds", "scfg"))
+def greedy_resume_batch(
+    corpus, graph: Graph, queries: jnp.ndarray, r, gs: GreedyState,
+    active: jnp.ndarray, cap: int, rounds: int, slice_rounds: int,
+    scfg: SearchConfig,
+) -> GreedyState:
+    """Advance checkpointed greedy lanes by up to ``slice_rounds`` expansions.
+
+    Each lane stops early when its frontier empties (``expand_ptr`` catches
+    ``res_count``) or its lifetime budget ``rounds`` is spent; ``active``
+    masks free scheduler slots to no-ops. Because the carry is the complete
+    lane checkpoint, N resume calls compose to exactly one long
+    ``greedy_search`` — slicing changes latency, never results. The final
+    budget-exhausted overflow bit is NOT set here (a paused lane is not an
+    overflowed one); callers apply it at retirement, see
+    ``greedy_lane_done``."""
+    rj = broadcast_radius(r, queries.shape[0])
+
+    def one(q_, r_, g_, a_):
+        stop_at = jnp.minimum(g_.rounds + slice_rounds, rounds)
+        return _greedy_run(corpus, graph, q_, r_, g_, cap, stop_at, scfg, a_)
+
+    return jax.vmap(one)(queries, rj, gs, active)
+
+
+def greedy_lane_done(gs: GreedyState, rounds: int):
+    """Host-side retirement test for resumed lanes.
+
+    Returns ``(done, overflow)`` bool arrays: a lane is done when its
+    frontier is exhausted or its lifetime expansion budget is spent; the
+    overflow term matches ``greedy_search``'s end-of-run
+    ``expand_ptr < res_count`` bit so sliced execution retires with the
+    same flags as the one-shot path."""
+    ptr = np.asarray(gs.expand_ptr)
+    cnt = np.asarray(gs.res_count)
+    rds = np.asarray(gs.rounds)
+    done = (ptr >= cnt) | (rds >= rounds)
+    return done, np.asarray(gs.overflow) | (done & (ptr < cnt))
 
 
 # ---------------------------------------------------------------------------
@@ -433,12 +517,61 @@ def _rerank_fused(points: QuantizedCorpus, queries, r: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Shared building blocks: phase 1, result-stage finalization
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def range_phase1(
+    corpus, graph: Graph, queries: jnp.ndarray, start_ids: jnp.ndarray,
+    r, cfg: RangeConfig, es_radius=None,
+):
+    """Phase 1 (uniform beam search) for a batch of queries.
+
+    Returns ``(beam_state, beam_result, needs_phase2)``: the finished beam
+    states (the seeds for ``greedy_seed_batch``), the beam-filtered
+    ``RangeResult`` that answers lanes which stop here, and the per-lane
+    λ-saturation mask (all-False for non-greedy modes). This is the uniform
+    front half of ``range_search_compacted``, exposed so a continuous
+    scheduler can admit new lanes mid-flight without re-running phase 1 for
+    the whole device batch."""
+    rj = broadcast_radius(r, queries.shape[0])
+    st = beam_search_batch(corpus, graph, queries, start_ids, rj, cfg.search,
+                           es_radius)
+    ids, dists, count, over = jax.vmap(
+        lambda st_, r_: _beam_results(st_, r_, cfg.result_cap))(st, rj)
+    if cfg.mode == "greedy":
+        need = jax.vmap(lambda st_, r_: _needs_phase2(st_, r_, cfg.lam))(st, rj)
+    else:
+        need = jnp.zeros_like(st.done)
+    res = RangeResult(ids=ids, dists=dists, count=count, overflow=over,
+                      n_visited=st.n_visited, n_dist=st.n_dist,
+                      es_stopped=st.es_stopped, phase2=jnp.zeros_like(st.done),
+                      n_rerank=jnp.zeros_like(st.n_visited))
+    return st, res, need
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def finalize_results(corpus, queries: jnp.ndarray, r, res: RangeResult,
+                     cfg: RangeConfig, tombstones=None) -> RangeResult:
+    """Result-stage post-processing shared by every execution path: the
+    tombstone drop (traversal routes through dead nodes; results never
+    include them), then the quantized guard-band exact rerank."""
+    rj = broadcast_radius(r, queries.shape[0])
+    if tombstones is not None:  # live index: drop dead results, keep routing
+        res = filter_tombstoned(tombstones, res)
+    if (isinstance(corpus, QuantizedCorpus) and cfg.rerank
+            and corpus.raw is not None):
+        res = _rerank_fused(corpus, queries, rj, res, cfg.search.metric)
+    return res
+
+
+# ---------------------------------------------------------------------------
 # Fused single-program batch (used by dry-run lowering + single-dispatch serve)
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("cfg",))
-def range_search_fused(
-    points,                       # (N, d) array or QuantizedCorpus
+def _range_search_fused(
+    corpus,                       # (N, d) array or QuantizedCorpus
     graph: Graph,
     queries: jnp.ndarray,
     start_ids: jnp.ndarray,
@@ -451,7 +584,7 @@ def range_search_fused(
     # a quantized corpus searches on certified lower-bound distances, so
     # these r-threshold tests keep a per-candidate superset at the caller's
     # radius; the rerank stage below trims the boundary band exactly
-    st = beam_search_batch(points, graph, queries, start_ids, r, cfg.search, es_radius)
+    st = beam_search_batch(corpus, graph, queries, start_ids, r, cfg.search, es_radius)
     zeros = jnp.zeros_like(st.n_visited)
 
     if cfg.mode in ("beam", "doubling"):
@@ -466,7 +599,7 @@ def range_search_fused(
         # greedy: phase 2 only for saturated lanes (masked, not compacted)
         active = jax.vmap(lambda st_, r_: _needs_phase2(st_, r_, cfg.lam))(st, r)
         gfn = lambda q_, r_, st_, a_: greedy_search(
-            points, graph, q_, r_, st_, cfg.result_cap, cfg.frontier_rounds, cfg.search, a_
+            corpus, graph, q_, r_, st_, cfg.result_cap, cfg.frontier_rounds, cfg.search, a_
         )
         gs = jax.vmap(gfn)(queries, r, st, active)
         b_ids, b_dists, b_count, b_over = jax.vmap(
@@ -479,12 +612,7 @@ def range_search_fused(
                           n_visited=st.n_visited, n_dist=st.n_dist + jnp.where(active, gs.n_dist, 0),
                           es_stopped=st.es_stopped, phase2=active,
                           n_rerank=zeros)
-    if tombstones is not None:  # live index: drop dead results, keep routing
-        res = filter_tombstoned(tombstones, res)
-    if (isinstance(points, QuantizedCorpus) and cfg.rerank
-            and points.raw is not None):
-        res = _rerank_fused(points, queries, r, res, cfg.search.metric)
-    return res
+    return finalize_results(corpus, queries, r, res, cfg, tombstones)
 
 
 # ---------------------------------------------------------------------------
@@ -552,8 +680,8 @@ def _exact_pairs(raw, queries, ids_p, lanes_p, metric: str):
     return point_dist(vecs, qv, metric)
 
 
-def range_search_compacted(
-    points,               # (N, d) array or QuantizedCorpus
+def _range_search_compacted(
+    corpus,               # (N, d) array or QuantizedCorpus
     graph: Graph,
     queries: jnp.ndarray,
     start_ids: jnp.ndarray,
@@ -562,14 +690,7 @@ def range_search_compacted(
     es_radius=None,       # scalar or (Q,)
     tombstones=None,      # (W,) uint32 dead-slot bitset (live indices)
 ) -> RangeResult:
-    """Phase 1 over the whole batch; phase 2 over the compacted survivors.
-
-    The survivor subset is padded to the next power of two, so jit compiles at
-    most O(log Q) phase-2 variants. This bounds the batched-while straggler
-    effect: lanes with zero results never enter the expensive loop at all.
-    Compaction carries each survivor's *own* radius (and early-stop radius)
-    into phase 2, so a micro-batch may mix radii freely.
-    """
+    points = corpus
     rj = broadcast_radius(r, queries.shape[0])
 
     def finish(res: RangeResult) -> RangeResult:
@@ -650,3 +771,82 @@ def range_search_compacted(
                          es_stopped=base.es_stopped, phase2=phase2,
                          n_rerank=jnp.zeros_like(base.n_visited))
     return finish(merged)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points — one keyword surface, shared parameter order
+# ---------------------------------------------------------------------------
+#
+# The batch entry points share the parameter order
+# ``(corpus, graph, queries, start_ids, r, cfg, es_radius, tombstones)``
+# and take everything by keyword (``dist.sharded_range_search`` prepends its
+# mesh; ``engine.range``/``LiveSnapshot.range`` bind corpus/graph/start_ids
+# from the object and keep the same tail). Positional calls and the old
+# ``points=`` spelling still work for one release behind a
+# ``DeprecationWarning``.
+
+_RANGE_ARG_ORDER = ("corpus", "graph", "queries", "start_ids", "r", "cfg",
+                    "es_radius", "tombstones")
+_RANGE_REQUIRED = ("corpus", "graph", "queries", "start_ids", "r", "cfg")
+
+
+def _merge_legacy_args(name: str, order, required, args, kw: dict) -> dict:
+    """Fold deprecated positional calls and the ``points=`` alias onto the
+    keyword-only surface (one-release compatibility shim)."""
+    if args:
+        if len(args) > len(order):
+            raise TypeError(f"{name}() takes at most {len(order)} arguments "
+                            f"({len(args)} given)")
+        warnings.warn(
+            f"{name}: positional arguments are deprecated; pass "
+            + ", ".join(f"{k}=" for k in order[:len(args)]),
+            DeprecationWarning, stacklevel=3)
+        for key, val in zip(order, args):
+            if kw.get(key) is not None:
+                raise TypeError(f"{name}() got multiple values for {key!r}")
+            kw[key] = val
+    if kw.get("points") is not None:
+        warnings.warn(f"{name}: points= is deprecated; use corpus=",
+                      DeprecationWarning, stacklevel=3)
+        if kw.get("corpus") is not None:
+            raise TypeError(f"{name}() got both corpus= and points=")
+        kw["corpus"] = kw["points"]
+    kw.pop("points", None)
+    missing = [k for k in required if kw.get(k) is None]
+    if missing:
+        raise TypeError(f"{name}() missing required keyword arguments: "
+                        + ", ".join(missing))
+    return kw
+
+
+def range_search_fused(*args, corpus=None, graph=None, queries=None,
+                       start_ids=None, r=None, cfg=None, es_radius=None,
+                       tombstones=None, points=None) -> RangeResult:
+    """Single-XLA-program batched range search (no host sync): phase 1 plus
+    masked (not compacted) greedy phase 2, tombstone filter, and in-program
+    quantized rerank. Keyword-only; see the module note on the shared
+    parameter order. ``r``/``es_radius`` are a scalar or per-query ``(Q,)``
+    radii; ``tombstones`` a packed ``(W,) uint32`` dead-slot bitset."""
+    kw = _merge_legacy_args(
+        "range_search_fused", _RANGE_ARG_ORDER, _RANGE_REQUIRED, args,
+        dict(corpus=corpus, graph=graph, queries=queries, start_ids=start_ids,
+             r=r, cfg=cfg, es_radius=es_radius, tombstones=tombstones,
+             points=points))
+    return _range_search_fused(**kw)
+
+
+def range_search_compacted(*args, corpus=None, graph=None, queries=None,
+                           start_ids=None, r=None, cfg=None, es_radius=None,
+                           tombstones=None, points=None) -> RangeResult:
+    """Two-phase batched range search with host-side query compaction (the
+    QPS path): phase 1 over the whole batch, phase 2 over the pow2-padded
+    survivor subset only (O(log Q) compiled variants — lanes with zero
+    results never enter the expensive loop), each survivor carrying its own
+    radius. Keyword-only; see the module note on the shared parameter
+    order."""
+    kw = _merge_legacy_args(
+        "range_search_compacted", _RANGE_ARG_ORDER, _RANGE_REQUIRED, args,
+        dict(corpus=corpus, graph=graph, queries=queries, start_ids=start_ids,
+             r=r, cfg=cfg, es_radius=es_radius, tombstones=tombstones,
+             points=points))
+    return _range_search_compacted(**kw)

@@ -32,7 +32,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core.beam_search import broadcast_radius
 from ..core.corpus import corpus_cast, pad_corpus_rows
 from ..core.graph import Graph
-from ..core.range_search import RangeConfig, RangeResult, range_search_fused
+from ..core.range_search import (
+    RangeConfig, RangeResult, _merge_legacy_args, range_search_fused,
+)
 from ..utils import INVALID_ID, cdiv
 from .compat import shard_map
 from .sharding import _axis_size
@@ -153,19 +155,24 @@ def union_merge(ids, dists, cap: int):
 
 
 def sharded_range_search(
-    mesh: Mesh,
-    corpus: ShardedCorpus,
-    queries,
-    r,
-    cfg: RangeConfig,
+    *args,
+    mesh: Optional[Mesh] = None,
+    corpus: Optional[ShardedCorpus] = None,
+    queries=None,
+    r=None,
+    cfg: Optional[RangeConfig] = None,
     es_radius: Optional[float] = None,
     tombstones=None,
-    *,
     model_axis="model",
     data_axis="data",
 ) -> RangeResult:
     """Union range search over every shard of ``corpus``; returns a global
     ``RangeResult`` (ids are corpus-global, counts summed across shards).
+
+    Keyword-only: the parameter order matches the ``core.range_search``
+    entry points with the mesh prepended —
+    ``(mesh, corpus, queries, r, cfg, es_radius, tombstones)``. Positional
+    calls still work for one release behind a ``DeprecationWarning``.
 
     ``r``/``es_radius`` are a shared scalar or per-query ``(Q,)`` vectors;
     radii shard along the data axis with their queries and broadcast to
@@ -178,6 +185,16 @@ def sharded_range_search(
     own dead slots at the result stage — deleted points still route the
     per-shard walk but never reach the union merge, so counts and the
     merged top-``result_cap`` are live-only."""
+    merged = _merge_legacy_args(
+        "sharded_range_search",
+        ("mesh", "corpus", "queries", "r", "cfg", "es_radius", "tombstones"),
+        ("mesh", "corpus", "queries", "r", "cfg"),
+        args,
+        dict(mesh=mesh, corpus=corpus, queries=queries, r=r, cfg=cfg,
+             es_radius=es_radius, tombstones=tombstones))
+    mesh, corpus, queries, r, cfg, es_radius, tombstones = (
+        merged["mesh"], merged["corpus"], merged["queries"], merged["r"],
+        merged["cfg"], merged["es_radius"], merged["tombstones"])
     if corpus.n_total <= 0:
         raise ValueError("ShardedCorpus.n_total must be the true corpus size")
     s_total = corpus.n_shards
@@ -217,9 +234,10 @@ def sharded_range_search(
         ids, dists, cnts, overs, nvis, ndis, ess, ph2, nrr = ([] for _ in range(9))
         for s in range(s_loc):
             shard_pts = jax.tree.map(lambda x: x[s], points)
-            res = range_search_fused(shard_pts, Graph(neighbors=neighbors[s]),
-                                     qs, start_ids[s], rs, cfg, es,
-                                     None if tombs is None else tombs[s])
+            res = range_search_fused(
+                corpus=shard_pts, graph=Graph(neighbors=neighbors[s]),
+                queries=qs, start_ids=start_ids[s], r=rs, cfg=cfg,
+                es_radius=es, tombstones=None if tombs is None else tombs[s])
             gids = _remap_global(res.ids, offsets[s], corpus.n_total)
             ids.append(gids)
             dists.append(jnp.where(gids == INVALID_ID, jnp.inf, res.dists))

@@ -25,9 +25,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from ..configs.range_engine import EngineDeployConfig
 from ..core import (
-    BuildConfig, RangeConfig, RangeSearchEngine, SearchConfig,
-    average_precision, exact_range_search,
+    BuildConfig, RangeSearchEngine, average_precision, exact_range_search,
 )
 from ..core.beam_search import ES_D_VISITED
 from ..core.radius import default_grid, select_radius, sweep
@@ -62,11 +62,16 @@ def _churn_main(args) -> int:
     print(f"[serve] live index built in {time.perf_counter() - t0:.1f}s "
           f"{live.stats()}")
 
-    scfg = SearchConfig(beam=args.beam, max_beam=args.beam, visit_cap=512,
-                        metric=ds.metric, expand_width=args.expand_width,
-                        corpus_dtype=args.corpus_dtype)
-    rcfg = RangeConfig(search=scfg, mode=args.mode, result_cap=2048)
-    srv = RangeServer(None, rcfg, ServerConfig(max_batch=args.max_batch),
+    rcfg = EngineDeployConfig().overrides(
+        metric=ds.metric,
+        beam=args.beam, max_beam=args.beam, visit_cap=512,
+        expand_width=args.expand_width, corpus_dtype=args.corpus_dtype,
+        mode=args.mode, result_cap=2048).range_cfg
+    srv = RangeServer(None, rcfg,
+                      ServerConfig(max_batch=args.max_batch,
+                                   continuous=args.continuous,
+                                   lanes=args.lanes,
+                                   slice_rounds=args.slice_rounds),
                       live=live)
 
     rng = np.random.default_rng(0)
@@ -105,7 +110,7 @@ def _churn_main(args) -> int:
     lut[ext] = np.arange(len(ext))
     res_ids = np.full((args.queries, 4096), INVALID_ID, np.int64)
     counts = np.zeros(args.queries, np.int64)
-    qresp = [rp for rp in resp if rp.op == "query"]
+    qresp = [rp for rp in resp if rp.op == "range"]
     for rp in qresp:
         rows = lut[np.minimum(rp.ids, live.next_ext_id)][:4096]
         res_ids[rp.req_id, :len(rows)] = rows
@@ -145,6 +150,20 @@ def main(argv=None):
                    help="serve from a live index with this fraction of the "
                         "corpus inserted AND deleted during the run "
                         "(interleaved with the query traffic)")
+    p.add_argument("--continuous", action="store_true",
+                   help="continuous batching: saturated lanes ride a "
+                        "persistent pool instead of lockstepping their "
+                        "micro-batch (greedy mode only)")
+    p.add_argument("--lanes", type=int, default=32,
+                   help="continuous-mode lane pool width (rounded to pow2)")
+    p.add_argument("--slice-rounds", type=int, default=8,
+                   help="greedy expansions per pooled lane per server step")
+    p.add_argument("--effort", action="store_true",
+                   help="fit an effort regressor on a workload sample and "
+                        "split admissions into cheap/heavy dispatches")
+    p.add_argument("--heavy-frac", type=float, default=0.0,
+                   help="fraction of requests given a dense-region radius "
+                        "(tail-latency workload)")
     args = p.parse_args(argv)
 
     if args.churn > 0:
@@ -168,17 +187,7 @@ def main(argv=None):
     print(f"[serve] index built in {time.perf_counter() - t0:.1f}s "
           f"{eng.stats()}")
 
-    scfg = SearchConfig(beam=args.beam,
-                        max_beam=args.beam * (8 if args.mode == "doubling" else 1),
-                        visit_cap=512, metric=ds.metric,
-                        es_metric=ES_D_VISITED if args.early_stop else 0,
-                        es_visit_limit=20,
-                        expand_width=args.expand_width,
-                        corpus_dtype=args.corpus_dtype)
-    rcfg = RangeConfig(search=scfg, mode=args.mode, result_cap=2048)
-    srv = RangeServer(eng, rcfg,
-                      ServerConfig(max_batch=args.max_batch,
-                                   es_radius_factor=1.5 if args.early_stop else 0.0))
+    rng = np.random.default_rng(0)
     if args.mixed_radius:
         # spread per-request radii across the sweep grid around the selected
         # radius: tight (near-duplicate) through wide (recommendation) lanes
@@ -186,11 +195,47 @@ def main(argv=None):
         lo = float(prof.radii[max(gi - 6, 0)])
         hi = float(prof.radii[min(gi + 4, len(prof.radii) - 1)])
         radii = np.linspace(lo, hi, args.queries).astype(np.float32)
-        rng = np.random.default_rng(0)
         rng.shuffle(radii)  # mix radii *within* batches, not across them
         print(f"[serve] mixed radii in [{lo:.4g}, {hi:.4g}]")
     else:
         radii = np.full(args.queries, r, np.float32)
+    if args.heavy_frac > 0:
+        # tail-latency workload: a slice of the traffic queries at the top
+        # of the sweep grid (dense-region, phase-2-bound) while the rest
+        # stay point-like — the regime continuous batching exists for
+        hi = float(prof.radii[-1])
+        nh = max(int(args.heavy_frac * args.queries), 1)
+        radii[rng.choice(args.queries, nh, replace=False)] = hi
+        print(f"[serve] heavy traffic: {nh} requests at radius {hi:.4g}")
+
+    rcfg = EngineDeployConfig().overrides(
+        metric=ds.metric,
+        beam=args.beam,
+        max_beam=args.beam * (8 if args.mode == "doubling" else 1),
+        visit_cap=512,
+        es_metric=ES_D_VISITED if args.early_stop else 0,
+        es_visit_limit=20,
+        expand_width=args.expand_width,
+        corpus_dtype=args.corpus_dtype,
+        mode=args.mode, result_cap=2048).range_cfg
+    effort = None
+    if args.effort:
+        # calibrate the admission regressor on exact match counts for a
+        # sample of the workload (production: observed counts of answered
+        # traffic; here the oracle is cheap)
+        from ..models.effort import EffortPredictor
+        samp = min(256, args.queries)
+        _, _, c = exact_range_search(pts, jnp.asarray(qs[:samp]),
+                                     jnp.asarray(radii[:samp]), ds.metric)
+        effort = EffortPredictor.fit(qs[:samp], radii[:samp], np.asarray(c))
+        print(f"[serve] effort regressor fitted on {samp} samples")
+    srv = RangeServer(eng, rcfg,
+                      ServerConfig(max_batch=args.max_batch,
+                                   es_radius_factor=1.5 if args.early_stop else 0.0,
+                                   continuous=args.continuous,
+                                   lanes=args.lanes,
+                                   slice_rounds=args.slice_rounds),
+                      effort=effort)
     t0 = time.perf_counter()
     resp = []
     for i in range(args.queries):
@@ -216,6 +261,16 @@ def main(argv=None):
           f"(batched); AP={ap:.4f}")
     print(f"[serve] latency p50={lat[len(lat)//2]*1e3:.1f}ms "
           f"p99={lat[int(len(lat)*0.99)]*1e3:.1f}ms; stats={srv.stats}")
+    hs = srv.latency_summary()
+    print(f"[serve] histogram p50/p95/p99 (ms): "
+          + " ".join(f"{op}={h['p50_ms']:.1f}/{h['p95_ms']:.1f}/{h['p99_ms']:.1f}"
+                     for op, h in hs.items() if h["count"]))
+    if args.continuous:
+        st = srv.stats
+        print(f"[serve] pool: admitted={st['pool_admitted']} "
+              f"oneshot={st['pool_oneshot']} ticks={st['pool_ticks']} "
+              f"rotations={st['pool_rotations']} "
+              f"buckets cheap/heavy={st['bucket_cheap']}/{st['bucket_heavy']}")
     disp = srv.radius_dispersion()
     print(f"[serve] radius dispersion mean={disp['mean']:.4g} "
           f"std={disp['std']:.4g} range=[{disp['min']:.4g}, {disp['max']:.4g}] "

@@ -368,7 +368,8 @@ def build_engine_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
         # per-query radius vector (serving traffic mixes radii per batch);
         # the dry-run thereby lowers the data-sharded radii operand too
         radii = jnp.full((queries.shape[0],), 1.0, jnp.float32)
-        res = sharded_range_search(mesh, c, queries, radii, ecfg.range_cfg,
+        res = sharded_range_search(mesh=mesh, corpus=c, queries=queries,
+                                   r=radii, cfg=ecfg.range_cfg,
                                    model_axis=tp, data_axis=dp)
         return res.ids, res.dists, res.count
 

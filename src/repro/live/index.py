@@ -41,6 +41,7 @@ the fixed-shape jitted machinery:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -72,6 +73,19 @@ from .consolidate import consolidate_index
 FAR = 1e30
 
 _set_rows = jax.jit(corpus_set_rows)
+
+
+def _legacy_range_args(name: str, args: tuple, cfg):
+    """One-release shim: a positional ``cfg`` after (queries, r) warns."""
+    if not args:
+        return cfg
+    warnings.warn(
+        f"{name}: positional arguments past (queries, r) are deprecated; "
+        "pass cfg= (and es_radius=, compacted=) by keyword",
+        DeprecationWarning, stacklevel=3)
+    if len(args) > 1 or cfg is not None:
+        raise TypeError(f"{name}() got unexpected positional arguments")
+    return args[0]
 
 
 def externalize_ids(ext_ids: np.ndarray, ids: np.ndarray) -> np.ndarray:
@@ -125,20 +139,26 @@ class LiveSnapshot:
     def n_live(self) -> int:
         return self.live_count - self.n_dead
 
-    def range(self, queries, r, cfg: Optional[RangeConfig] = None,
+    def range(self, queries, r, *args, cfg: Optional[RangeConfig] = None,
               es_radius=None, compacted: bool = True) -> RangeResult:
         """Range search over the live set; returned ids are EXTERNAL ids.
 
         Tombstoned slots still route the walk (the filter is result-stage
         only) and unborn slots are unreachable, so the traversal is the
-        frozen engine's program at the snapshot's shapes."""
+        frozen engine's program at the snapshot's shapes. Arguments past
+        ``(queries, r)`` are keyword-only (shared order with
+        ``engine.range``); positional ``cfg`` works for one release behind
+        a ``DeprecationWarning``."""
+        cfg = _legacy_range_args("LiveSnapshot.range", args, cfg)
         cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
         if cfg.search.metric != self.metric:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(
                 cfg.search, metric=self.metric))
         fn = range_search_compacted if compacted else range_search_fused
-        res = fn(self.points, self.graph, jnp.asarray(queries),
-                 self.start_ids, r, cfg, es_radius, self.tombstones)
+        res = fn(corpus=self.points, graph=self.graph,
+                 queries=jnp.asarray(queries), start_ids=self.start_ids,
+                 r=r, cfg=cfg, es_radius=es_radius,
+                 tombstones=self.tombstones)
         return self._externalize(res)
 
     def _externalize(self, res: RangeResult) -> RangeResult:
@@ -272,9 +292,11 @@ class LiveIndex:
                             live_count=self.live_count, n_dead=self.n_dead,
                             epoch=self.epoch, metric=self.metric)
 
-    def range(self, queries, r, cfg: Optional[RangeConfig] = None,
+    def range(self, queries, r, *args, cfg: Optional[RangeConfig] = None,
               es_radius=None, compacted: bool = True) -> RangeResult:
-        return self.snapshot().range(queries, r, cfg, es_radius, compacted)
+        cfg = _legacy_range_args("LiveIndex.range", args, cfg)
+        return self.snapshot().range(queries, r, cfg=cfg,
+                                     es_radius=es_radius, compacted=compacted)
 
     # -- mutation: inserts ---------------------------------------------------
     def insert(self, vecs, ext_ids=None) -> np.ndarray:

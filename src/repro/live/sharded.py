@@ -166,7 +166,9 @@ class LiveShardedIndex:
               es_radius=None) -> RangeResult:
         """Union range search over all shards; returned ids are EXTERNAL."""
         corpus, tomb, flat_ext = self._stacked_view()
-        res = sharded_range_search(mesh, corpus, jnp.asarray(queries), r,
-                                   cfg, es_radius, tombstones=tomb)
+        res = sharded_range_search(mesh=mesh, corpus=corpus,
+                                   queries=jnp.asarray(queries), r=r,
+                                   cfg=cfg, es_radius=es_radius,
+                                   tombstones=tomb)
         return dataclasses.replace(res,
                                    ids=externalize_ids(flat_ext, res.ids))

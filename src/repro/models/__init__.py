@@ -1,3 +1,7 @@
+from .effort import (
+    EffortConfig, EffortPredictor, effort_features, effort_forward,
+    effort_loss, init_effort,
+)
 from .gcn import GCNConfig, gcn_batched_graphs, gcn_forward, gcn_loss, init_gcn
 from .recsys import (
     RecsysConfig, bce_loss, embed_items, init_recsys, recsys_forward,

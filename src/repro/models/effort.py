@@ -1,0 +1,130 @@
+"""Effort regressor: ``(query, radius) -> predicted match count``.
+
+The serving layer's admission controller needs to know, *before* running a
+range query, roughly how much work it will be: a point lookup touching a
+handful of neighbors batches well at high width, while a dense-region query
+returning hundreds of matches saturates the beam and wants the
+doubling/phase-2 path. The paper's observation that range-query cost tracks
+the output size (|S_r(q)|) makes the match count the natural effort proxy.
+
+This is deliberately the smallest model that works: the recsys
+``dense_stack`` tower over ``[q, log1p(r), ||q||]`` features, z-normalized
+with statistics frozen at fit time, regressing ``log1p(count)`` under MSE.
+It trains full-batch in a few hundred AdamW steps on the calibration sample
+the server already has (queries it answered, counts it observed) and runs
+as one fused matmul chain per admission batch.
+
+Effort prediction is advisory only: it decides which execution path a
+request takes, never what the answer is — both paths return exact
+guard-banded results, so a mispredicted bucket costs latency, not recall.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..layers.mlp import dense_stack, init_dense_stack
+from ..optim.adamw import AdamWConfig, init_adamw, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class EffortConfig:
+    """Shape + training hyperparameters for the effort MLP."""
+    dim: int                      # query dimensionality d (features are d+2)
+    hidden: tuple = (32, 16)      # dense_stack hidden widths
+    lr: float = 1e-2
+    steps: int = 300
+    weight_decay: float = 0.0
+
+    @property
+    def n_features(self) -> int:
+        return self.dim + 2
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.hidden) + 1
+
+
+def effort_features(queries, radii) -> jnp.ndarray:
+    """(Q, d) queries + (Q,)/scalar radii -> (Q, d+2) raw feature rows:
+    ``[q, log1p(r), ||q||]``. The radius enters through log1p because match
+    counts grow polynomially in r; the query norm is the cheapest scalar
+    summary of where q sits relative to the (often shell-like) corpus."""
+    q = jnp.asarray(queries, jnp.float32)
+    r = jnp.broadcast_to(jnp.asarray(radii, jnp.float32), (q.shape[0],))
+    nrm = jnp.linalg.norm(q, axis=-1, keepdims=True)
+    return jnp.concatenate([q, jnp.log1p(r)[:, None], nrm], axis=-1)
+
+
+def init_effort(key, cfg: EffortConfig) -> dict:
+    return init_dense_stack(key, (cfg.n_features,) + cfg.hidden + (1,))
+
+
+def effort_forward(params: dict, feats: jnp.ndarray, cfg: EffortConfig,
+                   mu: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Normalized features -> predicted ``log1p(count)`` (Q,)."""
+    x = (feats - mu) / sigma
+    return dense_stack(params, x, cfg.n_layers)[:, 0]
+
+
+def effort_loss(params, batch: dict, cfg: EffortConfig, mu, sigma):
+    """MSE on log1p counts; ``(loss, metrics)`` shape for make_train_step."""
+    pred = effort_forward(params, batch["feats"], cfg, mu, sigma)
+    y = batch["log_count"]
+    err = pred - y
+    loss = jnp.mean(jnp.square(err))
+    return loss, {"mae_log": jnp.mean(jnp.abs(err))}
+
+
+class EffortPredictor:
+    """A fitted effort model: feature stats + MLP params + a jitted forward.
+
+    Build one with :meth:`fit` from (queries, radii, observed counts) — e.g.
+    the warmup traffic a server has already answered — then call
+    :meth:`predict` inside the admission path.
+    """
+
+    def __init__(self, cfg: EffortConfig, params: dict,
+                 mu: jnp.ndarray, sigma: jnp.ndarray):
+        self.cfg = cfg
+        self.params = params
+        self.mu = mu
+        self.sigma = sigma
+        self._fwd = jax.jit(
+            lambda p, f: effort_forward(p, f, cfg, mu, sigma))
+
+    @staticmethod
+    def fit(queries, radii, counts, cfg: EffortConfig | None = None,
+            seed: int = 0) -> "EffortPredictor":
+        """Full-batch AdamW fit of log1p(count) on the calibration sample."""
+        q = jnp.asarray(queries, jnp.float32)
+        if cfg is None:
+            cfg = EffortConfig(dim=int(q.shape[1]))
+        feats = effort_features(q, radii)
+        mu = jnp.mean(feats, axis=0)
+        sigma = jnp.maximum(jnp.std(feats, axis=0), 1e-6)
+        y = jnp.log1p(jnp.asarray(counts, jnp.float32).reshape(-1))
+        batch = {"feats": feats, "log_count": y}
+
+        params = init_effort(jax.random.PRNGKey(seed), cfg)
+        opt_cfg = AdamWConfig(lr=cfg.lr, weight_decay=cfg.weight_decay,
+                              schedule="cosine", warmup_steps=10,
+                              total_steps=cfg.steps)
+        opt_state = init_adamw(params, opt_cfg)
+        step = jax.jit(make_train_step(
+            lambda p, b: effort_loss(p, b, cfg, mu, sigma), opt_cfg))
+        for _ in range(cfg.steps):
+            params, opt_state, _ = step(params, opt_state, batch)
+        return EffortPredictor(cfg, params, mu, sigma)
+
+    def predict_log1p(self, queries, radii) -> jnp.ndarray:
+        """(Q,) predicted log1p(match count)."""
+        return self._fwd(self.params, effort_features(queries, radii))
+
+    def predict(self, queries, radii) -> np.ndarray:
+        """(Q,) predicted match counts (>= 0, host array)."""
+        logc = np.asarray(self.predict_log1p(queries, radii))
+        return np.maximum(np.expm1(logc), 0.0)

@@ -1,3 +1,6 @@
-from .server import RangeServer, Request, Response, ServerConfig
+from .latency import LatencyHistogram
+from .scheduler import LaneScheduler
+from .server import REQUEST_OPS, RangeServer, Request, Response, ServerConfig
 
-__all__ = ["RangeServer", "Request", "Response", "ServerConfig"]
+__all__ = ["LaneScheduler", "LatencyHistogram", "RangeServer", "Request",
+           "Response", "ServerConfig", "REQUEST_OPS"]

@@ -1,0 +1,158 @@
+"""LaneScheduler: a persistent pool of resumable greedy lanes.
+
+The lockstep path (``range_search_compacted``) answers a micro-batch by
+running every saturated lane's greedy phase to completion inside one device
+program — the whole batch waits for its slowest member, and a point query
+unlucky enough to share a batch with a dense-region query inherits that
+query's tail. Continuous batching breaks the lockstep: phase-2 work lives
+in a fixed-width pool of ``GreedyState`` checkpoints, advanced
+``slice_rounds`` expansions per tick. Finished lanes retire and free their
+slot; newly admitted queries scatter into free slots *between* ticks, so a
+straggler lane never blocks anyone — it just keeps its one slot while
+traffic flows around it.
+
+Shape discipline: the pool width ``L`` is fixed (pow2), so the resume step
+compiles exactly once; admission scatters and retirement gathers pad their
+index vectors to pow2 lengths (out-of-range indices drop), so each is a
+O(log L) family of compiled programs. ``greedy_resume_batch``'s checkpoint
+semantics guarantee sliced execution returns bit-identical results to the
+one-shot path — the scheduler changes *when* work happens, never *what* is
+computed.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.corpus import corpus_dim
+from ..core.range_search import (
+    RangeConfig, greedy_lane_done, greedy_resume_batch,
+)
+from ..utils import next_pow2
+
+
+@jax.jit
+def _scatter_lanes(pool, new, slots):
+    """Place ``new`` lane rows at ``slots`` across the pool pytree; padded
+    slots point past the pool and drop."""
+    return jax.tree.map(lambda p, n: p.at[slots].set(n, mode="drop"),
+                        pool, new)
+
+
+@jax.jit
+def _gather_lanes(pool, idx):
+    return jax.tree.map(lambda p: p[idx], pool)
+
+
+class LaneScheduler:
+    """Fixed-width pool of checkpointed greedy lanes over one corpus view.
+
+    Device state is three parallel buffers — the batched ``GreedyState``,
+    the (L, d) query matrix, and the (L,) radius vector; host state is the
+    occupancy mask plus one opaque metadata slot per lane (the server parks
+    request identity and phase-1 stats there). ``rebind`` swaps the corpus
+    view (live-index epoch advance) and is only legal on an empty pool —
+    consolidation permutes slots, so an in-flight checkpoint must never
+    cross an epoch.
+    """
+
+    def __init__(self, corpus, graph, cfg: RangeConfig, n_lanes: int,
+                 slice_rounds: int):
+        if cfg.mode != "greedy":
+            raise ValueError("the lane pool schedules greedy phase-2 work; "
+                             f"cfg.mode={cfg.mode!r}")
+        self.corpus = corpus
+        self.graph = graph
+        self.cfg = cfg
+        self.n_lanes = next_pow2(max(int(n_lanes), 1))
+        self.slice_rounds = max(int(slice_rounds), 1)
+        L = self.n_lanes
+        self.queries = jnp.zeros((L, corpus_dim(corpus)), jnp.float32)
+        self.radii = jnp.zeros((L,), jnp.float32)
+        self.gs = None                      # lazily shaped from first admit
+        self.active = np.zeros(L, bool)
+        self.meta: list = [None] * L
+        self.ticks = 0
+
+    # -- occupancy -----------------------------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return int(self.active.sum())
+
+    def free_slots(self) -> np.ndarray:
+        return np.nonzero(~self.active)[0]
+
+    # -- epoch advance -------------------------------------------------------
+    def rebind(self, corpus, graph) -> None:
+        if self.occupancy:
+            raise RuntimeError("rebind with in-flight lanes: drain the pool "
+                               "before advancing the corpus epoch")
+        self.corpus = corpus
+        self.graph = graph
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, seeded, sel, queries, radii, metas) -> np.ndarray:
+        """Scatter lanes ``sel`` of a seeded batch into free slots.
+
+        ``seeded`` is the batched ``GreedyState`` from ``greedy_seed_batch``
+        over a phase-1 dispatch; ``sel`` indexes the lanes that need phase 2.
+        Returns the assigned slot ids (callers must check ``free_slots``
+        first — admission never evicts)."""
+        k = len(sel)
+        slots = self.free_slots()[:k]
+        if len(slots) < k:
+            raise RuntimeError(f"admit of {k} lanes into {len(slots)} free slots")
+        P = next_pow2(max(k, 1))
+        sel_p = np.concatenate([sel, np.zeros(P - k, np.int64)])
+        slots_p = np.full(P, self.n_lanes, np.int32)  # pad -> dropped
+        slots_p[:k] = slots
+        new = _gather_lanes((seeded, jnp.asarray(queries), jnp.asarray(radii)),
+                            jnp.asarray(sel_p))
+        if self.gs is None:
+            L = self.n_lanes
+            self.gs = jax.tree.map(
+                lambda x: jnp.zeros((L,) + x.shape[1:], x.dtype), new[0])
+        self.gs, self.queries, self.radii = _scatter_lanes(
+            (self.gs, self.queries, self.radii), new, jnp.asarray(slots_p))
+        self.active[slots] = True
+        for s, m in zip(slots, metas):
+            self.meta[s] = m
+        return slots
+
+    # -- execution -----------------------------------------------------------
+    def tick(self) -> np.ndarray:
+        """Advance every active lane ``slice_rounds`` expansions; returns
+        the slots whose lanes finished (frontier empty or budget spent)."""
+        if not self.occupancy:
+            return np.zeros(0, np.int64)
+        self.gs = greedy_resume_batch(
+            self.corpus, self.graph, self.queries, self.radii, self.gs,
+            jnp.asarray(self.active), self.cfg.result_cap,
+            self.cfg.frontier_rounds, self.slice_rounds, self.cfg.search)
+        self.ticks += 1
+        done, _ = greedy_lane_done(self.gs, self.cfg.frontier_rounds)
+        return np.nonzero(self.active & done)[0]
+
+    def retire(self, slots) -> tuple:
+        """Pull finished lanes out of the pool and free their slots.
+
+        Returns ``(gs, queries, radii, overflow, metas)`` where the device
+        arrays are pow2-padded to ``>= len(slots)`` lanes (pad lanes repeat
+        lane 0; callers slice responses to ``len(slots)``) and ``overflow``
+        carries the one-shot path's end-of-budget bit."""
+        slots = np.asarray(slots, np.int64)
+        k = len(slots)
+        P = next_pow2(max(k, 1))
+        idx = np.full(P, slots[0] if k else 0, np.int64)
+        idx[:k] = slots
+        g, qs, rs = _gather_lanes((self.gs, self.queries, self.radii),
+                                  jnp.asarray(idx))
+        _, over = greedy_lane_done(g, self.cfg.frontier_rounds)
+        metas = [self.meta[s] for s in slots]
+        self.active[slots] = False
+        for s in slots:
+            self.meta[s] = None
+        return g, qs, rs, over, metas

@@ -12,18 +12,34 @@ Production anatomy (single-process simulation of the real service):
   under overload is a latency bomb, load shedding is the production answer.
 * **bucketed dispatch** — batches are padded to power-of-two sizes so jit
   compiles O(log B) programs total.
-* **two-phase compaction execution** — phase 1 (uniform beam search) over
-  the batch; zero-result queries exit; the compacted survivors run the
-  greedy/doubling phase (core.range_search_compacted).
+* **lockstep execution** (default) — one ``range_search_compacted`` program
+  per micro-batch: phase 1 (uniform beam) over the batch, compacted
+  survivors run the greedy/doubling phase, the whole batch returns together.
+* **continuous batching** (``ServerConfig.continuous``) — the tail-latency
+  mode. Phase 1 still runs per micro-batch, but λ-saturated lanes hand
+  their ``GreedyState`` checkpoints to a persistent ``LaneScheduler`` pool
+  advanced ``slice_rounds`` expansions per step; cheap lanes answer at
+  phase 1 and leave immediately. A dense-region straggler occupies one pool
+  slot while point queries flow past it — it no longer sets the batch's
+  critical path. An optional ``EffortPredictor`` splits each drain into a
+  cheap wide-batch dispatch and a separate heavy dispatch (predicted match
+  count vs ``effort_threshold``); prediction shapes batch composition only,
+  results are identical either way.
+* **latency accounting** — every response carries ``timings``
+  (queue/service/total) and feeds per-op + end-to-end log-bucket
+  histograms (``latency_summary()``); tails, not means, are the SLO.
 * **multi-shard** — given a mesh + ShardedCorpus, dispatch goes through
-  dist.sharded_range_search and merges per-shard unions.
+  dist.sharded_range_search and merges per-shard unions (lockstep only).
 * **live mutation** — given a ``repro.live.LiveIndex``, requests may carry
-  ``op="insert"`` / ``op="delete"`` alongside queries in the same admission
-  queue. The batcher applies a micro-batch's mutations first (coalesced in
-  arrival order), triggers threshold consolidation, then refreshes its
-  **epoch snapshot** and answers the batch's queries against that one
-  consistent ``(graph, corpus, tombstones, epoch)`` view — queries never
-  observe a half-applied mutation batch. Returned ids are external ids.
+  ``op="insert"`` / ``op="delete"`` alongside range queries in the same
+  admission queue. The batcher applies a micro-batch's mutations first
+  (coalesced in arrival order), triggers threshold consolidation, then
+  refreshes its **epoch snapshot** and answers the batch's queries against
+  that one consistent ``(graph, corpus, tombstones, epoch)`` view — queries
+  never observe a half-applied mutation batch. In continuous mode the pool
+  drains to completion against the old snapshot before mutations apply
+  (consolidation permutes slots; a checkpoint must not cross an epoch).
+  Returned ids are external ids.
 * per-request stats (visited, distance comps, early-stopped) surface in the
   response for monitoring.
 """
@@ -31,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Optional
 
@@ -39,33 +56,55 @@ import numpy as np
 
 from ..core.corpus import corpus_dtype_name
 from ..core.engine import RangeSearchEngine
-from ..core.range_search import RangeConfig, range_search_compacted
+from ..core.range_search import (
+    RangeConfig, RangeResult, finalize_results, greedy_lane_done,
+    greedy_resume_batch, greedy_seed_batch, range_phase1,
+    range_search_compacted,
+)
 from ..dist.sharded_engine import ShardedCorpus, sharded_range_search
 from ..utils import INVALID_ID, next_pow2
+from .latency import LatencyHistogram
+from .scheduler import LaneScheduler, _gather_lanes
+
+#: ops a Request may carry. "count" is reserved for the aggregate-only
+#: query shape (|S_r(q)| without materializing S) — same admission path,
+#: not yet served.
+REQUEST_OPS = ("range", "insert", "delete")
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(kw_only=True)
 class Request:
+    """One unit of admitted work, op-tagged. Construct by keyword."""
     req_id: int
-    query: Optional[np.ndarray] = None  # query/insert: the vector
+    op: str = "range"                   # range | insert | delete
+    query: Optional[np.ndarray] = None  # range/insert: the vector
     radius: Optional[float] = None      # per-request; batches mix radii freely
     deadline: float = float("inf")
-    op: str = "query"                   # query | insert | delete
     delete_ids: Optional[np.ndarray] = None  # delete: external ids to remove
 
+    def __post_init__(self):
+        if self.op == "query":  # pre-rename alias; one release
+            warnings.warn(
+                "Request(op='query') is deprecated; use op='range'",
+                DeprecationWarning, stacklevel=3)
+            self.op = "range"
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(kw_only=True)
 class Response:
+    """Op-tagged answer. ``timings`` decomposes ``latency_s`` into
+    queue (submit→drain) and service (drain→response) seconds."""
     req_id: int
-    ids: np.ndarray
-    dists: np.ndarray
-    count: int
-    overflow: bool
-    es_stopped: bool
-    latency_s: float
+    op: str = "range"
+    ids: np.ndarray = None
+    dists: np.ndarray = None
+    count: int = 0
+    overflow: bool = False
+    es_stopped: bool = False
+    latency_s: float = 0.0
     radius: float = float("nan")  # the radius this request was answered at
-    op: str = "query"
     epoch: int = 0                # index epoch the request was served/applied at
+    timings: Optional[dict] = None  # {"queue_s", "service_s", "total_s"}
 
 
 @dataclasses.dataclass
@@ -74,13 +113,25 @@ class ServerConfig:
     max_wait_s: float = 0.005
     default_radius: float = 1.0
     es_radius_factor: float = 0.0   # >0 enables early stopping at factor*r
-    expand_width: int = 0           # >0 overrides SearchConfig.expand_width
-                                    # (ops knob: retune the frontier width
-                                    # without rebuilding the engine config)
+    expand_width: int = 0           # DEPRECATED: deploy-time search overrides
+                                    # belong on EngineDeployConfig.overrides()
     max_queue: int = 8192           # admission bound; 0 disables admission
                                     # entirely (drain-only maintenance mode)
     auto_consolidate: bool = True   # live engines: threshold consolidation
                                     # between micro-batches
+    # -- continuous batching (tail-latency mode) ----------------------------
+    continuous: bool = False        # persistent-lane phase-2 scheduling
+    lanes: int = 32                 # pool width (rounded up to pow2)
+    slice_rounds: int = 8           # greedy expansions per lane per tick
+    effort_threshold: float = 64.0  # predicted matches >= this -> heavy bucket
+
+    def __post_init__(self):
+        if self.expand_width > 0:
+            warnings.warn(
+                "ServerConfig.expand_width is deprecated; deploy-time "
+                "search overrides belong on "
+                "EngineDeployConfig.overrides(expand_width=...)",
+                DeprecationWarning, stacklevel=3)
 
 
 class RangeServer:
@@ -93,9 +144,12 @@ class RangeServer:
         mesh=None,
         sharded: Optional[ShardedCorpus] = None,
         live=None,
+        effort=None,
     ):
         """``live`` is a ``repro.live.LiveIndex``; it supersedes ``engine``
-        (pass ``engine=None``) and enables insert/delete requests."""
+        (pass ``engine=None``) and enables insert/delete requests.
+        ``effort`` is a fitted ``repro.models.EffortPredictor``; continuous
+        mode uses it to split each drain into cheap/heavy dispatches."""
         if engine is None and live is None:
             raise ValueError("need an engine or a live index")
         self.engine = engine
@@ -123,8 +177,22 @@ class RangeServer:
         self.scfg = server_cfg
         self.mesh = mesh
         self.sharded = sharded
+        self.effort = effort
         self.queue: deque[tuple[Request, float]] = deque()
         self._view = live.snapshot() if live is not None else None
+        self._pool: Optional[LaneScheduler] = None
+        if server_cfg.continuous:
+            if sharded is not None or mesh is not None:
+                raise ValueError("continuous batching is single-shard; "
+                                 "drop continuous=True for sharded serving")
+            if cfg.mode != "greedy":
+                raise ValueError("continuous batching schedules the greedy "
+                                 f"phase; cfg.mode={cfg.mode!r}")
+            self._pool = LaneScheduler(self._corpus(), self._graph(), cfg,
+                                       server_cfg.lanes,
+                                       server_cfg.slice_rounds)
+        self.hist = {"all": LatencyHistogram(),
+                     "service": LatencyHistogram()}
         self.stats = {
             "served": 0, "batches": 0, "es_stopped": 0, "overflow": 0,
             # bounded admission: requests shed at the queue limit (the
@@ -144,7 +212,36 @@ class RangeServer:
             "mixed_radius_batches": 0,
             "radius_min": float("inf"), "radius_max": float("-inf"),
             "radius_sum": 0.0, "radius_sumsq": 0.0,
+            # continuous-batching counters: pool_rotations counts retire
+            # events that freed slots while OTHER lanes stayed in flight —
+            # the lockstep-break actually happening, not just configured
+            "pool_admitted": 0, "pool_retired": 0, "pool_ticks": 0,
+            "pool_rotations": 0, "pool_oneshot": 0,
+            "bucket_cheap": 0, "bucket_heavy": 0,
         }
+
+    # -- served view ---------------------------------------------------------
+    def _corpus(self):
+        return self._view.points if self.live is not None else self.engine.points
+
+    def _graph(self):
+        return self._view.graph if self.live is not None else self.engine.graph
+
+    def _start_ids(self):
+        return (self._view.start_ids if self.live is not None
+                else self.engine.start_ids)
+
+    def _tombstones(self):
+        return self._view.tombstones if self.live is not None else None
+
+    def _epoch(self) -> int:
+        return self._view.epoch if self._view is not None else 0
+
+    def _externalize(self, ids: np.ndarray) -> np.ndarray:
+        if self.live is None:
+            return ids
+        from ..live.index import externalize_ids
+        return externalize_ids(self._view.ext_ids, ids)
 
     # -- admission -------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -152,7 +249,7 @@ class RangeServer:
         queue is at ``max_queue``. Malformed requests are rejected HERE, at
         the client's call site — one bad request admitted into a micro-batch
         would otherwise take down every other request batched with it."""
-        if req.op not in ("query", "insert", "delete"):
+        if req.op not in REQUEST_OPS:
             raise ValueError(f"unknown op {req.op!r}")
         if req.op in ("insert", "delete") and self.live is None:
             raise ValueError(f"{req.op!r} requests need a live index")
@@ -170,6 +267,10 @@ class RangeServer:
     def pending(self) -> int:
         return len(self.queue)
 
+    def in_flight(self) -> int:
+        """Lanes checkpointed in the continuous pool (0 in lockstep mode)."""
+        return self._pool.occupancy if self._pool is not None else 0
+
     # -- batching ------------------------------------------------------------
     def _drain(self) -> list[tuple[Request, float]]:
         out = []
@@ -181,8 +282,38 @@ class RangeServer:
                 break
         return out
 
+    # -- response plumbing ---------------------------------------------------
+    def _record(self, resp: Response) -> Response:
+        self.hist["all"].record(resp.latency_s)
+        if resp.timings is not None:
+            self.hist["service"].record(resp.timings["service_s"])
+        if resp.op not in self.hist:
+            self.hist[resp.op] = LatencyHistogram()
+        self.hist[resp.op].record(resp.latency_s)
+        return resp
+
+    def latency_summary(self) -> dict:
+        """Per-op + end-to-end latency quantiles (ms); see LatencyHistogram."""
+        return {k: h.summary() for k, h in self.hist.items()}
+
+    @staticmethod
+    def _timings(arrive: float, svc0: float, now: float) -> dict:
+        return {"queue_s": svc0 - arrive, "service_s": now - svc0,
+                "total_s": now - arrive}
+
+    def _track_radii(self, radii: np.ndarray) -> None:
+        rb = np.asarray(radii, np.float64)
+        if rb.size == 0:
+            return
+        self.stats["mixed_radius_batches"] += int(rb.min() != rb.max())
+        self.stats["radius_min"] = min(self.stats["radius_min"], float(rb.min()))
+        self.stats["radius_max"] = max(self.stats["radius_max"], float(rb.max()))
+        self.stats["radius_sum"] += float(rb.sum())
+        self.stats["radius_sumsq"] += float((rb * rb).sum())
+
     # -- mutation ------------------------------------------------------------
-    def _apply_mutations(self, muts: list[tuple[Request, float]]) -> list[Response]:
+    def _apply_mutations(self, muts: list[tuple[Request, float]],
+                         svc0: float) -> list[Response]:
         """Apply a micro-batch's mutations: ONE coalesced insert batch, then
         ONE coalesced delete batch.
 
@@ -202,38 +333,43 @@ class RangeServer:
             now = time.perf_counter()
             for (rq, arrive), e in zip(ins, ext):
                 ids = np.asarray([e], np.int64)
-                out.append(Response(
+                out.append(self._record(Response(
                     req_id=rq.req_id, ids=ids,
                     dists=np.zeros(1, np.float32), count=1,
                     overflow=False, es_stopped=False,
                     latency_s=now - arrive, op="insert",
-                    epoch=self.live.epoch))
+                    epoch=self.live.epoch,
+                    timings=self._timings(arrive, svc0, now))))
         if dels:
             per_req = [np.atleast_1d(np.asarray(rq.delete_ids, np.int64))
                        for rq, _ in dels]
             self.stats["deletes"] += self.live.delete(np.concatenate(per_req))
             now = time.perf_counter()
             for (rq, arrive), ids in zip(dels, per_req):
-                out.append(Response(
+                out.append(self._record(Response(
                     req_id=rq.req_id, ids=ids,
                     dists=np.zeros(len(ids), np.float32), count=len(ids),
                     overflow=False, es_stopped=False,
                     latency_s=now - arrive, op="delete",
-                    epoch=self.live.epoch))
+                    epoch=self.live.epoch,
+                    timings=self._timings(arrive, svc0, now))))
         return out
 
-    # -- execution -----------------------------------------------------------
+    # -- lockstep execution --------------------------------------------------
     def _execute(self, queries: np.ndarray, radii: np.ndarray):
         es = (self.scfg.es_radius_factor * jnp.asarray(radii)
               if self.scfg.es_radius_factor > 0 else None)
         qs = jnp.asarray(queries)
         rs = jnp.asarray(radii)
         if self.live is not None:
-            return self._view.range(qs, rs, self.cfg, es)
+            return self._view.range(qs, rs, cfg=self.cfg, es_radius=es)
         if self.sharded is not None and self.mesh is not None:
-            return sharded_range_search(self.mesh, self.sharded, qs, rs, self.cfg, es)
-        return range_search_compacted(self.engine.points, self.engine.graph, qs,
-                                      self.engine.start_ids, rs, self.cfg, es)
+            return sharded_range_search(mesh=self.mesh, corpus=self.sharded,
+                                        queries=qs, r=rs, cfg=self.cfg,
+                                        es_radius=es)
+        return range_search_compacted(
+            corpus=self.engine.points, graph=self.engine.graph, queries=qs,
+            start_ids=self.engine.start_ids, r=rs, cfg=self.cfg, es_radius=es)
 
     def step(self) -> list[Response]:
         """Serve one micro-batch from the queue.
@@ -244,17 +380,21 @@ class RangeServer:
         epoch)`` even as later batches keep mutating. Requests batch
         regardless of radius: the radius vector rides alongside the query
         matrix (padded identically), and every layer below answers each lane
-        at its own radius.
+        at its own radius. In continuous mode a step additionally advances
+        the persistent lane pool one tick and retires finished lanes.
         """
+        if self._pool is not None:
+            return self._step_continuous()
         batch = self._drain()
         if not batch:
             return []
+        svc0 = time.perf_counter()
         out = []
         if self.live is not None:
-            muts = [b for b in batch if b[0].op != "query"]
-            batch = [b for b in batch if b[0].op == "query"]
+            muts = [b for b in batch if b[0].op != "range"]
+            batch = [b for b in batch if b[0].op == "range"]
             if muts:
-                out.extend(self._apply_mutations(muts))
+                out.extend(self._apply_mutations(muts, svc0))
                 if (self.scfg.auto_consolidate
                         and self.live.maybe_consolidate()):
                     self.stats["consolidations"] += 1
@@ -281,11 +421,11 @@ class RangeServer:
         counts = np.asarray(res.count)
         over = np.asarray(res.overflow)
         ess = np.asarray(res.es_stopped)
-        epoch = self._view.epoch if self._view is not None else 0
+        epoch = self._epoch()
         for i, rq in enumerate(reqs):
             row = ids[i]
             valid = row != INVALID_ID
-            out.append(Response(
+            out.append(self._record(Response(
                 req_id=rq.req_id,
                 ids=row[valid],
                 dists=dists[i][valid],
@@ -295,20 +435,212 @@ class RangeServer:
                 latency_s=now - arrive[i],
                 radius=float(radii[i]),
                 epoch=epoch,
-            ))
+                timings=self._timings(arrive[i], svc0, now),
+            )))
         self.stats["served"] += n
         self.stats["batches"] += 1
         self.stats["es_stopped"] += int(ess[:n].sum())
         self.stats["overflow"] += int(over[:n].sum())
         self.stats["reranked"] += int(np.asarray(res.n_rerank)[:n].sum())
-        rb = radii[:n].astype(np.float64)
-        self.stats["mixed_radius_batches"] += int(rb.min() != rb.max())
-        self.stats["radius_min"] = min(self.stats["radius_min"], float(rb.min()))
-        self.stats["radius_max"] = max(self.stats["radius_max"], float(rb.max()))
-        self.stats["radius_sum"] += float(rb.sum())
-        self.stats["radius_sumsq"] += float((rb * rb).sum())
+        self._track_radii(radii[:n])
         return out
 
+    # -- continuous execution ------------------------------------------------
+    def _step_continuous(self) -> list[Response]:
+        """One continuous-batching step: drain, (mutations), effort-split
+        phase-1 dispatches, pool tick, retirements. Point queries answered
+        at phase 1 return from the step they were drained in; saturated
+        lanes ride the pool across steps."""
+        out = []
+        batch = self._drain()
+        svc0 = time.perf_counter()
+        if self.live is not None:
+            muts = [b for b in batch if b[0].op != "range"]
+            batch = [b for b in batch if b[0].op == "range"]
+            if muts:
+                # in-flight checkpoints must not cross an epoch: finish them
+                # against the snapshot they were admitted under, THEN mutate
+                out.extend(self._finish_pool())
+                out.extend(self._apply_mutations(muts, svc0))
+                if (self.scfg.auto_consolidate
+                        and self.live.maybe_consolidate()):
+                    self.stats["consolidations"] += 1
+                self._view = self.live.snapshot()
+                self._pool.rebind(self._corpus(), self._graph())
+            self.stats["epoch"] = self._view.epoch
+        if batch:
+            reqs = [b[0] for b in batch]
+            arrive = [b[1] for b in batch]
+            q = np.stack([rq.query for rq in reqs])
+            radii = np.asarray(
+                [self.scfg.default_radius if rq.radius is None else rq.radius
+                 for rq in reqs], np.float32)
+            heavy = np.zeros(len(reqs), bool)
+            if self.effort is not None and len(reqs) > 1:
+                pred = self.effort.predict(q, radii)
+                heavy = pred >= self.scfg.effort_threshold
+            self.stats["bucket_cheap"] += int((~heavy).sum())
+            self.stats["bucket_heavy"] += int(heavy.sum())
+            # cheap bucket first: point queries keep their relative order
+            # and never queue behind the heavy dispatch
+            for sel in (np.nonzero(~heavy)[0], np.nonzero(heavy)[0]):
+                if len(sel):
+                    out.extend(self._dispatch_phase1(
+                        [reqs[i] for i in sel], [arrive[i] for i in sel],
+                        q[sel], radii[sel], svc0))
+            self._track_radii(radii)
+            self.stats["batches"] += 1
+        before = self._pool.occupancy
+        finished = self._pool.tick()
+        self.stats["pool_ticks"] = self._pool.ticks
+        if before > len(finished):
+            # at least one lane survived the tick while the server kept
+            # serving around it — the scheduler rotated past a straggler
+            self.stats["pool_rotations"] += 1
+        if len(finished):
+            out.extend(self._respond_greedy(*self._pool.retire(finished)))
+        return out
+
+    def _dispatch_phase1(self, reqs, arrive, q, radii, svc0) -> list[Response]:
+        """Run one pow2-padded phase-1 batch; answer unsaturated lanes now,
+        seed saturated ones into the pool (overflow runs one-shot)."""
+        n = len(reqs)
+        bucket = next_pow2(n)
+        if bucket > n:
+            q = np.concatenate([q, np.repeat(q[:1], bucket - n, axis=0)])
+            radii = np.concatenate([radii, np.repeat(radii[:1], bucket - n)])
+        qj = jnp.asarray(q)
+        rj = jnp.asarray(radii)
+        es = (self.scfg.es_radius_factor * rj
+              if self.scfg.es_radius_factor > 0 else None)
+        st, res, need = range_phase1(self._corpus(), self._graph(), qj,
+                                     self._start_ids(), rj, self.cfg,
+                                     es_radius=es)
+        need_h = np.array(need)
+        need_h[n:] = False
+        out = []
+        direct = np.nonzero(~need_h[:n])[0]
+        if len(direct):
+            fin = finalize_results(self._corpus(), qj, rj, res, self.cfg,
+                                   self._tombstones())
+            out.extend(self._emit_range(fin, direct, reqs, arrive, radii,
+                                        svc0, phase2=False))
+        lanes = np.nonzero(need_h)[0]
+        if len(lanes):
+            seeded = greedy_seed_batch(self._corpus(), st, rj,
+                                       self.cfg.result_cap, self.cfg.search)
+            nv1 = np.asarray(st.n_visited)
+            nd1 = np.asarray(st.n_dist)
+            es1 = np.asarray(st.es_stopped)
+            metas = [dict(req=reqs[i], arrive=arrive[i], svc0=svc0,
+                          radius=float(radii[i]),
+                          n_visited=int(nv1[i]), n_dist=int(nd1[i]),
+                          es=bool(es1[i]))
+                     for i in lanes]
+            fit = min(len(lanes), len(self._pool.free_slots()))
+            if fit:
+                self._pool.admit(seeded, lanes[:fit], qj, rj, metas[:fit])
+                self.stats["pool_admitted"] += fit
+            if fit < len(lanes):
+                # pool full: run the overflow lanes to completion in one
+                # slice (identical results — the slice width is a latency
+                # knob, not a semantic one)
+                out.extend(self._oneshot(seeded, lanes[fit:], qj, rj,
+                                         metas[fit:]))
+        return out
+
+    def _oneshot(self, seeded, sel, qj, rj, metas) -> list[Response]:
+        k = len(sel)
+        P = next_pow2(k)
+        sel_p = np.concatenate([sel, np.repeat(sel[:1], P - k)])
+        g, qs, rs = _gather_lanes((seeded, qj, rj), jnp.asarray(sel_p))
+        g = greedy_resume_batch(
+            self._corpus(), self._graph(), qs, rs, g, jnp.ones(P, bool),
+            self.cfg.result_cap, self.cfg.frontier_rounds,
+            self.cfg.frontier_rounds, self.cfg.search)
+        _, over = greedy_lane_done(g, self.cfg.frontier_rounds)
+        self.stats["pool_oneshot"] += k
+        return self._respond_greedy(g, qs, rs, over, metas)
+
+    def _respond_greedy(self, g, qs, rs, over, metas) -> list[Response]:
+        """Finalize retired greedy lanes (pool or one-shot) into Responses.
+        Device arrays are pow2-padded past ``len(metas)``; pad lanes are
+        finalized (fixed shapes) but never answered."""
+        k = len(metas)
+        P = int(np.asarray(g.res_count).shape[0])
+        nv = np.zeros(P, np.int32)
+        nd = np.zeros(P, np.int32)
+        esf = np.zeros(P, bool)
+        for i, m in enumerate(metas):
+            nv[i], nd[i], esf[i] = m["n_visited"], m["n_dist"], m["es"]
+        res = RangeResult(
+            ids=g.res_ids, dists=g.res_dists, count=g.res_count,
+            overflow=jnp.asarray(over),
+            n_visited=jnp.asarray(nv),
+            n_dist=jnp.asarray(nd) + g.n_dist,
+            es_stopped=jnp.asarray(esf),
+            phase2=jnp.ones(P, bool),
+            n_rerank=jnp.zeros(P, jnp.int32))
+        res = finalize_results(self._corpus(), qs, rs, res, self.cfg,
+                               self._tombstones())
+        self.stats["pool_retired"] += k
+        reqs = [m["req"] for m in metas]
+        arrive = [m["arrive"] for m in metas]
+        radii = np.asarray([m["radius"] for m in metas], np.float32)
+        return self._emit_range(res, np.arange(k), reqs, arrive, radii,
+                                metas[0]["svc0"] if k else 0.0, phase2=True,
+                                svc0s=[m["svc0"] for m in metas])
+
+    def _emit_range(self, res: RangeResult, rows, reqs, arrive, radii,
+                    svc0, *, phase2: bool, svc0s=None) -> list[Response]:
+        """Turn result rows into recorded Responses. ``rows`` indexes the
+        (padded) result arrays; ``reqs``/``arrive``/``radii`` are indexed
+        the same way for phase-1 emission and positionally (row i ->
+        meta i) for greedy retirement."""
+        now = time.perf_counter()
+        ids = self._externalize(np.asarray(res.ids))
+        dists = np.asarray(res.dists)
+        counts = np.asarray(res.count)
+        over = np.asarray(res.overflow)
+        ess = np.asarray(res.es_stopped)
+        epoch = self._epoch()
+        out = []
+        for j, i in enumerate(rows):
+            row = ids[i]
+            valid = row != INVALID_ID
+            a = arrive[i] if svc0s is None else arrive[j]
+            s0 = svc0 if svc0s is None else svc0s[j]
+            rq = reqs[i] if svc0s is None else reqs[j]
+            rad = radii[i] if svc0s is None else radii[j]
+            out.append(self._record(Response(
+                req_id=rq.req_id,
+                ids=row[valid],
+                dists=dists[i][valid],
+                count=int(counts[i]),
+                overflow=bool(over[i]),
+                es_stopped=bool(ess[i]),
+                latency_s=now - a,
+                radius=float(rad),
+                epoch=epoch,
+                timings=self._timings(a, s0, now),
+            )))
+            self.stats["es_stopped"] += int(ess[i])
+            self.stats["overflow"] += int(over[i])
+            self.stats["reranked"] += int(np.asarray(res.n_rerank)[i])
+        self.stats["served"] += len(out)
+        return out
+
+    def _finish_pool(self) -> list[Response]:
+        """Tick the pool to empty (epoch barrier / final drain)."""
+        out = []
+        while self._pool.occupancy:
+            finished = self._pool.tick()
+            self.stats["pool_ticks"] = self._pool.ticks
+            if len(finished):
+                out.extend(self._respond_greedy(*self._pool.retire(finished)))
+        return out
+
+    # -- monitoring / drain --------------------------------------------------
     def radius_dispersion(self) -> dict:
         """Mean/std/min/max of served radii + mixed-batch count (monitoring)."""
         n = max(self.stats["served"], 1)
@@ -320,6 +652,6 @@ class RangeServer:
 
     def run_until_drained(self) -> list[Response]:
         out = []
-        while self.queue:
+        while self.queue or self.in_flight():
             out.extend(self.step())
         return out

@@ -1,0 +1,81 @@
+"""Public-API snapshot: the exported surface of ``repro.core``,
+``repro.serve``, and ``repro.live`` — symbol names, kinds, and callable
+signatures — is pinned to ``tests/api_snapshot.json``.
+
+The unified query API (op-tagged ``Request``/``Response``, keyword-only
+``range_search_*`` signatures, ``EngineDeployConfig.overrides``) is a
+compatibility contract: this test makes any drift — a renamed keyword, a
+reordered parameter, a dropped export — an explicit, reviewed diff instead
+of a silent break for downstream callers.
+
+Intentional API changes regenerate the snapshot:
+
+    PYTHONPATH=src python tests/test_api_snapshot.py --update
+
+and the resulting ``api_snapshot.json`` diff is reviewed with the code.
+"""
+import importlib
+import inspect
+import json
+import pathlib
+
+MODULES = ("repro.core", "repro.serve", "repro.live")
+SNAPSHOT = pathlib.Path(__file__).parent / "api_snapshot.json"
+
+
+def _describe(obj):
+    if inspect.isclass(obj):
+        kind = "class"
+    elif callable(obj):
+        kind = "function"
+    else:
+        return {"kind": type(obj).__name__}
+    try:
+        sig = str(inspect.signature(obj))
+    except (ValueError, TypeError):  # builtins / odd callables
+        sig = None
+    return {"kind": kind, "signature": sig}
+
+
+def current_api():
+    out = {}
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        names = sorted(getattr(mod, "__all__", None)
+                       or [n for n in dir(mod) if not n.startswith("_")])
+        out[modname] = {n: _describe(getattr(mod, n)) for n in names}
+    return out
+
+
+def test_public_api_matches_snapshot():
+    assert SNAPSHOT.exists(), (
+        "tests/api_snapshot.json missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_api_snapshot.py --update`")
+    want = json.loads(SNAPSHOT.read_text())
+    got = current_api()
+    problems = []
+    for modname in MODULES:
+        w, g = want.get(modname, {}), got.get(modname, {})
+        for name in sorted(set(w) | set(g)):
+            if name not in g:
+                problems.append(f"{modname}.{name}: removed from public API")
+            elif name not in w:
+                problems.append(f"{modname}.{name}: new export not in "
+                                "snapshot")
+            elif w[name] != g[name]:
+                problems.append(f"{modname}.{name}: {w[name]} -> {g[name]}")
+    assert not problems, (
+        "public API drifted from tests/api_snapshot.json:\n  "
+        + "\n  ".join(problems)
+        + "\nIf intentional, regenerate: PYTHONPATH=src python "
+        "tests/test_api_snapshot.py --update")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--update" in sys.argv:
+        SNAPSHOT.write_text(json.dumps(current_api(), indent=2,
+                                       sort_keys=True) + "\n")
+        print(f"wrote {SNAPSHOT}")
+    else:
+        print(json.dumps(current_api(), indent=2, sort_keys=True))

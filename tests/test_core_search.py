@@ -105,7 +105,7 @@ def test_beam_never_revisits(corpus):
 # ---------------------------------------------------------------------------
 
 def _ap(eng, qs, r, cfg, gt, es=None):
-    res = eng.range(qs, r, cfg, es_radius=es)
+    res = eng.range(qs, r, cfg=cfg, es_radius=es)
     return average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
                              np.asarray(res.ids), np.asarray(res.count)), res
 
@@ -130,7 +130,7 @@ def test_greedy_results_all_in_range(corpus):
     r = 2.5
     cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16, visit_cap=128),
                       mode="greedy")
-    res = eng.range(qs, r, cfg)
+    res = eng.range(qs, r, cfg=cfg)
     dd = np.asarray(res.dists)
     ids = np.asarray(res.ids)
     assert np.all(dd[ids != INVALID_ID] <= r + 1e-5)
@@ -145,8 +145,8 @@ def test_fused_equals_compacted(corpus):
     r = 2.5
     cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16, visit_cap=128),
                       mode="greedy")
-    a = eng.range(qs, r, cfg, compacted=True)
-    b = eng.range(qs, r, cfg, compacted=False)
+    a = eng.range(qs, r, cfg=cfg, compacted=True)
+    b = eng.range(qs, r, cfg=cfg, compacted=False)
     np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
     for ra, rb in zip(np.asarray(a.ids), np.asarray(b.ids)):
         assert set(ra[ra != INVALID_ID]) == set(rb[rb != INVALID_ID])

@@ -84,7 +84,7 @@ def test_sharded_embedding_and_engine():
                            mode="greedy", result_cap=256)
         corpus = build_sharded(np.asarray(pts), 4,
                                lambda p: (build_knn_graph(p, k=12), medoid(p)[None]))
-        res = sharded_range_search(mesh, corpus, jnp.asarray(qs), 4.0, rcfg)
+        res = sharded_range_search(mesh=mesh, corpus=corpus, queries=jnp.asarray(qs), r=4.0, cfg=rcfg)
         gt = exact_range_search(pts, jnp.asarray(qs), 4.0)
         ap = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
                                np.asarray(res.ids), np.asarray(res.count))
@@ -149,14 +149,15 @@ def test_sharded_matches_host_union_exactly():
                            mode="greedy", result_cap=128)
         corpus = build_sharded(np.asarray(pts), 4,
                                lambda p: (build_knn_graph(p, k=8), medoid(p)[None]))
-        res = sharded_range_search(mesh, corpus, qs, 2.5, rcfg)
+        res = sharded_range_search(mesh=mesh, corpus=corpus, queries=qs, r=2.5, cfg=rcfg)
 
         # host reference: same per-shard fused searches, numpy union-merge
         all_ids, all_dists, total = [], [], 0
         for s in range(4):
-            r = range_search_fused(corpus.points[s],
-                                   Graph(neighbors=corpus.neighbors[s]),
-                                   qs, corpus.start_ids[s], 2.5, rcfg)
+            r = range_search_fused(corpus=corpus.points[s],
+                                   graph=Graph(neighbors=corpus.neighbors[s]),
+                                   queries=qs, start_ids=corpus.start_ids[s],
+                                   r=2.5, cfg=rcfg)
             gids = np.where(np.asarray(r.ids) == INVALID_ID, INVALID_ID,
                             np.asarray(r.ids) + int(corpus.offsets[s]))
             all_ids.append(gids); all_dists.append(np.asarray(r.dists))
@@ -200,9 +201,9 @@ def test_sharded_mixed_radius_per_lane():
                                lambda p: (build_knn_graph(p, k=8), medoid(p)[None]))
         r_a, r_b = 1.5, 3.5
         radii = jnp.asarray(np.where(np.arange(16) % 2, r_b, r_a), jnp.float32)
-        mixed = sharded_range_search(mesh, corpus, qs, radii, rcfg)
-        hom_a = sharded_range_search(mesh, corpus, qs, r_a, rcfg)
-        hom_b = sharded_range_search(mesh, corpus, qs, r_b, rcfg)
+        mixed = sharded_range_search(mesh=mesh, corpus=corpus, queries=qs, r=radii, cfg=rcfg)
+        hom_a = sharded_range_search(mesh=mesh, corpus=corpus, queries=qs, r=r_a, cfg=rcfg)
+        hom_b = sharded_range_search(mesh=mesh, corpus=corpus, queries=qs, r=r_b, cfg=rcfg)
         for name in ("ids", "dists", "count", "overflow"):
             got = np.asarray(getattr(mixed, name))
             wa = np.asarray(getattr(hom_a, name))
@@ -212,7 +213,7 @@ def test_sharded_mixed_radius_per_lane():
                 np.testing.assert_array_equal(got[q], want, err_msg=f"{name}[{q}]")
         assert int(np.asarray(mixed.count).sum()) > 0  # not vacuous
         # all-equal vector == scalar, bitwise, across every result field
-        vec = sharded_range_search(mesh, corpus, qs, jnp.full((16,), r_a), rcfg)
+        vec = sharded_range_search(mesh=mesh, corpus=corpus, queries=qs, r=jnp.full((16,), r_a), cfg=rcfg)
         for name in ("ids", "dists", "count", "overflow", "n_visited",
                      "n_dist", "es_stopped", "phase2"):
             np.testing.assert_array_equal(np.asarray(getattr(vec, name)),
@@ -246,7 +247,7 @@ def test_sharded_quantized_two_pass():
                                lambda p: (build_knn_graph(p, k=8), medoid(p)[None]),
                                corpus_dtype="int8")
         r = 2.5
-        res = sharded_range_search(mesh, corpus, qs, r, rcfg)
+        res = sharded_range_search(mesh=mesh, corpus=corpus, queries=qs, r=r, cfg=rcfg)
         ids = np.asarray(res.ids); cnt = np.asarray(res.count)
         d2 = np.sum((np.asarray(pts)[None, :, :]
                      - np.asarray(qs)[:, None, :]) ** 2, axis=-1)
@@ -260,8 +261,10 @@ def test_sharded_quantized_two_pass():
         all_ids, all_dists, total, nrr = [], [], 0, 0
         for s in range(4):
             shard = jax.tree.map(lambda x: x[s], corpus.points)
-            rr = range_search_fused(shard, Graph(neighbors=corpus.neighbors[s]),
-                                    qs, corpus.start_ids[s], r, rcfg)
+            rr = range_search_fused(corpus=shard,
+                                    graph=Graph(neighbors=corpus.neighbors[s]),
+                                    queries=qs, start_ids=corpus.start_ids[s],
+                                    r=r, cfg=rcfg)
             gids = np.where(np.asarray(rr.ids) == INVALID_ID, INVALID_ID,
                             np.asarray(rr.ids) + int(corpus.offsets[s]))
             all_ids.append(gids); all_dists.append(np.asarray(rr.dists))

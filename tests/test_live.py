@@ -86,8 +86,8 @@ def test_insert_then_query_finds_new_point_at_exact_distance():
     ids = live.insert(new)
     assert ids.shape == (40,) and live.n_live == 740
     qs = new[:8] + 0.001
-    res = live.range(qs, 0.5, CFG)
-    res_f = live.range(qs, 0.5, CFG, compacted=False)
+    res = live.range(qs, 0.5, cfg=CFG)
+    res_f = live.range(qs, 0.5, cfg=CFG, compacted=False)
     got, got_f = _sets(res), _sets(res_f)
     d_exact = np.sum((new[:8] - qs) ** 2, axis=1)
     rows_ids = np.asarray(res.ids)
@@ -106,15 +106,15 @@ def test_delete_then_query_never_returns_deleted():
     assert live.delete(doomed) == 50
     assert live.delete(doomed) == 0  # idempotent
     qs = pts[:16] + 0.01  # query AT deleted points: their slots must route,
-    res = live.range(qs, _mixed_radii(qs), CFG)  # never answer
+    res = live.range(qs, _mixed_radii(qs), cfg=CFG)  # never answer
     for i, got in enumerate(_sets(res)):
         assert not (got & set(doomed.tolist())), f"lane {i}"
     # tombstoned nodes still ROUTE: results equal the live-set oracle even
     # though the query's nearest neighbors (its own deleted copies) are gone
     radii = _mixed_radii(qs)
     want = _oracle_sets(live, qs, radii)
-    got = _sets(live.range(qs, jnp.asarray(radii), CFG))
-    over = np.asarray(live.range(qs, jnp.asarray(radii), CFG).overflow)
+    got = _sets(live.range(qs, jnp.asarray(radii), cfg=CFG))
+    over = np.asarray(live.range(qs, jnp.asarray(radii), cfg=CFG).overflow)
     for i in range(len(qs)):
         if not over[i]:
             assert got[i] == want[i], f"lane {i}"
@@ -135,8 +135,8 @@ def test_churn_oracle_equivalence(corpus_dtype):
     assert live.epoch == 5
     qs = np.concatenate([pts[100:116] + 0.01, stream[30:38] + 0.01])
     radii = _mixed_radii(qs)
-    res_c = live.range(qs, jnp.asarray(radii), CFG)
-    res_f = live.range(qs, jnp.asarray(radii), CFG, compacted=False)
+    res_c = live.range(qs, jnp.asarray(radii), cfg=CFG)
+    res_f = live.range(qs, jnp.asarray(radii), cfg=CFG, compacted=False)
     want = _oracle_sets(live, qs, radii)
     got_c, got_f = _sets(res_c), _sets(res_f)
     over = np.asarray(res_c.overflow)
@@ -211,8 +211,8 @@ def test_consolidation_rewires_compacts_and_preserves_results():
     assert st["free_slots"] == LCFG.capacity - 550  # slots reclaimed
     after = live.live_vectors()
     np.testing.assert_array_equal(np.sort(before[0]), np.sort(after[0]))
-    got = _sets(live.range(qs, jnp.asarray(radii), CFG))
-    over = np.asarray(live.range(qs, jnp.asarray(radii), CFG).overflow)
+    got = _sets(live.range(qs, jnp.asarray(radii), cfg=CFG))
+    over = np.asarray(live.range(qs, jnp.asarray(radii), cfg=CFG).overflow)
     for i in range(len(qs)):
         if not over[i]:
             assert got[i] == want[i], f"lane {i}: results moved under consolidation"
@@ -227,7 +227,7 @@ def test_insert_beyond_capacity_consolidates_or_raises():
     live.delete(np.arange(100))
     ids = live.insert(stream[:40])            # auto-consolidation freed slots
     assert live.live_count == 640 and live.n_live == 640
-    got = set().union(*_sets(live.range(stream[:4] + 0.001, 0.5, CFG)))
+    got = set().union(*_sets(live.range(stream[:4] + 0.001, 0.5, cfg=CFG)))
     assert set(ids[:4].tolist()) <= got
 
 
@@ -242,7 +242,7 @@ def test_delete_everything_never_crashes_consolidation():
     assert live.n_live == 0 and live.tombstone_frac() == 1.0
     assert not live.maybe_consolidate()          # skipped, not crashed
     assert live.consolidate()["reclaimed"] == 0  # explicit call: no-op
-    res = live.range(pts[:4] + 0.01, 10.0, CFG)
+    res = live.range(pts[:4] + 0.01, 10.0, cfg=CFG)
     assert int(np.asarray(res.count).sum()) == 0
 
 
@@ -260,8 +260,8 @@ def test_live_checkpoint_roundtrip(tmp_path):
     assert live2.stats() == live.stats()
     qs = pts[:12] + 0.01
     radii = _mixed_radii(qs)
-    r1 = live.range(qs, jnp.asarray(radii), CFG)
-    r2 = live2.range(qs, jnp.asarray(radii), CFG)
+    r1 = live.range(qs, jnp.asarray(radii), cfg=CFG)
+    r2 = live2.range(qs, jnp.asarray(radii), cfg=CFG)
     for name in ("ids", "dists", "count", "overflow", "n_rerank"):
         np.testing.assert_array_equal(np.asarray(getattr(r1, name)),
                                       np.asarray(getattr(r2, name)), name)
@@ -280,8 +280,8 @@ def test_frozen_engine_unaffected_by_tombstone_arg_absence():
     radii = _mixed_radii(qs)
     from repro.core import RangeSearchEngine
     eng = RangeSearchEngine.from_graph(jnp.asarray(pts), graph)
-    res_e = eng.range(qs, jnp.asarray(radii), CFG)
-    res_l = live.range(qs, jnp.asarray(radii), CFG)
+    res_e = eng.range(qs, jnp.asarray(radii), cfg=CFG)
+    res_l = live.range(qs, jnp.asarray(radii), cfg=CFG)
     for a, b in zip(_sets(res_e), _sets(res_l)):
         assert a == b
 
@@ -314,7 +314,7 @@ def test_slow_random_interleavings(seed, n_ops):
                                    replace=False))
     qs = live.live_vectors()[1][rng.integers(0, live.n_live, 10)] + 0.01
     radii = _mixed_radii(qs, seed=seed % 100)
-    res = live.range(qs, jnp.asarray(radii), CFG)
+    res = live.range(qs, jnp.asarray(radii), cfg=CFG)
     want = _oracle_sets(live, qs, radii)
     got = _sets(res)
     over = np.asarray(res.overflow)

@@ -142,7 +142,7 @@ def test_oracle_invariants(mode, metric, expand_width):
     pts, eng, qs, exact = _corpus(metric)
     radii = _mixed_radii(exact)
     cfg = _cfg(mode, metric, expand_width)
-    res = eng.range(qs, jnp.asarray(radii), cfg)
+    res = eng.range(qs, jnp.asarray(radii), cfg=cfg)
     _check_invariants(res, exact, radii)
 
     # (d) AP against the exact oracle clears the mode floor
@@ -153,8 +153,8 @@ def test_oracle_invariants(mode, metric, expand_width):
 
     # (e) all-equal radius vector is bitwise-identical to the scalar call
     r0 = float(np.median(radii))
-    res_s = eng.range(qs, r0, cfg)
-    res_v = eng.range(qs, jnp.full(qs.shape[0], r0, jnp.float32), cfg)
+    res_s = eng.range(qs, r0, cfg=cfg)
+    res_v = eng.range(qs, jnp.full(qs.shape[0], r0, jnp.float32), cfg=cfg)
     _assert_bitwise_equal(res_s, res_v, f"{mode}/{metric}/E={expand_width}")
 
 
@@ -165,8 +165,8 @@ def test_fused_matches_compacted_mixed_radii(mode):
     pts, eng, qs, exact = _corpus("l2")
     radii = jnp.asarray(_mixed_radii(exact))
     cfg = _cfg(mode, "l2", 4)
-    a = eng.range(qs, radii, cfg, compacted=True)
-    b = eng.range(qs, radii, cfg, compacted=False)
+    a = eng.range(qs, radii, cfg=cfg, compacted=True)
+    b = eng.range(qs, radii, cfg=cfg, compacted=False)
     np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
     for ra, rb in zip(np.asarray(a.ids), np.asarray(b.ids)):
         assert set(ra[ra != INVALID_ID]) == set(rb[rb != INVALID_ID])
@@ -212,7 +212,7 @@ def test_quantized_guard_band_oracle(mode, metric, compacted):
     pts, eng_f, eng_q, qs, exact = _qengine(metric)
     radii = _mixed_radii(exact)
     cfg = _cfg(mode, metric, 4)
-    res = eng_q.range(qs, jnp.asarray(radii), cfg, compacted=compacted)
+    res = eng_q.range(qs, jnp.asarray(radii), cfg=cfg, compacted=compacted)
     res_pre = eng_q.range(qs, jnp.asarray(radii),
                           dataclasses.replace(cfg, rerank=False),
                           compacted=compacted)
@@ -240,7 +240,7 @@ def test_quantized_guard_band_oracle(mode, metric, compacted):
 
     # (e) AP parity with the f32 engine on the same graph
     gt = exact_range_search(pts, qs, jnp.asarray(radii), metric)
-    res_f = eng_f.range(qs, jnp.asarray(radii), cfg, compacted=compacted)
+    res_f = eng_f.range(qs, jnp.asarray(radii), cfg=cfg, compacted=compacted)
     ap_q = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
                              np.asarray(res.ids), np.asarray(res.count))
     ap_f = average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
@@ -254,8 +254,8 @@ def test_quantized_fused_matches_compacted():
     pts, _, eng_q, qs, exact = _qengine("l2")
     radii = jnp.asarray(_mixed_radii(exact))
     cfg = _cfg("greedy", "l2", 4)
-    a = eng_q.range(qs, radii, cfg, compacted=True)
-    b = eng_q.range(qs, radii, cfg, compacted=False)
+    a = eng_q.range(qs, radii, cfg=cfg, compacted=True)
+    b = eng_q.range(qs, radii, cfg=cfg, compacted=False)
     np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
     np.testing.assert_array_equal(np.asarray(a.n_rerank),
                                   np.asarray(b.n_rerank))
@@ -313,8 +313,8 @@ def test_radius_monotonicity(mode):
     r1 = _mixed_radii(exact, 0.02, 0.06)
     r2 = (r1 * 1.5).astype(np.float32)
     cfg = _cfg(mode, "l2", 4)
-    a = eng.range(qs, jnp.asarray(r1), cfg)
-    b = eng.range(qs, jnp.asarray(r2), cfg)
+    a = eng.range(qs, jnp.asarray(r1), cfg=cfg)
+    b = eng.range(qs, jnp.asarray(r2), cfg=cfg)
     ids_a, _, _, _ = _rows(a)
     ids_b, _, _, over_b = _rows(b)
     for i in range(ids_a.shape[0]):
@@ -331,9 +331,9 @@ def test_lane_permutation_invariance():
     pts, eng, qs, exact = _corpus("l2")
     radii = _mixed_radii(exact)
     cfg = _cfg("greedy", "l2", 4)
-    res = eng.range(qs, jnp.asarray(radii), cfg)
+    res = eng.range(qs, jnp.asarray(radii), cfg=cfg)
     perm = np.random.default_rng(1).permutation(qs.shape[0])
-    res_p = eng.range(qs[perm], jnp.asarray(radii[perm]), cfg)
+    res_p = eng.range(qs[perm], jnp.asarray(radii[perm]), cfg=cfg)
     for name in ("ids", "dists", "count", "overflow"):
         np.testing.assert_array_equal(np.asarray(getattr(res, name))[perm],
                                       np.asarray(getattr(res_p, name)),
@@ -347,10 +347,10 @@ def test_padding_invariance():
     radii = _mixed_radii(exact)
     n = qs.shape[0]
     cfg = _cfg("greedy", "l2", 4)
-    res = eng.range(qs, jnp.asarray(radii), cfg)
+    res = eng.range(qs, jnp.asarray(radii), cfg=cfg)
     q_pad = jnp.concatenate([qs, jnp.broadcast_to(qs[:1], (5,) + qs.shape[1:])])
     r_pad = np.concatenate([radii, np.repeat(radii[:1], 5)])
-    res_p = eng.range(q_pad, jnp.asarray(r_pad), cfg)
+    res_p = eng.range(q_pad, jnp.asarray(r_pad), cfg=cfg)
     for name in ("ids", "dists", "count", "overflow"):
         np.testing.assert_array_equal(np.asarray(getattr(res, name)),
                                       np.asarray(getattr(res_p, name))[:n],
@@ -370,7 +370,7 @@ def test_random_radii_invariants(lo_q, spread, seed):
     base = np.quantile(exact, lo_q, axis=1)
     radii = (base * rng.uniform(1.0, spread, qs.shape[0])).astype(np.float32)
     cfg = _cfg("greedy", "l2", 4)
-    res = eng.range(qs, jnp.asarray(radii), cfg)
+    res = eng.range(qs, jnp.asarray(radii), cfg=cfg)
     _check_invariants(res, exact, radii)
 
 
@@ -386,11 +386,87 @@ def test_slow_sweep_all_modes(mode_i, metric_i, lo_q, seed):
     base = np.quantile(exact, max(lo_q, 1.5 / exact.shape[1]), axis=1)
     radii = (base * rng.uniform(1.0, 1.5, qs.shape[0])).astype(np.float32)
     cfg = _cfg(mode, metric, int(rng.integers(1, 6)))
-    res = eng.range(qs, jnp.asarray(radii), cfg)
+    res = eng.range(qs, jnp.asarray(radii), cfg=cfg)
     _check_invariants(res, exact, radii)
     # scalar/vector bitwise equivalence at a random shared radius
     r0 = float(np.median(radii))
     _assert_bitwise_equal(
-        eng.range(qs, r0, cfg),
-        eng.range(qs, jnp.full(qs.shape[0], r0, jnp.float32), cfg),
+        eng.range(qs, r0, cfg=cfg),
+        eng.range(qs, jnp.full(qs.shape[0], r0, jnp.float32), cfg=cfg),
         f"slow {mode}/{metric}")
+
+
+# ---------------------------------------------------------------------------
+# continuous serving vs the oracle (effort-bucketed admission)
+# ---------------------------------------------------------------------------
+
+def test_effort_bucketed_continuous_batch_matches_oracle():
+    """A mixed cheap/heavy batch served through the continuous pool with
+    effort-predicted admission equals the brute-force oracle per request.
+
+    The effort split only changes *batch composition* (which phase-1
+    dispatch a request rides), never results — so every response must carry
+    exactly the in-range set, and the stats must prove both buckets and the
+    lane pool actually ran (a vacuous pass with pool_admitted == 0 would
+    test nothing)."""
+    from repro.models import EffortPredictor
+    from repro.serve import RangeServer, Request, ServerConfig
+
+    pts = _toy(n=1200, d=10, seed=3)
+    graph = build_vamana(pts, BuildConfig(max_degree=24, beam=48,
+                                          insert_batch=256, two_pass=True))
+    eng = RangeSearchEngine.from_graph(pts, graph)
+    qs = np.asarray(pts[:32]) + 0.01
+    exact = np.asarray(point_dist(pts[None, :, :], qs[:, None, :], "l2"))
+
+    # radii in SQUARED-distance units: heavy lanes target 96 matches
+    # (saturating a beam of 48 -> phase 2 -> the lane pool), cheap lanes 3.
+    # Each radius sits midway between the k-th and (k+1)-th nearest
+    # distances so the in-range set is unambiguous at f32 precision (a
+    # quantile can land within float noise of an actual distance, turning
+    # the oracle comparison into a knife-edge membership call).
+    srt = np.sort(exact, axis=1)
+    r_heavy = (srt[:, 95] + srt[:, 96]) / 2
+    r_point = (srt[:, 2] + srt[:, 3]) / 2
+    radii = np.where(np.arange(32) % 4 == 0, r_heavy, r_point)
+    radii = radii.astype(np.float32)
+
+    # fit the effort regressor on held-out traffic with exact counts
+    tq = np.asarray(pts[200:456])
+    t_exact = np.asarray(point_dist(pts[None, :, :], tq[:, None, :], "l2"))
+    t_srt = np.sort(t_exact, axis=1)
+    t_radii = np.concatenate([(t_srt[:128, 95] + t_srt[:128, 96]) / 2,
+                              (t_srt[128:, 2] + t_srt[128:, 3]) / 2,
+                              ]).astype(np.float32)
+    t_counts = (t_exact <= t_radii[:, None]).sum(axis=1)
+    effort = EffortPredictor.fit(tq, t_radii, t_counts)
+
+    cfg = RangeConfig(search=SearchConfig(beam=48, max_beam=48,
+                                          visit_cap=384),
+                      mode="greedy", result_cap=512)
+    srv = RangeServer(eng, cfg,
+                      ServerConfig(max_batch=16, continuous=True, lanes=4,
+                                   slice_rounds=4, effort_threshold=16.0),
+                      effort=effort)
+    for i in range(32):
+        srv.submit(Request(req_id=i, query=qs[i], radius=float(radii[i])))
+    resp = {r.req_id: r for r in srv.run_until_drained()}
+    assert len(resp) == 32
+
+    for i in range(32):
+        want = set(np.nonzero(exact[i] <= radii[i])[0].tolist())
+        got = set(resp[i].ids.tolist())
+        assert not resp[i].overflow
+        assert got == want, (f"req {i} (r={radii[i]:.3f}): "
+                             f"missing {sorted(want - got)[:5]}, "
+                             f"extra {sorted(got - want)[:5]}")
+        np.testing.assert_allclose(np.asarray(resp[i].dists),
+                                   exact[i, np.asarray(resp[i].ids)],
+                                   rtol=1e-6, atol=1e-5)
+    # the split and the pool genuinely ran
+    assert srv.stats["bucket_cheap"] > 0 and srv.stats["bucket_heavy"] > 0
+    assert srv.stats["pool_admitted"] > 0
+    # every greedy lane retires exactly once (pool lanes + the one-shot
+    # fallback for saturated lanes that arrived at a full pool)
+    assert (srv.stats["pool_retired"] ==
+            srv.stats["pool_admitted"] + srv.stats["pool_oneshot"])

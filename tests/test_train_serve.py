@@ -301,3 +301,147 @@ def test_server_corpus_dtype_contract(small_engine):
         [np.asarray(pts[i]) + 0.01 for i in range(8)])[:, None]) ** 2, axis=-1)
     for r in resp:  # post-rerank: exactly-in-range only
         assert np.all(d2[r.req_id, r.ids] <= 4.0 + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching (lane pool)
+# ---------------------------------------------------------------------------
+
+_POOL_CFG = dict(max_batch=8, continuous=True, lanes=4, slice_rounds=1)
+
+
+def _drain_ids(srv, reqs):
+    for r in reqs:
+        srv.submit(r)
+    return srv.run_until_drained()
+
+
+def test_server_continuous_straggler_rotation(clustered_engine):
+    """A straggler lane parked in the pool must not perturb point queries:
+    the continuous scheduler rotates past it (pool_rotations > 0), and the
+    point queries' results AND their per-request-id response order are
+    identical to a run without the straggler."""
+    pts, eng = clustered_engine
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32,
+                                          visit_cap=256),
+                      mode="greedy", result_cap=512)
+    qs = np.asarray(pts[:16]) + 0.01
+    point = [Request(req_id=i, query=qs[i], radius=0.5) for i in range(16)]
+    straggler = Request(req_id=99, query=np.asarray(pts[40]), radius=9.0)
+
+    srv_a = RangeServer(eng, cfg, ServerConfig(**_POOL_CFG))
+    resp_a = _drain_ids(srv_a, [straggler] + point)
+    srv_b = RangeServer(eng, cfg, ServerConfig(**_POOL_CFG))
+    resp_b = _drain_ids(srv_b, point)
+
+    # the straggler really did straggle: slice_rounds=1 makes its lane
+    # survive ticks while point traffic keeps flowing around it
+    assert srv_a.stats["pool_admitted"] >= 1
+    assert srv_a.stats["pool_rotations"] >= 1
+    assert len(resp_a) == 17 and len(resp_b) == 16
+
+    a = {r.req_id: r for r in resp_a}
+    b = {r.req_id: r for r in resp_b}
+    assert len(a[99].ids) >= 32  # the straggler saturated its beam
+    for i in range(16):
+        np.testing.assert_array_equal(a[i].ids, b[i].ids, err_msg=f"req {i}")
+        np.testing.assert_array_equal(a[i].dists, b[i].dists)
+        assert a[i].count == b[i].count
+    # per-request-id response order of the point queries is unchanged
+    order_a = [r.req_id for r in resp_a if r.req_id != 99]
+    order_b = [r.req_id for r in resp_b]
+    assert order_a == order_b
+
+
+def test_server_continuous_matches_lockstep(clustered_engine):
+    """Continuous batching is a latency optimization, not a semantics
+    change: per-request id sets, counts, and overflow flags are identical
+    to the lockstep server on a mixed-radius workload."""
+    pts, eng = clustered_engine
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32,
+                                          visit_cap=256),
+                      mode="greedy", result_cap=512)
+    qs = np.asarray(pts[:24]) + 0.01
+    radii = np.where(np.arange(24) % 3 == 0, 9.0, 0.5).astype(np.float32)
+    reqs = lambda: [Request(req_id=i, query=qs[i], radius=float(radii[i]))
+                    for i in range(24)]
+
+    lock = RangeServer(eng, cfg, ServerConfig(max_batch=8))
+    cont = RangeServer(eng, cfg, ServerConfig(**_POOL_CFG))
+    rl = {r.req_id: r for r in _drain_ids(lock, reqs())}
+    rc = {r.req_id: r for r in _drain_ids(cont, reqs())}
+    assert cont.stats["pool_admitted"] > 0  # the pool actually ran
+    for i in range(24):
+        assert frozenset(rl[i].ids.tolist()) == frozenset(rc[i].ids.tolist())
+        assert rl[i].count == rc[i].count
+        assert rl[i].overflow == rc[i].overflow
+    # both latency surfaces populated: end-to-end and service histograms
+    summ = cont.latency_summary()
+    assert summ["all"]["count"] == 24 and summ["service"]["count"] == 24
+    assert summ["all"]["p99_ms"] >= summ["all"]["p50_ms"] > 0
+    for r in rc.values():
+        assert set(r.timings) == {"queue_s", "service_s", "total_s"}
+        assert r.timings["total_s"] >= r.timings["service_s"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# unified public API: deprecation aliases + deploy-config overrides
+# ---------------------------------------------------------------------------
+
+def test_deprecated_request_op_query_alias():
+    with pytest.warns(DeprecationWarning, match="op='query'"):
+        r = Request(req_id=0, op="query", query=np.zeros(4, np.float32),
+                    radius=1.0)
+    assert r.op == "range"  # normalized; downstream sees only the new name
+
+
+def test_deprecated_server_config_expand_width():
+    with pytest.warns(DeprecationWarning, match="expand_width"):
+        ServerConfig(expand_width=4)
+
+
+def test_deprecated_positional_cfg_and_points_alias(small_engine):
+    from repro.core import range_search_fused
+    pts, eng = small_engine
+    qs = jnp.asarray(np.asarray(pts[:4]) + 0.01)
+    cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16,
+                                          visit_cap=64),
+                      mode="greedy", result_cap=128)
+    want = eng.range(qs, 4.0, cfg=cfg)
+    with pytest.warns(DeprecationWarning, match="positional"):
+        got = eng.range(qs, 4.0, cfg)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    with pytest.warns(DeprecationWarning, match="points= is deprecated"):
+        got2 = range_search_fused(points=pts, graph=eng.graph, queries=qs,
+                                  start_ids=eng.start_ids, r=4.0, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got2.ids))
+    with pytest.raises(TypeError, match="both corpus= and points="):
+        with pytest.warns(DeprecationWarning):
+            range_search_fused(corpus=pts, points=pts, graph=eng.graph,
+                               queries=qs, start_ids=eng.start_ids, r=4.0,
+                               cfg=cfg)
+
+
+def test_engine_deploy_config_overrides_routing():
+    """overrides() routes each knob to the level that owns it and rejects
+    unknown names instead of silently no-opping."""
+    from repro.configs.range_engine import EngineDeployConfig
+    base = EngineDeployConfig()
+    out = base.overrides(beam=8, max_beam=8,        # -> SearchConfig
+                         result_cap=64, lam=0.5,    # -> RangeConfig
+                         dim=64, metric="ip")       # -> deploy level
+    assert out.range_cfg.search.beam == 8
+    assert out.range_cfg.search.max_beam == 8
+    assert out.range_cfg.result_cap == 64
+    assert out.range_cfg.lam == 0.5
+    assert out.dim == 64
+    # cross-level contracts propagate both ways
+    assert out.metric == "ip" and out.range_cfg.search.metric == "ip"
+    i8 = base.overrides(corpus_dtype="int8")
+    assert i8.corpus_dtype == "int8"
+    assert i8.range_cfg.search.corpus_dtype == "int8"
+    # untouched knobs untouched; the base config is never mutated
+    assert out.range_cfg.search.visit_cap == base.range_cfg.search.visit_cap
+    assert base.range_cfg.search.beam == 64
+    with pytest.raises(TypeError, match="unknown knob"):
+        base.overrides(beamwidth=8)
