@@ -10,7 +10,6 @@ per-shard results for the multi-shard production layout (one
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 import jax
@@ -73,7 +72,7 @@ class RangeSearchEngine:
                                jnp.asarray(jnp.inf, jnp.float32), cfg)
         return topk_from_state(st, k)
 
-    def range(self, queries: jnp.ndarray, r, *args,
+    def range(self, queries: jnp.ndarray, r, *,
               cfg: Optional[RangeConfig] = None,
               es_radius=None,
               compacted: bool = True,
@@ -84,18 +83,7 @@ class RangeSearchEngine:
         all radii are equal. ``tombstones`` is the live subsystem's packed
         dead-slot bitset: deleted slots still route the traversal but never
         appear in results. Everything past ``(queries, r)`` is keyword-only
-        (shared order with the ``range_search_*`` module entry points); a
-        positional ``cfg`` still works for one release behind a
-        ``DeprecationWarning``."""
-        if args:
-            warnings.warn(
-                "RangeSearchEngine.range: positional arguments past "
-                "(queries, r) are deprecated; pass cfg= (and es_radius=, "
-                "compacted=, tombstones=) by keyword",
-                DeprecationWarning, stacklevel=2)
-            if len(args) > 1 or cfg is not None:
-                raise TypeError("range() got unexpected positional arguments")
-            cfg = args[0]
+        (shared order with the ``range_search_*`` module entry points)."""
         cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
         if cfg.search.metric != self.metric:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(cfg.search, metric=self.metric))

@@ -17,7 +17,6 @@ XLA program (no host sync) for dry-run lowering and single-dispatch serving.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 from typing import Optional
 
@@ -401,6 +400,17 @@ def greedy_lane_done(gs: GreedyState, rounds: int):
     return done, np.asarray(gs.overflow) | (done & (ptr < cnt))
 
 
+def greedy_coverage(gs: GreedyState) -> np.ndarray:
+    """Visited-frontier fraction per lane: ``expand_ptr / res_count``,
+    clamped to [0, 1]. A deadline-truncated lane reports how much of its
+    *discovered* result frontier it had expanded when finalized — the
+    coverage estimate a certified-partial ``Response`` carries. A lane
+    with an empty result set (or one never truncated) reports 1.0."""
+    ptr = np.asarray(gs.expand_ptr, np.float64)
+    cnt = np.asarray(gs.res_count, np.float64)
+    return np.where(cnt > 0, np.minimum(ptr / np.maximum(cnt, 1.0), 1.0), 1.0)
+
+
 # ---------------------------------------------------------------------------
 # Result extraction
 # ---------------------------------------------------------------------------
@@ -781,72 +791,28 @@ def _range_search_compacted(
 # ``(corpus, graph, queries, start_ids, r, cfg, es_radius, tombstones)``
 # and take everything by keyword (``dist.sharded_range_search`` prepends its
 # mesh; ``engine.range``/``LiveSnapshot.range`` bind corpus/graph/start_ids
-# from the object and keep the same tail). Positional calls and the old
-# ``points=`` spelling still work for one release behind a
-# ``DeprecationWarning``.
+# from the object and keep the same tail).
 
-_RANGE_ARG_ORDER = ("corpus", "graph", "queries", "start_ids", "r", "cfg",
-                    "es_radius", "tombstones")
-_RANGE_REQUIRED = ("corpus", "graph", "queries", "start_ids", "r", "cfg")
-
-
-def _merge_legacy_args(name: str, order, required, args, kw: dict) -> dict:
-    """Fold deprecated positional calls and the ``points=`` alias onto the
-    keyword-only surface (one-release compatibility shim)."""
-    if args:
-        if len(args) > len(order):
-            raise TypeError(f"{name}() takes at most {len(order)} arguments "
-                            f"({len(args)} given)")
-        warnings.warn(
-            f"{name}: positional arguments are deprecated; pass "
-            + ", ".join(f"{k}=" for k in order[:len(args)]),
-            DeprecationWarning, stacklevel=3)
-        for key, val in zip(order, args):
-            if kw.get(key) is not None:
-                raise TypeError(f"{name}() got multiple values for {key!r}")
-            kw[key] = val
-    if kw.get("points") is not None:
-        warnings.warn(f"{name}: points= is deprecated; use corpus=",
-                      DeprecationWarning, stacklevel=3)
-        if kw.get("corpus") is not None:
-            raise TypeError(f"{name}() got both corpus= and points=")
-        kw["corpus"] = kw["points"]
-    kw.pop("points", None)
-    missing = [k for k in required if kw.get(k) is None]
-    if missing:
-        raise TypeError(f"{name}() missing required keyword arguments: "
-                        + ", ".join(missing))
-    return kw
-
-
-def range_search_fused(*args, corpus=None, graph=None, queries=None,
-                       start_ids=None, r=None, cfg=None, es_radius=None,
-                       tombstones=None, points=None) -> RangeResult:
+def range_search_fused(*, corpus, graph, queries, start_ids, r, cfg,
+                       es_radius=None, tombstones=None) -> RangeResult:
     """Single-XLA-program batched range search (no host sync): phase 1 plus
     masked (not compacted) greedy phase 2, tombstone filter, and in-program
     quantized rerank. Keyword-only; see the module note on the shared
     parameter order. ``r``/``es_radius`` are a scalar or per-query ``(Q,)``
     radii; ``tombstones`` a packed ``(W,) uint32`` dead-slot bitset."""
-    kw = _merge_legacy_args(
-        "range_search_fused", _RANGE_ARG_ORDER, _RANGE_REQUIRED, args,
-        dict(corpus=corpus, graph=graph, queries=queries, start_ids=start_ids,
-             r=r, cfg=cfg, es_radius=es_radius, tombstones=tombstones,
-             points=points))
-    return _range_search_fused(**kw)
+    return _range_search_fused(corpus=corpus, graph=graph, queries=queries,
+                               start_ids=start_ids, r=r, cfg=cfg,
+                               es_radius=es_radius, tombstones=tombstones)
 
 
-def range_search_compacted(*args, corpus=None, graph=None, queries=None,
-                           start_ids=None, r=None, cfg=None, es_radius=None,
-                           tombstones=None, points=None) -> RangeResult:
+def range_search_compacted(*, corpus, graph, queries, start_ids, r, cfg,
+                           es_radius=None, tombstones=None) -> RangeResult:
     """Two-phase batched range search with host-side query compaction (the
     QPS path): phase 1 over the whole batch, phase 2 over the pow2-padded
     survivor subset only (O(log Q) compiled variants — lanes with zero
     results never enter the expensive loop), each survivor carrying its own
     radius. Keyword-only; see the module note on the shared parameter
     order."""
-    kw = _merge_legacy_args(
-        "range_search_compacted", _RANGE_ARG_ORDER, _RANGE_REQUIRED, args,
-        dict(corpus=corpus, graph=graph, queries=queries, start_ids=start_ids,
-             r=r, cfg=cfg, es_radius=es_radius, tombstones=tombstones,
-             points=points))
-    return _range_search_compacted(**kw)
+    return _range_search_compacted(corpus=corpus, graph=graph, queries=queries,
+                                   start_ids=start_ids, r=r, cfg=cfg,
+                                   es_radius=es_radius, tombstones=tombstones)

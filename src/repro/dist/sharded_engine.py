@@ -32,9 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core.beam_search import broadcast_radius
 from ..core.corpus import corpus_cast, pad_corpus_rows
 from ..core.graph import Graph
-from ..core.range_search import (
-    RangeConfig, RangeResult, _merge_legacy_args, range_search_fused,
-)
+from ..core.range_search import RangeConfig, RangeResult, range_search_fused
 from ..utils import INVALID_ID, cdiv
 from .compat import shard_map
 from .sharding import _axis_size
@@ -155,12 +153,12 @@ def union_merge(ids, dists, cap: int):
 
 
 def sharded_range_search(
-    *args,
-    mesh: Optional[Mesh] = None,
-    corpus: Optional[ShardedCorpus] = None,
-    queries=None,
-    r=None,
-    cfg: Optional[RangeConfig] = None,
+    *,
+    mesh: Mesh,
+    corpus: ShardedCorpus,
+    queries,
+    r,
+    cfg: RangeConfig,
     es_radius: Optional[float] = None,
     tombstones=None,
     model_axis="model",
@@ -171,8 +169,7 @@ def sharded_range_search(
 
     Keyword-only: the parameter order matches the ``core.range_search``
     entry points with the mesh prepended —
-    ``(mesh, corpus, queries, r, cfg, es_radius, tombstones)``. Positional
-    calls still work for one release behind a ``DeprecationWarning``.
+    ``(mesh, corpus, queries, r, cfg, es_radius, tombstones)``.
 
     ``r``/``es_radius`` are a shared scalar or per-query ``(Q,)`` vectors;
     radii shard along the data axis with their queries and broadcast to
@@ -185,16 +182,6 @@ def sharded_range_search(
     own dead slots at the result stage — deleted points still route the
     per-shard walk but never reach the union merge, so counts and the
     merged top-``result_cap`` are live-only."""
-    merged = _merge_legacy_args(
-        "sharded_range_search",
-        ("mesh", "corpus", "queries", "r", "cfg", "es_radius", "tombstones"),
-        ("mesh", "corpus", "queries", "r", "cfg"),
-        args,
-        dict(mesh=mesh, corpus=corpus, queries=queries, r=r, cfg=cfg,
-             es_radius=es_radius, tombstones=tombstones))
-    mesh, corpus, queries, r, cfg, es_radius, tombstones = (
-        merged["mesh"], merged["corpus"], merged["queries"], merged["r"],
-        merged["cfg"], merged["es_radius"], merged["tombstones"])
     if corpus.n_total <= 0:
         raise ValueError("ShardedCorpus.n_total must be the true corpus size")
     s_total = corpus.n_shards

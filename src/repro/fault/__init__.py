@@ -1,0 +1,40 @@
+"""Fault tolerance: deadlines, shard-loss degradation, crash-safe WAL.
+
+Three independent pieces, threaded through serving and the live index:
+
+- :mod:`repro.fault.errors` — the error-code taxonomy shared by every
+  degraded-response path (queue rejection, deadline expiry, shard loss).
+- :mod:`repro.fault.wal` — an append-only, checksummed write-ahead log for
+  live-index mutation batches, with a torn-tail-tolerant reader.
+- :mod:`repro.fault.injector` — a seeded, deterministic fault injector for
+  shard-level chaos testing (timeouts, errors, garbage results).
+- :mod:`repro.fault.degraded` — fault-tolerant sharded range search: host
+  fan-out over shards with per-shard validation, retry with exponential
+  backoff, and a per-shard validity mask on the merged result.
+"""
+from .degraded import (
+    DegradedResult,
+    RetryPolicy,
+    fault_tolerant_sharded_search,
+    validate_shard_result,
+)
+from .errors import DEADLINE_EXPIRED, ERROR_CODES, QUEUE_FULL, SHARD_LOST
+from .injector import FaultInjector, ShardError, ShardFault, ShardTimeout
+from .wal import WalRecord, WriteAheadLog
+
+__all__ = [
+    "DEADLINE_EXPIRED",
+    "ERROR_CODES",
+    "QUEUE_FULL",
+    "SHARD_LOST",
+    "DegradedResult",
+    "FaultInjector",
+    "RetryPolicy",
+    "ShardError",
+    "ShardFault",
+    "ShardTimeout",
+    "WalRecord",
+    "WriteAheadLog",
+    "fault_tolerant_sharded_search",
+    "validate_shard_result",
+]

@@ -1,0 +1,248 @@
+"""Fault-tolerant sharded range search: host fan-out with degradation.
+
+The collective path (``dist.sharded_range_search``) assumes every shard
+answers; one ``shard_map`` program either completes or fails as a unit.
+This module is the serving-side alternative: shards are searched
+independently from the host, so a shard that times out, errors, or
+returns garbage degrades the answer instead of destroying it.
+
+Per shard: retry with exponential backoff for transient faults, validate
+every answer against invariants no honest shard can violate (ids inside
+the shard's global range, finite in-radius distances, consistent counts),
+and on exhaustion mark the shard lost in a validity mask. The union merge
+runs over surviving shards only. Because the shards partition the corpus
+and each per-shard search is deterministic, the merged result over
+surviving shards is **exact-mode-identical** to a healthy run restricted
+to those shards — degradation truncates coverage, never corrupts results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.beam_search import broadcast_radius
+from ..core.graph import Graph
+from ..core.range_search import RangeConfig, RangeResult, range_search_fused
+from ..dist.sharded_engine import ShardedCorpus, _remap_global, union_merge
+from ..utils import INVALID_ID
+from .errors import SHARD_LOST
+from .injector import FaultInjector, ShardFault
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Transient-fault retry: ``max_attempts`` tries per shard, sleeping
+    ``backoff_s * backoff_factor**attempt`` between them (0 = no sleep,
+    the right setting under test where faults are scripted, not timed)."""
+
+    max_attempts: int = 3
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+
+
+@dataclasses.dataclass
+class DegradedResult:
+    """A merged RangeResult plus the per-shard health that produced it."""
+
+    result: RangeResult
+    shard_ok: np.ndarray        # (S,) bool — shard's results present in the merge
+    attempts: np.ndarray        # (S,) int32 — search attempts per shard
+    faults: List[Optional[str]]  # last injected/observed fault kind per shard
+
+    @property
+    def shards_total(self) -> int:
+        return int(self.shard_ok.shape[0])
+
+    @property
+    def shards_ok(self) -> int:
+        return int(self.shard_ok.sum())
+
+    @property
+    def complete(self) -> bool:
+        return self.shards_ok == self.shards_total
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of shards contributing to the merge (3/4 when one of
+        four shards is lost — the corpus fraction actually searched)."""
+        return self.shards_ok / max(1, self.shards_total)
+
+    @property
+    def code(self) -> Optional[str]:
+        return None if self.complete else SHARD_LOST
+
+
+def validate_shard_result(
+    res: RangeResult,
+    offset: int,
+    shard_rows: int,
+    n_total: int,
+    radii: np.ndarray,
+    atol: float = 1e-4,
+) -> bool:
+    """Invariants no honest shard can violate (``res`` already global-id):
+
+    - every valid id lies inside the shard's global row range and the corpus;
+    - every valid distance is finite, non-negative, and within the lane's
+      radius (up to float tolerance);
+    - per-lane counts never exceed the result buffer.
+
+    A shard returning garbage (bit flips, wrong shard's rows, stale radius)
+    fails here and is treated like any other transient fault — the merge
+    never trusts an unvalidated answer.
+    """
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    valid = ids != INVALID_ID
+    lo, hi = int(offset), min(int(offset) + int(shard_rows), int(n_total))
+    if np.any(valid & ((ids < lo) | (ids >= hi))):
+        return False
+    d = np.where(valid, dists, 0.0)
+    if not np.all(np.isfinite(d)) or np.any(d < 0):
+        return False
+    r = np.asarray(radii, np.float32).reshape(-1, 1)
+    if np.any(valid & (dists > r + atol)):
+        return False
+    if np.any(np.asarray(res.count) > ids.shape[1]):
+        return False
+    return True
+
+
+def _corrupt_result(res: RangeResult, rng: np.random.Generator) -> RangeResult:
+    """Deterministically garble a result the way a sick shard would:
+    random out-of-range ids plus a guaranteed-invalid negative distance,
+    so validation MUST catch it (no lucky passes)."""
+    ids = rng.integers(0, 2**31 - 2, size=np.asarray(res.ids).shape, dtype=np.int32)
+    dists = rng.uniform(-1.0, 1.0, size=np.asarray(res.dists).shape).astype(np.float32)
+    dists[:, 0] = -1.0  # airtight: a negative distance is never valid
+    return dataclasses.replace(
+        res, ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+        count=jnp.full_like(res.count, ids.shape[1]))
+
+
+def _search_one_shard(corpus: ShardedCorpus, s: int, queries, radii, cfg,
+                      es_vec, tombstones) -> RangeResult:
+    """Exact per-shard search with shard-local ids remapped to global —
+    the same per-shard program the collective path runs, minus the mesh."""
+    shard_pts = jax.tree.map(lambda x: x[s], corpus.points)
+    res = range_search_fused(
+        corpus=shard_pts, graph=Graph(neighbors=corpus.neighbors[s]),
+        queries=queries, start_ids=corpus.start_ids[s], r=radii, cfg=cfg,
+        es_radius=es_vec,
+        tombstones=None if tombstones is None else tombstones[s])
+    gids = _remap_global(res.ids, corpus.offsets[s], corpus.n_total)
+    return dataclasses.replace(
+        res, ids=gids,
+        dists=jnp.where(gids == INVALID_ID, jnp.inf, res.dists),
+        count=jnp.sum(gids != INVALID_ID, axis=1).astype(jnp.int32))
+
+
+def fault_tolerant_sharded_search(
+    *,
+    corpus: ShardedCorpus,
+    queries,
+    r,
+    cfg: RangeConfig,
+    es_radius=None,
+    tombstones=None,
+    injector: Optional[FaultInjector] = None,
+    retry: Optional[RetryPolicy] = None,
+    sleep: Callable[[float], None] = time.sleep,
+) -> DegradedResult:
+    """Union range search over ``corpus`` that survives shard loss.
+
+    Each shard is searched independently (host fan-out); injected or
+    observed faults retry up to ``retry.max_attempts`` with exponential
+    backoff, answers are validated before they may join the merge, and a
+    shard that exhausts its retries is marked lost rather than failing the
+    query. The returned :class:`DegradedResult` carries the merged global
+    ``RangeResult`` over surviving shards plus the per-shard validity
+    mask / attempt counts; ``coverage`` is ``shards_ok / shards_total``.
+
+    With every shard healthy the merge is exact-mode-identical to the
+    collective ``sharded_range_search`` (same per-shard program, same
+    union merge); with shards lost it equals that healthy merge restricted
+    to surviving shards.
+    """
+    retry = retry or RetryPolicy()
+    queries = jnp.asarray(queries)
+    n_q = queries.shape[0]
+    radii = broadcast_radius(r, n_q)
+    es_vec = broadcast_radius(es_radius, n_q)
+    radii_np = np.asarray(radii)
+    s_total = corpus.n_shards
+    rows = corpus.shard_size
+    cap = cfg.result_cap
+
+    shard_ok = np.zeros(s_total, bool)
+    attempts = np.zeros(s_total, np.int32)
+    faults: List[Optional[str]] = [None] * s_total
+    per_shard: List[Optional[RangeResult]] = [None] * s_total
+
+    for s in range(s_total):
+        offset = int(np.asarray(corpus.offsets)[s])
+        for attempt in range(retry.max_attempts):
+            attempts[s] += 1
+            try:
+                kind = (injector.raise_if_faulted(s, attempt)
+                        if injector is not None else None)
+                res = _search_one_shard(
+                    corpus, s, queries, radii, cfg, es_vec, tombstones)
+                if kind == "garbage":
+                    res = _corrupt_result(res, injector.rng(s, attempt))
+                if not validate_shard_result(
+                        res, offset, rows, corpus.n_total, radii_np):
+                    faults[s] = "garbage"
+                    raise ShardFault("garbage", s, attempt)
+                per_shard[s] = res
+                shard_ok[s] = True
+                break
+            except ShardFault as e:
+                faults[s] = e.kind
+                if attempt + 1 < retry.max_attempts and retry.backoff_s > 0:
+                    sleep(retry.backoff_s * retry.backoff_factor ** attempt)
+
+    ok = [per_shard[s] for s in range(s_total) if shard_ok[s]]
+    if ok:
+        ids = jnp.concatenate([p.ids for p in ok], axis=1)
+        dists = jnp.concatenate([p.dists for p in ok], axis=1)
+        if ids.shape[1] < cap:  # fewer candidates than the cap: pad the merge
+            pad = cap - ids.shape[1]
+            ids = jnp.concatenate(
+                [ids, jnp.full((n_q, pad), INVALID_ID, ids.dtype)], axis=1)
+            dists = jnp.concatenate(
+                [dists, jnp.full((n_q, pad), jnp.inf, dists.dtype)], axis=1)
+        ids, dists = union_merge(ids, dists, cap)
+        total = sum(p.count for p in ok)
+        merged = RangeResult(
+            ids=ids,
+            dists=dists,
+            count=jnp.minimum(total, cap).astype(jnp.int32),
+            overflow=jnp.logical_or(
+                sum(p.overflow.astype(jnp.int32) for p in ok) > 0,
+                total > cap),
+            n_visited=sum(p.n_visited for p in ok),
+            n_dist=sum(p.n_dist for p in ok),
+            es_stopped=sum(p.es_stopped.astype(jnp.int32) for p in ok) > 0,
+            phase2=sum(p.phase2.astype(jnp.int32) for p in ok) > 0,
+            n_rerank=sum(p.n_rerank for p in ok),
+        )
+    else:  # every shard lost: an empty (but well-formed) result
+        merged = RangeResult(
+            ids=jnp.full((n_q, cap), INVALID_ID, jnp.int32),
+            dists=jnp.full((n_q, cap), jnp.inf, jnp.float32),
+            count=jnp.zeros(n_q, jnp.int32),
+            overflow=jnp.zeros(n_q, bool),
+            n_visited=jnp.zeros(n_q, jnp.int32),
+            n_dist=jnp.zeros(n_q, jnp.int32),
+            es_stopped=jnp.zeros(n_q, bool),
+            phase2=jnp.zeros(n_q, bool),
+            n_rerank=jnp.zeros(n_q, jnp.int32),
+        )
+    return DegradedResult(result=merged, shard_ok=shard_ok,
+                          attempts=attempts, faults=faults)

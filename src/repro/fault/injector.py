@@ -1,0 +1,105 @@
+"""Seeded, deterministic fault injection for sharded range search.
+
+Faults are decided per ``(shard, attempt)`` pair from a counter-based RNG
+(``np.random.default_rng([seed, shard, attempt])``), so two injectors with
+the same seed inject the *same* faults regardless of call order, process,
+or how many other shards are being searched — the property the chaos
+harness relies on to replay a failure deterministically.
+
+Three fault kinds, mirroring how real shards fail:
+
+- ``timeout`` — the shard never answers (raised as :class:`ShardTimeout`).
+- ``error``   — the shard's RPC fails outright (:class:`ShardError`).
+- ``garbage`` — the shard answers with corrupted results (wrong-range ids,
+  out-of-radius distances). Not raised: it exercises the *validation*
+  path, which must catch it without trusting the shard.
+
+``down_shards`` marks shards permanently lost: every attempt times out, so
+retries exhaust and the merge degrades. ``script`` pins specific
+``(shard, attempt) -> kind`` outcomes for exact test scenarios; scripted
+entries take precedence over both ``down_shards`` and the probabilistic
+draws.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("timeout", "error", "garbage")
+
+
+class ShardFault(RuntimeError):
+    """Base for injected shard failures; carries (kind, shard, attempt)."""
+
+    def __init__(self, kind: str, shard: int, attempt: int):
+        super().__init__(f"injected {kind} on shard {shard} (attempt {attempt})")
+        self.kind = kind
+        self.shard = int(shard)
+        self.attempt = int(attempt)
+
+
+class ShardTimeout(ShardFault):
+    def __init__(self, shard: int, attempt: int):
+        super().__init__("timeout", shard, attempt)
+
+
+class ShardError(ShardFault):
+    def __init__(self, shard: int, attempt: int):
+        super().__init__("error", shard, attempt)
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic per-(shard, attempt) fault source."""
+
+    seed: int = 0
+    down_shards: Tuple[int, ...] = ()
+    p_timeout: float = 0.0
+    p_error: float = 0.0
+    p_garbage: float = 0.0
+    script: Dict[Tuple[int, int], Optional[str]] = dataclasses.field(default_factory=dict)
+    #: mutable tally of injected faults by kind (observability, not control)
+    injected: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        for k, v in self.script.items():
+            if v is not None and v not in FAULT_KINDS:
+                raise ValueError(f"script[{k}] = {v!r}; expected None or one of {FAULT_KINDS}")
+        if self.p_timeout + self.p_error + self.p_garbage > 1.0:
+            raise ValueError("fault probabilities must sum to <= 1")
+
+    def rng(self, shard: int, attempt: int) -> np.random.Generator:
+        """Counter-based generator for this (shard, attempt) — order-free."""
+        return np.random.default_rng([int(self.seed), int(shard), int(attempt)])
+
+    def fault_for(self, shard: int, attempt: int) -> Optional[str]:
+        """The fault to inject for this attempt, or None for a clean call."""
+        key = (int(shard), int(attempt))
+        if key in self.script:
+            kind = self.script[key]
+        elif int(shard) in set(self.down_shards):
+            kind = "timeout"  # permanently lost: every attempt times out
+        else:
+            u = self.rng(shard, attempt).random()
+            if u < self.p_timeout:
+                kind = "timeout"
+            elif u < self.p_timeout + self.p_error:
+                kind = "error"
+            elif u < self.p_timeout + self.p_error + self.p_garbage:
+                kind = "garbage"
+            else:
+                kind = None
+        if kind is not None:
+            self.injected[kind] = self.injected.get(kind, 0) + 1
+        return kind
+
+    def raise_if_faulted(self, shard: int, attempt: int) -> Optional[str]:
+        """Raise for timeout/error faults; return "garbage" (or None) otherwise."""
+        kind = self.fault_for(shard, attempt)
+        if kind == "timeout":
+            raise ShardTimeout(shard, attempt)
+        if kind == "error":
+            raise ShardError(shard, attempt)
+        return kind

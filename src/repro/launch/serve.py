@@ -89,8 +89,8 @@ def _churn_main(args) -> int:
     t0 = time.perf_counter()
     resp = []
     for rq in reqs:
-        while not srv.submit(rq):  # bounded admission: serve under
-            resp.extend(srv.step())  # backpressure instead of shedding
+        while srv.submit(rq) is not None:  # queue_full: serve under
+            resp.extend(srv.step())        # backpressure, then retry
     resp.extend(srv.run_until_drained())
     dt = time.perf_counter() - t0
     n_req = len(reqs)
@@ -240,8 +240,8 @@ def main(argv=None):
     resp = []
     for i in range(args.queries):
         rq = Request(req_id=i, query=qs[i], radius=float(radii[i]))
-        while not srv.submit(rq):  # bounded admission: serve under
-            resp.extend(srv.step())  # backpressure instead of shedding
+        while srv.submit(rq) is not None:  # queue_full: serve under
+            resp.extend(srv.step())        # backpressure, then retry
     resp.extend(srv.run_until_drained())
     dt = time.perf_counter() - t0
     qps = args.queries / dt

@@ -41,7 +41,6 @@ the fixed-shape jitted machinery:
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 import jax
@@ -73,19 +72,6 @@ from .consolidate import consolidate_index
 FAR = 1e30
 
 _set_rows = jax.jit(corpus_set_rows)
-
-
-def _legacy_range_args(name: str, args: tuple, cfg):
-    """One-release shim: a positional ``cfg`` after (queries, r) warns."""
-    if not args:
-        return cfg
-    warnings.warn(
-        f"{name}: positional arguments past (queries, r) are deprecated; "
-        "pass cfg= (and es_radius=, compacted=) by keyword",
-        DeprecationWarning, stacklevel=3)
-    if len(args) > 1 or cfg is not None:
-        raise TypeError(f"{name}() got unexpected positional arguments")
-    return args[0]
 
 
 def externalize_ids(ext_ids: np.ndarray, ids: np.ndarray) -> np.ndarray:
@@ -139,7 +125,7 @@ class LiveSnapshot:
     def n_live(self) -> int:
         return self.live_count - self.n_dead
 
-    def range(self, queries, r, *args, cfg: Optional[RangeConfig] = None,
+    def range(self, queries, r, *, cfg: Optional[RangeConfig] = None,
               es_radius=None, compacted: bool = True) -> RangeResult:
         """Range search over the live set; returned ids are EXTERNAL ids.
 
@@ -147,9 +133,7 @@ class LiveSnapshot:
         only) and unborn slots are unreachable, so the traversal is the
         frozen engine's program at the snapshot's shapes. Arguments past
         ``(queries, r)`` are keyword-only (shared order with
-        ``engine.range``); positional ``cfg`` works for one release behind
-        a ``DeprecationWarning``."""
-        cfg = _legacy_range_args("LiveSnapshot.range", args, cfg)
+        ``engine.range``)."""
         cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
         if cfg.search.metric != self.metric:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(
@@ -202,6 +186,46 @@ class LiveIndex:
         self._slot_of: dict[int, int] = {
             int(ext_ids[s]): s for s in range(self.live_count)
             if ext_ids[s] != INVALID_ID}
+        # crash safety (repro.fault.wal): when a WAL is attached, every
+        # public mutation batch logs one checksummed record BEFORE applying;
+        # wal_seq is the mutation sequence number — distinct from epoch,
+        # which can advance more than once inside a single insert (internal
+        # consolidation). _replaying/_suppress_log gate re-logging during
+        # WAL replay and insert-internal consolidations (the latter are
+        # reproduced deterministically by replaying the insert record).
+        self.wal = None
+        self.wal_seq = 0
+        self._replaying = False
+        self._suppress_log = False
+
+    # -- write-ahead log -----------------------------------------------------
+    def attach_wal(self, wal) -> None:
+        """Log every subsequent mutation batch to ``wal``
+        (``repro.fault.WriteAheadLog``) before it applies. Any torn tail
+        from a previous crash is truncated first so new records land after
+        the durable prefix; ``wal_seq`` resumes past the log's last
+        record."""
+        wal.truncate_torn_tail()
+        self.wal = wal
+        self.wal_seq = max(self.wal_seq, wal.last_seq)
+
+    def _log(self, op: str, arrays: Optional[dict] = None) -> None:
+        if self.wal is None or self._replaying or self._suppress_log:
+            return
+        self.wal_seq += 1
+        self.wal.append(self.wal_seq, op, arrays or {})
+
+    def _apply_record(self, rec) -> None:
+        """Replay one WAL record through the public mutation path — the
+        same deterministic code that produced it, minus the re-logging."""
+        if rec.op == "insert":
+            self.insert(rec.arrays["vecs"], ext_ids=rec.arrays["ext_ids"])
+        elif rec.op == "delete":
+            self.delete(rec.arrays["ext_ids"])
+        elif rec.op == "consolidate":
+            self.consolidate()
+        else:
+            raise ValueError(f"unknown WAL op {rec.op!r}")
 
     # -- construction --------------------------------------------------------
     @staticmethod
@@ -292,9 +316,8 @@ class LiveIndex:
                             live_count=self.live_count, n_dead=self.n_dead,
                             epoch=self.epoch, metric=self.metric)
 
-    def range(self, queries, r, *args, cfg: Optional[RangeConfig] = None,
+    def range(self, queries, r, *, cfg: Optional[RangeConfig] = None,
               es_radius=None, compacted: bool = True) -> RangeResult:
-        cfg = _legacy_range_args("LiveIndex.range", args, cfg)
         return self.snapshot().range(queries, r, cfg=cfg,
                                      es_radius=es_radius, compacted=compacted)
 
@@ -305,16 +328,21 @@ class LiveIndex:
         Rows are written behind the watermark (quantized on the way in when
         the corpus is int8), then wired into the graph by the shared
         fixed-shape build step in ``insert_batch`` chunks — reverse edges
-        included, overflowing rows RobustPruned. One epoch per call."""
+        included, overflowing rows RobustPruned. One epoch per call.
+
+        With a WAL attached, the batch logs (resolved ext_ids + vecs) after
+        validation but before ANY state change — validation runs first so a
+        record is never logged for an insert that raises, and the log-then-
+        apply order means a crash at any later point replays to the same
+        state. An insert-internal consolidation (capacity reclaim) is not
+        logged separately: replaying the insert record reproduces it."""
         vecs = np.asarray(vecs, np.float32)
         if vecs.ndim == 1:
             vecs = vecs[None]
         k = vecs.shape[0]
         if k == 0:
             return np.zeros((0,), np.int64)
-        if self.live_count + k > self.capacity and self._dead:
-            self.consolidate()  # reclaim tombstoned slots before giving up
-        if self.live_count + k > self.capacity:
+        if self.n_live + k > self.capacity:
             raise ValueError(
                 f"insert of {k} rows exceeds capacity {self.capacity} "
                 f"(live_count={self.live_count}); consolidation could not "
@@ -328,6 +356,15 @@ class LiveIndex:
             dup = [int(e) for e in ext_ids if int(e) in self._slot_of]
             if dup:
                 raise ValueError(f"external ids already present: {dup[:5]}")
+        self._log("insert", dict(ext_ids=ext_ids, vecs=vecs))
+        if self.live_count + k > self.capacity and self._dead:
+            # reclaim tombstoned slots before giving up; unlogged — replay
+            # of the insert record re-triggers it deterministically
+            self._suppress_log = True
+            try:
+                self.consolidate()
+            finally:
+                self._suppress_log = False
         B = self.cfg.insert_batch
         d = vecs.shape[1]
         for off in range(0, k, B):
@@ -364,14 +401,17 @@ class LiveIndex:
         tombstoned. The vectors and edges stay until consolidation, so
         deleted nodes keep routing searches."""
         ext_ids = np.atleast_1d(np.asarray(ext_ids, np.int64))
-        slots = []
+        slots, seen = [], set()
         for e in ext_ids:
             s = self._slot_of.get(int(e))
-            if s is not None and s not in self._dead:
+            if s is not None and s not in self._dead and s not in seen:
                 slots.append(s)
-                self._dead.add(s)
+                seen.add(s)
         if slots:
+            # log the REQUESTED ids before applying (idempotent on replay)
+            self._log("delete", dict(ext_ids=ext_ids))
             from ..core.bitset import bitset_add  # local: avoid cycle at import
+            self._dead.update(slots)
             sl = jnp.asarray(np.asarray(slots, np.int32))
             # fresh unique slots with clear bits: the add is exact
             self.tombstones = bitset_add(self.tombstones, sl,
@@ -399,6 +439,7 @@ class LiveIndex:
         traffic."""
         if not self._dead or self.n_live == 0:
             return dict(n_rewired=0, n_live=self.n_live, reclaimed=0)
+        self._log("consolidate")
         dead = np.zeros(self.capacity, bool)
         dead[np.asarray(sorted(self._dead), np.int64)] = True
         out = consolidate_index(
@@ -422,7 +463,10 @@ class LiveIndex:
     # -- checkpoint round-trip ----------------------------------------------
     def save(self, manager, step: Optional[int] = None) -> str:
         """Write the full mutable state through ``train.CheckpointManager``
-        (atomic, keep-k). ``step`` defaults to the current epoch."""
+        (atomic + fsynced, keep-k). ``step`` defaults to the current epoch.
+        ``counters`` records ``wal_seq`` so ``restore`` replays only the WAL
+        tail past this snapshot; after the save returns (durable), the WAL
+        may be pruned through that sequence (``wal.prune_through``)."""
         from ..core.corpus import QuantizedCorpus
         state = dict(
             neighbors=self.neighbors,
@@ -430,7 +474,8 @@ class LiveIndex:
             tombstones=self.tombstones,
             ext_ids=self.ext_ids,
             counters=np.asarray(
-                [self.live_count, self.next_ext_id, self.epoch], np.int64),
+                [self.live_count, self.next_ext_id, self.epoch,
+                 self.wal_seq], np.int64),
         )
         if isinstance(self.points, QuantizedCorpus):
             state["codes"] = self.points.codes
@@ -448,11 +493,21 @@ class LiveIndex:
                             extra=extra)
 
     @staticmethod
-    def restore(manager, step: Optional[int] = None) -> "LiveIndex":
+    def restore(manager, step: Optional[int] = None,
+                *, wal=None) -> "LiveIndex":
         """Rebuild a ``LiveIndex`` from a checkpoint written by ``save``.
 
         Host-side bookkeeping (the ext->slot hash index and the dead-slot
-        set) is reconstructed from the arrays."""
+        set) is reconstructed from the arrays.
+
+        ``wal`` (a ``repro.fault.WriteAheadLog``) enables crash recovery:
+        the checksum-valid records with ``seq`` past the checkpoint's
+        ``wal_seq`` replay through the public mutation path (any torn tail
+        from the crash is dropped by the reader, then truncated so the log
+        can take new appends), and the WAL stays attached for subsequent
+        mutations. Because every mutation is deterministic, the recovered
+        state is bit-identical to an uninterrupted run over the durable
+        records."""
         from ..core.bitset import bitset_contains
         from ..core.corpus import QuantizedCorpus
         flat, manifest = manager.restore_flat(step)
@@ -464,13 +519,15 @@ class LiveIndex:
         else:
             points = QuantizedCorpus(codes=flat["codes"], meta=flat["meta"],
                                      raw=flat["raw"])
-        live_count, next_ext_id, epoch = (int(x) for x in
-                                          np.asarray(flat["counters"]))
+        counters = [int(x) for x in np.asarray(flat["counters"])]
+        # pre-WAL checkpoints carry 3 counters; wal_seq defaults to 0
+        live_count, next_ext_id, epoch = counters[:3]
+        wal_seq = counters[3] if len(counters) > 3 else 0
         tomb = jnp.asarray(flat["tombstones"], jnp.uint32)
         born = jnp.arange(live_count, dtype=jnp.int32)
         dead = set(np.nonzero(np.asarray(
             bitset_contains(tomb, born)))[0].tolist()) if live_count else set()
-        return LiveIndex(
+        idx = LiveIndex(
             points=points,
             neighbors=jnp.asarray(flat["neighbors"], jnp.int32),
             start_ids=jnp.asarray(flat["start_ids"], jnp.int32),
@@ -479,3 +536,14 @@ class LiveIndex:
             epoch=epoch, metric=extra["metric"],
             build_cfg=BuildConfig(**extra["build"]),
             cfg=LiveConfig(**extra["live"]), dead_slots=dead)
+        idx.wal_seq = wal_seq
+        if wal is not None:
+            idx._replaying = True
+            try:
+                for rec in wal.replay(after_seq=wal_seq):
+                    idx._apply_record(rec)
+                    idx.wal_seq = rec.seq
+            finally:
+                idx._replaying = False
+            idx.attach_wal(wal)
+        return idx

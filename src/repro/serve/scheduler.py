@@ -122,6 +122,18 @@ class LaneScheduler:
             self.meta[s] = m
         return slots
 
+    # -- deadlines -----------------------------------------------------------
+    def expired(self, now: float) -> np.ndarray:
+        """Active slots whose lane deadline (``meta["deadline_at"]``, absolute
+        seconds on the server's clock; +inf when absent) has strictly
+        passed. The server retires these BEFORE the next tick, finalizing
+        each lane's checkpoint into a certified partial response instead of
+        resuming it — the mechanism that keeps one over-budget lane from
+        holding its pool slot forever."""
+        out = [int(s) for s in np.nonzero(self.active)[0]
+               if now > (self.meta[s] or {}).get("deadline_at", float("inf"))]
+        return np.asarray(out, np.int64)
+
     # -- execution -----------------------------------------------------------
     def tick(self) -> np.ndarray:
         """Advance every active lane ``slice_rounds`` expansions; returns

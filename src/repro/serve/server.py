@@ -57,11 +57,14 @@ import numpy as np
 from ..core.corpus import corpus_dtype_name
 from ..core.engine import RangeSearchEngine
 from ..core.range_search import (
-    RangeConfig, RangeResult, finalize_results, greedy_lane_done,
-    greedy_resume_batch, greedy_seed_batch, range_phase1,
+    RangeConfig, RangeResult, finalize_results, greedy_coverage,
+    greedy_lane_done, greedy_resume_batch, greedy_seed_batch, range_phase1,
     range_search_compacted,
 )
 from ..dist.sharded_engine import ShardedCorpus, sharded_range_search
+from ..fault.degraded import RetryPolicy, fault_tolerant_sharded_search
+from ..fault.errors import DEADLINE_EXPIRED, QUEUE_FULL, SHARD_LOST
+from ..fault.injector import FaultInjector
 from ..utils import INVALID_ID, next_pow2
 from .latency import LatencyHistogram
 from .scheduler import LaneScheduler, _gather_lanes
@@ -74,28 +77,37 @@ REQUEST_OPS = ("range", "insert", "delete")
 
 @dataclasses.dataclass(kw_only=True)
 class Request:
-    """One unit of admitted work, op-tagged. Construct by keyword."""
+    """One unit of admitted work, op-tagged. Construct by keyword.
+
+    ``deadline_s`` is a latency budget in seconds, measured from
+    ``submit``: a range request still queued past its budget is shed with
+    ``code="deadline_expired"``; one whose phase-2 lane is mid-search is
+    force-finalized into a certified partial answer (``complete=False``)
+    instead of resumed. ``None`` means no budget (never expires)."""
     req_id: int
     op: str = "range"                   # range | insert | delete
     query: Optional[np.ndarray] = None  # range/insert: the vector
     radius: Optional[float] = None      # per-request; batches mix radii freely
-    deadline: float = float("inf")
+    deadline_s: Optional[float] = None  # latency budget (seconds from submit)
     delete_ids: Optional[np.ndarray] = None  # delete: external ids to remove
-
-    def __post_init__(self):
-        if self.op == "query":  # pre-rename alias; one release
-            warnings.warn(
-                "Request(op='query') is deprecated; use op='range'",
-                DeprecationWarning, stacklevel=3)
-            self.op = "range"
 
 
 @dataclasses.dataclass(kw_only=True)
 class Response:
     """Op-tagged answer. ``timings`` decomposes ``latency_s`` into
-    queue (submit→drain) and service (drain→response) seconds."""
+    queue (submit→drain) and service (drain→response) seconds.
+
+    Degradation surface (``repro.fault``): ``complete`` is False when the
+    answer is a certified partial — deadline-truncated search or shard
+    loss. ``coverage`` estimates the searched fraction (visited-frontier
+    fraction for deadline truncation, ``shards_ok/shards_total`` for shard
+    loss; 1.0 when complete). ``code`` carries the machine-readable reason
+    from :mod:`repro.fault.errors` (``queue_full`` / ``deadline_expired``
+    / ``shard_lost``; None when healthy). Partial results are truncated,
+    never corrupted: every returned id is exact-distance-certified within
+    the request radius."""
     req_id: int
-    op: str = "range"
+    op: str = "range"               # range | insert | delete | error
     ids: np.ndarray = None
     dists: np.ndarray = None
     count: int = 0
@@ -105,6 +117,11 @@ class Response:
     radius: float = float("nan")  # the radius this request was answered at
     epoch: int = 0                # index epoch the request was served/applied at
     timings: Optional[dict] = None  # {"queue_s", "service_s", "total_s"}
+    complete: bool = True           # False: partial (deadline / shard loss)
+    coverage: float = 1.0           # searched fraction estimate (1.0 = full)
+    code: Optional[str] = None      # fault.errors taxonomy; None = healthy
+    shards_ok: Optional[int] = None     # sharded serving: shards merged
+    shards_total: Optional[int] = None  # sharded serving: shards configured
 
 
 @dataclasses.dataclass
@@ -145,13 +162,28 @@ class RangeServer:
         sharded: Optional[ShardedCorpus] = None,
         live=None,
         effort=None,
+        injector: Optional[FaultInjector] = None,
+        retry: Optional[RetryPolicy] = None,
+        clock=time.perf_counter,
     ):
         """``live`` is a ``repro.live.LiveIndex``; it supersedes ``engine``
         (pass ``engine=None``) and enables insert/delete requests.
         ``effort`` is a fitted ``repro.models.EffortPredictor``; continuous
-        mode uses it to split each drain into cheap/heavy dispatches."""
-        if engine is None and live is None:
-            raise ValueError("need an engine or a live index")
+        mode uses it to split each drain into cheap/heavy dispatches.
+
+        Sharded serving without a ``mesh`` (or with an ``injector``) goes
+        through the fault-tolerant host fan-out
+        (``fault.fault_tolerant_sharded_search``): per-shard retries with
+        ``retry`` backoff, validated answers, and graceful degradation on
+        permanent shard loss (responses annotated ``shards_ok/shards_total``,
+        ``code="shard_lost"``). ``injector`` is a seeded
+        ``fault.FaultInjector`` for chaos testing. ``clock`` is the
+        monotonic time source for queueing/deadline decisions — injectable
+        so deadline tests advance a fake clock deterministically."""
+        if engine is None and live is None and sharded is None:
+            raise ValueError("need an engine, a sharded corpus, or a live index")
+        if injector is not None and sharded is None:
+            raise ValueError("fault injection targets shards; pass sharded=")
         self.engine = engine
         self.live = live
         if server_cfg.expand_width > 0:
@@ -178,6 +210,9 @@ class RangeServer:
         self.mesh = mesh
         self.sharded = sharded
         self.effort = effort
+        self.injector = injector
+        self.retry = retry or RetryPolicy()
+        self._clock = clock
         self.queue: deque[tuple[Request, float]] = deque()
         self._view = live.snapshot() if live is not None else None
         self._pool: Optional[LaneScheduler] = None
@@ -218,6 +253,12 @@ class RangeServer:
             "pool_admitted": 0, "pool_retired": 0, "pool_ticks": 0,
             "pool_rotations": 0, "pool_oneshot": 0,
             "bucket_cheap": 0, "bucket_heavy": 0,
+            # fault-tolerance counters: deadline_shed = expired while still
+            # queued (no results), deadline_partial = force-finalized lanes
+            # (certified partials); shard_retries / shards_lost come from
+            # the degraded fan-out path
+            "deadline_shed": 0, "deadline_partial": 0,
+            "shard_retries": 0, "shards_lost": 0, "degraded_batches": 0,
         }
 
     # -- served view ---------------------------------------------------------
@@ -244,11 +285,14 @@ class RangeServer:
         return externalize_ids(self._view.ext_ids, ids)
 
     # -- admission -------------------------------------------------------
-    def submit(self, req: Request) -> bool:
-        """Admit a request; returns False (and counts the shed) when the
-        queue is at ``max_queue``. Malformed requests are rejected HERE, at
-        the client's call site — one bad request admitted into a micro-batch
-        would otherwise take down every other request batched with it."""
+    def submit(self, req: Request) -> Optional[Response]:
+        """Admit a request; returns ``None`` on admission, or a structured
+        rejection ``Response(op="error", code="queue_full")`` when the
+        queue is at ``max_queue`` — the shed is counted AND delivered, so
+        drivers see every rejected request instead of silently dropping it.
+        Malformed requests are rejected HERE, at the client's call site —
+        one bad request admitted into a micro-batch would otherwise take
+        down every other request batched with it."""
         if req.op not in REQUEST_OPS:
             raise ValueError(f"unknown op {req.op!r}")
         if req.op in ("insert", "delete") and self.live is None:
@@ -258,11 +302,47 @@ class RangeServer:
                 raise ValueError("delete requests need delete_ids")
         elif req.query is None:
             raise ValueError(f"{req.op!r} requests need a query vector")
+        if req.deadline_s is not None and req.deadline_s < 0:
+            raise ValueError("deadline_s must be >= 0 (or None for no budget)")
         if len(self.queue) >= self.scfg.max_queue:
             self.stats["rejected"] += 1
-            return False
-        self.queue.append((req, time.perf_counter()))
-        return True
+            return self._record(self._error_response(
+                req, QUEUE_FULL, latency_s=0.0))
+        self.queue.append((req, self._clock()))
+        return None
+
+    @staticmethod
+    def _error_response(req: Request, code: str,
+                        latency_s: float = 0.0, timings=None) -> Response:
+        return Response(
+            req_id=req.req_id, op="error", ids=np.zeros(0, np.int64),
+            dists=np.zeros(0, np.float32), count=0,
+            latency_s=latency_s, timings=timings,
+            radius=float("nan") if req.radius is None else float(req.radius),
+            complete=False, coverage=0.0, code=code)
+
+    @staticmethod
+    def _deadline_at(req: Request, arrive: float) -> float:
+        return (float("inf") if req.deadline_s is None
+                else arrive + req.deadline_s)
+
+    def _shed_expired(self, batch, svc0: float):
+        """Split a drained micro-batch into (alive, expired-error responses).
+
+        Only range requests expire — a mutation's effect is wanted no
+        matter how late it applies. Expiry is strict (``now > deadline``)
+        so a zero budget still gets the work done at the instant of
+        submission under a frozen test clock."""
+        alive, out = [], []
+        for rq, arrive in batch:
+            if rq.op == "range" and svc0 > self._deadline_at(rq, arrive):
+                self.stats["deadline_shed"] += 1
+                out.append(self._record(self._error_response(
+                    rq, DEADLINE_EXPIRED, latency_s=svc0 - arrive,
+                    timings=self._timings(arrive, svc0, svc0))))
+            else:
+                alive.append((rq, arrive))
+        return alive, out
 
     def pending(self) -> int:
         return len(self.queue)
@@ -274,10 +354,10 @@ class RangeServer:
     # -- batching ------------------------------------------------------------
     def _drain(self) -> list[tuple[Request, float]]:
         out = []
-        t0 = time.perf_counter()
+        t0 = self._clock()
         while self.queue and len(out) < self.scfg.max_batch:
             out.append(self.queue.popleft())
-            if not self.queue and (time.perf_counter() - t0) < self.scfg.max_wait_s:
+            if not self.queue and (self._clock() - t0) < self.scfg.max_wait_s:
                 time.sleep(0)  # yield; more requests may land in a real server
                 break
         return out
@@ -330,7 +410,7 @@ class RangeServer:
         if ins:
             ext = self.live.insert(np.stack([rq.query for rq, _ in ins]))
             self.stats["inserts"] += len(ins)
-            now = time.perf_counter()
+            now = self._clock()
             for (rq, arrive), e in zip(ins, ext):
                 ids = np.asarray([e], np.int64)
                 out.append(self._record(Response(
@@ -344,7 +424,7 @@ class RangeServer:
             per_req = [np.atleast_1d(np.asarray(rq.delete_ids, np.int64))
                        for rq, _ in dels]
             self.stats["deletes"] += self.live.delete(np.concatenate(per_req))
-            now = time.perf_counter()
+            now = self._clock()
             for (rq, arrive), ids in zip(dels, per_req):
                 out.append(self._record(Response(
                     req_id=rq.req_id, ids=ids,
@@ -357,19 +437,30 @@ class RangeServer:
 
     # -- lockstep execution --------------------------------------------------
     def _execute(self, queries: np.ndarray, radii: np.ndarray):
+        """Dispatch one padded batch; returns ``(RangeResult, DegradedResult
+        | None)`` — the second element is populated only on the
+        fault-tolerant sharded path (no mesh, or an injector present)."""
         es = (self.scfg.es_radius_factor * jnp.asarray(radii)
               if self.scfg.es_radius_factor > 0 else None)
         qs = jnp.asarray(queries)
         rs = jnp.asarray(radii)
         if self.live is not None:
-            return self._view.range(qs, rs, cfg=self.cfg, es_radius=es)
-        if self.sharded is not None and self.mesh is not None:
-            return sharded_range_search(mesh=self.mesh, corpus=self.sharded,
-                                        queries=qs, r=rs, cfg=self.cfg,
-                                        es_radius=es)
+            return self._view.range(qs, rs, cfg=self.cfg, es_radius=es), None
+        if self.sharded is not None:
+            if self.mesh is not None and self.injector is None:
+                return sharded_range_search(
+                    mesh=self.mesh, corpus=self.sharded, queries=qs, r=rs,
+                    cfg=self.cfg, es_radius=es), None
+            d = fault_tolerant_sharded_search(
+                corpus=self.sharded, queries=qs, r=rs, cfg=self.cfg,
+                es_radius=es, injector=self.injector, retry=self.retry)
+            self.stats["degraded_batches"] += int(not d.complete)
+            self.stats["shard_retries"] += int(d.attempts.sum()) - d.shards_total
+            self.stats["shards_lost"] += d.shards_total - d.shards_ok
+            return d.result, d
         return range_search_compacted(
             corpus=self.engine.points, graph=self.engine.graph, queries=qs,
-            start_ids=self.engine.start_ids, r=rs, cfg=self.cfg, es_radius=es)
+            start_ids=self.engine.start_ids, r=rs, cfg=self.cfg, es_radius=es), None
 
     def step(self) -> list[Response]:
         """Serve one micro-batch from the queue.
@@ -388,7 +479,7 @@ class RangeServer:
         batch = self._drain()
         if not batch:
             return []
-        svc0 = time.perf_counter()
+        svc0 = self._clock()
         out = []
         if self.live is not None:
             muts = [b for b in batch if b[0].op != "range"]
@@ -401,6 +492,8 @@ class RangeServer:
                 self._view = self.live.snapshot()
             self.stats["epoch"] = self._view.epoch
             self.stats["batches"] += 1 if (muts and not batch) else 0
+        batch, shed = self._shed_expired(batch, svc0)
+        out.extend(shed)
         if not batch:
             return out
         reqs = [b[0] for b in batch]
@@ -414,14 +507,21 @@ class RangeServer:
         if bucket > n:  # pad to bucket with repeats (masked out of responses)
             q = np.concatenate([q, np.repeat(q[:1], bucket - n, axis=0)])
             radii = np.concatenate([radii, np.repeat(radii[:1], bucket - n)])
-        res = self._execute(q, radii)
-        now = time.perf_counter()
+        res, degraded = self._execute(q, radii)
+        now = self._clock()
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         counts = np.asarray(res.count)
         over = np.asarray(res.overflow)
         ess = np.asarray(res.es_stopped)
         epoch = self._epoch()
+        dkw = {}
+        if degraded is not None:  # annotate shard health on every response
+            dkw = dict(shards_ok=degraded.shards_ok,
+                       shards_total=degraded.shards_total,
+                       complete=degraded.complete,
+                       coverage=degraded.coverage,
+                       code=degraded.code)
         for i, rq in enumerate(reqs):
             row = ids[i]
             valid = row != INVALID_ID
@@ -436,6 +536,7 @@ class RangeServer:
                 radius=float(radii[i]),
                 epoch=epoch,
                 timings=self._timings(arrive[i], svc0, now),
+                **dkw,
             )))
         self.stats["served"] += n
         self.stats["batches"] += 1
@@ -453,7 +554,7 @@ class RangeServer:
         lanes ride the pool across steps."""
         out = []
         batch = self._drain()
-        svc0 = time.perf_counter()
+        svc0 = self._clock()
         if self.live is not None:
             muts = [b for b in batch if b[0].op != "range"]
             batch = [b for b in batch if b[0].op == "range"]
@@ -468,6 +569,8 @@ class RangeServer:
                 self._view = self.live.snapshot()
                 self._pool.rebind(self._corpus(), self._graph())
             self.stats["epoch"] = self._view.epoch
+        batch, shed = self._shed_expired(batch, svc0)
+        out.extend(shed)
         if batch:
             reqs = [b[0] for b in batch]
             arrive = [b[1] for b in batch]
@@ -490,6 +593,14 @@ class RangeServer:
                         q[sel], radii[sel], svc0))
             self._track_radii(radii)
             self.stats["batches"] += 1
+        # deadline check BEFORE the tick: a lane past its budget is
+        # finalized from its current GreedyState checkpoint instead of
+        # resumed — a certified partial (truncated, never corrupted) that
+        # frees the slot so the pool can never stall on one slow lane
+        expired = self._pool.expired(self._clock())
+        if len(expired):
+            out.extend(self._respond_greedy(*self._pool.retire(expired),
+                                            expired=True))
         before = self._pool.occupancy
         finished = self._pool.tick()
         self.stats["pool_ticks"] = self._pool.ticks
@@ -534,6 +645,7 @@ class RangeServer:
             es1 = np.asarray(st.es_stopped)
             metas = [dict(req=reqs[i], arrive=arrive[i], svc0=svc0,
                           radius=float(radii[i]),
+                          deadline_at=self._deadline_at(reqs[i], arrive[i]),
                           n_visited=int(nv1[i]), n_dist=int(nd1[i]),
                           es=bool(es1[i]))
                      for i in lanes]
@@ -562,10 +674,18 @@ class RangeServer:
         self.stats["pool_oneshot"] += k
         return self._respond_greedy(g, qs, rs, over, metas)
 
-    def _respond_greedy(self, g, qs, rs, over, metas) -> list[Response]:
+    def _respond_greedy(self, g, qs, rs, over, metas, *,
+                        expired: bool = False) -> list[Response]:
         """Finalize retired greedy lanes (pool or one-shot) into Responses.
         Device arrays are pow2-padded past ``len(metas)``; pad lanes are
-        finalized (fixed shapes) but never answered."""
+        finalized (fixed shapes) but never answered.
+
+        ``expired=True`` marks deadline force-retirements: the lanes'
+        checkpoints are finalized as-is (the greedy loop only ever appends
+        in-range nodes, and ``finalize_results`` still tombstone-filters
+        and exact-reranks), so the partial answer is certified — every
+        returned id verifiably within radius — just possibly short.
+        ``coverage`` is the visited-frontier fraction from the checkpoint."""
         k = len(metas)
         P = int(np.asarray(g.res_count).shape[0])
         nv = np.zeros(P, np.int32)
@@ -581,6 +701,12 @@ class RangeServer:
             es_stopped=jnp.asarray(esf),
             phase2=jnp.ones(P, bool),
             n_rerank=jnp.zeros(P, jnp.int32))
+        extras = None
+        if expired:
+            cov = greedy_coverage(g)
+            extras = [dict(complete=False, coverage=float(cov[i]),
+                           code=DEADLINE_EXPIRED) for i in range(k)]
+            self.stats["deadline_partial"] += k
         res = finalize_results(self._corpus(), qs, rs, res, self.cfg,
                                self._tombstones())
         self.stats["pool_retired"] += k
@@ -589,15 +715,19 @@ class RangeServer:
         radii = np.asarray([m["radius"] for m in metas], np.float32)
         return self._emit_range(res, np.arange(k), reqs, arrive, radii,
                                 metas[0]["svc0"] if k else 0.0, phase2=True,
-                                svc0s=[m["svc0"] for m in metas])
+                                svc0s=[m["svc0"] for m in metas],
+                                extras=extras)
 
     def _emit_range(self, res: RangeResult, rows, reqs, arrive, radii,
-                    svc0, *, phase2: bool, svc0s=None) -> list[Response]:
+                    svc0, *, phase2: bool, svc0s=None,
+                    extras=None) -> list[Response]:
         """Turn result rows into recorded Responses. ``rows`` indexes the
         (padded) result arrays; ``reqs``/``arrive``/``radii`` are indexed
         the same way for phase-1 emission and positionally (row i ->
-        meta i) for greedy retirement."""
-        now = time.perf_counter()
+        meta i) for greedy retirement. ``extras`` (positional, one dict
+        per emitted row) merges degradation fields (complete/coverage/
+        code) into the Response."""
+        now = self._clock()
         ids = self._externalize(np.asarray(res.ids))
         dists = np.asarray(res.dists)
         counts = np.asarray(res.count)
@@ -623,6 +753,7 @@ class RangeServer:
                 radius=float(rad),
                 epoch=epoch,
                 timings=self._timings(a, s0, now),
+                **(extras[j] if extras is not None else {}),
             )))
             self.stats["es_stopped"] += int(ess[i])
             self.stats["overflow"] += int(over[i])
@@ -631,9 +762,16 @@ class RangeServer:
         return out
 
     def _finish_pool(self) -> list[Response]:
-        """Tick the pool to empty (epoch barrier / final drain)."""
+        """Tick the pool to empty (epoch barrier / final drain). Deadlines
+        stay live during the barrier: expired lanes finalize as certified
+        partials between ticks, same as in the steady state."""
         out = []
         while self._pool.occupancy:
+            expired = self._pool.expired(self._clock())
+            if len(expired):
+                out.extend(self._respond_greedy(*self._pool.retire(expired),
+                                                expired=True))
+                continue
             finished = self._pool.tick()
             self.stats["pool_ticks"] = self._pool.ticks
             if len(finished):

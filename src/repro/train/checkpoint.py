@@ -57,7 +57,23 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
 
     # -- write ---------------------------------------------------------------
+    @staticmethod
+    def _fsync_dir(path: str) -> None:
+        """Flush directory metadata (file creations / the rename) to disk —
+        without this, a power loss can forget a file that was itself
+        fsynced, or the rename that published the checkpoint."""
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
     def save(self, step: int, state: dict, extra: Optional[dict] = None) -> str:
+        """Durable on return: every payload ``.npy`` is fsynced, the
+        manifest is fsynced, the tmp directory's entries are fsynced, and
+        the atomic rename is fsynced in the parent — a crash or power loss
+        at ANY point leaves either the previous checkpoint or this one,
+        never a manifest pointing at a half-written leaf."""
         name = f"step_{step:010d}"
         tmp = os.path.join(self.dir, name + ".tmp")
         final = os.path.join(self.dir, name)
@@ -68,7 +84,10 @@ class CheckpointManager:
         os.makedirs(tmp)
         flat = _flatten(state)
         for path, leaf in flat.items():
-            np.save(os.path.join(tmp, path + ".npy"), np.asarray(leaf))
+            with open(os.path.join(tmp, path + ".npy"), "wb") as f:
+                np.save(f, np.asarray(leaf))
+                f.flush()
+                os.fsync(f.fileno())
         manifest = {
             "step": step,
             "time": time.time(),
@@ -79,7 +98,9 @@ class CheckpointManager:
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
+        self._fsync_dir(tmp)
         os.replace(tmp, final)  # atomic on POSIX
+        self._fsync_dir(self.dir)  # make the rename itself durable
         self._gc()
         return final
 

@@ -1,6 +1,6 @@
 """Public-API snapshot: the exported surface of ``repro.core``,
-``repro.serve``, and ``repro.live`` — symbol names, kinds, and callable
-signatures — is pinned to ``tests/api_snapshot.json``.
+``repro.serve``, ``repro.live``, and ``repro.fault`` — symbol names, kinds,
+and callable signatures — is pinned to ``tests/api_snapshot.json``.
 
 The unified query API (op-tagged ``Request``/``Response``, keyword-only
 ``range_search_*`` signatures, ``EngineDeployConfig.overrides``) is a
@@ -19,7 +19,7 @@ import inspect
 import json
 import pathlib
 
-MODULES = ("repro.core", "repro.serve", "repro.live")
+MODULES = ("repro.core", "repro.serve", "repro.live", "repro.fault")
 SNAPSHOT = pathlib.Path(__file__).parent / "api_snapshot.json"
 
 

@@ -1,0 +1,708 @@
+"""Chaos suite for ``repro.fault``: crash-safe WAL recovery, shard-loss
+degradation, and deadline budgets with certified partial results.
+
+Three families of claims, each tested against a deterministic oracle:
+
+- **WAL** — a live index recovered from (checkpoint + WAL tail) is
+  bit-identical to an uninterrupted control run over the durable records,
+  under torn tails, bit flips, and prune cycles.
+- **Shard loss** — the degraded merge equals the healthy merge restricted
+  to surviving shards (per-shard searches are deterministic and shards
+  partition the corpus), with the loss honestly annotated.
+- **Deadlines** — under an injectable fake clock, expired lanes finalize
+  into certified partials (every returned id exact-distance-verified in
+  radius), results grow monotonically with the deadline, and a lane that
+  completes is bitwise-identical to the no-deadline run.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BuildConfig, RangeConfig, RangeSearchEngine, SearchConfig,
+    average_precision, build_knn_graph, build_vamana, exact_range_search,
+)
+from repro.core.corpus import corpus_raw
+from repro.core.range_search import RangeResult
+from repro.dist.sharded_engine import build_sharded
+from repro.fault import (
+    DEADLINE_EXPIRED, ERROR_CODES, QUEUE_FULL, SHARD_LOST, FaultInjector,
+    RetryPolicy, ShardTimeout, WriteAheadLog, fault_tolerant_sharded_search,
+    validate_shard_result,
+)
+from repro.fault.wal import encode_record
+from repro.live import LiveConfig, LiveIndex
+from repro.serve import RangeServer, Request, ServerConfig
+from repro.train import CheckpointManager
+from repro.utils import INVALID_ID
+
+FAST = RetryPolicy(max_attempts=3, backoff_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# WAL: record framing, torn tails, pruning
+# ---------------------------------------------------------------------------
+
+def _wal(tmp_path, name="wal.bin"):
+    return WriteAheadLog(str(tmp_path / name))
+
+
+def test_wal_roundtrip_and_seq_filter(tmp_path):
+    wal = _wal(tmp_path)
+    vecs = np.arange(12, dtype=np.float32).reshape(3, 4)
+    wal.append(1, "insert", dict(ext_ids=np.asarray([7, 8, 9]), vecs=vecs))
+    wal.append(2, "delete", dict(ext_ids=np.asarray([8])))
+    wal.append(3, "consolidate")
+    records, durable, torn = wal.scan()
+    assert not torn and durable > 0
+    assert [(r.seq, r.op) for r in records] == [
+        (1, "insert"), (2, "delete"), (3, "consolidate")]
+    np.testing.assert_array_equal(records[0].arrays["vecs"], vecs)
+    np.testing.assert_array_equal(records[1].arrays["ext_ids"], [8])
+    assert records[2].arrays == {}
+    assert wal.last_seq == 3
+    # replay filters strictly past the given sequence
+    assert [r.seq for r in wal.replay(after_seq=1)] == [2, 3]
+    assert [r.seq for r in wal.replay(after_seq=3)] == []
+
+
+def test_wal_torn_tail_at_every_cut(tmp_path):
+    """A record cut at ANY byte boundary ends the replayable prefix; the
+    records before it survive untouched and truncate_torn_tail makes the
+    log appendable again."""
+    wal = _wal(tmp_path)
+    wal.append(1, "delete", dict(ext_ids=np.asarray([1])))
+    wal.append(2, "delete", dict(ext_ids=np.asarray([2])))
+    base = open(wal.path, "rb").read()
+    rec3 = encode_record(3, "delete", dict(ext_ids=np.asarray([3])))
+    wal.close()
+    for cut in (1, 4, 13, len(rec3) // 2, len(rec3) - 1):
+        with open(wal.path, "wb") as f:
+            f.write(base + rec3[:cut])
+        torn = WriteAheadLog(str(tmp_path / "wal.bin"))
+        records, durable, is_torn = torn.scan()
+        assert is_torn and durable == len(base)
+        assert [r.seq for r in records] == [1, 2], f"cut={cut}"
+        assert torn.truncate_torn_tail()
+        torn.append(3, "delete", dict(ext_ids=np.asarray([3])))
+        assert [r.seq for r in torn.replay()] == [1, 2, 3]
+        torn.close()
+
+
+def test_wal_bitflip_invalidates_record_as_unit(tmp_path):
+    wal = _wal(tmp_path)
+    n1 = wal.append(1, "consolidate")
+    wal.append(2, "consolidate")
+    wal.append(3, "consolidate")
+    raw = bytearray(open(wal.path, "rb").read())
+    raw[n1 + 8] ^= 0x40  # flip one bit inside record 2
+    with open(wal.path, "wb") as f:
+        f.write(raw)
+    records, _, torn = wal.scan()
+    # the flipped record AND everything after it are discarded: a replay
+    # must never skip over a bad record and apply later ones out of order
+    assert torn and [r.seq for r in records] == [1]
+
+
+def test_wal_prune_through_keeps_tail_atomically(tmp_path):
+    wal = _wal(tmp_path)
+    for s in range(1, 6):
+        wal.append(s, "delete", dict(ext_ids=np.asarray([s])))
+    assert wal.prune_through(3) == 3
+    assert [r.seq for r in wal.replay()] == [4, 5]
+    wal.append(6, "consolidate")  # the handle survives the rewrite
+    assert wal.last_seq == 6
+
+
+# ---------------------------------------------------------------------------
+# crash-kill recovery: checkpoint + WAL tail == uninterrupted control
+# ---------------------------------------------------------------------------
+
+_D = 8
+
+
+def _pts(seed, n=96):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((4, _D)).astype(np.float32) * 3
+    return (centers[rng.integers(0, 4, n)]
+            + rng.standard_normal((n, _D)).astype(np.float32) * 0.3)
+
+
+def _mk_live(pts):
+    return LiveIndex.create(
+        pts, LiveConfig(capacity=192, insert_batch=16),
+        BuildConfig(max_degree=8, beam=16, insert_batch=32), metric="l2")
+
+
+def _mutations(seed, n_ops=12):
+    """A seeded mixed mutation stream (inserts / deletes / consolidates)."""
+    rng = np.random.default_rng(seed + 1000)
+    ops = []
+    for _ in range(n_ops):
+        roll = rng.random()
+        if roll < 0.55:
+            k = int(rng.integers(1, 5))
+            ops.append(("insert",
+                        rng.standard_normal((k, _D)).astype(np.float32)))
+        elif roll < 0.9:
+            ids = rng.integers(0, 120, size=int(rng.integers(1, 4)))
+            ops.append(("delete", ids.astype(np.int64)))
+        else:
+            ops.append(("consolidate", None))
+    return ops
+
+
+def _apply(idx, op, arg):
+    if op == "insert":
+        idx.insert(arg)
+    elif op == "delete":
+        idx.delete(arg)
+    else:
+        idx.consolidate()
+
+
+def _state(idx):
+    return dict(
+        points=np.asarray(corpus_raw(idx.points)),
+        neighbors=np.asarray(idx.neighbors),
+        start_ids=np.asarray(idx.start_ids),
+        ext_ids=np.asarray(idx.ext_ids),
+        tombstones=np.asarray(idx.tombstones),
+        counters=np.asarray([idx.live_count, idx.next_ext_id, idx.epoch]),
+        dead=np.asarray(sorted(idx._dead), np.int64),
+    )
+
+
+def _assert_state_equal(got, want):
+    sg, sw = _state(got), _state(want)
+    for k in sw:
+        np.testing.assert_array_equal(sg[k], sw[k], err_msg=k)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_crash_recovery_bit_identical(tmp_path, seed):
+    """Kill-at-any-point recovery: apply a mutation stream with a
+    checkpoint mid-stream, crash with a torn record on disk, restore from
+    (checkpoint + WAL) — the recovered index is bit-identical to a control
+    that ran the stream uninterrupted."""
+    pts = _pts(seed)
+    ops = _mutations(seed)
+    control = _mk_live(pts)
+    victim = _mk_live(pts)
+    victim.attach_wal(_wal(tmp_path))
+    cm = CheckpointManager(str(tmp_path / "ck"))
+    cut = len(ops) // 2
+    for i, (op, arg) in enumerate(ops):
+        _apply(control, op, arg)
+        _apply(victim, op, arg)
+        if i == cut:
+            victim.save(cm)
+    seq_durable = victim.wal_seq
+    # crash mid-append: a half-written record lands after the durable tail
+    with open(str(tmp_path / "wal.bin"), "ab") as f:
+        f.write(encode_record(seq_durable + 1, "consolidate", {})[:9])
+
+    recovered = LiveIndex.restore(cm, wal=_wal(tmp_path))
+    _assert_state_equal(recovered, control)
+    assert recovered.wal_seq == seq_durable
+    # the recovered index answers queries identically to the control
+    cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16, visit_cap=64),
+                      mode="greedy", result_cap=128)
+    qs = jnp.asarray(pts[:8] + 0.01)
+    ra = control.range(qs, 2.0, cfg=cfg)
+    rb = recovered.range(qs, 2.0, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists), np.asarray(rb.dists))
+    # the truncated tail is gone and the log takes new appends: a SECOND
+    # crash/recovery cycle starting from here stays consistent
+    recovered.insert(np.ones((1, _D), np.float32))
+    control.insert(np.ones((1, _D), np.float32))
+    again = LiveIndex.restore(cm, wal=_wal(tmp_path))
+    _assert_state_equal(again, control)
+
+
+def test_wal_checkpoint_prune_cycle(tmp_path):
+    """After a durable checkpoint the WAL may be pruned through the saved
+    wal_seq; recovery then replays only the post-checkpoint tail."""
+    pts = _pts(7)
+    ops = _mutations(7, n_ops=10)
+    control = _mk_live(pts)
+    victim = _mk_live(pts)
+    wal = _wal(tmp_path)
+    victim.attach_wal(wal)
+    cm = CheckpointManager(str(tmp_path / "ck"))
+    for op, arg in ops[:5]:
+        _apply(control, op, arg)
+        _apply(victim, op, arg)
+    victim.save(cm)
+    wal.prune_through(victim.wal_seq)
+    for op, arg in ops[5:]:
+        _apply(control, op, arg)
+        _apply(victim, op, arg)
+    recovered = LiveIndex.restore(cm, wal=_wal(tmp_path))
+    _assert_state_equal(recovered, control)
+
+
+def test_failed_insert_is_never_logged(tmp_path):
+    """Write-ahead means a logged record MUST be replayable: an insert that
+    cannot apply (capacity) validates before logging, so the log never
+    carries a record whose replay would raise."""
+    pts = _pts(3)
+    idx = _mk_live(pts)
+    wal = _wal(tmp_path)
+    idx.attach_wal(wal)
+    with pytest.raises(ValueError, match="capacity"):
+        idx.insert(np.zeros((200, _D), np.float32))
+    assert wal.last_seq == -1 and idx.wal_seq == 0 and idx.epoch == 0
+    with pytest.raises(ValueError, match="already present"):
+        idx.insert(np.zeros((1, _D), np.float32),
+                   ext_ids=np.asarray([0], np.int64))
+    assert wal.last_seq == -1  # duplicate-id rejection logs nothing either
+
+
+def test_checkpoint_save_is_idempotent_and_durable(tmp_path):
+    """CheckpointManager.save fsyncs payloads + directories around the
+    atomic rename; a completed step re-saves as a no-op and never leaves a
+    .tmp dir behind."""
+    import os
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    p = cm.save(1, {"a": np.arange(4)})
+    assert cm.save(1, {"a": np.zeros(4)}) == p  # already durable: no-op
+    state, step = cm.restore({"a": np.zeros(4)})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(state["a"]), np.arange(4))
+    assert not any(d.endswith(".tmp") for d in os.listdir(str(tmp_path)))
+
+
+# ---------------------------------------------------------------------------
+# fault injection: determinism and precedence
+# ---------------------------------------------------------------------------
+
+def test_injector_deterministic_and_precedence():
+    a = FaultInjector(seed=3, p_timeout=0.3, p_error=0.2, p_garbage=0.2)
+    b = FaultInjector(seed=3, p_timeout=0.3, p_error=0.2, p_garbage=0.2)
+    # counter-based draws: identical per (shard, attempt), any call order
+    got = [(s, t, a.fault_for(s, t)) for s in range(4) for t in range(3)]
+    want = [(s, t, b.fault_for(s, t))
+            for s in reversed(range(4)) for t in reversed(range(3))]
+    assert sorted(got) == sorted(want)
+    assert any(k is not None for _, _, k in got)  # faults actually fire
+
+    down = FaultInjector(down_shards=(2,))
+    assert all(down.fault_for(2, t) == "timeout" for t in range(5))
+    assert down.fault_for(0, 0) is None
+    with pytest.raises(ShardTimeout):
+        down.raise_if_faulted(2, 0)
+
+    # script pins exact outcomes over both down_shards and probability
+    scripted = FaultInjector(down_shards=(1,),
+                             script={(1, 0): None, (0, 0): "error"})
+    assert scripted.fault_for(1, 0) is None
+    assert scripted.fault_for(1, 1) == "timeout"
+    assert scripted.fault_for(0, 0) == "error"
+    assert scripted.injected.get("error") == 1
+
+    with pytest.raises(ValueError, match="probabilities"):
+        FaultInjector(p_timeout=0.7, p_error=0.7)
+    with pytest.raises(ValueError, match="script"):
+        FaultInjector(script={(0, 0): "explode"})
+
+
+# ---------------------------------------------------------------------------
+# shard-loss degradation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sharded_setup():
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((8, 8)).astype(np.float32) * 3
+    pts = (centers[rng.integers(0, 8, 800)]
+           + rng.standard_normal((800, 8)).astype(np.float32) * 0.3)
+    centers_j = jnp.asarray(centers)
+
+    def _builder(p):
+        # a kNN graph over well-separated clusters is disconnected: give
+        # each shard one entry point per cluster so every component is
+        # reachable (a lone medoid start would strand 7 of 8 clusters)
+        lab = np.asarray(jnp.argmin(
+            jnp.sum((p[:, None] - centers_j[None]) ** 2, -1), axis=1))
+        starts = np.asarray([np.flatnonzero(lab == c)[0] for c in range(8)],
+                            np.int32)
+        return build_knn_graph(p, k=10), jnp.asarray(starts)
+
+    corpus = build_sharded(pts, 4, _builder)
+    qs = jnp.asarray(pts[:24] + 0.01)
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
+                                          expand_width=4),
+                      mode="greedy", result_cap=512)
+    return pts, corpus, qs, cfg
+
+
+def _lane_rows(res):
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    valid = ids != INVALID_ID
+    return ids, dists, valid
+
+
+def test_shard_loss_equals_healthy_restricted_to_survivors(sharded_setup):
+    pts, corpus, qs, cfg = sharded_setup
+    healthy = fault_tolerant_sharded_search(corpus=corpus, queries=qs, r=2.0,
+                                            cfg=cfg, retry=FAST)
+    assert healthy.complete and healthy.coverage == 1.0
+    assert healthy.code is None and list(healthy.attempts) == [1, 1, 1, 1]
+
+    lost = fault_tolerant_sharded_search(
+        corpus=corpus, queries=qs, r=2.0, cfg=cfg,
+        injector=FaultInjector(down_shards=(1,)), retry=FAST)
+    assert not lost.complete and lost.code == SHARD_LOST
+    assert lost.shards_ok == 3 and lost.shards_total == 4
+    assert lost.coverage == 0.75
+    assert lost.faults[1] == "timeout"
+    assert list(lost.attempts) == [1, FAST.max_attempts, 1, 1]
+
+    # surviving-shard results are EXACTLY the healthy merge minus the lost
+    # shard's rows: degradation truncates coverage, never perturbs results
+    off = np.asarray(corpus.offsets)
+    lo, hi = int(off[1]), min(int(off[1]) + corpus.shard_size, corpus.n_total)
+    h_ids, h_dists, h_valid = _lane_rows(healthy.result)
+    l_ids, l_dists, l_valid = _lane_rows(lost.result)
+    assert not np.asarray(healthy.result.overflow).any()  # cap not binding
+    for q in range(h_ids.shape[0]):
+        keep = h_valid[q] & ((h_ids[q] < lo) | (h_ids[q] >= hi))
+        np.testing.assert_array_equal(l_ids[q][l_valid[q]], h_ids[q][keep])
+        np.testing.assert_array_equal(l_dists[q][l_valid[q]], h_dists[q][keep])
+    np.testing.assert_array_equal(
+        np.asarray(lost.result.count),
+        np.asarray(healthy.result.count)
+        - np.sum(h_valid & (h_ids >= lo) & (h_ids < hi), axis=1))
+
+    # and the degraded answer still scores against the brute-force oracle
+    # restricted to surviving rows (the best any search over them can do)
+    mask = np.ones(len(pts), bool)
+    mask[lo:hi] = False
+    sub_ids = np.nonzero(mask)[0]
+    gt = exact_range_search(jnp.asarray(pts[mask]), qs, 2.0)
+    lut = np.full(len(pts), INVALID_ID, np.int64)
+    lut[sub_ids] = np.arange(len(sub_ids))
+    rows = np.where(l_ids != INVALID_ID, lut[np.minimum(l_ids, len(pts) - 1)],
+                    np.int64(INVALID_ID))
+    ap = average_precision(np.asarray(gt[0]), np.asarray(gt[2]), rows,
+                           np.asarray(lost.result.count))
+    assert ap > 0.9, ap
+
+
+def test_transient_faults_retry_to_identical(sharded_setup):
+    """garbage then timeout then a clean answer on one shard: retries (with
+    recorded backoff) recover the exact healthy result."""
+    _, corpus, qs, cfg = sharded_setup
+    healthy = fault_tolerant_sharded_search(corpus=corpus, queries=qs, r=2.0,
+                                            cfg=cfg, retry=FAST)
+    sleeps = []
+    flaky = fault_tolerant_sharded_search(
+        corpus=corpus, queries=qs, r=2.0, cfg=cfg,
+        injector=FaultInjector(script={(2, 0): "garbage", (2, 1): "timeout"}),
+        retry=RetryPolicy(max_attempts=3, backoff_s=0.1, backoff_factor=2.0),
+        sleep=sleeps.append)
+    assert flaky.complete and flaky.coverage == 1.0 and flaky.code is None
+    assert list(flaky.attempts) == [1, 1, 3, 1]
+    assert flaky.faults[2] == "timeout"  # the LAST observed fault
+    assert sleeps == [0.1, 0.2]  # exponential backoff between attempts
+    np.testing.assert_array_equal(np.asarray(flaky.result.ids),
+                                  np.asarray(healthy.result.ids))
+    np.testing.assert_array_equal(np.asarray(flaky.result.dists),
+                                  np.asarray(healthy.result.dists))
+
+
+def test_all_shards_lost_yields_empty_wellformed_result(sharded_setup):
+    _, corpus, qs, cfg = sharded_setup
+    dead = fault_tolerant_sharded_search(
+        corpus=corpus, queries=qs, r=2.0, cfg=cfg,
+        injector=FaultInjector(down_shards=(0, 1, 2, 3)),
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.0))
+    assert dead.shards_ok == 0 and dead.coverage == 0.0
+    assert dead.code == SHARD_LOST
+    ids = np.asarray(dead.result.ids)
+    assert ids.shape == (qs.shape[0], cfg.result_cap)
+    assert np.all(ids == INVALID_ID)
+    assert np.all(np.asarray(dead.result.count) == 0)
+
+
+def _mk_result(ids, dists, cap_count=None):
+    ids = jnp.asarray(np.asarray(ids, np.int32))
+    n, w = ids.shape
+    return RangeResult(
+        ids=ids, dists=jnp.asarray(np.asarray(dists, np.float32)),
+        count=jnp.asarray(np.asarray(
+            cap_count if cap_count is not None
+            else (np.asarray(ids) != INVALID_ID).sum(1), np.int32)),
+        overflow=jnp.zeros(n, bool), n_visited=jnp.zeros(n, jnp.int32),
+        n_dist=jnp.zeros(n, jnp.int32), es_stopped=jnp.zeros(n, bool),
+        phase2=jnp.zeros(n, bool), n_rerank=jnp.zeros(n, jnp.int32))
+
+
+def test_validate_shard_result_invariants():
+    radii = np.asarray([1.0], np.float32)
+    ok = _mk_result([[12, INVALID_ID]], [[0.5, np.inf]])
+    assert validate_shard_result(ok, 10, 10, 100, radii)
+    # id outside the shard's global row range
+    assert not validate_shard_result(
+        _mk_result([[9, INVALID_ID]], [[0.5, np.inf]]), 10, 10, 100, radii)
+    # id past the true corpus size (pad row leaked)
+    assert not validate_shard_result(
+        _mk_result([[15, INVALID_ID]], [[0.5, np.inf]]), 10, 10, 12, radii)
+    # negative / non-finite / out-of-radius distances
+    assert not validate_shard_result(
+        _mk_result([[12, INVALID_ID]], [[-0.5, np.inf]]), 10, 10, 100, radii)
+    assert not validate_shard_result(
+        _mk_result([[12, INVALID_ID]], [[np.nan, np.inf]]), 10, 10, 100, radii)
+    assert not validate_shard_result(
+        _mk_result([[12, INVALID_ID]], [[1.5, np.inf]]), 10, 10, 100, radii)
+    # count exceeding the result buffer
+    assert not validate_shard_result(
+        _mk_result([[12, INVALID_ID]], [[0.5, np.inf]], cap_count=[3]),
+        10, 10, 100, radii)
+
+
+def test_garbage_injection_is_caught_not_merged(sharded_setup):
+    """A shard answering garbage on EVERY attempt must be dropped by
+    validation — the merge never contains an unvalidated id."""
+    _, corpus, qs, cfg = sharded_setup
+    healthy = fault_tolerant_sharded_search(corpus=corpus, queries=qs, r=2.0,
+                                            cfg=cfg, retry=FAST)
+    sick = fault_tolerant_sharded_search(
+        corpus=corpus, queries=qs, r=2.0, cfg=cfg,
+        injector=FaultInjector(script={(3, t): "garbage" for t in range(3)}),
+        retry=FAST)
+    assert not sick.complete and sick.shards_ok == 3
+    assert sick.faults[3] == "garbage"
+    ids, dists, valid = _lane_rows(sick.result)
+    off = np.asarray(corpus.offsets)
+    lo = int(off[3])
+    assert np.all(~valid | (ids < lo))  # nothing from the sick shard
+    assert np.all(dists[valid] <= 2.0 + 1e-4)  # all merged ids in radius
+
+
+def test_server_sharded_degraded_annotations(sharded_setup):
+    """The serving path surfaces degradation: responses annotated with
+    shards_ok/shards_total/coverage/code, stats count retries and losses,
+    and results stay certified (exact in-radius distances)."""
+    pts, corpus, qs, cfg = sharded_setup
+    with pytest.raises(ValueError, match="sharded"):
+        RangeServer(None, cfg, injector=FaultInjector())
+    srv = RangeServer(None, cfg, ServerConfig(max_batch=8), sharded=corpus,
+                      injector=FaultInjector(down_shards=(3,)),
+                      retry=RetryPolicy(max_attempts=2, backoff_s=0.0))
+    qs_np = np.asarray(qs)
+    for i in range(8):
+        srv.submit(Request(req_id=i, query=qs_np[i], radius=2.0))
+    resp = srv.run_until_drained()
+    assert len(resp) == 8
+    d2 = np.sum((np.asarray(pts)[None] - qs_np[:8, None]) ** 2, axis=-1)
+    for r in resp:
+        assert not r.complete and r.code == SHARD_LOST
+        assert r.shards_ok == 3 and r.shards_total == 4
+        assert r.coverage == 0.75
+        np.testing.assert_allclose(d2[r.req_id, r.ids], r.dists, atol=1e-4)
+    assert srv.stats["degraded_batches"] >= 1
+    assert srv.stats["shards_lost"] >= 1
+    assert srv.stats["shard_retries"] >= 1
+
+    # healthy host fan-out (no mesh, no injector): complete annotations
+    ok = RangeServer(None, cfg, ServerConfig(max_batch=8), sharded=corpus)
+    ok.submit(Request(req_id=0, query=qs_np[0], radius=2.0))
+    (r0,) = ok.run_until_drained()
+    assert r0.complete and r0.coverage == 1.0 and r0.code is None
+    assert r0.shards_ok == 4 and r0.shards_total == 4
+
+
+# ---------------------------------------------------------------------------
+# deadlines: queued shed, certified partials, monotonicity
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    """Injectable monotonic time: frozen until advanced by the test."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    """Clustered corpus where greedy range search recovers exact in-range
+    sets — certification and bitwise-equality claims are non-flaky here."""
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((8, 12)).astype(np.float32) * 3
+    pts = jnp.asarray(centers[rng.integers(0, 8, 1200)] +
+                      rng.standard_normal((1200, 12)).astype(np.float32) * 0.4)
+    g = build_vamana(pts, BuildConfig(max_degree=24, beam=48, insert_batch=256,
+                                      two_pass=True))
+    return pts, g
+
+
+_DL_CFG = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=256),
+                      mode="greedy", result_cap=512)
+
+
+def _drive_with_deadline(eng, cfg, qs, radii, deadline_s, step_dt=1.0):
+    """Submit everything at t=0, then step with the fake clock advancing
+    ``step_dt`` per step until drained. Returns ({req_id: Response}, srv)."""
+    clock = FakeClock()
+    srv = RangeServer(eng, cfg,
+                      ServerConfig(max_batch=32, continuous=True, lanes=16,
+                                   slice_rounds=1),
+                      clock=clock)
+    for i in range(len(qs)):
+        srv.submit(Request(req_id=i, query=qs[i], radius=float(radii[i]),
+                           deadline_s=deadline_s))
+    resp, guard = [], 0
+    while srv.pending() or srv.in_flight():
+        resp.extend(srv.step())
+        clock.advance(step_dt)
+        guard += 1
+        assert guard < 3000, "pool stalled under deadline expiry"
+    assert sorted(r.req_id for r in resp) == list(range(len(qs)))
+    return {r.req_id: r for r in resp}, srv
+
+
+def _assert_certified(resp, pts, qs, radii, exact_dists=True):
+    """Every returned id — partial or not — is certified in-radius by the
+    exact distance: partials are truncated, never corrupted. With an f32
+    corpus the reported distances are the exact squared distances too;
+    int8 reports guard-band-reranked estimates, so only set membership is
+    exact there (distance equality is checked against the baseline run
+    instead, in the caller)."""
+    d2 = np.sum((np.asarray(pts)[None] - np.asarray(qs)[:, None]) ** 2,
+                axis=-1)
+    for i, r in resp.items():
+        if r.op != "range":
+            continue
+        assert np.all(d2[i, r.ids] <= radii[i] + 1e-3), i
+        if exact_dists:
+            assert np.all(r.dists <= radii[i] + 1e-5), i
+            np.testing.assert_allclose(d2[i, r.ids], r.dists, atol=1e-4)
+        assert len(np.unique(r.ids)) == len(r.ids)
+
+
+def test_deadline_zero_and_queued_shed(clustered):
+    pts, g = clustered
+    eng = RangeSearchEngine.from_graph(pts, g)
+    clock = FakeClock()
+    srv = RangeServer(eng, _DL_CFG, ServerConfig(max_batch=8), clock=clock)
+    q = np.asarray(pts[:4]) + 0.01
+    with pytest.raises(ValueError, match="deadline_s"):
+        srv.submit(Request(req_id=9, query=q[0], radius=0.5, deadline_s=-1.0))
+    # frozen clock: a ZERO deadline still gets the work done (expiry is
+    # strictly later-than, so t == deadline_at serves normally)
+    srv.submit(Request(req_id=0, query=q[0], radius=0.5, deadline_s=0.0))
+    (r0,) = srv.step()
+    assert r0.op == "range" and r0.complete and r0.code is None
+
+    # queued past the budget: shed with a structured error, never searched
+    srv.submit(Request(req_id=1, query=q[1], radius=0.5, deadline_s=0.5))
+    srv.submit(Request(req_id=2, query=q[2], radius=0.5, deadline_s=5.0))
+    srv.submit(Request(req_id=3, query=q[3], radius=0.5))
+    clock.advance(1.0)
+    out = {r.req_id: r for r in srv.step()}
+    assert out[1].op == "error" and out[1].code == DEADLINE_EXPIRED
+    assert not out[1].complete and out[1].coverage == 0.0
+    assert len(out[1].ids) == 0
+    assert out[2].op == "range" and out[2].complete
+    assert out[3].op == "range" and out[3].complete  # None: never expires
+    assert srv.stats["deadline_shed"] == 1
+
+
+@pytest.mark.parametrize("corpus_dtype", ["float32", "int8"])
+def test_deadline_monotone_and_certified(clustered, corpus_dtype):
+    """The deadline metamorphic suite, f32 and quantized corpora:
+
+    - a longer deadline never returns fewer results (per request, the id
+      set grows monotonically — the greedy buffer is append-only and the
+      exact-rerank filter preserves subset relations);
+    - responses marked complete are bitwise-identical to the no-deadline
+      run (lanes are independent; expiry of others never perturbs them);
+    - every partial is certified (exact in-radius distances only) and
+      annotated (complete=False, coverage in [0, 1), code set)."""
+    pts, g = clustered
+    eng = RangeSearchEngine.from_graph(pts, g, corpus_dtype=corpus_dtype)
+    cfg = dataclasses.replace(
+        _DL_CFG, search=dataclasses.replace(_DL_CFG.search,
+                                            corpus_dtype=corpus_dtype))
+    qs = np.asarray(pts[:16]) + 0.01
+    radii = np.where(np.arange(16) % 2 == 0, 9.0, 0.5).astype(np.float32)
+    deadlines = [0.5, 2.5, 6.5] if corpus_dtype == "float32" else [2.5]
+
+    exact = corpus_dtype == "float32"
+    base, _ = _drive_with_deadline(eng, cfg, qs, radii, None)
+    assert all(r.complete and r.coverage == 1.0 and r.code is None
+               for r in base.values())
+    _assert_certified(base, pts, qs, radii, exact_dists=exact)
+
+    runs = []
+    for d in deadlines:
+        resp, srv = _drive_with_deadline(eng, cfg, qs, radii, d)
+        _assert_certified(resp, pts, qs, radii, exact_dists=exact)
+        for i, r in resp.items():
+            if r.complete:
+                # certified complete == bitwise-equal to the unbounded run
+                np.testing.assert_array_equal(r.ids, base[i].ids)
+                np.testing.assert_array_equal(r.dists, base[i].dists)
+                assert r.count == base[i].count
+            else:
+                assert r.code == DEADLINE_EXPIRED
+                assert 0.0 <= r.coverage < 1.0
+                assert set(r.ids.tolist()) <= set(base[i].ids.tolist())
+                # truncated, never corrupted: each surviving id carries
+                # the same (deterministic) distance the full run reports
+                lut = dict(zip(base[i].ids.tolist(), base[i].dists.tolist()))
+                for j, d_j in zip(r.ids.tolist(), r.dists.tolist()):
+                    assert d_j == lut[j], (i, j)
+        runs.append(resp)
+    if corpus_dtype == "float32":
+        # the tightest deadline really truncated something (heavy lanes at
+        # radius 9 need many slice_rounds=1 ticks; 0.5s expires them), and
+        # monotonicity holds pairwise across the deadline ladder
+        assert any(not r.complete for r in runs[0].values())
+        for lo, hi in zip(runs, runs[1:]):
+            for i in range(16):
+                assert set(lo[i].ids.tolist()) <= set(hi[i].ids.tolist()), i
+                assert lo[i].count <= hi[i].count
+
+
+def test_deadline_partials_free_the_pool(clustered):
+    """Expired lanes retire as partials BEFORE the tick, so one saturated
+    straggler can never stall the pool: point traffic behind it keeps
+    flowing and finishes complete."""
+    pts, g = clustered
+    eng = RangeSearchEngine.from_graph(pts, g)
+    qs = np.asarray(pts[:12]) + 0.01
+    radii = np.full(12, 0.5, np.float32)
+    radii[0] = 9.0  # one heavy straggler
+    resp, srv = _drive_with_deadline(eng, _DL_CFG, qs, radii, 1.5)
+    assert not resp[0].complete and resp[0].code == DEADLINE_EXPIRED
+    assert srv.stats["deadline_partial"] >= 1
+    for i in range(1, 12):
+        assert resp[i].complete, i
+    _assert_certified(resp, pts, qs, radii)
+
+
+def test_error_code_taxonomy_and_queue_full(clustered):
+    assert {QUEUE_FULL, DEADLINE_EXPIRED, SHARD_LOST} <= set(ERROR_CODES)
+    pts, g = clustered
+    eng = RangeSearchEngine.from_graph(pts, g)
+    srv = RangeServer(eng, _DL_CFG, ServerConfig(max_batch=4, max_queue=2))
+    q = np.asarray(pts[0])
+    assert srv.submit(Request(req_id=0, query=q, radius=0.5)) is None
+    assert srv.submit(Request(req_id=1, query=q, radius=0.5)) is None
+    rej = srv.submit(Request(req_id=2, query=q, radius=0.5))
+    assert rej is not None and rej.op == "error" and rej.code == QUEUE_FULL
+    assert rej.code in ERROR_CODES and not rej.complete
+    assert srv.stats["rejected"] == 1

@@ -214,7 +214,7 @@ def test_quantized_guard_band_oracle(mode, metric, compacted):
     cfg = _cfg(mode, metric, 4)
     res = eng_q.range(qs, jnp.asarray(radii), cfg=cfg, compacted=compacted)
     res_pre = eng_q.range(qs, jnp.asarray(radii),
-                          dataclasses.replace(cfg, rerank=False),
+                          cfg=dataclasses.replace(cfg, rerank=False),
                           compacted=compacted)
     ids, dists, count, over = _rows(res)
     ids_pre, _, _, over_pre = _rows(res_pre)

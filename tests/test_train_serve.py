@@ -220,21 +220,27 @@ def test_server_results_sorted_and_deduped(small_engine):
 
 
 def test_server_bounded_admission_queue(small_engine):
-    """Admission is bounded: beyond max_queue, submit sheds the request
-    (returns False, counts it) instead of growing the deque without limit —
-    the production bugfix for unbounded queue growth under overload."""
+    """Admission is bounded: beyond max_queue, submit sheds the request with
+    a structured ``Response(op="error", code="queue_full")`` (None means
+    admitted) instead of growing the deque without limit — and the shed is
+    DELIVERED, not silently dropped, so callers can retry under
+    backpressure."""
     pts, eng = small_engine
     cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16, visit_cap=64),
                       mode="greedy", result_cap=128)
     srv = RangeServer(eng, cfg, ServerConfig(max_batch=8, max_queue=4))
-    admitted = [srv.submit(Request(req_id=i, query=np.asarray(pts[i]),
-                                   radius=1.0)) for i in range(7)]
-    assert admitted == [True] * 4 + [False] * 3
+    outcome = [srv.submit(Request(req_id=i, query=np.asarray(pts[i]),
+                                  radius=1.0)) for i in range(7)]
+    assert outcome[:4] == [None] * 4  # admitted
+    for i, rej in enumerate(outcome[4:], start=4):
+        assert rej.op == "error" and rej.code == "queue_full"
+        assert rej.req_id == i and not rej.complete and rej.coverage == 0.0
+        assert len(rej.ids) == 0
     assert srv.pending() == 4 and srv.stats["rejected"] == 3
     resp = srv.run_until_drained()
     assert sorted(r.req_id for r in resp) == [0, 1, 2, 3]  # shed ones never served
     assert srv.submit(Request(req_id=9, query=np.asarray(pts[0]),
-                              radius=1.0))  # queue drained -> admitting again
+                              radius=1.0)) is None  # drained -> admitting again
 
 
 def test_server_live_mutation_requests(clustered_engine):
@@ -385,41 +391,32 @@ def test_server_continuous_matches_lockstep(clustered_engine):
 
 
 # ---------------------------------------------------------------------------
-# unified public API: deprecation aliases + deploy-config overrides
+# unified public API: retired aliases + deploy-config overrides
 # ---------------------------------------------------------------------------
 
-def test_deprecated_request_op_query_alias():
-    with pytest.warns(DeprecationWarning, match="op='query'"):
-        r = Request(req_id=0, op="query", query=np.zeros(4, np.float32),
-                    radius=1.0)
-    assert r.op == "range"  # normalized; downstream sees only the new name
-
-
-def test_deprecated_server_config_expand_width():
-    with pytest.warns(DeprecationWarning, match="expand_width"):
-        ServerConfig(expand_width=4)
-
-
-def test_deprecated_positional_cfg_and_points_alias(small_engine):
+def test_retired_aliases_rejected(small_engine):
+    """The PR-6 deprecation aliases are retired: op="query" and the
+    positional/points= spellings now fail loudly instead of warning."""
     from repro.core import range_search_fused
     pts, eng = small_engine
     qs = jnp.asarray(np.asarray(pts[:4]) + 0.01)
     cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16,
                                           visit_cap=64),
                       mode="greedy", result_cap=128)
-    want = eng.range(qs, 4.0, cfg=cfg)
-    with pytest.warns(DeprecationWarning, match="positional"):
-        got = eng.range(qs, 4.0, cfg)
-    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
-    with pytest.warns(DeprecationWarning, match="points= is deprecated"):
-        got2 = range_search_fused(points=pts, graph=eng.graph, queries=qs,
-                                  start_ids=eng.start_ids, r=4.0, cfg=cfg)
-    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got2.ids))
-    with pytest.raises(TypeError, match="both corpus= and points="):
-        with pytest.warns(DeprecationWarning):
-            range_search_fused(corpus=pts, points=pts, graph=eng.graph,
-                               queries=qs, start_ids=eng.start_ids, r=4.0,
-                               cfg=cfg)
+    with pytest.raises(ValueError, match="unknown op"):
+        RangeServer(eng, cfg).submit(
+            Request(req_id=0, op="query", query=np.zeros(4, np.float32),
+                    radius=1.0))
+    with pytest.raises(TypeError):
+        eng.range(qs, 4.0, cfg)  # cfg is keyword-only now
+    with pytest.raises(TypeError):
+        range_search_fused(points=pts, graph=eng.graph, queries=qs,
+                           start_ids=eng.start_ids, r=4.0, cfg=cfg)
+
+
+def test_deprecated_server_config_expand_width():
+    with pytest.warns(DeprecationWarning, match="expand_width"):
+        ServerConfig(expand_width=4)
 
 
 def test_engine_deploy_config_overrides_routing():
