@@ -45,9 +45,10 @@ def get_engine(profile: str, n: int, seed: int = 0, max_degree: int = 24,
     return _CACHE[key]
 
 
-def run_range(eng, qs, r, cfg: RangeConfig, es_radius=None, iters: int = 2):
+def run_range(eng, qs, r, cfg: RangeConfig, es_radius=None, iters: int = 2,
+              filter=None):
     """(qps, ap_inputs, result) — median wall time over iters (after warmup)."""
-    fn = lambda: eng.range(qs, r, cfg=cfg, es_radius=es_radius)
+    fn = lambda: eng.range(qs, r, cfg=cfg, es_radius=es_radius, filter=filter)
     block_until_ready(fn())
     times = []
     res = None

@@ -80,6 +80,17 @@ MAX_TAIL_AP_GAP = 0.005
 MIN_DEGRADED_AP_FRAC = 0.70
 MIN_DEADLINE_COMPLETE_AP_FRAC = 0.90
 
+# filtered-retrieval gate: AP of predicate push-down search (scored against
+# the post-filtered brute-force oracle) may trail the unfiltered AP (scored
+# against the unfiltered oracle) by at most this much. The filtered walk is
+# the unfiltered walk with a result-stage gate — filtering never changes
+# routing on the fused path and can only improve it on the compacted path
+# (entry reseeding from the posting list) — so any larger gap means the
+# predicate is leaking into the traversal. The selective-lane fallback
+# speedup is RECORDED, not gated (CI wall-clock noise; the structural fact
+# that fallback lanes bypass the graph IS gated via n_visited == 0).
+MAX_FILTERED_AP_GAP = 0.01
+
 
 def smoke(n: int, min_qps: float, min_ap: float) -> int:
     """CI gate: one tiny corpus through ``range_search_compacted``; exits
@@ -229,6 +240,16 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
           f"{dl['n_partial']} certified partials, mean coverage "
           f"{dl['mean_partial_coverage']}")
 
+    # -- filtered row: predicate push-down vs the post-filtered oracle -------
+    filtered = _filtered_row(n)
+    print(f"[smoke] filtered (selective AND ~{filtered['selective_frac']:.2f}"
+          f" / broad OR ~{filtered['broad_frac']:.2f} of corpus): "
+          f"ap={filtered['ap_filtered']:.4f} vs unfiltered "
+          f"{filtered['ap_unfiltered']:.4f} "
+          f"(gap {filtered['ap_gap']:+.4f}, floor {MAX_FILTERED_AP_GAP}); "
+          f"fallback on {filtered['n_fallback_lanes']} selective lanes -> "
+          f"{filtered['fallback_speedup']:.2f}x walk qps")
+
     record = dict(
         bench="smoke", n=n, n_queries=int(qs.shape[0]), radius=float(r),
         mean_matches=round(float(np.asarray(gt[2]).mean()), 1),
@@ -239,6 +260,7 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
         churn=churn,
         tail_latency=tail,
         degraded=degraded,
+        filtered=filtered,
         floors=dict(min_qps=min_qps, min_ap=min_ap,
                     max_mixed_ap_gap=MAX_MIXED_AP_GAP,
                     max_quantized_ap_gap=MAX_QUANTIZED_AP_GAP,
@@ -247,7 +269,8 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
                     max_tail_p99_ratio=MAX_TAIL_P99_RATIO,
                     max_tail_ap_gap=MAX_TAIL_AP_GAP,
                     min_degraded_ap_frac=MIN_DEGRADED_AP_FRAC,
-                    min_deadline_complete_ap_frac=MIN_DEADLINE_COMPLETE_AP_FRAC),
+                    min_deadline_complete_ap_frac=MIN_DEADLINE_COMPLETE_AP_FRAC,
+                    max_filtered_ap_gap=MAX_FILTERED_AP_GAP),
         timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
     )
     with open(SMOKE_JSON, "w") as f:
@@ -294,7 +317,124 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
         print("[smoke] FAIL: lanes marked complete under a deadline "
               "returned degraded answers (certification bug)")
         return 1
+    if filtered["ap_gap"] > MAX_FILTERED_AP_GAP:
+        print("[smoke] FAIL: filtered AP (vs post-filtered oracle) trails "
+              "unfiltered AP beyond the floor — predicate is leaking into "
+              "the traversal")
+        return 1
+    if filtered["n_fallback_lanes"] == 0:
+        print("[smoke] FAIL: selective predicates never engaged the "
+              "brute-scan fallback (n_visited stayed nonzero)")
+        return 1
     return 0
+
+
+def _filtered_row(n: int) -> dict:
+    """Filtered-retrieval smoke: predicate push-down vs the post-filtered
+    brute-force oracle, on the same corpus/graph/radius as the main row.
+
+    Labels are synthetic (1-2 of 16 per point, seeded); lanes alternate a
+    selective single-label AND (~9% of the corpus matches) and a broad
+    4-label OR (~35%). Filtered AP is scored against the post-filtered
+    oracle, unfiltered AP against the plain oracle — the gap is gated at
+    MAX_FILTERED_AP_GAP. The selective lanes are then re-run with
+    ``filter_threshold`` above their selectivity so the per-lane brute-scan
+    fallback engages (proven via n_visited == 0); its speedup over the walk
+    path on the same lanes is recorded."""
+    import dataclasses as dc
+
+    import numpy as np
+
+    from repro.core import (
+        RangeConfig, RangeSearchEngine, SearchConfig, average_precision,
+        exact_range_search, label_match_counts, make_label_filter,
+        pack_labels,
+    )
+    from repro.utils import INVALID_ID
+
+    from .common import get_dataset, get_engine, run_range
+
+    ds, pts, qs, _, prof, _ = get_dataset("bigann-like", n)
+    qs = qs[:128]
+    nq = qs.shape[0]
+    mean_counts = np.asarray(prof.counts).mean(axis=0)
+    r = float(prof.radii[int(np.argmin(np.abs(mean_counts - 128.0)))])
+    gt = exact_range_search(pts, qs, r, ds.metric)
+    base = get_engine("bigann-like", n)
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
+                                          metric=ds.metric, expand_width=4),
+                      mode="greedy", result_cap=1024)
+
+    num_labels = 16
+    rng = np.random.default_rng(17)
+    raw = [sorted(int(x) for x in
+                  rng.choice(num_labels, size=int(rng.integers(1, 3)),
+                             replace=False))
+           for _ in range(int(pts.shape[0]))]
+    eng = RangeSearchEngine(points=base.points, graph=base.graph,
+                            start_ids=base.start_ids,
+                            labels=pack_labels(raw, num_labels),
+                            metric=base.metric)
+
+    entries = [[q % num_labels] if q % 2 == 0
+               else [(q + j) % num_labels for j in range(4)]
+               for q in range(nq)]
+    modes = ["and" if q % 2 == 0 else "or" for q in range(nq)]
+    filt = make_label_filter(entries, num_labels, modes=modes)
+
+    # post-filtered oracle: drop non-matching ids from the exact ground truth
+    sets = [set(x) for x in raw]
+    gt_ids = np.asarray(gt[0])
+    gt_f_ids = np.full_like(gt_ids, INVALID_ID)
+    gt_f_counts = np.zeros(nq, np.int64)
+    for q in range(nq):
+        pred = set(entries[q])
+        keep = [int(i) for i in gt_ids[q][gt_ids[q] != INVALID_ID]
+                if (pred <= sets[int(i)] if modes[q] == "and"
+                    else bool(pred & sets[int(i)]))]
+        gt_f_ids[q, :len(keep)] = keep
+        gt_f_counts[q] = len(keep)
+
+    qps_u, res_u = run_range(eng, qs, r, cfg)
+    ap_u = float(average_precision(gt_ids, np.asarray(gt[2]),
+                                   np.asarray(res_u.ids),
+                                   np.asarray(res_u.count)))
+    qps_f, res_f = run_range(eng, qs, r, cfg, filter=filt)
+    ap_f = float(average_precision(gt_f_ids, gt_f_counts,
+                                   np.asarray(res_f.ids),
+                                   np.asarray(res_f.count)))
+
+    # selectivity actually realized (posting-list fraction per lane kind)
+    match = np.asarray(label_match_counts(eng.labels, filt)) / pts.shape[0]
+    sel_frac = float(match[::2].mean())
+    broad_frac = float(match[1::2].mean())
+
+    # fallback speedup: selective lanes only, threshold above their
+    # selectivity (x1.5 headroom) so every lane takes the brute scan
+    sel = np.arange(0, nq, 2)
+    qs_sel = qs[sel]
+    filt_sel = make_label_filter([entries[i] for i in sel], num_labels,
+                                 modes="and")
+    thr = min(0.999, float(match[::2].max()) * 1.5)
+    qps_walk, _ = run_range(eng, qs_sel, r, cfg, filter=filt_sel)
+    qps_fb, res_fb = run_range(
+        eng, qs_sel, r, dc.replace(cfg, filter_threshold=thr),
+        filter=filt_sel)
+    n_fallback = int((np.asarray(res_fb.n_visited) == 0).sum())
+
+    return dict(
+        num_labels=num_labels,
+        selective_frac=round(sel_frac, 4), broad_frac=round(broad_frac, 4),
+        qps_unfiltered=round(qps_u, 2), qps_filtered=round(qps_f, 2),
+        ap_unfiltered=round(ap_u, 4), ap_filtered=round(ap_f, 4),
+        ap_gap=round(ap_u - ap_f, 5),
+        mean_matches_postfilter=round(float(gt_f_counts.mean()), 1),
+        fallback_threshold=round(thr, 4),
+        n_fallback_lanes=n_fallback, n_selective_lanes=int(sel.shape[0]),
+        qps_selective_walk=round(qps_walk, 2),
+        qps_selective_fallback=round(qps_fb, 2),
+        fallback_speedup=round(qps_fb / max(qps_walk, 1e-9), 3),
+    )
 
 
 def _degraded_row(n: int) -> dict:

@@ -42,12 +42,24 @@ from .distances import gather_dist, pairwise_dist, point_dist
 from .engine import RangeSearchEngine
 from .graph import Graph, from_lists, medoid, random_regular
 from .ground_truth import exact_range_search, exact_topk, range_counts_at
+from .labels import (
+    LabelFilter,
+    all_pass_filter,
+    label_match_counts,
+    label_match_matrix,
+    labels_match,
+    make_label_filter,
+    make_mask,
+    num_label_words,
+    pack_labels,
+)
 from .metrics import average_precision, recall_at_k, zero_result_accuracy
 from .radius import RadiusProfile, default_grid, match_histogram, select_radius, sweep
 from .range_search import (
     GreedyState,
     RangeConfig,
     RangeResult,
+    filter_labeled,
     filter_tombstoned,
     finalize_results,
     greedy_lane_done,

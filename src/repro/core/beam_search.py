@@ -239,7 +239,11 @@ def init_state(
         visited_ids=jnp.full((V,), INVALID_ID, dtype=jnp.int32),
         visited_dists=jnp.full((V,), jnp.inf, dtype=jnp.float32),
         visited_bits=bits,
-        n_dist=jnp.asarray(s.shape[0], jnp.int32),
+        # charge only the distinct starts: duplicate slots were zeroed out
+        # above, so a start list padded by repetition (per-lane entry-point
+        # selection pads broad lanes with copies of the defaults) costs
+        # exactly what the unpadded list does — bitwise-identical states
+        n_dist=jnp.sum(s != INVALID_ID).astype(jnp.int32),
         es_stopped=jnp.asarray(False),
         done=jnp.asarray(False),
     )
@@ -549,10 +553,19 @@ def beam_search_batch(
     es_radius: Optional[jnp.ndarray] = None,  # scalar or (Q,)
 ) -> BeamState:
     """Batched search; ``r`` and ``es_radius`` are per-lane vmap axes, so a
-    single micro-batch may mix radii freely (scalars broadcast)."""
+    single micro-batch may mix radii freely (scalars broadcast).
+
+    ``start_ids`` is shared ``(S,)`` or per-lane ``(Q, S)`` — the filtered
+    compacted path seeds selective lanes with posting-list members while
+    broad lanes pad the shared defaults by repetition (duplicates collapse
+    in ``init_state``, so padding never perturbs the walk)."""
     n = queries.shape[0]
     rv = broadcast_radius(r, n)
     esv = broadcast_radius(es_radius, n)
+    if start_ids.ndim == 2:
+        fn = lambda q, s_, r_, es_: beam_search(points, graph, q, s_, r_,
+                                                cfg, es_)
+        return jax.vmap(fn)(queries, start_ids, rv, esv)
     fn = lambda q, r_, es_: beam_search(points, graph, q, start_ids, r_, cfg, es_)
     return jax.vmap(fn)(queries, rv, esv)
 

@@ -38,6 +38,11 @@ class RangeSearchEngine:
     points: Corpus         # (N, d) array or QuantizedCorpus
     graph: Graph
     start_ids: jnp.ndarray # (S,) search entry points (medoid by default)
+    # (N, W) uint32 packed per-point label rows (core.labels.pack_labels),
+    # or None for an unlabeled corpus. Labels gate only the result stage —
+    # see range_search.filter_labeled — so attaching them never changes
+    # unfiltered answers.
+    labels: Optional[jnp.ndarray] = None
     metric: str = dataclasses.field(metadata=dict(static=True), default="l2")
 
     # -- construction -------------------------------------------------------
@@ -45,22 +50,31 @@ class RangeSearchEngine:
     def build(points: jnp.ndarray, build_cfg: Optional[BuildConfig] = None,
               metric: str = "l2", seed: int = 0,
               n_starts: int = 4,
-              corpus_dtype: Optional[str] = None) -> "RangeSearchEngine":
+              corpus_dtype: Optional[str] = None,
+              labels: Optional[jnp.ndarray] = None) -> "RangeSearchEngine":
         cfg = build_cfg or BuildConfig(metric=metric)
         graph = build_vamana(points, cfg, seed=seed)
         return RangeSearchEngine.from_graph(points, graph, metric=metric,
                                             n_starts=n_starts,
-                                            corpus_dtype=corpus_dtype)
+                                            corpus_dtype=corpus_dtype,
+                                            labels=labels)
 
     @staticmethod
     def from_graph(points: jnp.ndarray, graph: Graph, metric: str = "l2",
                    n_starts: int = 4,
-                   corpus_dtype: Optional[str] = None) -> "RangeSearchEngine":
+                   corpus_dtype: Optional[str] = None,
+                   labels: Optional[jnp.ndarray] = None) -> "RangeSearchEngine":
         starts = start_points(points, metric, n_starts)
         if corpus_dtype is not None:
             points = corpus_cast(points, corpus_dtype)
+        if labels is not None:
+            labels = jnp.asarray(labels, jnp.uint32)
+            if labels.shape[0] != corpus_size(points):
+                raise ValueError(
+                    f"labels rows ({labels.shape[0]}) != corpus size "
+                    f"({corpus_size(points)})")
         return RangeSearchEngine(points=points, graph=graph,
-                                 start_ids=starts,
+                                 start_ids=starts, labels=labels,
                                  metric=metric)
 
     # -- queries -------------------------------------------------------------
@@ -76,24 +90,35 @@ class RangeSearchEngine:
               cfg: Optional[RangeConfig] = None,
               es_radius=None,
               compacted: bool = True,
-              tombstones=None) -> RangeResult:
+              tombstones=None,
+              filter=None) -> RangeResult:
         """Range search. ``r`` (and ``es_radius``) may be a scalar, applied
         to every query, or a ``(Q,)`` vector giving each query its own
         radius; scalars broadcast, so the two forms answer identically when
         all radii are equal. ``tombstones`` is the live subsystem's packed
         dead-slot bitset: deleted slots still route the traversal but never
-        appear in results. Everything past ``(queries, r)`` is keyword-only
-        (shared order with the ``range_search_*`` module entry points)."""
+        appear in results. ``filter`` is a per-query
+        :class:`~repro.core.labels.LabelFilter` predicate over the engine's
+        attached ``labels`` (required when filtering); filtered-out points
+        likewise route but never answer. Everything past ``(queries, r)``
+        is keyword-only (shared order with the ``range_search_*`` module
+        entry points)."""
         cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
         if cfg.search.metric != self.metric:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(cfg.search, metric=self.metric))
+        if filter is not None and self.labels is None:
+            raise ValueError(
+                "engine has no labels attached; build with labels= to use "
+                "filtered range search")
         n = queries.shape[0]
         r = broadcast_radius(r, n)
         es_radius = None if es_radius is None else broadcast_radius(es_radius, n)
         fn = range_search_compacted if compacted else range_search_fused
         return fn(corpus=self.points, graph=self.graph, queries=queries,
                   start_ids=self.start_ids, r=r, cfg=cfg,
-                  es_radius=es_radius, tombstones=tombstones)
+                  es_radius=es_radius, tombstones=tombstones,
+                  labels=None if filter is None else self.labels,
+                  label_filter=filter)
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> dict:

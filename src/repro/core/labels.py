@@ -1,0 +1,161 @@
+"""Per-point label sets and per-query label predicates (filtered retrieval).
+
+Production range workloads (dedup, moderation, face search) scope every
+query to a tenant or metadata slice. Labels here are the packed-bitset
+form of that metadata: each corpus point carries a fixed-size ``(W,)``
+uint32 row with one bit per label id (the same word-packing as
+``core.bitset``, but per-point rows instead of one corpus-wide set), and
+each query carries a predicate over those bits:
+
+* **AND** (``is_and=True``): the point must carry *every* bit of the
+  query's mask — ``(row & mask) == mask`` word-wise. A zero mask is
+  vacuously true, so the canonical *all-pass* predicate is
+  ``AND`` with an empty mask (``all_pass_filter``).
+* **OR** (``is_and=False``): the point must carry *any* masked bit —
+  ``(row & mask) != 0`` in some word. A zero-mask OR matches nothing.
+
+The predicate is applied at the **result stage** of the range search
+(next to the tombstone drop — see ``range_search.finalize_results``):
+filtered-out points still route the traversal exactly as before, they
+just never enter results or counts. That placement is what makes the
+oracle guarantees provable — an all-pass filter is bitwise-identical to
+no filter, and a coarser predicate's result set contains a finer one's
+whenever the walk recovers the full radius ball.
+
+Both predicate modes are evaluated branch-free per lane
+(``jnp.where`` over the two tests), so one micro-batch freely mixes
+AND- and OR-filtered queries with unfiltered ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils import cdiv
+
+
+def num_label_words(num_labels: int) -> int:
+    """Packed uint32 words per label row (>= 1 so shapes never degenerate)."""
+    if num_labels < 1:
+        raise ValueError("num_labels must be >= 1")
+    return cdiv(num_labels, 32)
+
+
+def pack_labels(
+    labels: Union[Sequence[Iterable[int]], np.ndarray],
+    num_labels: int,
+) -> np.ndarray:
+    """Pack per-point label sets into ``(N, W)`` uint32 rows.
+
+    ``labels`` is either a sequence of per-point label-id iterables or an
+    ``(N, num_labels)`` boolean membership matrix. Label ids live in
+    ``[0, num_labels)``; packing is exact (no hashing — label vocabularies
+    are small compared to corpora, so every id owns a bit)."""
+    w = num_label_words(num_labels)
+    arr = np.asarray(labels, dtype=object) if not isinstance(labels, np.ndarray) else labels
+    if isinstance(arr, np.ndarray) and arr.dtype != object and arr.ndim == 2:
+        if arr.shape[1] != num_labels:
+            raise ValueError(
+                f"membership matrix has {arr.shape[1]} columns, expected "
+                f"{num_labels}")
+        n = arr.shape[0]
+        out = np.zeros((n, w), np.uint32)
+        rows, ids = np.nonzero(arr)
+        np.bitwise_or.at(out, (rows, ids // 32), np.uint32(1) << (ids % 32).astype(np.uint32))
+        return out
+    n = len(labels)
+    out = np.zeros((n, w), np.uint32)
+    for i, row in enumerate(labels):
+        for lid in row:
+            lid = int(lid)
+            if not 0 <= lid < num_labels:
+                raise ValueError(f"label id {lid} outside [0, {num_labels})")
+            out[i, lid // 32] |= np.uint32(1) << np.uint32(lid % 32)
+    return out
+
+
+def make_mask(label_ids: Iterable[int], num_labels: int) -> np.ndarray:
+    """One query predicate's ``(W,)`` uint32 bit mask."""
+    return pack_labels([list(label_ids)], num_labels)[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LabelFilter:
+    """Batched per-query label predicate (a pytree; rides jit untouched).
+
+    ``masks`` is ``(Q, W)`` uint32 — one packed label mask per lane;
+    ``is_and`` is ``(Q,)`` bool selecting AND (must carry all masked bits)
+    vs OR (must carry any) per lane. The all-pass lane is AND with a zero
+    mask."""
+
+    masks: jnp.ndarray   # (Q, W) uint32
+    is_and: jnp.ndarray  # (Q,) bool
+
+
+def all_pass_filter(n_queries: int, num_labels: int) -> LabelFilter:
+    """The identity predicate for every lane (AND over an empty mask)."""
+    w = num_label_words(num_labels)
+    return LabelFilter(masks=jnp.zeros((n_queries, w), jnp.uint32),
+                       is_and=jnp.ones((n_queries,), bool))
+
+
+def make_label_filter(
+    label_ids: Sequence[Optional[Iterable[int]]],
+    num_labels: int,
+    modes: Union[str, Sequence[str]] = "and",
+) -> LabelFilter:
+    """Build a :class:`LabelFilter` from per-query label-id lists.
+
+    ``label_ids[i] = None`` (or an empty list under AND) makes lane ``i``
+    all-pass; ``modes`` is ``"and"``/``"or"`` shared or one mode per lane."""
+    q = len(label_ids)
+    if isinstance(modes, str):
+        modes = [modes] * q
+    if len(modes) != q:
+        raise ValueError(f"{len(modes)} modes for {q} queries")
+    w = num_label_words(num_labels)
+    masks = np.zeros((q, w), np.uint32)
+    is_and = np.zeros((q,), bool)
+    for i, (ids, mode) in enumerate(zip(label_ids, modes)):
+        if mode not in ("and", "or"):
+            raise ValueError(f"bad filter mode {mode!r}")
+        if ids is None:
+            is_and[i] = True  # all-pass: AND over the empty mask
+            continue
+        masks[i] = make_mask(ids, num_labels)
+        is_and[i] = mode == "and"
+    return LabelFilter(masks=jnp.asarray(masks), is_and=jnp.asarray(is_and))
+
+
+def labels_match(rows: jnp.ndarray, mask: jnp.ndarray,
+                 is_and) -> jnp.ndarray:
+    """Branch-free predicate test: ``rows`` is ``(..., W)`` packed label
+    rows, ``mask`` a ``(W,)`` query mask, ``is_and`` the lane's mode.
+    Returns a ``(...,)`` bool — both modes are computed and selected with
+    ``where`` so the program is identical across lanes (vmap-friendly)."""
+    hit = rows & mask
+    and_ok = jnp.all(hit == mask, axis=-1)
+    or_ok = jnp.any(hit != 0, axis=-1)
+    return jnp.where(is_and, and_ok, or_ok)
+
+
+@jax.jit
+def label_match_counts(labels: jnp.ndarray, filt: LabelFilter) -> jnp.ndarray:
+    """Per-lane posting-list sizes: how many corpus points satisfy each
+    lane's predicate. This is the selectivity signal the compacted path's
+    per-lane fallback dispatch thresholds on (``RangeConfig.filter_threshold``)."""
+    fn = lambda m, a: jnp.sum(labels_match(labels, m, a).astype(jnp.int32))
+    return jax.vmap(fn)(filt.masks, filt.is_and)
+
+
+@jax.jit
+def label_match_matrix(labels: jnp.ndarray, filt: LabelFilter) -> jnp.ndarray:
+    """Dense ``(Q, N)`` predicate-satisfaction matrix (host-side dispatch:
+    posting lists for the brute-scan fallback and seeded entry points)."""
+    return jax.vmap(lambda m, a: labels_match(labels, m, a))(
+        filt.masks, filt.is_and)

@@ -31,13 +31,20 @@ FIG4_BUCKETS = (0, 10, 100, 1_000, 10_000, 100_000)
 
 
 def match_histogram(counts: np.ndarray) -> dict[str, int]:
-    """Bucket per-query match counts exactly like the paper's Fig. 4 table."""
+    """Bucket per-query match counts exactly like the paper's Fig. 4 table.
+
+    The terminal ``>1e5`` bucket catches heavy-tailed queries past the
+    paper's last printed column, so the bucket sums always equal the number
+    of queries (without it, a query with more than 1e5 matches silently
+    vanished from the table)."""
     counts = np.asarray(counts)
     out = {"0": int((counts == 0).sum())}
     prev = 0
     for b in FIG4_BUCKETS[1:]:
         out[f"<=1e{int(np.log10(b))}"] = int(((counts > prev) & (counts <= b)).sum())
         prev = b
+    out[f">1e{int(np.log10(FIG4_BUCKETS[-1]))}"] = int(
+        (counts > FIG4_BUCKETS[-1]).sum())
     return out
 
 
@@ -57,7 +64,9 @@ def sweep(
     # robustness: relative change of captured per grid step (flat == robust)
     eps = 1e-12
     lg = np.log10(np.maximum(captured, eps))
-    slope = np.abs(np.gradient(lg))
+    # np.gradient needs >= 2 samples; a single-radius grid has no slope
+    # information, so score it perfectly robust instead of crashing
+    slope = np.abs(np.gradient(lg)) if lg.size >= 2 else np.zeros_like(lg)
     return RadiusProfile(radii=radii, percent_captured=captured,
                          zero_frac=zero_frac, robustness=slope, counts=counts)
 
@@ -86,10 +95,18 @@ def select_radius(
     """Pick the radius whose zero-result fraction is closest to target,
     penalized by capture-curve steepness (the paper's robustness criterion).
 
-    Returns (radius, grid_index)."""
+    Returns (radius, grid_index). Raises ``ValueError`` when no grid point
+    is feasible (every radius yields zero matches for every query): an
+    all-inf score would otherwise argmin to index 0 and silently bless a
+    vacuous benchmark radius."""
     score = np.abs(profile.zero_frac - target_zero_frac) + robustness_weight * profile.robustness
     # require at least one query with a match, else the benchmark is vacuous
     feasible = profile.zero_frac < 1.0
+    if not feasible.any():
+        raise ValueError(
+            "no feasible radius in the swept grid: every candidate yields "
+            "zero matches for every query — widen the grid (default_grid) "
+            "or check the corpus/query scales")
     score = np.where(feasible, score, np.inf)
     gi = int(np.argmin(score))
     return float(profile.radii[gi]), gi

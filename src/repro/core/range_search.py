@@ -47,6 +47,7 @@ from .bitset import (
 from .corpus import QuantizedCorpus, corpus_size, upper_bound_dists
 from .distances import gather_dist, point_dist
 from .graph import Graph
+from .labels import LabelFilter, label_match_matrix, labels_match
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,12 +64,21 @@ class RangeConfig:
     # False keeps the guard-banded superset (keep band d_hat <= r + eps) —
     # the pre-rerank membership the oracle superset test pins down.
     rerank: bool = True
+    # filtered retrieval: when a lane's predicate matches fewer than this
+    # fraction of the corpus, the compacted path answers it by brute-
+    # scanning the posting list with the exact kernel instead of walking
+    # the graph (FilterGraph's _threshold dispatch). 0 disables the
+    # fallback; the fused single-program path always walks (it has no host
+    # sync to split lanes across programs).
+    filter_threshold: float = 0.0
 
     def __post_init__(self):
         if self.mode not in ("beam", "doubling", "greedy"):
             raise ValueError(f"bad mode {self.mode!r}")
         if self.mode == "doubling" and self.search.max_beam <= self.search.beam:
             raise ValueError("doubling mode needs search.max_beam > search.beam")
+        if not 0.0 <= self.filter_threshold <= 1.0:
+            raise ValueError("filter_threshold must be in [0, 1]")
 
 
 @jax.tree_util.register_dataclass
@@ -478,6 +488,52 @@ def filter_tombstoned(tombstones: jnp.ndarray, res: RangeResult) -> RangeResult:
 
 
 # ---------------------------------------------------------------------------
+# Label-predicate filtering (filtered range retrieval — core.labels)
+# ---------------------------------------------------------------------------
+#
+# The per-query label predicate follows the tombstone template exactly:
+# points failing the predicate keep their vectors and edges, so the
+# traversal routes THROUGH them unchanged (phase-1 beam, λ-saturation
+# triggers, and the greedy frontier all run on the unfiltered sets — a
+# filtered-out point never perturbs the walk or its early-stop/termination
+# heuristics); only at the result stage are unmatched candidates dropped
+# and counts recomputed. That placement is what makes the oracle
+# guarantees hold: an all-pass predicate is bitwise-identical to no
+# predicate, and the filtered result equals the brute-force oracle
+# post-filter wherever the unfiltered walk recovers the full radius ball.
+
+def _drop_unmatched_lane(labels: jnp.ndarray, mask: jnp.ndarray, is_and,
+                         ids: jnp.ndarray, dists: jnp.ndarray):
+    """Drop predicate-failing ids from one query's result buffer (stable
+    left-compaction, one bounded scatter — the ``_drop_dead_lane`` shape)."""
+    k = ids.shape[0]
+    valid = ids != INVALID_ID
+    rows = jnp.take(labels, jnp.where(valid, ids, 0), axis=0)     # (K, W)
+    keep = valid & labels_match(rows, mask, is_and)
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    wp = jnp.where(keep, pos, k)                                  # k == dropped
+    out_ids = jnp.full((k,), INVALID_ID, jnp.int32).at[wp].set(ids, mode="drop")
+    out_d = jnp.full((k,), jnp.inf, jnp.float32).at[wp].set(dists, mode="drop")
+    return out_ids, out_d, jnp.sum(keep.astype(jnp.int32))
+
+
+@jax.jit
+def filter_labeled(labels: jnp.ndarray, filt: LabelFilter,
+                   res: RangeResult) -> RangeResult:
+    """Drop results failing each lane's label predicate and recount.
+
+    ``labels`` is the ``(N, W)`` uint32 per-point label rows
+    (``core.labels.pack_labels``); ``filt`` the batched per-lane predicate.
+    ``overflow`` is left as-is, mirroring the tombstone drop (buffer
+    pressure happened during the search, where unmatched candidates
+    legitimately occupied slots)."""
+    fn = lambda m_, a_, i_, d_: _drop_unmatched_lane(labels, m_, a_, i_, d_)
+    ids, dists, count = jax.vmap(fn)(filt.masks, filt.is_and,
+                                     res.ids, res.dists)
+    return dataclasses.replace(res, ids=ids, dists=dists, count=count)
+
+
+# ---------------------------------------------------------------------------
 # Quantized-corpus two-pass: certified-lower-bound search + boundary rerank
 # ---------------------------------------------------------------------------
 #
@@ -562,13 +618,18 @@ def range_phase1(
 
 @partial(jax.jit, static_argnames=("cfg",))
 def finalize_results(corpus, queries: jnp.ndarray, r, res: RangeResult,
-                     cfg: RangeConfig, tombstones=None) -> RangeResult:
+                     cfg: RangeConfig, tombstones=None, labels=None,
+                     label_filter: Optional[LabelFilter] = None) -> RangeResult:
     """Result-stage post-processing shared by every execution path: the
-    tombstone drop (traversal routes through dead nodes; results never
-    include them), then the quantized guard-band exact rerank."""
+    tombstone drop, then the label-predicate drop (both route the
+    traversal through dropped nodes; results never include them), then the
+    quantized guard-band exact rerank — in that order, so the exact pass
+    never wastes gathers on candidates the filters already killed."""
     rj = broadcast_radius(r, queries.shape[0])
     if tombstones is not None:  # live index: drop dead results, keep routing
         res = filter_tombstoned(tombstones, res)
+    if labels is not None and label_filter is not None:
+        res = filter_labeled(labels, label_filter, res)
     if (isinstance(corpus, QuantizedCorpus) and cfg.rerank
             and corpus.raw is not None):
         res = _rerank_fused(corpus, queries, rj, res, cfg.search.metric)
@@ -589,6 +650,8 @@ def _range_search_fused(
     cfg: RangeConfig,
     es_radius: Optional[jnp.ndarray] = None,  # scalar or (Q,)
     tombstones: Optional[jnp.ndarray] = None,  # (W,) uint32 dead-slot bitset
+    labels: Optional[jnp.ndarray] = None,      # (N, W) uint32 label rows
+    label_filter: Optional[LabelFilter] = None,
 ) -> RangeResult:
     r = broadcast_radius(r, queries.shape[0])
     # a quantized corpus searches on certified lower-bound distances, so
@@ -622,7 +685,8 @@ def _range_search_fused(
                           n_visited=st.n_visited, n_dist=st.n_dist + jnp.where(active, gs.n_dist, 0),
                           es_stopped=st.es_stopped, phase2=active,
                           n_rerank=zeros)
-    return finalize_results(corpus, queries, r, res, cfg, tombstones)
+    return finalize_results(corpus, queries, r, res, cfg, tombstones,
+                            labels, label_filter)
 
 
 # ---------------------------------------------------------------------------
@@ -690,24 +754,28 @@ def _exact_pairs(raw, queries, ids_p, lanes_p, metric: str):
     return point_dist(vecs, qv, metric)
 
 
-def _range_search_compacted(
+def _walk_compacted(
     corpus,               # (N, d) array or QuantizedCorpus
     graph: Graph,
     queries: jnp.ndarray,
-    start_ids: jnp.ndarray,
+    start_ids: jnp.ndarray,  # shared (S,) or per-lane (Q, S')
     r,                    # scalar or (Q,) per-query radii
     cfg: RangeConfig,
     es_radius=None,       # scalar or (Q,)
     tombstones=None,      # (W,) uint32 dead-slot bitset (live indices)
+    labels=None,          # (N, W) uint32 per-point label rows
+    label_filter: Optional[LabelFilter] = None,
 ) -> RangeResult:
     points = corpus
     rj = broadcast_radius(r, queries.shape[0])
 
     def finish(res: RangeResult) -> RangeResult:
-        # result-stage tombstone drop (traversal above ran unfiltered),
-        # then the quantized boundary rerank on what survived
+        # result-stage tombstone + label-predicate drops (traversal above
+        # ran unfiltered), then the quantized boundary rerank on survivors
         if tombstones is not None:
             res = filter_tombstoned(tombstones, res)
+        if labels is not None and label_filter is not None:
+            res = filter_labeled(labels, label_filter, res)
         return _maybe_rerank_host(points, queries, rj, res, cfg)
 
     esj = None if es_radius is None else broadcast_radius(es_radius, queries.shape[0])
@@ -747,8 +815,9 @@ def _range_search_compacted(
 
     if cfg.mode == "doubling":
         # restart with widening enabled, survivors only (paper Alg. 5),
-        # each at its own radius
-        st2 = beam_search_batch(points, graph, sub_q, start_ids, sub_r,
+        # each at its own radius (per-lane starts subset with their lanes)
+        sub_starts = start_ids if start_ids.ndim == 1 else start_ids[pad]
+        st2 = beam_search_batch(points, graph, sub_q, sub_starts, sub_r,
                                 cfg.search, sub_es)
         d_ids, d_dists, d_count, d_over = jax.vmap(
             lambda st_, r_: _beam_results(st_, r_, cfg.result_cap))(st2, sub_r)
@@ -783,36 +852,229 @@ def _range_search_compacted(
     return finish(merged)
 
 
+# Below this fraction of the corpus, a filtered walk lane gets its default
+# entry points augmented with members of its own posting list (the beam
+# then starts inside the predicate's region instead of routing to it).
+# Lanes at or above it keep the shared defaults untouched, so broad and
+# all-pass predicates stay bitwise-identical to the unfiltered program.
+ENTRY_SEED_FRAC = 0.25
+
+
+def _fallback_scan(raw, queries, rj_np, tombstones, match, fb_sel,
+                   cap: int, metric: str):
+    """Brute exact scan of each fallback lane's posting list.
+
+    ``raw`` is the exact-vector corpus view, ``match`` the host (Q, N)
+    predicate matrix, ``fb_sel`` the lanes taking this path. All posting
+    lists flatten into one pow2-padded ``_exact_pairs`` call (O(log)
+    compiled variants, like the rerank band), then each lane keeps
+    ``d <= r`` survivors sorted ascending — exactly the oracle's
+    post-filtered answer, by construction. Tombstoned ids are excluded
+    up front so the scan matches the walk's result-stage semantics."""
+    m = len(fb_sel)
+    out_ids = np.full((m, cap), INVALID_ID, np.int32)
+    out_d = np.full((m, cap), np.inf, np.float32)
+    count = np.zeros(m, np.int32)
+    over = np.zeros(m, bool)
+    ndist = np.zeros(m, np.int32)
+    tomb = None if tombstones is None else np.asarray(tombstones)
+    per_ids = []
+    for j, lane in enumerate(fb_sel):
+        pid = np.nonzero(match[lane])[0].astype(np.int32)
+        if tomb is not None and pid.size:
+            live = ((tomb[pid // 32] >> (pid % 32)) & np.uint32(1)) == 0
+            pid = pid[live]
+        per_ids.append(pid)
+        ndist[j] = pid.size
+    total = int(sum(p.size for p in per_ids))
+    if total == 0:
+        return out_ids, out_d, count, over, ndist
+    lanes_p = np.concatenate([np.full(p.size, lane, np.int32)
+                              for p, lane in zip(per_ids, fb_sel)])
+    ids_p = np.concatenate(per_ids)
+    bucket = next_pow2(total)
+    pad = bucket - total
+    d = np.asarray(_exact_pairs(
+        raw, queries,
+        jnp.asarray(np.concatenate([ids_p, np.zeros(pad, np.int32)])),
+        jnp.asarray(np.concatenate([lanes_p, np.zeros(pad, np.int32)])),
+        metric))[:total]
+    off = 0
+    for j, pid in enumerate(per_ids):
+        dj = d[off:off + pid.size]
+        off += pid.size
+        keep = dj <= rj_np[fb_sel[j]]
+        kid, kd = pid[keep], dj[keep]
+        order = np.argsort(kd, kind="stable")
+        kid, kd = kid[order], kd[order]
+        k = min(kid.size, cap)
+        out_ids[j, :k] = kid[:k]
+        out_d[j, :k] = kd[:k]
+        count[j] = k
+        over[j] = kid.size > cap
+    return out_ids, out_d, count, over, ndist
+
+
+def _range_search_compacted(
+    corpus,
+    graph: Graph,
+    queries: jnp.ndarray,
+    start_ids: jnp.ndarray,
+    r,
+    cfg: RangeConfig,
+    es_radius=None,
+    tombstones=None,
+    labels=None,
+    label_filter: Optional[LabelFilter] = None,
+) -> RangeResult:
+    """Compacted-path front door: per-lane selectivity dispatch.
+
+    Unfiltered batches go straight to the two-phase walk. Filtered batches
+    first measure each lane's predicate selectivity (posting-list size /
+    corpus size) on the host:
+
+    * lanes below ``cfg.filter_threshold`` skip the graph entirely and
+      brute-scan their posting list with the exact kernel
+      (``_fallback_scan`` — FilterGraph's ``_threshold`` dispatch);
+    * surviving walk lanes below ``ENTRY_SEED_FRAC`` get their entry
+      points augmented with posting-list members (filter-aware entry
+      selection) — broad/all-pass lanes keep the shared defaults;
+    * one micro-batch freely mixes both paths; walk lanes are compacted
+      and pow2-padded exactly like the phase-2 survivors.
+
+    The fallback needs exact vectors (a ``QuantizedCorpus`` without
+    ``raw`` walks every lane instead)."""
+    if labels is None or label_filter is None:
+        return _walk_compacted(corpus, graph, queries, start_ids, r, cfg,
+                               es_radius, tombstones)
+    n_q = queries.shape[0]
+    rj = broadcast_radius(r, n_q)
+    esj = (None if es_radius is None
+           else broadcast_radius(es_radius, n_q))
+    n_corpus = corpus_size(corpus)
+    match = np.asarray(label_match_matrix(labels, label_filter))   # (Q, N)
+    counts = match.sum(axis=1)
+    raw = corpus.raw if isinstance(corpus, QuantizedCorpus) else corpus
+    fb = (counts < cfg.filter_threshold * n_corpus
+          if cfg.filter_threshold > 0.0 and raw is not None
+          else np.zeros(n_q, bool))
+
+    # filter-aware entry points: selective walk lanes start inside their
+    # predicate's region (deterministic evenly-spaced posting-list sample
+    # appended to the defaults; INVALID padding and duplicate collapse in
+    # init_state keep unseeded lanes bitwise-identical to shared starts)
+    seed = (~fb) & (counts > 0) & (counts < ENTRY_SEED_FRAC * n_corpus)
+    if seed.any():
+        s0 = np.asarray(start_ids).astype(np.int32)
+        n_seed = s0.shape[0]
+        sm = np.concatenate(
+            [np.broadcast_to(s0, (n_q, n_seed)),
+             np.full((n_q, n_seed), INVALID_ID, np.int32)], axis=1).copy()
+        for lane in np.nonzero(seed)[0]:
+            pid = np.nonzero(match[lane])[0]
+            pick = pid[np.linspace(0, pid.size - 1,
+                                   min(n_seed, pid.size)).astype(np.int64)]
+            sm[lane, n_seed:n_seed + pick.size] = pick
+        walk_starts = jnp.asarray(sm)
+    else:
+        walk_starts = start_ids
+
+    if not fb.any():
+        return _walk_compacted(corpus, graph, queries, walk_starts, rj, cfg,
+                               esj, tombstones, labels, label_filter)
+
+    cap = cfg.result_cap
+    fb_sel = np.nonzero(fb)[0]
+    w_sel = np.nonzero(~fb)[0]
+    f_ids, f_d, f_cnt, f_over, f_nd = _fallback_scan(
+        raw, queries, np.asarray(rj), tombstones, match, fb_sel, cap,
+        cfg.search.metric)
+
+    ids = np.full((n_q, cap), INVALID_ID, np.int32)
+    dists = np.full((n_q, cap), np.inf, np.float32)
+    count = np.zeros(n_q, np.int32)
+    over = np.zeros(n_q, bool)
+    nvis = np.zeros(n_q, np.int32)
+    ndist = np.zeros(n_q, np.int32)
+    ess = np.zeros(n_q, bool)
+    ph2 = np.zeros(n_q, bool)
+    nrr = np.zeros(n_q, np.int32)
+    ids[fb_sel], dists[fb_sel], count[fb_sel] = f_ids, f_d, f_cnt
+    over[fb_sel], ndist[fb_sel] = f_over, f_nd
+
+    if w_sel.size:
+        bucket = next_pow2(w_sel.size)
+        padw = np.concatenate(
+            [w_sel, np.full(bucket - w_sel.size, w_sel[0], w_sel.dtype)])
+        sub_starts = (walk_starts if walk_starts.ndim == 1
+                      else walk_starts[padw])
+        sub_filter = LabelFilter(masks=label_filter.masks[padw],
+                                 is_and=label_filter.is_and[padw])
+        wres = _walk_compacted(
+            corpus, graph, queries[padw], sub_starts, rj[padw], cfg,
+            None if esj is None else esj[padw], tombstones, labels,
+            sub_filter)
+        (w_ids, w_d, w_cnt, w_over, w_nvis, w_nd, w_es, w_ph2,
+         w_nrr) = jax.device_get(
+            (wres.ids, wres.dists, wres.count, wres.overflow, wres.n_visited,
+             wres.n_dist, wres.es_stopped, wres.phase2, wres.n_rerank))
+        k = w_sel.size
+        ids[w_sel], dists[w_sel], count[w_sel] = w_ids[:k], w_d[:k], w_cnt[:k]
+        over[w_sel], nvis[w_sel], ndist[w_sel] = (w_over[:k], w_nvis[:k],
+                                                  w_nd[:k])
+        ess[w_sel], ph2[w_sel], nrr[w_sel] = w_es[:k], w_ph2[:k], w_nrr[:k]
+
+    return RangeResult(
+        ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+        count=jnp.asarray(count), overflow=jnp.asarray(over),
+        n_visited=jnp.asarray(nvis), n_dist=jnp.asarray(ndist),
+        es_stopped=jnp.asarray(ess), phase2=jnp.asarray(ph2),
+        n_rerank=jnp.asarray(nrr))
+
+
 # ---------------------------------------------------------------------------
 # Public entry points — one keyword surface, shared parameter order
 # ---------------------------------------------------------------------------
 #
 # The batch entry points share the parameter order
-# ``(corpus, graph, queries, start_ids, r, cfg, es_radius, tombstones)``
-# and take everything by keyword (``dist.sharded_range_search`` prepends its
-# mesh; ``engine.range``/``LiveSnapshot.range`` bind corpus/graph/start_ids
+# ``(corpus, graph, queries, start_ids, r, cfg, es_radius, tombstones,
+# labels, label_filter)`` and take everything by keyword
+# (``dist.sharded_range_search`` prepends its mesh;
+# ``engine.range``/``LiveSnapshot.range`` bind corpus/graph/start_ids/labels
 # from the object and keep the same tail).
 
 def range_search_fused(*, corpus, graph, queries, start_ids, r, cfg,
-                       es_radius=None, tombstones=None) -> RangeResult:
+                       es_radius=None, tombstones=None, labels=None,
+                       label_filter=None) -> RangeResult:
     """Single-XLA-program batched range search (no host sync): phase 1 plus
-    masked (not compacted) greedy phase 2, tombstone filter, and in-program
-    quantized rerank. Keyword-only; see the module note on the shared
-    parameter order. ``r``/``es_radius`` are a scalar or per-query ``(Q,)``
-    radii; ``tombstones`` a packed ``(W,) uint32`` dead-slot bitset."""
+    masked (not compacted) greedy phase 2, tombstone + label-predicate
+    filters, and in-program quantized rerank. Keyword-only; see the module
+    note on the shared parameter order. ``r``/``es_radius`` are a scalar or
+    per-query ``(Q,)`` radii; ``tombstones`` a packed ``(W,) uint32``
+    dead-slot bitset; ``labels``/``label_filter`` the per-point label rows
+    and batched predicate (``core.labels``). The fused program always
+    walks — the selectivity fallback needs a host dispatch and lives on the
+    compacted path."""
     return _range_search_fused(corpus=corpus, graph=graph, queries=queries,
                                start_ids=start_ids, r=r, cfg=cfg,
-                               es_radius=es_radius, tombstones=tombstones)
+                               es_radius=es_radius, tombstones=tombstones,
+                               labels=labels, label_filter=label_filter)
 
 
 def range_search_compacted(*, corpus, graph, queries, start_ids, r, cfg,
-                           es_radius=None, tombstones=None) -> RangeResult:
+                           es_radius=None, tombstones=None, labels=None,
+                           label_filter=None) -> RangeResult:
     """Two-phase batched range search with host-side query compaction (the
     QPS path): phase 1 over the whole batch, phase 2 over the pow2-padded
     survivor subset only (O(log Q) compiled variants — lanes with zero
     results never enter the expensive loop), each survivor carrying its own
-    radius. Keyword-only; see the module note on the shared parameter
+    radius. With ``labels``/``label_filter`` set, lanes whose predicate
+    selectivity falls below ``cfg.filter_threshold`` brute-scan their
+    posting list instead of walking (per-lane dispatch; one micro-batch
+    mixes both paths) and selective walk lanes get filter-aware entry
+    points. Keyword-only; see the module note on the shared parameter
     order."""
     return _range_search_compacted(corpus=corpus, graph=graph, queries=queries,
                                    start_ids=start_ids, r=r, cfg=cfg,
-                                   es_radius=es_radius, tombstones=tombstones)
+                                   es_radius=es_radius, tombstones=tombstones,
+                                   labels=labels, label_filter=label_filter)

@@ -32,6 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core.beam_search import broadcast_radius
 from ..core.corpus import corpus_cast, pad_corpus_rows
 from ..core.graph import Graph
+from ..core.labels import LabelFilter
 from ..core.range_search import RangeConfig, RangeResult, range_search_fused
 from ..utils import INVALID_ID, cdiv
 from .compat import shard_map
@@ -61,6 +62,11 @@ class ShardedCorpus:
     offsets: Any    # (S,) int32 — global id of each shard's row 0
     # true corpus size: required so pad-row ids (>= n_total) are droppable
     n_total: int = dataclasses.field(metadata=dict(static=True))
+    # (S, n, W) uint32 — per-shard packed label rows (core.labels), or None
+    # for an unlabeled corpus. Pad rows of a short last shard carry all-zero
+    # label rows: they are unreachable anyway, and a zero row matches no
+    # non-trivial AND/OR predicate.
+    labels: Any = None
 
     @property
     def n_shards(self) -> int:
@@ -85,6 +91,7 @@ def build_sharded(
     build_fn: Callable,   # (shard_points (n, d)) -> (Graph, start_ids (k,))
     lane_pad: int = 0,
     corpus_dtype: str = "float32",
+    labels=None,
 ) -> ShardedCorpus:
     """Partition ``points`` into ``n_shards`` contiguous blocks and build one
     sub-index per block with ``build_fn``. A short last block is padded to
@@ -101,11 +108,21 @@ def build_sharded(
     ``corpus_dtype`` controls per-shard storage: graphs always build on the
     exact f32 block; "int8" then quantizes each shard *locally* (per-shard
     scales and guard-band maxima, computed before any pad rows are appended
-    so sentinel values cannot widen the band)."""
+    so sentinel values cannot widen the band).
+
+    ``labels`` (optional) is the corpus-wide (N, W) uint32 packed label
+    matrix (``core.labels.pack_labels``); it splits into the same contiguous
+    blocks as the points, zero-padded to the common shard size (zero rows
+    match no non-trivial predicate and are unreachable regardless)."""
     pts = np.asarray(points)
     n_total, d = pts.shape
     n = cdiv(n_total, n_shards)
-    blocks, nbrs, starts = [], [], []
+    if labels is not None:
+        labels = np.asarray(labels, np.uint32)
+        if labels.shape[0] != n_total:
+            raise ValueError(
+                f"labels rows ({labels.shape[0]}) != corpus size ({n_total})")
+    blocks, nbrs, starts, labs = [], [], [], []
     for s in range(n_shards):
         block = pts[s * n:(s + 1) * n]
         graph, start_ids = build_fn(jnp.asarray(block))
@@ -128,12 +145,19 @@ def build_sharded(
         blocks.append(stored)
         nbrs.append(jnp.asarray(neighbors))
         starts.append(jnp.asarray(start_ids, jnp.int32).reshape(-1))
+        if labels is not None:
+            lab = labels[s * n:(s + 1) * n]
+            if n_pad:
+                lab = np.concatenate(
+                    [lab, np.zeros((n_pad, lab.shape[1]), np.uint32)], axis=0)
+            labs.append(jnp.asarray(lab))
     return ShardedCorpus(
         points=jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
         neighbors=jnp.stack(nbrs),
         start_ids=jnp.stack(starts),
         offsets=jnp.arange(n_shards, dtype=jnp.int32) * n,
         n_total=n_total,
+        labels=None if labels is None else jnp.stack(labs),
     )
 
 
@@ -161,6 +185,7 @@ def sharded_range_search(
     cfg: RangeConfig,
     es_radius: Optional[float] = None,
     tombstones=None,
+    label_filter: Optional[LabelFilter] = None,
     model_axis="model",
     data_axis="data",
 ) -> RangeResult:
@@ -169,7 +194,8 @@ def sharded_range_search(
 
     Keyword-only: the parameter order matches the ``core.range_search``
     entry points with the mesh prepended —
-    ``(mesh, corpus, queries, r, cfg, es_radius, tombstones)``.
+    ``(mesh, corpus, queries, r, cfg, es_radius, tombstones,
+    label_filter)``.
 
     ``r``/``es_radius`` are a shared scalar or per-query ``(Q,)`` vectors;
     radii shard along the data axis with their queries and broadcast to
@@ -181,9 +207,21 @@ def sharded_range_search(
     subsystem's per-shard tombstones). Each shard's fused search filters its
     own dead slots at the result stage — deleted points still route the
     per-shard walk but never reach the union merge, so counts and the
-    merged top-``result_cap`` are live-only."""
+    merged top-``result_cap`` are live-only.
+
+    ``label_filter`` (optional) is a per-query
+    :class:`~repro.core.labels.LabelFilter` over the corpus's attached
+    ``labels`` (build_sharded(..., labels=)). Its mask rows shard along the
+    data axis with their queries and broadcast to every shard; each shard
+    evaluates the predicate locally at the result stage of its fused search
+    (filtered-out points route the per-shard walk but never reach the union
+    merge), so the merged result equals the post-filtered union."""
     if corpus.n_total <= 0:
         raise ValueError("ShardedCorpus.n_total must be the true corpus size")
+    if label_filter is not None and corpus.labels is None:
+        raise ValueError(
+            "corpus has no labels attached; build_sharded(..., labels=) to "
+            "use filtered range search")
     s_total = corpus.n_shards
     n_model = mesh.shape[model_axis]
     if s_total % n_model:
@@ -198,6 +236,14 @@ def sharded_range_search(
     # forms (es None -> +inf, which never triggers early stopping)
     radii = broadcast_radius(r, n_q)
     es_vec = broadcast_radius(es_radius, n_q)
+    has_filter = label_filter is not None
+    masks = is_and = None
+    if has_filter:
+        masks = jnp.asarray(label_filter.masks, jnp.uint32)
+        is_and = jnp.asarray(label_filter.is_and, bool)
+        if masks.shape[0] != n_q:
+            raise ValueError(
+                f"label_filter covers {masks.shape[0]} lanes for {n_q} queries")
     dp_size = _axis_size(mesh, data_axis)
     q_pad = cdiv(n_q, dp_size) * dp_size
     if q_pad != n_q:  # replicate-pad the batch to the data-axis multiple
@@ -208,9 +254,22 @@ def sharded_range_search(
             [radii, jnp.broadcast_to(radii[:1], (q_pad - n_q,))])
         es_vec = jnp.concatenate(
             [es_vec, jnp.broadcast_to(es_vec[:1], (q_pad - n_q,))])
+        if has_filter:  # pad lanes ride with their replicated query
+            masks = jnp.concatenate(
+                [masks, jnp.broadcast_to(masks[:1],
+                                         (q_pad - n_q, masks.shape[1]))])
+            is_and = jnp.concatenate(
+                [is_and, jnp.broadcast_to(is_and[:1], (q_pad - n_q,))])
 
     def local_fn(points, neighbors, start_ids, offsets, qs, rs, es,
-                 tombs=None):
+                 *extra):
+        # optional trailing args, ordered (tombs?, labs, mq, aq?) by the
+        # closure flags — shard_map positional args cannot be keywords
+        it = iter(extra)
+        tombs = next(it) if tombstones is not None else None
+        labs, mq, aq = (next(it), next(it), next(it)) if has_filter \
+            else (None, None, None)
+        filt = None if not has_filter else LabelFilter(masks=mq, is_and=aq)
         # points (s_loc, n, d) (or a stacked QuantizedCorpus), qs (q_loc, d),
         # rs/es (q_loc,): search every local shard at each query's own
         # radius. A quantized shard carries its own scales/guard maxima, so
@@ -224,7 +283,8 @@ def sharded_range_search(
             res = range_search_fused(
                 corpus=shard_pts, graph=Graph(neighbors=neighbors[s]),
                 queries=qs, start_ids=start_ids[s], r=rs, cfg=cfg,
-                es_radius=es, tombstones=None if tombs is None else tombs[s])
+                es_radius=es, tombstones=None if tombs is None else tombs[s],
+                labels=None if labs is None else labs[s], label_filter=filt)
             gids = _remap_global(res.ids, offsets[s], corpus.n_total)
             ids.append(gids)
             dists.append(jnp.where(gids == INVALID_ID, jnp.inf, res.dists))
@@ -280,15 +340,17 @@ def sharded_range_search(
                   P(model_axis, None), P(model_axis), mat, row, row)
     args = (corpus.points, corpus.neighbors, corpus.start_ids,
             corpus.offsets, queries, radii, es_vec)
-    if tombstones is None:
-        fn = shard_map(local_fn, mesh=mesh, in_specs=base_specs,
-                       out_specs=out_spec, check_vma=False)
-        out = fn(*args)
-    else:
-        fn = shard_map(local_fn, mesh=mesh,
-                       in_specs=base_specs + (P(model_axis, None),),
-                       out_specs=out_spec, check_vma=False)
-        out = fn(*args, jnp.asarray(tombstones, jnp.uint32))
+    extra_specs, extra_args = [], []
+    if tombstones is not None:
+        extra_specs.append(P(model_axis, None))
+        extra_args.append(jnp.asarray(tombstones, jnp.uint32))
+    if has_filter:  # labels shard with the model axis, masks with queries
+        extra_specs += [P(model_axis, None, None), mat, row]
+        extra_args += [corpus.labels, masks, is_and]
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=base_specs + tuple(extra_specs),
+                   out_specs=out_spec, check_vma=False)
+    out = fn(*args, *extra_args)
     if q_pad != n_q:
         out = jax.tree.map(lambda x: x[:n_q], out)
     return out

@@ -27,6 +27,7 @@ import numpy as np
 
 from ..core.beam_search import broadcast_radius
 from ..core.graph import Graph
+from ..core.labels import LabelFilter
 from ..core.range_search import RangeConfig, RangeResult, range_search_fused
 from ..dist.sharded_engine import ShardedCorpus, _remap_global, union_merge
 from ..utils import INVALID_ID
@@ -126,7 +127,8 @@ def _corrupt_result(res: RangeResult, rng: np.random.Generator) -> RangeResult:
 
 
 def _search_one_shard(corpus: ShardedCorpus, s: int, queries, radii, cfg,
-                      es_vec, tombstones) -> RangeResult:
+                      es_vec, tombstones,
+                      label_filter: Optional[LabelFilter] = None) -> RangeResult:
     """Exact per-shard search with shard-local ids remapped to global —
     the same per-shard program the collective path runs, minus the mesh."""
     shard_pts = jax.tree.map(lambda x: x[s], corpus.points)
@@ -134,7 +136,9 @@ def _search_one_shard(corpus: ShardedCorpus, s: int, queries, radii, cfg,
         corpus=shard_pts, graph=Graph(neighbors=corpus.neighbors[s]),
         queries=queries, start_ids=corpus.start_ids[s], r=radii, cfg=cfg,
         es_radius=es_vec,
-        tombstones=None if tombstones is None else tombstones[s])
+        tombstones=None if tombstones is None else tombstones[s],
+        labels=None if label_filter is None else corpus.labels[s],
+        label_filter=label_filter)
     gids = _remap_global(res.ids, corpus.offsets[s], corpus.n_total)
     return dataclasses.replace(
         res, ids=gids,
@@ -150,6 +154,7 @@ def fault_tolerant_sharded_search(
     cfg: RangeConfig,
     es_radius=None,
     tombstones=None,
+    label_filter: Optional[LabelFilter] = None,
     injector: Optional[FaultInjector] = None,
     retry: Optional[RetryPolicy] = None,
     sleep: Callable[[float], None] = time.sleep,
@@ -164,12 +169,21 @@ def fault_tolerant_sharded_search(
     ``RangeResult`` over surviving shards plus the per-shard validity
     mask / attempt counts; ``coverage`` is ``shards_ok / shards_total``.
 
+    ``label_filter`` is a per-query :class:`~repro.core.labels.LabelFilter`
+    over the corpus's attached labels (``build_sharded(..., labels=)``);
+    each shard evaluates the predicate locally at the result stage, exactly
+    as the collective path does.
+
     With every shard healthy the merge is exact-mode-identical to the
     collective ``sharded_range_search`` (same per-shard program, same
     union merge); with shards lost it equals that healthy merge restricted
     to surviving shards.
     """
     retry = retry or RetryPolicy()
+    if label_filter is not None and corpus.labels is None:
+        raise ValueError(
+            "corpus has no labels attached; build_sharded(..., labels=) to "
+            "use filtered range search")
     queries = jnp.asarray(queries)
     n_q = queries.shape[0]
     radii = broadcast_radius(r, n_q)
@@ -192,7 +206,8 @@ def fault_tolerant_sharded_search(
                 kind = (injector.raise_if_faulted(s, attempt)
                         if injector is not None else None)
                 res = _search_one_shard(
-                    corpus, s, queries, radii, cfg, es_vec, tombstones)
+                    corpus, s, queries, radii, cfg, es_vec, tombstones,
+                    label_filter)
                 if kind == "garbage":
                     res = _corrupt_result(res, injector.rng(s, attempt))
                 if not validate_shard_result(

@@ -12,7 +12,9 @@ increasing mutation sequence number (independent of the structural
 mutation). The payload is an ``np.savez`` archive of named arrays; what
 the arrays mean depends on ``op``:
 
-- ``insert``  — ``ext_ids (B,) int64``, ``vecs (B, d)`` (corpus dtype).
+- ``insert``  — ``ext_ids (B,) int64``, ``vecs (B, d)`` (corpus dtype),
+  plus ``labels (B, W) uint32`` packed label rows when the index is
+  labeled (absent otherwise — replay passes None through).
   The logged ``ext_ids`` are the *resolved* ids (auto-assigned ids are
   materialized before logging), so replay never re-derives them.
 - ``delete``  — ``ext_ids (B,) int64`` as requested (idempotent on replay).

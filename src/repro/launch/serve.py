@@ -28,6 +28,7 @@ import numpy as np
 from ..configs.range_engine import EngineDeployConfig
 from ..core import (
     BuildConfig, RangeSearchEngine, average_precision, exact_range_search,
+    pack_labels,
 )
 from ..core.beam_search import ES_D_VISITED
 from ..core.radius import default_grid, select_radius, sweep
@@ -48,6 +49,18 @@ def _churn_main(args) -> int:
     init, stream = pts_all[:n], pts_all[n:]
     qs = ds.queries
 
+    raw_labels = None
+    if args.filter_frac > 0:
+        # label the full stream (initial corpus + future inserts) up front
+        # so inserted points carry predicates the moment they land
+        lrng = np.random.default_rng(7)
+        raw_labels = [list(lrng.choice(args.num_labels,
+                                       size=int(lrng.integers(1, 4)),
+                                       replace=False))
+                      for _ in range(n + k)]
+        print(f"[serve] labeled live corpus: {args.num_labels}-label "
+              f"vocabulary, 1-3 labels/point (inserts carry labels)")
+
     grid = default_grid(init, ds.queries, ds.metric, num=24)
     prof = sweep(jnp.asarray(init), jnp.asarray(qs), grid, ds.metric)
     r, gi = select_radius(prof, robustness_weight=0.2)
@@ -58,7 +71,9 @@ def _churn_main(args) -> int:
     live = LiveIndex.create(
         init, LiveConfig(capacity=n + k, insert_batch=128),
         BuildConfig(max_degree=32, beam=64, metric=ds.metric),
-        metric=ds.metric, corpus_dtype=args.corpus_dtype)
+        metric=ds.metric, corpus_dtype=args.corpus_dtype,
+        labels=None if raw_labels is None
+        else pack_labels(raw_labels[:n], args.num_labels))
     print(f"[serve] live index built in {time.perf_counter() - t0:.1f}s "
           f"{live.stats()}")
 
@@ -76,10 +91,28 @@ def _churn_main(args) -> int:
 
     rng = np.random.default_rng(0)
     doomed = rng.choice(n, size=k, replace=False)  # initial ids to delete
+    filt_of = [None] * args.queries
+    fmode = ["and"] * args.queries
+    if args.filter_frac > 0:
+        # same predicate mix as the static path: mostly single-label AND,
+        # every fourth lane a two-label OR
+        nf = max(int(args.filter_frac * args.queries), 1)
+        for qi in rng.choice(args.queries, nf, replace=False):
+            if qi % 4 == 3:
+                filt_of[qi] = [int(x) for x in
+                               rng.choice(args.num_labels, 2, replace=False)]
+                fmode[qi] = "or"
+            else:
+                filt_of[qi] = [int(rng.integers(args.num_labels))]
+        print(f"[serve] filtered traffic: {nf}/{args.queries} requests "
+              f"carry label predicates")
     reqs = (
-        [Request(req_id=i, query=qs[i], radius=float(r))
+        [Request(req_id=i, query=qs[i], radius=float(r),
+                 filter_labels=filt_of[i], filter_mode=fmode[i])
          for i in range(args.queries)]
-        + [Request(req_id=args.queries + i, op="insert", query=stream[i])
+        + [Request(req_id=args.queries + i, op="insert", query=stream[i],
+                   labels=None if raw_labels is None
+                   else np.asarray(raw_labels[n + i]))
            for i in range(k)]
         + [Request(req_id=args.queries + k + i, op="delete",
                    delete_ids=np.asarray([doomed[i]]))
@@ -106,6 +139,23 @@ def _churn_main(args) -> int:
     ext, vecs = live.live_vectors()
     gt = exact_range_search(jnp.asarray(vecs), jnp.asarray(qs),
                             float(r), ds.metric)
+    if raw_labels is not None:
+        # filtered lanes score against the POST-FILTERED oracle over the
+        # final live set (rows index vecs; labels key off external ids)
+        gt_ids_f = np.asarray(gt[0]).copy()
+        gt_counts_f = np.asarray(gt[2]).copy()
+        lab_sets = [set(raw_labels[int(e)]) for e in ext]
+        for qi in range(args.queries):
+            if filt_of[qi] is None:
+                continue
+            pred = set(filt_of[qi])
+            keep = [int(x) for x in gt_ids_f[qi][:gt_counts_f[qi]]
+                    if (pred <= lab_sets[int(x)] if fmode[qi] == "and"
+                        else bool(pred & lab_sets[int(x)]))]
+            gt_ids_f[qi] = INVALID_ID
+            gt_ids_f[qi, :len(keep)] = keep
+            gt_counts_f[qi] = len(keep)
+        gt = (gt_ids_f, gt[1], gt_counts_f)
     lut = np.full(live.next_ext_id + 1, INVALID_ID, np.int64)
     lut[ext] = np.arange(len(ext))
     res_ids = np.full((args.queries, 4096), INVALID_ID, np.int64)
@@ -122,6 +172,12 @@ def _churn_main(args) -> int:
           f"p50={lat[len(lat) // 2] * 1e3:.1f}ms "
           f"p99={lat[int(len(lat) * 0.99)] * 1e3:.1f}ms")
     print(f"[serve] stats={srv.stats}")
+    if args.filter_frac > 0:
+        st = srv.stats
+        print(f"[serve] filtered: requests={st['filtered_requests']} "
+              f"batches={st['filtered_batches']}/{st['batches']} "
+              f"(AP above scored vs the post-filtered oracle on the final "
+              f"live set)")
     print(f"[serve] final live index: {live.stats()}")
     return 0
 
@@ -164,6 +220,13 @@ def main(argv=None):
     p.add_argument("--heavy-frac", type=float, default=0.0,
                    help="fraction of requests given a dense-region radius "
                         "(tail-latency workload)")
+    p.add_argument("--filter-frac", type=float, default=0.0,
+                   help="fraction of range requests carrying a label "
+                        "predicate (the corpus gets synthetic per-point "
+                        "labels; AP is scored against the post-filtered "
+                        "oracle)")
+    p.add_argument("--num-labels", type=int, default=16,
+                   help="synthetic label vocabulary size for --filter-frac")
     args = p.parse_args(argv)
 
     if args.churn > 0:
@@ -180,10 +243,25 @@ def main(argv=None):
     print(f"[serve] selected radius {r:.4g} "
           f"(zero-result frac {prof.zero_frac[gi]:.2f})")
 
+    raw_labels = None
+    labels_packed = None
+    if args.filter_frac > 0:
+        # synthetic per-point labels: 1-3 ids each from a small vocabulary
+        # (the category/attribute tags real filtered-search corpora carry)
+        lrng = np.random.default_rng(7)
+        raw_labels = [list(lrng.choice(args.num_labels,
+                                       size=int(lrng.integers(1, 4)),
+                                       replace=False))
+                      for _ in range(args.n)]
+        labels_packed = pack_labels(raw_labels, args.num_labels)
+        print(f"[serve] labeled corpus: {args.num_labels}-label vocabulary, "
+              f"1-3 labels/point")
+
     t0 = time.perf_counter()
     eng = RangeSearchEngine.build(
         pts, BuildConfig(max_degree=32, beam=64, metric=ds.metric),
-        metric=ds.metric, corpus_dtype=args.corpus_dtype)
+        metric=ds.metric, corpus_dtype=args.corpus_dtype,
+        labels=labels_packed)
     print(f"[serve] index built in {time.perf_counter() - t0:.1f}s "
           f"{eng.stats()}")
 
@@ -207,6 +285,22 @@ def main(argv=None):
         nh = max(int(args.heavy_frac * args.queries), 1)
         radii[rng.choice(args.queries, nh, replace=False)] = hi
         print(f"[serve] heavy traffic: {nh} requests at radius {hi:.4g}")
+    filt_of = [None] * args.queries
+    fmode = ["and"] * args.queries
+    if args.filter_frac > 0:
+        # a slice of the traffic filters: mostly single-label AND lanes,
+        # every fourth a two-label OR (broader posting list) — filtered and
+        # plain requests deliberately share micro-batches
+        nf = max(int(args.filter_frac * args.queries), 1)
+        for qi in rng.choice(args.queries, nf, replace=False):
+            if qi % 4 == 3:
+                filt_of[qi] = [int(x) for x in
+                               rng.choice(args.num_labels, 2, replace=False)]
+                fmode[qi] = "or"
+            else:
+                filt_of[qi] = [int(rng.integers(args.num_labels))]
+        print(f"[serve] filtered traffic: {nf}/{args.queries} requests "
+              f"carry label predicates")
 
     rcfg = EngineDeployConfig().overrides(
         metric=ds.metric,
@@ -239,7 +333,8 @@ def main(argv=None):
     t0 = time.perf_counter()
     resp = []
     for i in range(args.queries):
-        rq = Request(req_id=i, query=qs[i], radius=float(radii[i]))
+        rq = Request(req_id=i, query=qs[i], radius=float(radii[i]),
+                     filter_labels=filt_of[i], filter_mode=fmode[i])
         while srv.submit(rq) is not None:  # queue_full: serve under
             resp.extend(srv.step())        # backpressure, then retry
     resp.extend(srv.run_until_drained())
@@ -248,6 +343,22 @@ def main(argv=None):
 
     gt_ids, _, gt_counts = exact_range_search(pts, jnp.asarray(qs),
                                               jnp.asarray(radii), ds.metric)
+    if args.filter_frac > 0:
+        # filtered lanes score against the POST-FILTERED oracle: the exact
+        # in-radius set restricted to predicate-matching points
+        gt_ids = np.asarray(gt_ids).copy()
+        gt_counts = np.asarray(gt_counts).copy()
+        lab_sets = [set(l) for l in raw_labels]
+        for qi in range(args.queries):
+            if filt_of[qi] is None:
+                continue
+            pred = set(filt_of[qi])
+            keep = [int(x) for x in gt_ids[qi][:gt_counts[qi]]
+                    if (pred <= lab_sets[int(x)] if fmode[qi] == "and"
+                        else bool(pred & lab_sets[int(x)]))]
+            gt_ids[qi] = INVALID_ID
+            gt_ids[qi, :len(keep)] = keep
+            gt_counts[qi] = len(keep)
     res_ids = np.full((args.queries, 4096), 2**31 - 1, np.int64)
     counts = np.zeros(args.queries, np.int64)
     for rp in resp:
@@ -271,6 +382,11 @@ def main(argv=None):
               f"oneshot={st['pool_oneshot']} ticks={st['pool_ticks']} "
               f"rotations={st['pool_rotations']} "
               f"buckets cheap/heavy={st['bucket_cheap']}/{st['bucket_heavy']}")
+    if args.filter_frac > 0:
+        st = srv.stats
+        print(f"[serve] filtered: requests={st['filtered_requests']} "
+              f"batches={st['filtered_batches']}/{st['batches']} "
+              f"(AP above scored vs the post-filtered oracle)")
     disp = srv.radius_dispersion()
     print(f"[serve] radius dispersion mean={disp['mean']:.4g} "
           f"std={disp['std']:.4g} range=[{disp['min']:.4g}, {disp['max']:.4g}] "

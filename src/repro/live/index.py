@@ -21,6 +21,12 @@ the fixed-shape jitted machinery:
   into the graph. External ids are assigned monotonically and survive
   consolidation; internal slots are an implementation detail.
 
+* **Labels** (optional) live in a capacity-sized packed (N_cap, W) uint32
+  store next to the corpus: inserts carry per-row label rows (riding the
+  WAL with the vectors), consolidation moves rows with their slots, and
+  snapshots accept per-query ``filter=`` predicates evaluated at the same
+  result stage as the tombstone filter.
+
 * **Lazy deletes** set bits in a packed tombstone bitset (``core.bitset``,
   sized exactly over the capacity — never hashed, a false positive would
   drop live results). Deleted nodes keep their vectors and edges: the
@@ -120,29 +126,42 @@ class LiveSnapshot:
     n_dead: int               # tombstoned slots
     epoch: int
     metric: str
+    # (N_cap, W) uint32 packed per-slot label rows, or None (unlabeled).
+    # Unborn/reclaimed slots carry zero rows — matched by no non-trivial
+    # predicate, and unreachable regardless.
+    labels: Optional[jnp.ndarray] = None
 
     @property
     def n_live(self) -> int:
         return self.live_count - self.n_dead
 
     def range(self, queries, r, *, cfg: Optional[RangeConfig] = None,
-              es_radius=None, compacted: bool = True) -> RangeResult:
+              es_radius=None, compacted: bool = True,
+              filter=None) -> RangeResult:
         """Range search over the live set; returned ids are EXTERNAL ids.
 
         Tombstoned slots still route the walk (the filter is result-stage
         only) and unborn slots are unreachable, so the traversal is the
-        frozen engine's program at the snapshot's shapes. Arguments past
-        ``(queries, r)`` are keyword-only (shared order with
-        ``engine.range``)."""
+        frozen engine's program at the snapshot's shapes. ``filter`` is a
+        per-query :class:`~repro.core.labels.LabelFilter` over the
+        snapshot's attached ``labels`` (filtered-out points route but never
+        answer, same as tombstones). Arguments past ``(queries, r)`` are
+        keyword-only (shared order with ``engine.range``)."""
         cfg = cfg or RangeConfig(search=SearchConfig(metric=self.metric))
         if cfg.search.metric != self.metric:
             cfg = dataclasses.replace(cfg, search=dataclasses.replace(
                 cfg.search, metric=self.metric))
+        if filter is not None and self.labels is None:
+            raise ValueError(
+                "snapshot has no labels attached; create the LiveIndex with "
+                "labels= to use filtered range search")
         fn = range_search_compacted if compacted else range_search_fused
         res = fn(corpus=self.points, graph=self.graph,
                  queries=jnp.asarray(queries), start_ids=self.start_ids,
                  r=r, cfg=cfg, es_radius=es_radius,
-                 tombstones=self.tombstones)
+                 tombstones=self.tombstones,
+                 labels=None if filter is None else self.labels,
+                 label_filter=filter)
         return self._externalize(res)
 
     def _externalize(self, res: RangeResult) -> RangeResult:
@@ -153,7 +172,8 @@ class LiveSnapshot:
         """Slot-id engine view (introspection / stats); queries through the
         engine see slot ids and NO tombstone filter — use ``range``."""
         return RangeSearchEngine(points=self.points, graph=self.graph,
-                                 start_ids=self.start_ids, metric=self.metric)
+                                 start_ids=self.start_ids, labels=self.labels,
+                                 metric=self.metric)
 
 
 class LiveIndex:
@@ -170,8 +190,10 @@ class LiveIndex:
                  start_ids: jnp.ndarray, ext_ids: np.ndarray,
                  tombstones: jnp.ndarray, live_count: int, next_ext_id: int,
                  epoch: int, metric: str, build_cfg: BuildConfig,
-                 cfg: LiveConfig, dead_slots: Optional[set] = None):
+                 cfg: LiveConfig, dead_slots: Optional[set] = None,
+                 labels: Optional[jnp.ndarray] = None):
         self.points = points
+        self.labels = labels
         self.neighbors = neighbors
         self.start_ids = start_ids
         self.ext_ids = ext_ids
@@ -219,7 +241,8 @@ class LiveIndex:
         """Replay one WAL record through the public mutation path — the
         same deterministic code that produced it, minus the re-logging."""
         if rec.op == "insert":
-            self.insert(rec.arrays["vecs"], ext_ids=rec.arrays["ext_ids"])
+            self.insert(rec.arrays["vecs"], ext_ids=rec.arrays["ext_ids"],
+                        labels=rec.arrays.get("labels"))
         elif rec.op == "delete":
             self.delete(rec.arrays["ext_ids"])
         elif rec.op == "consolidate":
@@ -233,13 +256,21 @@ class LiveIndex:
                build_cfg: Optional[BuildConfig] = None, metric: str = "l2",
                corpus_dtype: str = "float32", seed: int = 0,
                first_ext_id: int = 0,
-               graph: Optional[Graph] = None) -> "LiveIndex":
+               graph: Optional[Graph] = None,
+               labels=None) -> "LiveIndex":
         """Build the initial frozen index, then pre-allocate it to capacity.
 
         ``first_ext_id`` offsets external-id assignment (the sharded router
         hands each shard a disjoint id space). Passing ``graph`` skips the
         Vamana build and promotes an existing frozen index to a live one
-        (it must have been built on these exact ``points``)."""
+        (it must have been built on these exact ``points``).
+
+        ``labels`` (optional) is the (n0, W) packed label matrix
+        (``core.labels.pack_labels``) for the initial rows; attaching it
+        makes the index labeled — inserts may then carry per-row label rows
+        and snapshots accept ``filter=`` predicates. The label store is
+        pre-allocated to capacity alongside the corpus (zero rows for
+        unborn slots)."""
         pts = jnp.asarray(points, jnp.float32)
         n0 = pts.shape[0]
         if n0 > cfg.capacity:
@@ -261,11 +292,21 @@ class LiveIndex:
                       jnp.int32)]) if cfg.capacity > n0 else graph.neighbors
         ext = np.full(cfg.capacity, INVALID_ID, np.int64)
         ext[:n0] = first_ext_id + np.arange(n0)
+        lab = None
+        if labels is not None:
+            labels = np.asarray(labels, np.uint32)
+            if labels.shape[0] != n0:
+                raise ValueError(
+                    f"labels rows ({labels.shape[0]}) != initial corpus "
+                    f"size ({n0})")
+            lab = np.zeros((cfg.capacity, labels.shape[1]), np.uint32)
+            lab[:n0] = labels
+            lab = jnp.asarray(lab)
         return LiveIndex(
             points=stored, neighbors=nbrs, start_ids=starts, ext_ids=ext,
             tombstones=jnp.zeros((cdiv(cfg.capacity, 32),), jnp.uint32),
             live_count=n0, next_ext_id=first_ext_id + n0, epoch=0,
-            metric=metric, build_cfg=bcfg, cfg=cfg)
+            metric=metric, build_cfg=bcfg, cfg=cfg, labels=lab)
 
     # -- introspection -------------------------------------------------------
     @property
@@ -314,15 +355,18 @@ class LiveIndex:
                             tombstones=self.tombstones,
                             ext_ids=self.ext_ids.copy(),
                             live_count=self.live_count, n_dead=self.n_dead,
-                            epoch=self.epoch, metric=self.metric)
+                            epoch=self.epoch, metric=self.metric,
+                            labels=self.labels)
 
     def range(self, queries, r, *, cfg: Optional[RangeConfig] = None,
-              es_radius=None, compacted: bool = True) -> RangeResult:
+              es_radius=None, compacted: bool = True,
+              filter=None) -> RangeResult:
         return self.snapshot().range(queries, r, cfg=cfg,
-                                     es_radius=es_radius, compacted=compacted)
+                                     es_radius=es_radius, compacted=compacted,
+                                     filter=filter)
 
     # -- mutation: inserts ---------------------------------------------------
-    def insert(self, vecs, ext_ids=None) -> np.ndarray:
+    def insert(self, vecs, ext_ids=None, labels=None) -> np.ndarray:
         """Insert ``vecs`` (k, d); returns their assigned external ids.
 
         Rows are written behind the watermark (quantized on the way in when
@@ -330,12 +374,17 @@ class LiveIndex:
         fixed-shape build step in ``insert_batch`` chunks — reverse edges
         included, overflowing rows RobustPruned. One epoch per call.
 
-        With a WAL attached, the batch logs (resolved ext_ids + vecs) after
-        validation but before ANY state change — validation runs first so a
-        record is never logged for an insert that raises, and the log-then-
-        apply order means a crash at any later point replays to the same
-        state. An insert-internal consolidation (capacity reclaim) is not
-        logged separately: replaying the insert record reproduces it."""
+        ``labels`` (labeled index only) is the (k, W) packed label rows for
+        the inserted vectors; omitted rows get zero labels (matched by no
+        non-trivial predicate).
+
+        With a WAL attached, the batch logs (resolved ext_ids + vecs +
+        label rows) after validation but before ANY state change —
+        validation runs first so a record is never logged for an insert
+        that raises, and the log-then-apply order means a crash at any
+        later point replays to the same state. An insert-internal
+        consolidation (capacity reclaim) is not logged separately:
+        replaying the insert record reproduces it."""
         vecs = np.asarray(vecs, np.float32)
         if vecs.ndim == 1:
             vecs = vecs[None]
@@ -356,7 +405,24 @@ class LiveIndex:
             dup = [int(e) for e in ext_ids if int(e) in self._slot_of]
             if dup:
                 raise ValueError(f"external ids already present: {dup[:5]}")
-        self._log("insert", dict(ext_ids=ext_ids, vecs=vecs))
+        if labels is not None and self.labels is None:
+            raise ValueError(
+                "index has no labels attached; create(..., labels=) to "
+                "insert labeled rows")
+        lab_rows = None
+        if self.labels is not None:
+            w = self.labels.shape[1]
+            if labels is None:
+                lab_rows = np.zeros((k, w), np.uint32)
+            else:
+                lab_rows = np.asarray(labels, np.uint32)
+                if lab_rows.shape != (k, w):
+                    raise ValueError(
+                        f"labels shape {lab_rows.shape} != ({k}, {w})")
+        rec = dict(ext_ids=ext_ids, vecs=vecs)
+        if lab_rows is not None:
+            rec["labels"] = lab_rows
+        self._log("insert", rec)
         if self.live_count + k > self.capacity and self._dead:
             # reclaim tombstoned slots before giving up; unlogged — replay
             # of the insert record re-triggers it deterministically
@@ -380,6 +446,9 @@ class LiveIndex:
             active = np.arange(B) < b
             self.points = _set_rows(self.points, jnp.asarray(slots_p),
                                     jnp.asarray(vecs_p), jnp.asarray(active))
+            if lab_rows is not None:
+                self.labels = self.labels.at[jnp.asarray(slots)].set(
+                    jnp.asarray(lab_rows[off:off + b]))
             batch = np.full(B, INVALID_ID, np.int32)
             batch[:b] = slots
             self.neighbors = insert_batch_step(
@@ -453,6 +522,11 @@ class LiveIndex:
         ext = np.full(self.capacity, INVALID_ID, np.int64)
         ext[:perm.shape[0]] = self.ext_ids[perm]
         self.ext_ids = ext
+        if self.labels is not None:  # labels move with their rows
+            lab = np.asarray(self.labels)
+            new_lab = np.zeros_like(lab)
+            new_lab[:perm.shape[0]] = lab[np.asarray(perm)]
+            self.labels = jnp.asarray(new_lab)
         self.live_count = int(perm.shape[0])
         self.tombstones = jnp.zeros_like(self.tombstones)
         self._dead = set()
@@ -483,6 +557,8 @@ class LiveIndex:
             state["raw"] = self.points.raw
         else:
             state["points"] = self.points
+        if self.labels is not None:
+            state["labels"] = self.labels
         extra = dict(
             kind="live_index", metric=self.metric,
             corpus_dtype=self.corpus_dtype(),
@@ -535,7 +611,10 @@ class LiveIndex:
             tombstones=tomb, live_count=live_count, next_ext_id=next_ext_id,
             epoch=epoch, metric=extra["metric"],
             build_cfg=BuildConfig(**extra["build"]),
-            cfg=LiveConfig(**extra["live"]), dead_slots=dead)
+            cfg=LiveConfig(**extra["live"]), dead_slots=dead,
+            # pre-label checkpoints simply have no "labels" entry
+            labels=(jnp.asarray(flat["labels"], jnp.uint32)
+                    if "labels" in flat else None))
         idx.wal_seq = wal_seq
         if wal is not None:
             idx._replaying = True

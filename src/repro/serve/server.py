@@ -40,6 +40,12 @@ Production anatomy (single-process simulation of the real service):
   drains to completion against the old snapshot before mutations apply
   (consolidation permutes slots; a checkpoint must not cross an epoch).
   Returned ids are external ids.
+* **filtered range retrieval** — range requests may carry ``filter_labels``
+  (+ ``filter_mode``) when the served corpus is labeled; filtered and
+  unfiltered requests share micro-batches (unfiltered/pad lanes ride an
+  all-pass predicate, which is bitwise-neutral), inserts may tag their
+  vector with labels, and ``stats["filtered_batches"]`` counts batches
+  that carried at least one predicate lane.
 * per-request stats (visited, distance comps, early-stopped) surface in the
   response for monitoring.
 """
@@ -56,6 +62,7 @@ import numpy as np
 
 from ..core.corpus import corpus_dtype_name
 from ..core.engine import RangeSearchEngine
+from ..core.labels import LabelFilter, make_label_filter, make_mask
 from ..core.range_search import (
     RangeConfig, RangeResult, finalize_results, greedy_coverage,
     greedy_lane_done, greedy_resume_batch, greedy_seed_batch, range_phase1,
@@ -83,13 +90,22 @@ class Request:
     ``submit``: a range request still queued past its budget is shed with
     ``code="deadline_expired"``; one whose phase-2 lane is mid-search is
     force-finalized into a certified partial answer (``complete=False``)
-    instead of resumed. ``None`` means no budget (never expires)."""
+    instead of resumed. ``None`` means no budget (never expires).
+
+    ``filter_labels`` (range op, labeled corpus only) restricts the answer
+    to points carrying those labels — ``filter_mode="and"`` requires all of
+    them, ``"or"`` any. Filtered and unfiltered requests batch together
+    freely (unfiltered lanes ride an all-pass predicate). ``labels``
+    (insert op) tags the inserted vector with label ids."""
     req_id: int
     op: str = "range"                   # range | insert | delete
     query: Optional[np.ndarray] = None  # range/insert: the vector
     radius: Optional[float] = None      # per-request; batches mix radii freely
     deadline_s: Optional[float] = None  # latency budget (seconds from submit)
     delete_ids: Optional[np.ndarray] = None  # delete: external ids to remove
+    filter_labels: Optional[np.ndarray] = None  # range: predicate label ids
+    filter_mode: str = "and"            # range: "and" | "or" over filter_labels
+    labels: Optional[np.ndarray] = None  # insert: label ids of the new vector
 
 
 @dataclasses.dataclass(kw_only=True)
@@ -122,6 +138,7 @@ class Response:
     code: Optional[str] = None      # fault.errors taxonomy; None = healthy
     shards_ok: Optional[int] = None     # sharded serving: shards merged
     shards_total: Optional[int] = None  # sharded serving: shards configured
+    filtered: bool = False          # answered under a label predicate
 
 
 @dataclasses.dataclass
@@ -259,6 +276,10 @@ class RangeServer:
             # the degraded fan-out path
             "deadline_shed": 0, "deadline_partial": 0,
             "shard_retries": 0, "shards_lost": 0, "degraded_batches": 0,
+            # filtered range retrieval: micro-batches that carried at least
+            # one label-predicate lane (filtered + unfiltered lanes batch
+            # together; unfiltered lanes ride an all-pass predicate)
+            "filtered_batches": 0, "filtered_requests": 0,
         }
 
     # -- served view ---------------------------------------------------------
@@ -274,6 +295,33 @@ class RangeServer:
 
     def _tombstones(self):
         return self._view.tombstones if self.live is not None else None
+
+    def _labels(self):
+        """Packed label store of the served view (slot space), or None for
+        an unlabeled corpus. Sharded serving keeps labels per shard — the
+        store here is only a capability/width probe; per-shard evaluation
+        happens inside the fan-out."""
+        if self.live is not None:
+            return self._view.labels
+        if self.sharded is not None:
+            return self.sharded.labels
+        return self.engine.labels if self.engine is not None else None
+
+    def _num_labels(self) -> int:
+        """Label-id space the packed store can represent (32 per word)."""
+        lab = self._labels()
+        return 0 if lab is None else 32 * int(lab.shape[-1])
+
+    def _batch_filter(self, reqs, bucket: int) -> Optional[LabelFilter]:
+        """Per-lane predicate for one padded micro-batch, or None when no
+        lane filters. Unfiltered and pad lanes get the all-pass predicate
+        (AND over the empty mask), which is bitwise-neutral."""
+        if all(rq.filter_labels is None for rq in reqs):
+            return None
+        pad = bucket - len(reqs)
+        entries = [rq.filter_labels for rq in reqs] + [None] * pad
+        modes = [rq.filter_mode for rq in reqs] + ["and"] * pad
+        return make_label_filter(entries, self._num_labels(), modes=modes)
 
     def _epoch(self) -> int:
         return self._view.epoch if self._view is not None else 0
@@ -302,6 +350,27 @@ class RangeServer:
                 raise ValueError("delete requests need delete_ids")
         elif req.query is None:
             raise ValueError(f"{req.op!r} requests need a query vector")
+        if req.filter_labels is not None:
+            if req.op != "range":
+                raise ValueError("filter_labels applies to range requests")
+            if self._labels() is None:
+                raise ValueError(
+                    "served corpus has no labels attached; filtered range "
+                    "requests need a labeled engine/index")
+            if req.filter_mode not in ("and", "or"):
+                raise ValueError(f"filter_mode must be 'and' or 'or', "
+                                 f"got {req.filter_mode!r}")
+            fl = np.atleast_1d(np.asarray(req.filter_labels))
+            if fl.size and int(fl.max()) >= self._num_labels():
+                raise ValueError(
+                    f"filter label id {int(fl.max())} out of range for a "
+                    f"{self._num_labels()}-label corpus")
+        if req.labels is not None:
+            if req.op != "insert":
+                raise ValueError("labels= applies to insert requests")
+            if self.live is None or self.live.labels is None:
+                raise ValueError(
+                    "labeled inserts need a labeled live index")
         if req.deadline_s is not None and req.deadline_s < 0:
             raise ValueError("deadline_s must be >= 0 (or None for no budget)")
         if len(self.queue) >= self.scfg.max_queue:
@@ -408,7 +477,14 @@ class RangeServer:
         ins = [(rq, t) for rq, t in muts if rq.op == "insert"]
         dels = [(rq, t) for rq, t in muts if rq.op == "delete"]
         if ins:
-            ext = self.live.insert(np.stack([rq.query for rq, _ in ins]))
+            lab = None
+            if self.live.labels is not None:
+                nl = 32 * int(self.live.labels.shape[1])
+                lab = np.stack([
+                    make_mask([] if rq.labels is None else rq.labels, nl)
+                    for rq, _ in ins])
+            ext = self.live.insert(np.stack([rq.query for rq, _ in ins]),
+                                   labels=lab)
             self.stats["inserts"] += len(ins)
             now = self._clock()
             for (rq, arrive), e in zip(ins, ext):
@@ -436,31 +512,39 @@ class RangeServer:
         return out
 
     # -- lockstep execution --------------------------------------------------
-    def _execute(self, queries: np.ndarray, radii: np.ndarray):
+    def _execute(self, queries: np.ndarray, radii: np.ndarray,
+                 label_filter: Optional[LabelFilter] = None):
         """Dispatch one padded batch; returns ``(RangeResult, DegradedResult
         | None)`` — the second element is populated only on the
-        fault-tolerant sharded path (no mesh, or an injector present)."""
+        fault-tolerant sharded path (no mesh, or an injector present).
+        ``label_filter`` (optional) covers every padded lane; each dispatch
+        path evaluates it at its own result stage."""
         es = (self.scfg.es_radius_factor * jnp.asarray(radii)
               if self.scfg.es_radius_factor > 0 else None)
         qs = jnp.asarray(queries)
         rs = jnp.asarray(radii)
         if self.live is not None:
-            return self._view.range(qs, rs, cfg=self.cfg, es_radius=es), None
+            return self._view.range(qs, rs, cfg=self.cfg, es_radius=es,
+                                    filter=label_filter), None
         if self.sharded is not None:
             if self.mesh is not None and self.injector is None:
                 return sharded_range_search(
                     mesh=self.mesh, corpus=self.sharded, queries=qs, r=rs,
-                    cfg=self.cfg, es_radius=es), None
+                    cfg=self.cfg, es_radius=es,
+                    label_filter=label_filter), None
             d = fault_tolerant_sharded_search(
                 corpus=self.sharded, queries=qs, r=rs, cfg=self.cfg,
-                es_radius=es, injector=self.injector, retry=self.retry)
+                es_radius=es, label_filter=label_filter,
+                injector=self.injector, retry=self.retry)
             self.stats["degraded_batches"] += int(not d.complete)
             self.stats["shard_retries"] += int(d.attempts.sum()) - d.shards_total
             self.stats["shards_lost"] += d.shards_total - d.shards_ok
             return d.result, d
         return range_search_compacted(
             corpus=self.engine.points, graph=self.engine.graph, queries=qs,
-            start_ids=self.engine.start_ids, r=rs, cfg=self.cfg, es_radius=es), None
+            start_ids=self.engine.start_ids, r=rs, cfg=self.cfg, es_radius=es,
+            labels=None if label_filter is None else self.engine.labels,
+            label_filter=label_filter), None
 
     def step(self) -> list[Response]:
         """Serve one micro-batch from the queue.
@@ -507,7 +591,9 @@ class RangeServer:
         if bucket > n:  # pad to bucket with repeats (masked out of responses)
             q = np.concatenate([q, np.repeat(q[:1], bucket - n, axis=0)])
             radii = np.concatenate([radii, np.repeat(radii[:1], bucket - n)])
-        res, degraded = self._execute(q, radii)
+        lf = self._batch_filter(reqs, bucket)
+        n_filtered = sum(rq.filter_labels is not None for rq in reqs)
+        res, degraded = self._execute(q, radii, lf)
         now = self._clock()
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
@@ -536,10 +622,13 @@ class RangeServer:
                 radius=float(radii[i]),
                 epoch=epoch,
                 timings=self._timings(arrive[i], svc0, now),
+                filtered=rq.filter_labels is not None,
                 **dkw,
             )))
         self.stats["served"] += n
         self.stats["batches"] += 1
+        self.stats["filtered_batches"] += int(lf is not None)
+        self.stats["filtered_requests"] += n_filtered
         self.stats["es_stopped"] += int(ess[:n].sum())
         self.stats["overflow"] += int(over[:n].sum())
         self.stats["reranked"] += int(np.asarray(res.n_rerank)[:n].sum())
@@ -593,6 +682,9 @@ class RangeServer:
                         q[sel], radii[sel], svc0))
             self._track_radii(radii)
             self.stats["batches"] += 1
+            nf = sum(rq.filter_labels is not None for rq in reqs)
+            self.stats["filtered_batches"] += int(nf > 0)
+            self.stats["filtered_requests"] += nf
         # deadline check BEFORE the tick: a lane past its budget is
         # finalized from its current GreedyState checkpoint instead of
         # resumed — a certified partial (truncated, never corrupted) that
@@ -630,10 +722,15 @@ class RangeServer:
         need_h = np.array(need)
         need_h[n:] = False
         out = []
+        # phase 1 walks unfiltered (predicates are result-stage only); the
+        # batch predicate applies at both finalize sites — here for direct
+        # lanes, and at retirement (_respond_greedy) for pooled lanes
+        lf = self._batch_filter(reqs, bucket)
         direct = np.nonzero(~need_h[:n])[0]
         if len(direct):
             fin = finalize_results(self._corpus(), qj, rj, res, self.cfg,
-                                   self._tombstones())
+                                   self._tombstones(),
+                                   None if lf is None else self._labels(), lf)
             out.extend(self._emit_range(fin, direct, reqs, arrive, radii,
                                         svc0, phase2=False))
         lanes = np.nonzero(need_h)[0]
@@ -707,8 +804,17 @@ class RangeServer:
             extras = [dict(complete=False, coverage=float(cov[i]),
                            code=DEADLINE_EXPIRED) for i in range(k)]
             self.stats["deadline_partial"] += k
+        lf = None
+        if any(m["req"].filter_labels is not None for m in metas):
+            # rebuild the retired lanes' predicates (pad lanes all-pass)
+            entries = ([m["req"].filter_labels for m in metas]
+                       + [None] * (P - k))
+            modes = ([m["req"].filter_mode for m in metas]
+                     + ["and"] * (P - k))
+            lf = make_label_filter(entries, self._num_labels(), modes=modes)
         res = finalize_results(self._corpus(), qs, rs, res, self.cfg,
-                               self._tombstones())
+                               self._tombstones(),
+                               None if lf is None else self._labels(), lf)
         self.stats["pool_retired"] += k
         reqs = [m["req"] for m in metas]
         arrive = [m["arrive"] for m in metas]
@@ -753,6 +859,7 @@ class RangeServer:
                 radius=float(rad),
                 epoch=epoch,
                 timings=self._timings(a, s0, now),
+                filtered=rq.filter_labels is not None,
                 **(extras[j] if extras is not None else {}),
             )))
             self.stats["es_stopped"] += int(ess[i])

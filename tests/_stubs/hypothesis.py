@@ -2,7 +2,7 @@
 
 Loaded by conftest.py ONLY when the real package is unavailable (the CI
 image pins a slim dependency set). Covers ``given`` + ``settings`` +
-``st.integers`` / ``st.floats``: each decorated test runs ``max_examples``
+``st.integers`` / ``st.floats`` / ``st.lists``: each decorated test runs ``max_examples``
 times over a seeded sample stream, so property tests stay property tests —
 just with reproducible draws instead of shrinking ones.
 """
@@ -25,6 +25,13 @@ class strategies:
     @staticmethod
     def floats(min_value, max_value):
         return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(
+            lambda rng: [elements.sample(rng)
+                         for _ in range(int(rng.integers(min_size,
+                                                         max_size + 1)))])
 
 
 def settings(max_examples: int = 20, deadline=None, **_kw):

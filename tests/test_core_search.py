@@ -272,6 +272,50 @@ def test_match_histogram_buckets():
     assert h["<=1e3"] == 1 and h["<=1e5"] == 1
 
 
+def test_match_histogram_overflow_bucket_sums_to_total():
+    """Regression: counts past the paper's last printed column (>1e5) used
+    to vanish from the table. They must land in the terminal overflow
+    bucket, and the buckets must always partition the queries."""
+    counts = np.array([0, 5, 100_000, 100_001, 250_000, 10**7])
+    h = match_histogram(counts)
+    assert h[">1e5"] == 3
+    assert h["<=1e5"] == 1  # 100_000 is inclusive in the last printed column
+    assert sum(h.values()) == len(counts)
+
+
+@given(st.lists(st.integers(0, 10**7), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_match_histogram_partitions_any_counts(counts):
+    h = match_histogram(np.array(counts))
+    assert sum(h.values()) == len(counts)
+    assert all(v >= 0 for v in h.values())
+
+
+def test_select_radius_raises_on_infeasible_grid():
+    """Regression: an all-infeasible grid (every radius → zero matches for
+    every query) argmin'd to index 0 and silently blessed a vacuous
+    benchmark radius; it must raise instead. The single-radius grid also
+    exercises the np.gradient guard in sweep(), which crashed on < 2
+    samples."""
+    pts = _toy(64, seed=5)
+    qs = np.asarray(pts[:8]) + 100.0  # far from every corpus point
+    prof = sweep(pts, jnp.asarray(qs), np.array([1e-6], np.float32))
+    assert prof.robustness.shape == (1,) and prof.robustness[0] == 0.0
+    assert (prof.zero_frac == 1.0).all()
+    with pytest.raises(ValueError, match="no feasible radius"):
+        select_radius(prof)
+
+
+def test_select_radius_single_feasible_grid_point():
+    """A one-point grid with matches is degenerate but legal: sweep() must
+    not crash on the gradient and select_radius must return that point."""
+    pts = _toy(64, seed=5)
+    qs = np.asarray(pts[:8]) + 0.01
+    prof = sweep(pts, jnp.asarray(qs), np.array([10.0], np.float32))
+    r, gi = select_radius(prof, target_zero_frac=0.5)
+    assert gi == 0 and r == np.float32(10.0)
+
+
 # ---------------------------------------------------------------------------
 # graph container
 # ---------------------------------------------------------------------------

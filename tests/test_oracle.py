@@ -470,3 +470,219 @@ def test_effort_bucketed_continuous_batch_matches_oracle():
     # fallback for saturated lanes that arrived at a full pool)
     assert (srv.stats["pool_retired"] ==
             srv.stats["pool_admitted"] + srv.stats["pool_oneshot"])
+
+
+# ---------------------------------------------------------------------------
+# filtered range retrieval vs the post-filtered brute-force oracle
+# ---------------------------------------------------------------------------
+
+N_LABELS = 8
+_FILTER_RIG: dict = {}
+
+
+def _filter_rig():
+    """Labeled exact-recovery rig: well-built two_pass graph, beam >= ball
+    size, and radii midway between consecutive sorted distances — the
+    unfiltered walk recovers each in-range set exactly (same recipe as the
+    continuous-batch oracle test above), so filtered results are provable
+    EQUAL to the post-filtered brute-force oracle rather than merely close.
+    Returns (pts, raw label lists, f32 engine, int8 engine sharing the
+    graph, queries, exact dists (Q, N), mixed radii (Q,))."""
+    if not _FILTER_RIG:
+        from repro.core import pack_labels
+
+        pts = _toy(n=1200, d=10, seed=3)
+        graph = build_vamana(pts, BuildConfig(max_degree=24, beam=48,
+                                              insert_batch=256,
+                                              two_pass=True))
+        rng = np.random.default_rng(11)
+        raw = [sorted(int(x) for x in
+                      rng.choice(N_LABELS, size=int(rng.integers(1, 3)),
+                                 replace=False))
+               for _ in range(pts.shape[0])]
+        eng = RangeSearchEngine.from_graph(pts, graph,
+                                           labels=pack_labels(raw, N_LABELS))
+        eng_q = RangeSearchEngine(points=quantize_corpus(pts),
+                                  graph=eng.graph, start_ids=eng.start_ids,
+                                  labels=eng.labels, metric="l2")
+        qs = jnp.asarray(np.asarray(pts[:24]) + 0.01)
+        exact = np.asarray(point_dist(pts[None, :, :],
+                                      np.asarray(qs)[:, None, :], "l2"))
+        # mixed radii: lane i targets between 16 and 96 matches, each radius
+        # midway between the k-th and (k+1)-th sorted distances so the
+        # in-range set is unambiguous at f32 precision
+        srt = np.sort(exact, axis=1)
+        ks = np.linspace(16, 96, qs.shape[0]).astype(int)
+        lanes = np.arange(qs.shape[0])
+        radii = ((srt[lanes, ks] + srt[lanes, ks + 1]) / 2).astype(np.float32)
+        _FILTER_RIG.update(pts=pts, raw=raw, eng=eng, eng_q=eng_q, qs=qs,
+                           exact=exact, radii=radii)
+    r = _FILTER_RIG
+    return (r["pts"], r["raw"], r["eng"], r["eng_q"], r["qs"], r["exact"],
+            r["radii"])
+
+
+def _rig_cfg(**kw):
+    return RangeConfig(search=SearchConfig(beam=48, max_beam=48,
+                                           visit_cap=384),
+                       mode="greedy", result_cap=512, **kw)
+
+
+def _rig_filter(n_queries):
+    """Per-lane predicates mixing both modes and both selectivity regimes:
+    even lanes AND a single label (narrow posting list — entry seeding /
+    fallback territory), odd lanes OR two labels (broad)."""
+    from repro.core import make_label_filter
+
+    entries, modes = [], []
+    for q in range(n_queries):
+        if q % 2 == 0:
+            entries.append([q % N_LABELS])
+            modes.append("and")
+        else:
+            entries.append([q % N_LABELS, (q + 3) % N_LABELS])
+            modes.append("or")
+    return make_label_filter(entries, N_LABELS, modes=modes), entries, modes
+
+
+def _matches(raw, entries, modes, q, i):
+    lab = set(raw[i])
+    pred = set(entries[q])
+    return pred <= lab if modes[q] == "and" else bool(pred & lab)
+
+
+def _oracle_postfilter(raw, exact, radii, entries, modes, q):
+    ball = np.nonzero(exact[q] <= radii[q])[0]
+    return {int(i) for i in ball if _matches(raw, entries, modes, q, int(i))}
+
+
+@pytest.mark.parametrize("quantized", (False, True))
+@pytest.mark.parametrize("compacted", (True, False))
+def test_filtered_matches_postfiltered_oracle(quantized, compacted):
+    """Filtered range search == brute-force oracle post-filter: same ids
+    and consistent counts for f32 and int8 corpora, mixed per-query radii,
+    and both execution paths. Filtered-out points may still route the walk
+    but must never surface. Distances are exact on the f32 engine; on the
+    quantized engine they honor the guard-band contract — certified lower
+    bounds, replaced by exact values inside the rerank band."""
+    pts, raw, eng, eng_q, qs, exact, radii = _filter_rig()
+    e = eng_q if quantized else eng
+    filt, entries, modes = _rig_filter(qs.shape[0])
+    res = e.range(qs, jnp.asarray(radii), cfg=_rig_cfg(),
+                  compacted=compacted, filter=filt)
+    ids, dists, count, over = _rows(res)
+    assert not over.any()
+    for q in range(qs.shape[0]):
+        valid = ids[q] != INVALID_ID
+        got = ids[q][valid]
+        want = _oracle_postfilter(raw, exact, radii, entries, modes, q)
+        assert set(got.tolist()) == want, (
+            f"lane {q}: missing {sorted(want - set(got))[:5]}, "
+            f"extra {sorted(set(got) - want)[:5]}")
+        assert count[q] == len(want)
+        if quantized:  # lower-bound property, exact inside the rerank band
+            assert np.all(dists[q][valid] <= exact[q, got] + 1e-5), f"lane {q}"
+        else:
+            np.testing.assert_allclose(dists[q][valid], exact[q, got],
+                                       rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("compacted", (True, False))
+def test_filtered_allpass_bitwise_identical_to_unfiltered(compacted):
+    """The all-pass predicate (AND over the empty mask) is bitwise-neutral
+    on every RangeResult field — attaching labels to an engine can never
+    change unfiltered answers."""
+    from repro.core import all_pass_filter
+
+    pts, raw, eng, eng_q, qs, exact, radii = _filter_rig()
+    rv = jnp.asarray(radii)
+    ap = all_pass_filter(qs.shape[0], N_LABELS)
+    a = eng.range(qs, rv, cfg=_rig_cfg(), compacted=compacted)
+    b = eng.range(qs, rv, cfg=_rig_cfg(), compacted=compacted, filter=ap)
+    _assert_bitwise_equal(a, b, f"all-pass compacted={compacted}")
+
+
+def test_filtered_superset_predicate_monotonicity():
+    """Widening a predicate can only grow the result set: OR over a
+    superset of labels is a superset result; AND over a superset of labels
+    is a subset result. Structural on the fused path — the traversal is
+    predicate-independent, only the result gate moves."""
+    from repro.core import make_label_filter
+
+    pts, raw, eng, eng_q, qs, exact, radii = _filter_rig()
+    n = qs.shape[0]
+    rv = jnp.asarray(radii)
+    la = [[q % N_LABELS] for q in range(n)]
+    lb = [[q % N_LABELS, (q + 1) % N_LABELS] for q in range(n)]
+    f_or_a = make_label_filter(la, N_LABELS, modes="or")
+    f_or_b = make_label_filter(lb, N_LABELS, modes="or")
+    f_and_a = make_label_filter(la, N_LABELS, modes="and")
+    f_and_b = make_label_filter(lb, N_LABELS, modes="and")
+    get = lambda f: _rows(eng.range(qs, rv, cfg=_rig_cfg(),
+                                    compacted=False, filter=f))[0]
+    or_a, or_b = get(f_or_a), get(f_or_b)
+    and_a, and_b = get(f_and_a), get(f_and_b)
+    for q in range(n):
+        s = lambda ids: set(ids[q][ids[q] != INVALID_ID].tolist())
+        assert s(or_a) <= s(or_b), f"lane {q}: OR shrank under more labels"
+        assert s(and_b) <= s(and_a), f"lane {q}: AND grew under more labels"
+        # the two modes agree on single-label predicates
+        assert s(or_a) == s(and_a), f"lane {q}"
+
+
+def test_filtered_selectivity_fallback_matches_walk():
+    """With ``filter_threshold`` high enough to reroute the narrow AND
+    lanes, the per-lane brute-scan fallback returns exactly the walk
+    path's sets (both equal the post-filtered oracle) — and its lanes
+    visibly bypass the graph (n_visited == 0), proving the dispatch
+    actually took the fallback."""
+    pts, raw, eng, eng_q, qs, exact, radii = _filter_rig()
+    rv = jnp.asarray(radii)
+    filt, entries, modes = _rig_filter(qs.shape[0])
+    walk = eng.range(qs, rv, cfg=_rig_cfg(filter_threshold=0.0),
+                     compacted=True, filter=filt)
+    fb = eng.range(qs, rv, cfg=_rig_cfg(filter_threshold=0.25),
+                   compacted=True, filter=filt)
+    ids_w, _, cnt_w, _ = _rows(walk)
+    ids_f, dists_f, cnt_f, _ = _rows(fb)
+    nv = np.asarray(fb.n_visited)
+    # narrow single-label AND lanes (~19% of the corpus matches) fall
+    # back; broad two-label OR lanes (~36%) stay on the walk
+    assert (nv[::2] == 0).all(), "fallback lanes should not touch the graph"
+    assert (nv[1::2] > 0).all(), "walk lanes should traverse"
+    np.testing.assert_array_equal(cnt_w, cnt_f)
+    for q in range(qs.shape[0]):
+        sw = set(ids_w[q][ids_w[q] != INVALID_ID].tolist())
+        sf = set(ids_f[q][ids_f[q] != INVALID_ID].tolist())
+        assert sw == sf, f"lane {q}"
+        want = _oracle_postfilter(raw, exact, radii, entries, modes, q)
+        assert sf == want, f"lane {q} vs oracle"
+        valid = ids_f[q] != INVALID_ID
+        np.testing.assert_allclose(dists_f[q][valid],
+                                   exact[q, ids_f[q][valid]],
+                                   rtol=1e-6, atol=1e-5)
+
+
+def test_filtered_composes_with_tombstones():
+    """Labels and tombstones gate the same result stage independently:
+    filtered search over a tombstoned corpus returns (oracle ball minus
+    dead) post-filtered — deleted points neither answer nor break the
+    predicate bookkeeping."""
+    from repro.core.bitset import bitset_add
+
+    pts, raw, eng, eng_q, qs, exact, radii = _filter_rig()
+    n = pts.shape[0]
+    filt, entries, modes = _rig_filter(qs.shape[0])
+    dead = np.arange(0, n, 7, dtype=np.int32)  # kill every 7th point
+    tomb = bitset_add(jnp.zeros(((n + 31) // 32,), jnp.uint32),
+                      jnp.asarray(dead), jnp.ones(dead.shape, bool))
+    res = eng.range(qs, jnp.asarray(radii), cfg=_rig_cfg(), compacted=False,
+                    tombstones=tomb, filter=filt)
+    ids, _, count, _ = _rows(res)
+    dead_set = set(dead.tolist())
+    for q in range(qs.shape[0]):
+        got = set(ids[q][ids[q] != INVALID_ID].tolist())
+        want = _oracle_postfilter(raw, exact, radii, entries, modes, q)
+        want -= dead_set
+        assert got == want, f"lane {q}"
+        assert count[q] == len(want)
