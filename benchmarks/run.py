@@ -240,6 +240,19 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
           f"{dl['n_partial']} certified partials, mean coverage "
           f"{dl['mean_partial_coverage']}")
 
+    # -- replicated row: R=2 absorbs replica loss; hedging hides slowness ----
+    replicated = _replicated_row(n)
+    rl, rh = replicated["replica_loss"], replicated["hedged"]
+    print(f"[smoke] replicated (R={replicated['replicas']}, one replica of "
+          f"each shard down): coverage={rl['coverage']} code={rl['code']} "
+          f"bitwise_identical={rl['bitwise_identical']} replicas_ok="
+          f"{rl['replicas_ok']}/{rl['replicas_total']}; "
+          f"R=1 baseline coverage={replicated['baseline_r1_coverage']}")
+    print(f"[smoke] hedged (scripted-slow primaries, delay=0): "
+          f"hedges_fired={rh['hedges_fired']} hedge_wins={rh['hedge_wins']} "
+          f"bitwise_identical={rh['bitwise_identical']} "
+          f"ap_gap={rh['ap_gap']:+.5f}")
+
     # -- filtered row: predicate push-down vs the post-filtered oracle -------
     filtered = _filtered_row(n)
     print(f"[smoke] filtered (selective AND ~{filtered['selective_frac']:.2f}"
@@ -260,6 +273,7 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
         churn=churn,
         tail_latency=tail,
         degraded=degraded,
+        replicated=replicated,
         filtered=filtered,
         floors=dict(min_qps=min_qps, min_ap=min_ap,
                     max_mixed_ap_gap=MAX_MIXED_AP_GAP,
@@ -270,6 +284,7 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
                     max_tail_ap_gap=MAX_TAIL_AP_GAP,
                     min_degraded_ap_frac=MIN_DEGRADED_AP_FRAC,
                     min_deadline_complete_ap_frac=MIN_DEADLINE_COMPLETE_AP_FRAC,
+                    replicated_coverage=1.0, min_hedges_fired=1,
                     max_filtered_ap_gap=MAX_FILTERED_AP_GAP),
         timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
     )
@@ -316,6 +331,16 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
     if dl_frac is not None and dl_frac < MIN_DEADLINE_COMPLETE_AP_FRAC:
         print("[smoke] FAIL: lanes marked complete under a deadline "
               "returned degraded answers (certification bug)")
+        return 1
+    if rl["coverage"] != 1.0 or rl["code"] != "replica_lost" or \
+            not rl["bitwise_identical"]:
+        print("[smoke] FAIL: R=2 did not absorb one-replica-per-shard loss "
+              "(expected coverage 1.0, code replica_lost, bitwise-identical "
+              "results)")
+        return 1
+    if rh["hedges_fired"] < 1 or not rh["bitwise_identical"]:
+        print("[smoke] FAIL: hedge path not exercised or hedged results "
+              "deviate from the healthy run")
         return 1
     if filtered["ap_gap"] > MAX_FILTERED_AP_GAP:
         print("[smoke] FAIL: filtered AP (vs post-filtered oracle) trails "
@@ -574,6 +599,111 @@ def _degraded_row(n: int) -> dict:
              "recorded for trajectory tracking only",
     )
     return dict(n=n, radius=r, shard_loss=shard_loss, deadline=deadline)
+
+
+def _replicated_row(n: int) -> dict:
+    """Replicated-serving smoke: R=2 keeps the answer whole where R=1
+    degrades, and hedging hides slow primaries at zero answer cost.
+
+    Replica loss: the same 4-shard corpus as the degraded row, replicated
+    2-way, searched with one replica of EVERY shard scripted down
+    (alternating, so both replica slots are exercised). The surviving
+    replica of each shard is bitwise-identical — replica choice is
+    unobservable — so the gate is structural, not statistical:
+    ``coverage == 1.0``, results bitwise-equal to the healthy
+    single-replica run, and the response annotated ``replica_lost``
+    (redundancy degraded, answer not). PR 7's shard-loss row stays as the
+    R=1 baseline: same loss pattern without replication costs 25% of the
+    corpus (coverage 0.75).
+
+    Hedging: a fresh fleet with every shard's primary scripted ``slow``
+    and a zero hedge delay — each shard fires exactly one hedge, the
+    secondary wins, and the merged result is again bitwise-identical
+    (zero AP gap by construction, asserted bitwise rather than via a
+    float floor)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (
+        BuildConfig, RangeConfig, SearchConfig, average_precision,
+        build_vamana, exact_range_search,
+    )
+    from repro.core.graph import medoid
+    from repro.dist.sharded_engine import build_sharded
+    from repro.fault import (
+        FaultInjector, HedgePolicy, ReplicaFleet, ReplicatedCorpus,
+        RetryPolicy, fault_tolerant_sharded_search,
+    )
+
+    from .common import get_dataset
+
+    ds, pts, qs, _, prof, _ = get_dataset("bigann-like", n)
+    qs = qs[:128]
+    mean_counts = np.asarray(prof.counts).mean(axis=0)
+    r = float(prof.radii[int(np.argmin(np.abs(mean_counts - 128.0)))])
+    gt = exact_range_search(pts, qs, r, ds.metric)
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
+                                          metric=ds.metric, expand_width=4),
+                      mode="greedy", result_cap=1024)
+    bcfg = BuildConfig(max_degree=24, beam=48, insert_batch=256,
+                       two_pass=True, metric=ds.metric)
+    corpus = build_sharded(np.asarray(pts), 4,
+                           lambda p: (build_vamana(jnp.asarray(p), bcfg),
+                                      medoid(p)[None]))
+
+    def ap_of(res):
+        return float(average_precision(np.asarray(gt[0]), np.asarray(gt[2]),
+                                       np.asarray(res.ids),
+                                       np.asarray(res.count)))
+
+    def bitwise(a, b):
+        return bool(np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+                    and np.array_equal(np.asarray(a.dists),
+                                       np.asarray(b.dists))
+                    and np.array_equal(np.asarray(a.count),
+                                       np.asarray(b.count)))
+
+    fast_retry = RetryPolicy(max_attempts=2, backoff_s=0.0)
+    healthy = fault_tolerant_sharded_search(corpus=corpus, queries=qs, r=r,
+                                            cfg=cfg, retry=fast_retry)
+    ap_h = ap_of(healthy.result)
+    rep = ReplicatedCorpus.replicate(corpus, 2)
+
+    # -- one replica of every shard down: R=2 keeps coverage at 1.0 ----------
+    down = ((0, 0), (1, 1), (2, 0), (3, 1))
+    fleet = ReplicaFleet(rep)
+    lost = fault_tolerant_sharded_search(
+        fleet=fleet, queries=qs, r=r, cfg=cfg,
+        injector=FaultInjector(seed=0, down_replicas=down), retry=fast_retry)
+    ap_l = ap_of(lost.result)
+    replica_loss = dict(
+        down_replicas=[list(p) for p in down],
+        coverage=round(lost.coverage, 4), shards_ok=lost.shards_ok,
+        code=lost.code, bitwise_identical=bitwise(lost.result, healthy.result),
+        replicas_ok=lost.replicas_ok, replicas_total=lost.replicas_total,
+        ap_healthy=round(ap_h, 4), ap_replicated=round(ap_l, 4),
+        served_by=np.asarray(lost.served_by).tolist(),
+    )
+
+    # -- scripted-slow primaries + zero hedge delay: hedges win, zero gap ----
+    fleet_h = ReplicaFleet(rep)
+    hedged = fault_tolerant_sharded_search(
+        fleet=fleet_h, queries=qs, r=r, cfg=cfg,
+        injector=FaultInjector(
+            seed=0, script={(s, 0, 0): "slow" for s in range(4)}),
+        retry=fast_retry, hedge=HedgePolicy(delay_s=0.0))
+    ap_hg = ap_of(hedged.result)
+    hedged_row = dict(
+        hedges_fired=int(fleet_h.stats["hedges_fired"]),
+        hedge_wins=int(fleet_h.stats["hedge_wins"]),
+        bitwise_identical=bitwise(hedged.result, healthy.result),
+        ap_gap=round(ap_h - ap_hg, 6), code=hedged.code,
+        served_by=np.asarray(hedged.served_by).tolist(),
+    )
+
+    return dict(n=n, radius=r, replicas=2,
+                baseline_r1_coverage=0.75,
+                replica_loss=replica_loss, hedged=hedged_row)
 
 
 def _tail_latency_row(n: int) -> dict:

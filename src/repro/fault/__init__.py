@@ -1,34 +1,59 @@
-"""Fault tolerance: deadlines, shard-loss degradation, crash-safe WAL.
+"""Fault tolerance: deadlines, shard-loss degradation, crash-safe WAL,
+replication.
 
-Three independent pieces, threaded through serving and the live index:
+Independent pieces, threaded through serving and the live index:
 
 - :mod:`repro.fault.errors` — the error-code taxonomy shared by every
-  degraded-response path (queue rejection, deadline expiry, shard loss).
+  degraded-response path (queue rejection, deadline expiry, shard loss,
+  replica loss).
 - :mod:`repro.fault.wal` — an append-only, checksummed write-ahead log for
   live-index mutation batches, with a torn-tail-tolerant reader.
 - :mod:`repro.fault.injector` — a seeded, deterministic fault injector for
-  shard-level chaos testing (timeouts, errors, garbage results).
-- :mod:`repro.fault.degraded` — fault-tolerant sharded range search: host
-  fan-out over shards with per-shard validation, retry with exponential
-  backoff, and a per-shard validity mask on the merged result.
+  (shard, replica)-level chaos testing (timeouts, errors, garbage, slow).
+- :mod:`repro.fault.degraded` — fault-tolerant sharded range search:
+  concurrent host fan-out over shards with per-shard validation, retry
+  with jittered capped backoff, and a per-shard validity mask on the
+  merged result.
+- :mod:`repro.fault.replica` — R-way shard replication: bitwise-identical
+  replica sets, hedged reads off the per-shard latency histogram,
+  per-replica circuit breakers, and background replica recovery.
 """
 from .degraded import (
     DegradedResult,
     RetryPolicy,
     fault_tolerant_sharded_search,
+    merge_shard_results,
     validate_shard_result,
 )
-from .errors import DEADLINE_EXPIRED, ERROR_CODES, QUEUE_FULL, SHARD_LOST
+from .errors import DEADLINE_EXPIRED, ERROR_CODES, QUEUE_FULL, REPLICA_LOST, SHARD_LOST
 from .injector import FaultInjector, ShardError, ShardFault, ShardTimeout
+from .replica import (
+    BreakerConfig,
+    CircuitBreaker,
+    HedgePolicy,
+    ReplicaFleet,
+    ReplicaLost,
+    ReplicatedCorpus,
+    ReplicatedResult,
+    replicated_fan_out,
+)
 from .wal import WalRecord, WriteAheadLog
 
 __all__ = [
     "DEADLINE_EXPIRED",
     "ERROR_CODES",
     "QUEUE_FULL",
+    "REPLICA_LOST",
     "SHARD_LOST",
+    "BreakerConfig",
+    "CircuitBreaker",
     "DegradedResult",
     "FaultInjector",
+    "HedgePolicy",
+    "ReplicaFleet",
+    "ReplicaLost",
+    "ReplicatedCorpus",
+    "ReplicatedResult",
     "RetryPolicy",
     "ShardError",
     "ShardFault",
@@ -36,5 +61,7 @@ __all__ = [
     "WalRecord",
     "WriteAheadLog",
     "fault_tolerant_sharded_search",
+    "merge_shard_results",
+    "replicated_fan_out",
     "validate_shard_result",
 ]

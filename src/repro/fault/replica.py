@@ -1,0 +1,663 @@
+"""R-way shard replication: hedged fan-out, circuit breakers, recovery.
+
+PR 7's degradation contract shrinks the answer when a shard dies
+(``coverage < 1.0``) — the wrong trade for dedup/moderation workloads
+where a missed duplicate is a correctness failure. This module keeps the
+answer whole unless R failures coincide:
+
+- :class:`ReplicatedCorpus` materializes R bitwise-identical copies of a
+  :class:`~repro.dist.sharded_engine.ShardedCorpus`. Replicas being
+  bit-equal is the load-bearing invariant: *which replica answers is
+  unobservable in results*, so failover and hedging are free of
+  consistency reasoning.
+- :class:`ReplicaFleet` is the control plane: per-(shard, replica)
+  availability, per-replica :class:`CircuitBreaker` (consecutive-failure
+  trip, half-open probe after a cooldown, injectable clock), per-shard
+  latency histograms feeding :class:`HedgePolicy`, and background
+  recovery (``maintain()``) that re-admits rebuilt replicas through the
+  breaker's half-open state.
+- :func:`replicated_fan_out` is the replicated version of
+  ``fault_tolerant_sharded_search``: per shard, walk the available
+  replicas in rotation — failing over on timeout/error/garbage, hedging
+  past slow primaries — and accept the first *validated* answer
+  (``validate_shard_result`` defines trustworthy, so hedging composes
+  with garbage detection). A shard is lost only when every replica of it
+  is exhausted; a complete answer served with replicas down carries
+  ``code == "replica_lost"`` (health degraded, results not).
+
+Live (mutable) replication — fanning mutations to every replica of the
+owning shard and rebuilding a lost replica from checkpoint manifest + WAL
+tail — lives in :mod:`repro.live.sharded`; this module is the static-
+corpus data plane plus the shared control plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.beam_search import broadcast_radius
+from ..core.labels import LabelFilter
+from ..core.range_search import RangeConfig, RangeResult
+from ..dist.sharded_engine import ShardedCorpus
+from .degraded import (
+    DegradedResult,
+    RetryPolicy,
+    _corrupt_result,
+    _search_one_shard,
+    merge_shard_results,
+    run_shard_workers,
+    validate_shard_result,
+)
+from .errors import REPLICA_LOST, SHARD_LOST
+from .injector import FaultInjector, ShardError, ShardFault, ShardTimeout
+
+
+class ReplicaLost(ShardFault):
+    """The targeted replica's data is gone (host down, rebuild pending)."""
+
+    def __init__(self, shard: int, attempt: int, replica: int):
+        super().__init__("replica_lost", shard, attempt, replica)
+
+
+@dataclasses.dataclass
+class ReplicatedCorpus:
+    """R bitwise-identical copies of a sharded corpus.
+
+    Delegating properties expose replica 0's view, so anything that
+    duck-types a ``ShardedCorpus`` (server dtype probes, label checks)
+    works unchanged — by the parity invariant any replica would do.
+    """
+
+    replicas: List[ShardedCorpus]
+
+    @staticmethod
+    def replicate(corpus: ShardedCorpus, n: int) -> "ReplicatedCorpus":
+        """Materialize ``n`` bitwise-identical copies (fresh buffers each,
+        as distinct hosts would hold them)."""
+        if n < 1:
+            raise ValueError(f"replicas must be >= 1, got {n}")
+        copies = [corpus] + [
+            jax.tree.map(lambda x: jnp.array(x, copy=True), corpus)
+            for _ in range(n - 1)]
+        return ReplicatedCorpus(replicas=copies)
+
+    def replica(self, r: int) -> ShardedCorpus:
+        return self.replicas[r]
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def n_shards(self) -> int:
+        return self.replicas[0].n_shards
+
+    @property
+    def shard_size(self) -> int:
+        return self.replicas[0].shard_size
+
+    @property
+    def n_total(self) -> int:
+        return self.replicas[0].n_total
+
+    @property
+    def offsets(self):
+        return self.replicas[0].offsets
+
+    @property
+    def points(self):
+        return self.replicas[0].points
+
+    @property
+    def labels(self):
+        return self.replicas[0].labels
+
+    def parity_ok(self) -> bool:
+        """True iff every replica is bitwise-identical to replica 0."""
+        base = jax.tree.leaves(self.replicas[0])
+        for rep in self.replicas[1:]:
+            for a, b in zip(base, jax.tree.leaves(rep)):
+                if not np.array_equal(np.asarray(a), np.asarray(b)):
+                    return False
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakerConfig:
+    """Circuit-breaker tuning: trip after ``fail_threshold`` consecutive
+    failures; after ``cooldown_s`` admit a single half-open probe."""
+
+    fail_threshold: int = 3
+    cooldown_s: float = 30.0
+
+
+class CircuitBreaker:
+    """Per-replica breaker: closed -> open (on consecutive failures) ->
+    half-open (after cooldown, one probe in flight) -> closed on probe
+    success, re-open on probe failure. ``clock`` is injectable so tests
+    drive the cooldown with a fake clock instead of sleeping.
+    """
+
+    def __init__(self, cfg: Optional[BreakerConfig] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg or BreakerConfig()
+        self.clock = clock
+        self.state = "closed"
+        self.failures = 0       # consecutive, while closed
+        self.opened_at = 0.0
+        self.trips = 0
+        self._probing = False   # a half-open probe is in flight
+
+    def allow(self) -> bool:
+        """May a request be sent to this replica right now? Call only when
+        a request WILL be sent on True: in half-open this consumes the
+        single probe slot, which only ``record_success`` /
+        ``record_failure`` / ``release_probe`` give back."""
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            if self.clock() - self.opened_at < self.cfg.cooldown_s:
+                return False
+            self.state = "half_open"
+            self._probing = False
+        # half-open: exactly one probe at a time
+        if self._probing:
+            return False
+        self._probing = True
+        return True
+
+    def peek(self) -> bool:
+        """Would ``allow()`` return True, without consuming the probe slot
+        or transitioning state? (Routing lookahead — e.g. "is there a
+        replica to hedge to" — must not burn the half-open probe.)"""
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            return self.clock() - self.opened_at >= self.cfg.cooldown_s
+        return not self._probing
+
+    def release_probe(self) -> None:
+        """Give back an admitted-but-abandoned half-open probe (the hedged
+        slow path walks away from a request it will never resolve)."""
+        if self.state == "half_open":
+            self._probing = False
+
+    def record_success(self) -> None:
+        self.state = "closed"
+        self.failures = 0
+        self._probing = False
+
+    def record_failure(self) -> bool:
+        """Record a failure; returns True iff the breaker tripped open now."""
+        if self.state == "half_open":
+            self._trip()  # failed probe: straight back to open
+            return True
+        self.failures += 1
+        if self.state == "closed" and self.failures >= self.cfg.fail_threshold:
+            self._trip()
+            return True
+        return False
+
+    def force_open(self) -> None:
+        """Trip unconditionally (replica declared lost out-of-band)."""
+        if self.state != "open":
+            self._trip()
+
+    def to_half_open(self) -> None:
+        """Skip the cooldown: next ``allow()`` admits a probe (used when a
+        rebuilt replica is re-admitted by recovery)."""
+        self.state = "half_open"
+        self._probing = False
+        self.failures = 0
+
+    def _trip(self) -> None:
+        self.state = "open"
+        self.opened_at = self.clock()
+        self.failures = 0
+        self._probing = False
+        self.trips += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgePolicy:
+    """When to fire a hedge at the next replica.
+
+    ``delay_s`` pins a fixed hedge delay; otherwise the delay derives from
+    the shard's observed latency distribution: ``factor *
+    hist.percentile(percentile)`` (p95 by default — hedges fire for the
+    slowest ~5% of primaries, bounding tail latency at ~5% extra load),
+    clamped below by ``min_delay_s`` and falling back to ``fallback_s``
+    until the histogram has samples.
+    """
+
+    delay_s: Optional[float] = None
+    percentile: float = 95.0
+    factor: float = 1.0
+    min_delay_s: float = 1e-3
+    fallback_s: float = 0.05
+
+    def delay_for(self, hist) -> float:
+        if self.delay_s is not None:
+            return self.delay_s
+        if hist is None or getattr(hist, "count", 0) == 0:
+            return self.fallback_s
+        return max(self.min_delay_s,
+                   self.factor * float(hist.percentile(self.percentile)))
+
+
+class ReplicaFleet:
+    """Control plane for an R-way replicated corpus.
+
+    Tracks per-(shard, replica) availability and circuit breakers, feeds
+    per-shard latency histograms to the hedge policy, and recovers lost
+    replicas in the background (``maintain()``). Thread-safe: the fan-out
+    runs one worker per shard and they share this state.
+
+    ``recover_fn(shard, replica) -> bool`` customizes recovery (e.g. a
+    live rebuild from checkpoint + WAL tail); the default models copying
+    the shard's block from any surviving peer, which is always possible
+    while at least one replica of the shard is alive — and always yields a
+    bit-identical replica, because replicas never diverge. A recovered
+    replica re-enters through the breaker's half-open state, so the first
+    request after recovery is a probe.
+    """
+
+    def __init__(self, corpus, *, breaker: Optional[BreakerConfig] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 recover_fn: Optional[Callable[[int, int], bool]] = None):
+        if isinstance(corpus, ShardedCorpus):
+            corpus = ReplicatedCorpus(replicas=[corpus])
+        self.corpus: ReplicatedCorpus = corpus
+        self.clock = clock
+        self.breaker_cfg = breaker or BreakerConfig()
+        self.recover_fn = recover_fn
+        self.breakers: Dict[Tuple[int, int], CircuitBreaker] = {
+            (s, rep): CircuitBreaker(self.breaker_cfg, clock)
+            for s in range(self.n_shards) for rep in range(self.n_replicas)}
+        self.lost: Set[Tuple[int, int]] = set()
+        self._hists: List[Optional[object]] = [None] * self.n_shards
+        self.stats: Dict[str, int] = {
+            "hedges_fired": 0, "hedge_wins": 0, "breaker_trips": 0,
+            "replicas_lost": 0, "replicas_recovered": 0}
+        self._lock = threading.Lock()
+
+    @property
+    def n_shards(self) -> int:
+        return self.corpus.n_shards
+
+    @property
+    def n_replicas(self) -> int:
+        return self.corpus.n_replicas
+
+    # -- routing ----------------------------------------------------------
+
+    def order(self, shard: int, start: int) -> List[int]:
+        """Live replicas of ``shard`` in rotation starting at ``start`` —
+        rotating by attempt spreads load and never re-primaries a replica
+        that just failed."""
+        n = self.n_replicas
+        return [rep for rep in ((start + k) % n for k in range(n))
+                if (shard, rep) not in self.lost]
+
+    def allow(self, shard: int, replica: int) -> bool:
+        """Admit a request that WILL be sent (consumes a half-open probe)."""
+        with self._lock:
+            if (shard, replica) in self.lost:
+                return False
+            return self.breakers[(shard, replica)].allow()
+
+    def would_allow(self, shard: int, replica: int) -> bool:
+        """Non-mutating admission check for routing lookahead."""
+        with self._lock:
+            if (shard, replica) in self.lost:
+                return False
+            return self.breakers[(shard, replica)].peek()
+
+    def release(self, shard: int, replica: int) -> None:
+        """Release an admitted half-open probe that will never resolve."""
+        with self._lock:
+            self.breakers[(shard, replica)].release_probe()
+
+    def record_success(self, shard: int, replica: int) -> None:
+        with self._lock:
+            self.breakers[(shard, replica)].record_success()
+
+    def record_failure(self, shard: int, replica: int) -> bool:
+        with self._lock:
+            tripped = self.breakers[(shard, replica)].record_failure()
+            if tripped:
+                self.stats["breaker_trips"] += 1
+            return tripped
+
+    def healthy(self, shard: int, replica: int) -> bool:
+        """Not lost and not breaker-open (half-open counts as healthy-ish:
+        it is being probed back in)."""
+        with self._lock:
+            return ((shard, replica) not in self.lost
+                    and self.breakers[(shard, replica)].state != "open")
+
+    # -- latency / hedging ------------------------------------------------
+
+    def hist(self, shard: int):
+        h = self._hists[shard]
+        if h is None:
+            # Lazy import: repro.serve imports repro.fault submodules, so a
+            # module-level import here would be circular.
+            from ..serve.latency import LatencyHistogram
+            h = self._hists[shard] = LatencyHistogram()
+        return h
+
+    def record_latency(self, shard: int, seconds: float) -> None:
+        with self._lock:
+            self.hist(shard).record(seconds)
+
+    def hedge_delay(self, shard: int, policy: HedgePolicy) -> float:
+        with self._lock:
+            return policy.delay_for(self._hists[shard])
+
+    # -- loss & recovery --------------------------------------------------
+
+    def lose(self, shard: int, replica: int) -> None:
+        """Declare a replica's data gone (host died, disk lost). Searches
+        skip it; ``maintain()`` rebuilds it."""
+        with self._lock:
+            if (shard, replica) in self.lost:
+                return
+            self.lost.add((shard, replica))
+            self.stats["replicas_lost"] += 1
+            self.breakers[(shard, replica)].force_open()
+
+    def maintain(self) -> int:
+        """Background recovery sweep: rebuild each lost replica whose shard
+        still has a surviving peer to rebuild from, and re-admit it through
+        the breaker's half-open probe. Returns replicas recovered."""
+        recovered = 0
+        for shard, replica in sorted(self.lost):
+            peers = [rep for rep in range(self.n_replicas)
+                     if rep != replica and (shard, rep) not in self.lost]
+            if not peers:
+                continue  # nothing to rebuild from; shard itself is lost
+            if self.recover_fn is not None and not self.recover_fn(shard, replica):
+                continue  # rebuild still in progress
+            with self._lock:
+                self.lost.discard((shard, replica))
+                self.breakers[(shard, replica)].to_half_open()
+                self.stats["replicas_recovered"] += 1
+            recovered += 1
+        return recovered
+
+    def replica_ok_matrix(self) -> np.ndarray:
+        """(S, R) bool — replica neither lost nor breaker-open."""
+        return np.array(
+            [[self.healthy(s, rep) for rep in range(self.n_replicas)]
+             for s in range(self.n_shards)], bool)
+
+
+@dataclasses.dataclass
+class ReplicatedResult(DegradedResult):
+    """A DegradedResult plus replica-level health for the batch.
+
+    ``complete``/``coverage`` keep PR 7 semantics but over *shards*: a
+    shard counts as ok if ANY replica of it answered, so ``coverage <
+    1.0`` only when every replica of some shard was exhausted. ``code``
+    refines the contract: ``shard_lost`` beats ``replica_lost`` beats
+    ``None`` (fully healthy, full redundancy).
+    """
+
+    replica_ok: np.ndarray   # (S, R) bool — healthy at merge time AND did
+    #                          not fail unrecovered during this batch
+    served_by: np.ndarray    # (S,) int32 — replica that answered, -1 if lost
+    hedges_fired: int
+    hedge_wins: int
+    breaker_trips: int
+
+    @property
+    def replicas_total(self) -> int:
+        return int(self.replica_ok.size)
+
+    @property
+    def replicas_ok(self) -> int:
+        return int(self.replica_ok.sum())
+
+    @property
+    def code(self) -> Optional[str]:
+        if not self.complete:
+            return SHARD_LOST
+        if self.replicas_ok < self.replicas_total:
+            return REPLICA_LOST
+        return None
+
+
+@dataclasses.dataclass
+class _ShardOutcome:
+    ok: bool = False
+    res: Optional[RangeResult] = None
+    attempts: int = 0
+    fault: Optional[str] = None
+    served: int = -1
+    hedges: int = 0
+    wins: int = 0
+    # replicas that failed during this batch and never subsequently
+    # succeeded — degraded redundancy even if a peer kept the answer whole
+    rep_failed: Set[int] = dataclasses.field(default_factory=set)
+
+
+def replicated_fan_out(
+    *,
+    fleet: ReplicaFleet,
+    queries,
+    r,
+    cfg: RangeConfig,
+    es_radius=None,
+    tombstones=None,
+    label_filter: Optional[LabelFilter] = None,
+    injector: Optional[FaultInjector] = None,
+    retry: Optional[RetryPolicy] = None,
+    sleep: Callable[[float], None] = time.sleep,
+    max_workers: Optional[int] = None,
+    hedge: Optional[HedgePolicy] = None,
+    preferred: int = 0,
+) -> ReplicatedResult:
+    """Replicated fault-tolerant range search (one worker per shard).
+
+    Per shard, per retry attempt: walk the live, breaker-admitted replicas
+    in rotation (primary first). Timeout/error/garbage fail over to the
+    next replica immediately and count against that replica's breaker; a
+    scripted-``slow`` primary is *hedged* — abandoned for the next replica
+    without a breaker penalty (slow isn't sick). The first answer that
+    passes :func:`validate_shard_result` wins; by the bitwise-parity
+    invariant the winner's identity is unobservable in the merged result.
+
+    When no injector scripts timing, hedging is wall-clock: the primary
+    runs under a real timer and the hedge fires after
+    ``hedge.delay_for(per-shard histogram)`` seconds (see
+    :class:`HedgePolicy`), first validated answer wins.
+
+    The merge is ``merge_shard_results`` in shard order — bitwise-identical
+    to the single-replica serial reference restricted to surviving shards.
+    """
+    retry = retry or RetryPolicy()
+    corpus0 = fleet.corpus.replica(0)
+    if label_filter is not None and corpus0.labels is None:
+        raise ValueError(
+            "corpus has no labels attached; build_sharded(..., labels=) to "
+            "use filtered range search")
+    queries = jnp.asarray(queries)
+    n_q = queries.shape[0]
+    radii = broadcast_radius(r, n_q)
+    es_vec = broadcast_radius(es_radius, n_q)
+    radii_np = np.asarray(radii)
+    s_total = fleet.n_shards
+    rows = fleet.corpus.shard_size
+    cap = cfg.result_cap
+    offsets_np = np.asarray(fleet.corpus.offsets)
+    # Real-timing hedges race primary vs. hedge in their own small pool;
+    # scripted ("slow") hedges are deterministic and need no timers.
+    wall_clock_hedge = hedge is not None and injector is None \
+        and fleet.n_replicas > 1
+    hedge_pool = ThreadPoolExecutor(
+        max_workers=min(32, max(2, s_total * 2))) if wall_clock_hedge else None
+
+    def search_replica(s: int, rep: int, offset: int, attempt: int,
+                       kind: Optional[str]) -> RangeResult:
+        """One (shard, replica) try: search, maybe corrupt, validate."""
+        t0 = time.perf_counter()
+        res = _search_one_shard(
+            fleet.corpus.replica(rep), s, queries, radii, cfg, es_vec,
+            tombstones, label_filter)
+        if kind == "garbage":
+            res = _corrupt_result(res, injector.rng(s, attempt, rep))
+        if not validate_shard_result(res, offset, rows, corpus0.n_total,
+                                     radii_np, atol=retry.atol,
+                                     rtol=retry.rtol):
+            raise ShardFault("garbage", s, attempt, rep)
+        fleet.record_latency(s, time.perf_counter() - t0)
+        return res
+
+    def walk_scripted(st: _ShardOutcome, s: int, offset: int, attempt: int,
+                      order: Sequence[int]) -> bool:
+        """Deterministic walk: failover + scripted-slow hedging. Admission
+        happens at contact time — ``allow()`` consumes a half-open probe,
+        so it must only run for replicas the walk actually reaches."""
+        pending_hedge = False
+        for k, rep in enumerate(order):
+            if not fleet.allow(s, rep):
+                continue
+            kind = (injector.fault_for(s, attempt, rep)
+                    if injector is not None else None)
+            if kind == "slow":
+                if hedge is not None and any(
+                        fleet.would_allow(s, nxt) for nxt in order[k + 1:]):
+                    # Primary is past the hedge deadline: fire the next
+                    # replica and race ahead. Slow is not a failure — no
+                    # breaker penalty (release the probe the abandoned
+                    # request held), and the late answer (identical by
+                    # parity) would simply lose the race.
+                    st.hedges += 1
+                    pending_hedge = True
+                    fleet.release(s, rep)
+                    continue
+                kind = None  # nothing to hedge to: just a late success
+            try:
+                if kind == "timeout":
+                    raise ShardTimeout(s, attempt, rep)
+                if kind == "error":
+                    raise ShardError(s, attempt, rep)
+                res = search_replica(s, rep, offset, attempt, kind)
+            except ShardFault as e:
+                st.fault = e.kind
+                st.rep_failed.add(rep)
+                fleet.record_failure(s, rep)
+                continue
+            fleet.record_success(s, rep)
+            st.rep_failed.discard(rep)
+            if pending_hedge:
+                st.wins += 1
+            st.ok, st.res, st.served = True, res, rep
+            return True
+        return False
+
+    def walk_timed(st: _ShardOutcome, s: int, offset: int, attempt: int,
+                   order: Sequence[int]) -> bool:
+        """Wall-clock walk: race primary vs. hedges, first validated wins.
+        Replicas are admitted as they are submitted (never pre-filtered:
+        ``allow()`` consumes a half-open probe, and every submitted request
+        resolves it through ``record_success``/``record_failure``)."""
+        delay = fleet.hedge_delay(s, hedge)
+        futs: Dict[object, int] = {}
+        next_k = 0
+
+        def submit_next() -> Optional[int]:
+            nonlocal next_k
+            while next_k < len(order):
+                rep = order[next_k]
+                next_k += 1
+                if fleet.allow(s, rep):
+                    futs[hedge_pool.submit(
+                        search_replica, s, rep, offset, attempt, None)] = rep
+                    return rep
+            return None
+
+        primary = submit_next()
+        while futs:
+            done, pending = wait(futs, timeout=delay,
+                                 return_when=FIRST_COMPLETED)
+            if not done and next_k < len(order):
+                if submit_next() is not None:
+                    st.hedges += 1
+                continue
+            if not done:
+                continue  # all hedges in flight; keep waiting
+            fut = next(iter(done))
+            rep = futs.pop(fut)
+            try:
+                res = fut.result()
+            except ShardFault as e:
+                st.fault = e.kind
+                st.rep_failed.add(rep)
+                fleet.record_failure(s, rep)
+                if not futs:
+                    submit_next()  # failover, not a hedge
+                continue
+            fleet.record_success(s, rep)
+            st.rep_failed.discard(rep)
+            if rep != primary:
+                st.wins += 1
+            st.ok, st.res, st.served = True, res, rep
+            for f in futs:  # late answers are identical by parity; drop them
+                f.cancel()
+            return True
+        return False
+
+    def run_shard(s: int) -> _ShardOutcome:
+        offset = int(offsets_np[s])
+        st = _ShardOutcome()
+        for attempt in range(retry.max_attempts):
+            st.attempts += 1
+            order = fleet.order(s, preferred + attempt)
+            if order:
+                walk = walk_timed if wall_clock_hedge else walk_scripted
+                if walk(st, s, offset, attempt, order):
+                    return st
+            if attempt + 1 < retry.max_attempts:
+                d = retry.delay_s(attempt, key=s)
+                if d > 0:
+                    sleep(d)
+        return st
+
+    try:
+        outcomes: List[_ShardOutcome] = run_shard_workers(
+            run_shard, s_total, max_workers)
+    finally:
+        if hedge_pool is not None:
+            hedge_pool.shutdown(wait=False)
+
+    shard_ok = np.array([st.ok for st in outcomes], bool)
+    attempts = np.array([st.attempts for st in outcomes], np.int32)
+    faults = [st.fault for st in outcomes]
+    per_shard = [st.res for st in outcomes]
+    hedges = sum(st.hedges for st in outcomes)
+    wins = sum(st.wins for st in outcomes)
+    with fleet._lock:
+        fleet.stats["hedges_fired"] += hedges
+        fleet.stats["hedge_wins"] += wins
+        trips_total = fleet.stats["breaker_trips"]
+
+    replica_ok = fleet.replica_ok_matrix()
+    for s, st in enumerate(outcomes):
+        for rep in st.rep_failed:
+            replica_ok[s, rep] = False
+
+    merged = merge_shard_results(per_shard, shard_ok, n_q, cap)
+    return ReplicatedResult(
+        result=merged, shard_ok=shard_ok, attempts=attempts, faults=faults,
+        replica_ok=replica_ok,
+        served_by=np.array([st.served for st in outcomes], np.int32),
+        hedges_fired=hedges, hedge_wins=wins, breaker_trips=trips_total)

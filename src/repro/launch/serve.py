@@ -7,6 +7,11 @@
 Builds the synthetic corpus, selects a radius with the paper's Sec.-3
 methodology, builds the Vamana index, starts the RangeServer and drives a
 batch of requests through it, reporting QPS / AP / early-stop stats.
+``--shards S`` serves through the fault-tolerant host fan-out; add
+``--replicas R`` (plus optionally ``--hedge-ms`` and ``--down-replicas``)
+to serve an R-way replicated fleet with hedged reads, circuit breakers,
+and background replica recovery — coverage stays 1.0 while any replica of
+every shard survives.
 ``--mixed-radius`` spreads per-request radii across the corpus's match
 distribution (real traffic mixes duplicate-detection-tight and
 recommendation-wide thresholds); the server batches them together and
@@ -36,6 +41,88 @@ from ..data.synthetic import make_corpus
 from ..live import LiveConfig, LiveIndex
 from ..serve import RangeServer, Request, ServerConfig
 from ..utils import INVALID_ID
+
+
+def _replicated_main(args) -> int:
+    """Sharded/replicated traffic driver: host fan-out serving with R-way
+    replication, hedged reads, and scripted replica loss."""
+    from ..core.build import build_vamana, medoid
+    from ..dist.sharded_engine import build_sharded
+    from ..fault import FaultInjector, HedgePolicy, RetryPolicy
+
+    n_shards = max(args.shards, 1)
+    print(f"[serve] SHARDED corpus {args.profile} n={args.n} "
+          f"shards={n_shards} replicas={args.replicas}")
+    ds = make_corpus(args.profile, n=args.n, n_queries=args.queries)
+    pts = np.asarray(ds.points, np.float32)
+    qs = ds.queries
+
+    grid = default_grid(ds.points, ds.queries, ds.metric, num=24)
+    prof = sweep(jnp.asarray(pts), jnp.asarray(qs), grid, ds.metric)
+    r, gi = select_radius(prof, robustness_weight=0.2)
+    print(f"[serve] selected radius {r:.4g} "
+          f"(zero-result frac {prof.zero_frac[gi]:.2f})")
+
+    bcfg = BuildConfig(max_degree=32, beam=64, metric=ds.metric)
+    t0 = time.perf_counter()
+    corpus = build_sharded(
+        pts, n_shards,
+        lambda p: (build_vamana(jnp.asarray(p), bcfg), medoid(p)[None]),
+        corpus_dtype=args.corpus_dtype)
+    print(f"[serve] {n_shards}-shard index built in "
+          f"{time.perf_counter() - t0:.1f}s")
+
+    down = []
+    if args.down_replicas:
+        down = [tuple(int(x) for x in pair.split(":"))
+                for pair in args.down_replicas.split(",")]
+        print(f"[serve] scripted replica loss: {down}")
+    injector = FaultInjector(seed=0, down_replicas=tuple(down)) if down else None
+    hedge = (HedgePolicy(delay_s=args.hedge_ms / 1e3)
+             if args.hedge_ms > 0 else None)
+
+    rcfg = EngineDeployConfig().overrides(
+        metric=ds.metric,
+        beam=args.beam, max_beam=args.beam, visit_cap=512,
+        expand_width=args.expand_width, corpus_dtype=args.corpus_dtype,
+        mode=args.mode, result_cap=2048).range_cfg
+    srv = RangeServer(None, rcfg, ServerConfig(max_batch=args.max_batch),
+                      sharded=corpus, replicas=args.replicas,
+                      injector=injector, hedge=hedge,
+                      retry=RetryPolicy(backoff_s=0.01))
+
+    t0 = time.perf_counter()
+    resp = []
+    for i in range(args.queries):
+        rq = Request(req_id=i, query=qs[i], radius=float(r))
+        while srv.submit(rq) is not None:
+            resp.extend(srv.step())
+    resp.extend(srv.run_until_drained())
+    dt = time.perf_counter() - t0
+
+    gt_ids, _, gt_counts = exact_range_search(
+        jnp.asarray(pts), jnp.asarray(qs), float(r), ds.metric)
+    res_ids = np.full((args.queries, 4096), 2**31 - 1, np.int64)
+    counts = np.zeros(args.queries, np.int64)
+    for rp in resp:
+        k = min(len(rp.ids), 4096)
+        res_ids[rp.req_id, :k] = rp.ids[:k]
+        counts[rp.req_id] = k
+    ap = average_precision(np.asarray(gt_ids), np.asarray(gt_counts),
+                           res_ids, counts)
+    cov = min(rp.coverage for rp in resp)
+    codes = {rp.code for rp in resp}
+    print(f"[serve] {args.queries} queries in {dt:.3f}s = "
+          f"{args.queries / dt:.0f} QPS; AP={ap:.4f}; "
+          f"min coverage={cov:.2f} codes={codes}")
+    st = srv.stats
+    print(f"[serve] replication: hedges_fired={st['hedges_fired']} "
+          f"hedge_wins={st['hedge_wins']} breaker_trips={st['breaker_trips']} "
+          f"replicas_lost={st['replicas_lost']} "
+          f"replicas_recovered={st['replicas_recovered']} "
+          f"shards_lost={st['shards_lost']} "
+          f"degraded_batches={st['degraded_batches']}")
+    return 0
 
 
 def _churn_main(args) -> int:
@@ -227,10 +314,25 @@ def main(argv=None):
                         "oracle)")
     p.add_argument("--num-labels", type=int, default=16,
                    help="synthetic label vocabulary size for --filter-frac")
+    p.add_argument("--shards", type=int, default=0,
+                   help="serve through the fault-tolerant host fan-out over "
+                        "this many shards (0 = single frozen index)")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="R-way shard replication (implies --shards serving; "
+                        "coverage stays 1.0 under loss of R-1 replicas of "
+                        "any shard)")
+    p.add_argument("--hedge-ms", type=float, default=0.0,
+                   help="hedge delay in ms: fire the next replica when the "
+                        "primary is slower than this (0 disables hedging)")
+    p.add_argument("--down-replicas", default="",
+                   help="scripted replica loss, e.g. '0:0,1:1' downs shard "
+                        "0's replica 0 and shard 1's replica 1")
     args = p.parse_args(argv)
 
     if args.churn > 0:
         return _churn_main(args)
+    if args.shards > 0 or args.replicas > 1:
+        return _replicated_main(args)
 
     print(f"[serve] corpus {args.profile} n={args.n}")
     ds = make_corpus(args.profile, n=args.n, n_queries=args.queries)

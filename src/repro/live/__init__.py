@@ -2,7 +2,7 @@
 background consolidation over the frozen range-retrieval engine."""
 from .consolidate import consolidate_index
 from .index import FAR, LiveConfig, LiveIndex, LiveSnapshot, externalize_ids
-from .sharded import LiveShardedIndex
+from .sharded import LiveShardedIndex, clone_live_index
 
 __all__ = [
     "FAR",
@@ -10,6 +10,7 @@ __all__ = [
     "LiveIndex",
     "LiveSnapshot",
     "LiveShardedIndex",
+    "clone_live_index",
     "consolidate_index",
     "externalize_ids",
 ]

@@ -16,6 +16,16 @@ owns the global external-id space and the ``ext -> shard`` ownership map:
   slots at the result stage, the union merge sees live candidates only.
   The stacked view is cached per epoch vector, so serving traffic pays the
   stack cost once per mutation batch, not per query.
+
+With ``replicas=R`` each shard is an R-member **replica group**: every
+mutation batch fans to all members of the owning group, and because a
+``LiveIndex`` mutation is a deterministic function of its state, replicas
+that start bitwise-identical *stay* bitwise-identical under churn (pinned
+by ``assert_replica_parity``). Queries read replica 0 (any member would
+be bit-equal); ``replicated_corpus()`` exposes the stacked per-replica
+views to the hedged fan-out (``repro.fault.replica``); a lost replica is
+rebuilt from a checkpoint manifest + WAL tail (``rebuild_replica``) —
+replay is deterministic, so the rebuilt member rejoins bit-identical.
 """
 from __future__ import annotations
 
@@ -32,20 +42,52 @@ from ..dist.sharded_engine import ShardedCorpus, sharded_range_search
 from .index import LiveConfig, LiveIndex, externalize_ids
 
 
-class LiveShardedIndex:
-    """Router over per-shard ``LiveIndex`` sub-indices (uniform capacity)."""
+def clone_live_index(idx: LiveIndex) -> LiveIndex:
+    """A bitwise-identical, independently-mutable copy of a live index.
 
-    def __init__(self, shards: list[LiveIndex]):
+    Device arrays are shared (jnp arrays are immutable — every mutation
+    replaces the reference, so clones can never diverge through aliasing);
+    host bookkeeping is copied. The clone has NO WAL attached: in a
+    replica group exactly one member (the primary) logs, since replaying
+    that one log reproduces every member bit-for-bit.
+    """
+    clone = LiveIndex(
+        points=idx.points, neighbors=idx.neighbors, start_ids=idx.start_ids,
+        ext_ids=idx.ext_ids.copy(), tombstones=idx.tombstones,
+        live_count=idx.live_count, next_ext_id=idx.next_ext_id,
+        epoch=idx.epoch, metric=idx.metric, build_cfg=idx.build_cfg,
+        cfg=idx.cfg, dead_slots=set(idx._dead), labels=idx.labels)
+    clone.wal_seq = idx.wal_seq  # same mutation history, no log handle
+    return clone
+
+
+class LiveShardedIndex:
+    """Router over per-shard ``LiveIndex`` sub-indices (uniform capacity),
+    optionally R-way replicated (``replica_groups``)."""
+
+    def __init__(self, shards: list[LiveIndex],
+                 replica_groups: Optional[list[list[LiveIndex]]] = None):
         if not shards:
             raise ValueError("need at least one shard")
+        if replica_groups is None:
+            replica_groups = [[sh] for sh in shards]
+        if len(replica_groups) != len(shards) or any(
+                g[0] is not sh for g, sh in zip(replica_groups, shards)):
+            raise ValueError("replica_groups[s][0] must be shards[s]")
+        n_rep = len(replica_groups[0])
+        if any(len(g) != n_rep for g in replica_groups):
+            raise ValueError("every shard needs the same replica count")
         cap = shards[0].capacity
         deg = shards[0].neighbors.shape[1]
-        for sh in shards[1:]:
-            if sh.capacity != cap or sh.neighbors.shape[1] != deg:
-                raise ValueError("shards must share capacity and max degree")
-            if sh.metric != shards[0].metric:
-                raise ValueError("shards must share the metric")
+        for g in replica_groups:
+            for sh in g:
+                if sh.capacity != cap or sh.neighbors.shape[1] != deg:
+                    raise ValueError(
+                        "shards must share capacity and max degree")
+                if sh.metric != shards[0].metric:
+                    raise ValueError("shards must share the metric")
         self.shards = shards
+        self.groups = replica_groups
         self.next_ext_id = max(sh.next_ext_id for sh in shards)
         self._owner: dict[int, int] = {}
         for si, sh in enumerate(shards):
@@ -57,9 +99,14 @@ class LiveShardedIndex:
     @staticmethod
     def create(points, n_shards: int, cfg: LiveConfig,
                build_cfg: Optional[BuildConfig] = None, metric: str = "l2",
-               corpus_dtype: str = "float32", seed: int = 0) -> "LiveShardedIndex":
+               corpus_dtype: str = "float32", seed: int = 0,
+               replicas: int = 1) -> "LiveShardedIndex":
         """Partition ``points`` into contiguous blocks, one live sub-index
-        per block; ``cfg.capacity`` is the PER-SHARD capacity."""
+        per block; ``cfg.capacity`` is the PER-SHARD capacity. With
+        ``replicas=R`` each shard is built once and cloned R-1 times (the
+        clones are bitwise-identical by construction)."""
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
         pts = np.asarray(points, np.float32)
         n = -(-pts.shape[0] // n_shards)
         shards = []
@@ -69,7 +116,9 @@ class LiveShardedIndex:
                 block, cfg, build_cfg=build_cfg, metric=metric,
                 corpus_dtype=corpus_dtype, seed=seed + s,
                 first_ext_id=s * n))
-        idx = LiveShardedIndex(shards)
+        groups = [[sh] + [clone_live_index(sh) for _ in range(replicas - 1)]
+                  for sh in shards]
+        idx = LiveShardedIndex(shards, replica_groups=groups)
         idx.next_ext_id = pts.shape[0]
         return idx
 
@@ -77,6 +126,10 @@ class LiveShardedIndex:
     @property
     def n_shards(self) -> int:
         return len(self.shards)
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.groups[0])
 
     @property
     def n_live(self) -> int:
@@ -116,8 +169,9 @@ class LiveShardedIndex:
         while off < k:
             si = int(np.argmax(free))
             take = min(k - off, free[si])
-            self.shards[si].insert(vecs[off:off + take],
-                                   ext_ids=ext[off:off + take])
+            for member in self.groups[si]:  # fan to EVERY replica of the
+                member.insert(vecs[off:off + take],  # owning shard
+                              ext_ids=ext[off:off + take])
             for e in ext[off:off + take]:
                 self._owner[int(e)] = si
             free[si] -= take
@@ -126,19 +180,104 @@ class LiveShardedIndex:
         return ext
 
     def delete(self, ext_ids) -> int:
-        """Tombstone each id in its owning shard's bitset."""
+        """Tombstone each id in its owning shard's bitset (every replica)."""
         ext_ids = np.atleast_1d(np.asarray(ext_ids, np.int64))
         per_shard: dict[int, list[int]] = {}
         for e in ext_ids:
             si = self._owner.get(int(e))
             if si is not None:
                 per_shard.setdefault(si, []).append(int(e))
-        return sum(self.shards[si].delete(np.asarray(ids, np.int64))
-                   for si, ids in per_shard.items())
+        deleted = 0
+        for si, ids in per_shard.items():
+            for member in self.groups[si]:
+                n = member.delete(np.asarray(ids, np.int64))
+            deleted += n  # members agree by parity; count once
+        return deleted
 
     def maybe_consolidate(self) -> int:
-        """Per-shard threshold check; returns shards consolidated."""
-        return sum(int(sh.maybe_consolidate()) for sh in self.shards)
+        """Per-shard threshold check; returns shards consolidated. Replicas
+        of a shard consolidate together (the threshold decision is a pure
+        function of state they share bitwise)."""
+        done = 0
+        for g in self.groups:
+            ran = [bool(member.maybe_consolidate()) for member in g]
+            if any(ran) != all(ran):  # diverged state — parity was broken
+                raise AssertionError(
+                    "replica group disagreed on consolidation")
+            done += int(ran[0])
+        return done
+
+    # -- replication ---------------------------------------------------------
+    def assert_replica_parity(self) -> None:
+        """Every replica of every shard is bitwise-identical to its primary
+        (the invariant that makes replica choice unobservable). Raises
+        ``AssertionError`` with the diverging field otherwise."""
+        for si, g in enumerate(self.groups):
+            base = g[0]
+            for ri, member in enumerate(g[1:], start=1):
+                for field in ("neighbors", "start_ids", "tombstones"):
+                    a = np.asarray(getattr(base, field))
+                    b = np.asarray(getattr(member, field))
+                    if not np.array_equal(a, b):
+                        raise AssertionError(
+                            f"shard {si} replica {ri}: {field} diverged")
+                for a, b in zip(jax.tree.leaves(base.points),
+                                jax.tree.leaves(member.points)):
+                    if not np.array_equal(np.asarray(a), np.asarray(b)):
+                        raise AssertionError(
+                            f"shard {si} replica {ri}: points diverged")
+                if not np.array_equal(base.ext_ids, member.ext_ids):
+                    raise AssertionError(
+                        f"shard {si} replica {ri}: ext_ids diverged")
+                if (base.live_count, base.epoch, base.next_ext_id) != (
+                        member.live_count, member.epoch, member.next_ext_id):
+                    raise AssertionError(
+                        f"shard {si} replica {ri}: counters diverged")
+                if base.labels is not None and not np.array_equal(
+                        np.asarray(base.labels), np.asarray(member.labels)):
+                    raise AssertionError(
+                        f"shard {si} replica {ri}: labels diverged")
+
+    def rebuild_replica(self, shard: int, replica: int, manager, *,
+                        step: Optional[int] = None, wal=None) -> LiveIndex:
+        """Rebuild a lost replica from a checkpoint + WAL tail and re-admit
+        it into its group.
+
+        ``manager`` is the ``CheckpointManager`` holding the shard's last
+        ``LiveIndex.save``; ``wal`` (optional) replays the mutation tail
+        past the checkpoint's ``wal_seq``. Mutation replay is
+        deterministic, so the rebuilt member is bit-identical to its
+        surviving peers — re-check with ``assert_replica_parity``. The
+        rebuilt replica does not log (the group primary keeps the WAL).
+        """
+        if replica == 0:
+            raise ValueError("replica 0 is the primary; restore the shard "
+                             "via LiveIndex.restore instead")
+        idx = LiveIndex.restore(manager, step, wal=wal)
+        idx.wal = None  # exactly one member of the group logs
+        self.groups[shard][replica] = idx
+        return idx
+
+    def replicated_corpus(self):
+        """Stack each replica column into a ``ShardedCorpus`` and wrap the
+        R columns as a ``fault.ReplicatedCorpus`` (+ stacked tombstones and
+        flat external ids, as ``_stacked_view`` returns) for the hedged
+        host fan-out. Columns are bit-equal by the parity invariant."""
+        from ..fault.replica import ReplicatedCorpus  # circular at module level
+        corpus0, tomb, flat_ext = self._stacked_view()
+        cap = self.shards[0].capacity
+        columns = [corpus0]
+        for ri in range(1, self.n_replicas):
+            col = [g[ri] for g in self.groups]
+            columns.append(ShardedCorpus(
+                points=jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[sh.points for sh in col]),
+                neighbors=jnp.stack([sh.neighbors for sh in col]),
+                start_ids=jnp.stack([sh.start_ids for sh in col]),
+                offsets=jnp.arange(self.n_shards, dtype=jnp.int32) * cap,
+                n_total=self.n_shards * cap,
+            ))
+        return ReplicatedCorpus(replicas=columns), tomb, flat_ext
 
     # -- queries -------------------------------------------------------------
     def _stacked_view(self):

@@ -70,6 +70,7 @@ from ..core.range_search import (
 )
 from ..dist.sharded_engine import ShardedCorpus, sharded_range_search
 from ..fault.degraded import RetryPolicy, fault_tolerant_sharded_search
+from ..fault.replica import HedgePolicy, ReplicaFleet, ReplicatedCorpus
 from ..fault.errors import DEADLINE_EXPIRED, QUEUE_FULL, SHARD_LOST
 from ..fault.injector import FaultInjector
 from ..utils import INVALID_ID, next_pow2
@@ -138,6 +139,8 @@ class Response:
     code: Optional[str] = None      # fault.errors taxonomy; None = healthy
     shards_ok: Optional[int] = None     # sharded serving: shards merged
     shards_total: Optional[int] = None  # sharded serving: shards configured
+    replicas_ok: Optional[int] = None     # replicated serving: healthy replicas
+    replicas_total: Optional[int] = None  # replicated serving: S * R
     filtered: bool = False          # answered under a label predicate
 
 
@@ -176,11 +179,13 @@ class RangeServer:
         server_cfg: ServerConfig = ServerConfig(),
         *,
         mesh=None,
-        sharded: Optional[ShardedCorpus] = None,
+        sharded=None,
         live=None,
         effort=None,
         injector: Optional[FaultInjector] = None,
         retry: Optional[RetryPolicy] = None,
+        replicas: int = 1,
+        hedge: Optional[HedgePolicy] = None,
         clock=time.perf_counter,
     ):
         """``live`` is a ``repro.live.LiveIndex``; it supersedes ``engine``
@@ -196,11 +201,39 @@ class RangeServer:
         ``code="shard_lost"``). ``injector`` is a seeded
         ``fault.FaultInjector`` for chaos testing. ``clock`` is the
         monotonic time source for queueing/deadline decisions — injectable
-        so deadline tests advance a fake clock deterministically."""
+        so deadline tests advance a fake clock deterministically.
+
+        ``replicas=R`` (R > 1) serves ``sharded`` R-way replicated through
+        the hedged fan-out (``sharded`` may equivalently be a pre-built
+        ``fault.ReplicatedCorpus`` or a ``fault.ReplicaFleet`` to share
+        breaker state); ``hedge`` is a ``fault.HedgePolicy`` deriving the
+        hedge delay from the fleet's per-shard latency histograms. Replica
+        health rides the completeness contract: ``coverage < 1.0`` only
+        when every replica of a shard is exhausted, ``code="replica_lost"``
+        when the answer is whole but redundancy is degraded. ``step()``
+        runs one fleet recovery sweep per micro-batch."""
+        if replicas > 1 and sharded is None:
+            raise ValueError("replicas > 1 needs a sharded corpus")
         if engine is None and live is None and sharded is None:
             raise ValueError("need an engine, a sharded corpus, or a live index")
         if injector is not None and sharded is None:
             raise ValueError("fault injection targets shards; pass sharded=")
+        self.fleet: Optional[ReplicaFleet] = None
+        if isinstance(sharded, ReplicaFleet):
+            self.fleet = sharded
+        elif isinstance(sharded, ReplicatedCorpus):
+            self.fleet = ReplicaFleet(sharded)
+        elif replicas > 1:
+            if sharded is None:
+                raise ValueError("replicas > 1 needs a sharded corpus")
+            self.fleet = ReplicaFleet(ReplicatedCorpus.replicate(
+                sharded, replicas))
+        if self.fleet is not None:
+            if mesh is not None:
+                raise ValueError("replicated serving is host fan-out; "
+                                 "drop mesh= or serve unreplicated")
+            sharded = self.fleet.corpus.replica(0)
+        self.hedge = hedge
         self.engine = engine
         self.live = live
         if server_cfg.expand_width > 0:
@@ -276,6 +309,12 @@ class RangeServer:
             # the degraded fan-out path
             "deadline_shed": 0, "deadline_partial": 0,
             "shard_retries": 0, "shards_lost": 0, "degraded_batches": 0,
+            # replication counters (mirrors of ReplicaFleet.stats):
+            # hedges_fired/hedge_wins = hedged reads launched / won the
+            # race, breaker_trips = circuit breakers opened, replicas_lost/
+            # recovered = fleet membership churn
+            "hedges_fired": 0, "hedge_wins": 0, "breaker_trips": 0,
+            "replicas_lost": 0, "replicas_recovered": 0,
             # filtered range retrieval: micro-batches that carried at least
             # one label-predicate lane (filtered + unfiltered lanes batch
             # together; unfiltered lanes ride an all-pass predicate)
@@ -527,7 +566,8 @@ class RangeServer:
             return self._view.range(qs, rs, cfg=self.cfg, es_radius=es,
                                     filter=label_filter), None
         if self.sharded is not None:
-            if self.mesh is not None and self.injector is None:
+            if (self.mesh is not None and self.injector is None
+                    and self.fleet is None):
                 return sharded_range_search(
                     mesh=self.mesh, corpus=self.sharded, queries=qs, r=rs,
                     cfg=self.cfg, es_radius=es,
@@ -535,10 +575,13 @@ class RangeServer:
             d = fault_tolerant_sharded_search(
                 corpus=self.sharded, queries=qs, r=rs, cfg=self.cfg,
                 es_radius=es, label_filter=label_filter,
-                injector=self.injector, retry=self.retry)
+                injector=self.injector, retry=self.retry,
+                fleet=self.fleet, hedge=self.hedge)
             self.stats["degraded_batches"] += int(not d.complete)
             self.stats["shard_retries"] += int(d.attempts.sum()) - d.shards_total
             self.stats["shards_lost"] += d.shards_total - d.shards_ok
+            if self.fleet is not None:
+                self.stats.update(self.fleet.stats)  # running fleet totals
             return d.result, d
         return range_search_compacted(
             corpus=self.engine.points, graph=self.engine.graph, queries=qs,
@@ -560,6 +603,11 @@ class RangeServer:
         """
         if self._pool is not None:
             return self._step_continuous()
+        if self.fleet is not None:
+            # background recovery sweep: rebuild lost replicas and re-admit
+            # them through the breaker's half-open probe
+            self.fleet.maintain()
+            self.stats.update(self.fleet.stats)
         batch = self._drain()
         if not batch:
             return []
@@ -608,6 +656,9 @@ class RangeServer:
                        complete=degraded.complete,
                        coverage=degraded.coverage,
                        code=degraded.code)
+            if hasattr(degraded, "replica_ok"):  # replicated fan-out
+                dkw.update(replicas_ok=degraded.replicas_ok,
+                           replicas_total=degraded.replicas_total)
         for i, rq in enumerate(reqs):
             row = ids[i]
             valid = row != INVALID_ID

@@ -116,6 +116,48 @@ def test_wal_prune_through_keeps_tail_atomically(tmp_path):
     assert wal.last_seq == 6
 
 
+def test_wal_prune_crash_is_before_or_after_never_torn(tmp_path, monkeypatch):
+    """Kill the process at the prune's atomic rename: the log on disk is
+    EXACTLY the old log (crash before the rename) or EXACTLY the pruned
+    tail (crash after), never a hybrid — and the retried prune succeeds."""
+    import os
+
+    real_replace = os.replace
+    wal = _wal(tmp_path)
+    for s in range(1, 6):
+        wal.append(s, "delete", dict(ext_ids=np.asarray([s])))
+
+    def boom_before(src, dst):
+        raise OSError("power cut before rename")
+
+    monkeypatch.setattr(os, "replace", boom_before)
+    with pytest.raises(OSError, match="power cut"):
+        wal.prune_through(3)
+    survivor = _wal(tmp_path)  # reopen, as recovery would
+    records, _, torn = survivor.scan()
+    assert not torn and [r.seq for r in records] == [1, 2, 3, 4, 5]
+    survivor.close()
+
+    def boom_after(src, dst):
+        real_replace(src, dst)
+        raise OSError("power cut after rename")
+
+    monkeypatch.setattr(os, "replace", boom_after)
+    retry = _wal(tmp_path)
+    with pytest.raises(OSError, match="power cut"):
+        retry.prune_through(3)
+    survivor = _wal(tmp_path)
+    records, _, torn = survivor.scan()
+    assert not torn and [r.seq for r in records] == [4, 5]  # prune landed
+    survivor.close()
+
+    monkeypatch.setattr(os, "replace", real_replace)
+    final = _wal(tmp_path)
+    assert final.prune_through(3) == 0  # idempotent retry: nothing left
+    final.append(6, "consolidate")  # and the log takes appends again
+    assert [r.seq for r in final.replay()] == [4, 5, 6]
+
+
 # ---------------------------------------------------------------------------
 # crash-kill recovery: checkpoint + WAL tail == uninterrupted control
 # ---------------------------------------------------------------------------
@@ -464,6 +506,38 @@ def test_validate_shard_result_invariants():
     assert not validate_shard_result(
         _mk_result([[12, INVALID_ID]], [[0.5, np.inf]], cap_count=[3]),
         10, 10, 100, radii)
+
+
+def test_retry_policy_backoff_cap_and_jitter():
+    rp = RetryPolicy(backoff_s=1.0, backoff_factor=10.0, backoff_max_s=5.0)
+    assert rp.delay_s(0) == 1.0
+    assert rp.delay_s(1) == 5.0  # 10.0 capped at backoff_max_s
+    assert rp.delay_s(3) == 5.0
+    # default jitter=0.0: delays are exact (the pinned-backoff tests rely
+    # on this)
+    assert RetryPolicy(backoff_s=0.05).delay_s(1) == 0.1
+
+    j = RetryPolicy(backoff_s=1.0, backoff_factor=1.0, jitter=0.5, seed=7)
+    d = [j.delay_s(0, key=s) for s in range(8)]
+    assert all(1.0 <= x <= 1.5 for x in d)  # stretch in [1, 1 + jitter]
+    assert len(set(d)) > 1  # per-shard keys de-synchronize retries...
+    j2 = RetryPolicy(backoff_s=1.0, backoff_factor=1.0, jitter=0.5, seed=7)
+    assert d == [j2.delay_s(0, key=s) for s in range(8)]  # ...deterministically
+
+
+def test_validate_shard_result_relative_tolerance():
+    """An honest large-radius answer can exceed r by float error that
+    scales with r: atol alone mislabels it garbage, atol + rtol*r passes
+    it, and a grossly-out answer still fails."""
+    radii = np.asarray([100.0], np.float32)
+    near = _mk_result([[12, INVALID_ID]], [[100.0005, np.inf]])
+    assert not validate_shard_result(near, 10, 10, 100, radii,
+                                     atol=1e-4, rtol=0.0)
+    assert validate_shard_result(near, 10, 10, 100, radii,
+                                 atol=1e-4, rtol=1e-5)
+    far = _mk_result([[12, INVALID_ID]], [[101.0, np.inf]])
+    assert not validate_shard_result(far, 10, 10, 100, radii,
+                                     atol=1e-4, rtol=1e-5)
 
 
 def test_garbage_injection_is_caught_not_merged(sharded_setup):

@@ -1,0 +1,569 @@
+"""Replication suite for ``repro.fault.replica`` + live replica groups.
+
+Four families of claims, each against a deterministic oracle:
+
+- **Parity** — replicas are bitwise-identical at build time and stay so
+  under live churn; which replica answers is therefore unobservable in
+  results (varying the preferred replica never changes a merged bit).
+- **Fan-out determinism** — the threaded, replicated fan-out merges in
+  shard order, so it is bitwise-identical to the serial single-replica
+  reference under every fault script, for f32 and int8 corpora.
+- **Breakers & hedging** — consecutive failures trip a per-replica
+  breaker (fake clock drives cooldown -> half-open probe -> close or
+  re-trip); scripted-slow primaries are hedged with no breaker penalty
+  and zero answer cost.
+- **Loss & recovery** — one replica of every shard can die and coverage
+  stays 1.0 (annotated ``replica_lost``, never ``shard_lost``);
+  ``maintain()`` rebuilds from a surviving peer, a live replica rebuilds
+  from checkpoint + WAL tail, and both re-enter through half-open.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BuildConfig, RangeConfig, SearchConfig, build_knn_graph,
+)
+from repro.dist.sharded_engine import build_sharded
+from repro.fault import (
+    ERROR_CODES, REPLICA_LOST, SHARD_LOST, BreakerConfig, CircuitBreaker,
+    FaultInjector, HedgePolicy, ReplicaFleet, ReplicatedCorpus, RetryPolicy,
+    fault_tolerant_sharded_search, replicated_fan_out,
+)
+from repro.live import LiveConfig, LiveShardedIndex, clone_live_index
+from repro.live.sharded import LiveIndex
+from repro.serve import RangeServer, Request, ServerConfig
+from repro.train import CheckpointManager
+
+FAST = RetryPolicy(max_attempts=3, backoff_s=0.0)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _corpus(corpus_dtype="float32"):
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((8, 8)).astype(np.float32) * 3
+    pts = (centers[rng.integers(0, 8, 800)]
+           + rng.standard_normal((800, 8)).astype(np.float32) * 0.3)
+    centers_j = jnp.asarray(centers)
+
+    def _builder(p):
+        # one entry point per cluster: a kNN graph over separated clusters
+        # is disconnected, a lone medoid start would strand 7 of 8 clusters
+        lab = np.asarray(jnp.argmin(
+            jnp.sum((p[:, None] - centers_j[None]) ** 2, -1), axis=1))
+        starts = np.asarray([np.flatnonzero(lab == c)[0] for c in range(8)],
+                            np.int32)
+        return build_knn_graph(p, k=10), jnp.asarray(starts)
+
+    corpus = build_sharded(pts, 4, _builder, corpus_dtype=corpus_dtype)
+    qs = jnp.asarray(pts[:24] + 0.01)
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
+                                          expand_width=4),
+                      mode="greedy", result_cap=512)
+    return pts, corpus, qs, cfg
+
+
+@pytest.fixture(scope="module")
+def setup_f32():
+    return _corpus()
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
+
+
+# ---------------------------------------------------------------------------
+# replica parity: bitwise-identical copies, unobservable choice
+# ---------------------------------------------------------------------------
+
+def test_replicated_corpus_parity_and_delegation(setup_f32):
+    _, corpus, _, _ = setup_f32
+    rc = ReplicatedCorpus.replicate(corpus, 3)
+    assert rc.n_replicas == 3 and rc.parity_ok()
+    # fresh buffers, not aliases of the original
+    assert rc.replica(1).neighbors is not corpus.neighbors
+    # replica-0 delegation: anything duck-typing a ShardedCorpus works
+    assert rc.n_shards == corpus.n_shards
+    assert rc.n_total == corpus.n_total
+    assert rc.shard_size == corpus.shard_size
+    np.testing.assert_array_equal(np.asarray(rc.offsets),
+                                  np.asarray(corpus.offsets))
+    with pytest.raises(ValueError, match="replicas"):
+        ReplicatedCorpus.replicate(corpus, 0)
+
+
+def test_replica_choice_is_unobservable(setup_f32):
+    """Serving from any replica (vary ``preferred``) yields the same bits —
+    the invariant that frees failover and hedging from consistency
+    reasoning."""
+    _, corpus, qs, cfg = setup_f32
+    rc = ReplicatedCorpus.replicate(corpus, 3)
+    runs = [replicated_fan_out(fleet=ReplicaFleet(rc), queries=qs, r=2.0,
+                               cfg=cfg, retry=FAST, preferred=p)
+            for p in range(3)]
+    for p, run in enumerate(runs):
+        assert run.complete and run.code is None
+        assert set(np.asarray(run.served_by).tolist()) == {p}
+    _assert_bitwise(runs[0].result, runs[1].result)
+    _assert_bitwise(runs[0].result, runs[2].result)
+
+
+# ---------------------------------------------------------------------------
+# threaded vs serial: bitwise determinism under fault scripts (satellite)
+# ---------------------------------------------------------------------------
+
+_SCRIPTS = {
+    "healthy": lambda: None,
+    "one_shard_lost": lambda: FaultInjector(seed=0, down_shards=(1,)),
+    "all_shards_lost": lambda: FaultInjector(seed=0, down_shards=(0, 1, 2, 3)),
+    "garbage_mid_retry": lambda: FaultInjector(
+        seed=0, script={(2, 0): "garbage", (0, 1): "garbage"}),
+}
+
+
+@pytest.mark.parametrize("corpus_dtype", ["float32", "int8"])
+@pytest.mark.parametrize("scenario", sorted(_SCRIPTS))
+def test_threaded_fanout_bitwise_equals_serial(corpus_dtype, scenario):
+    """The concurrent fan-out merges in shard order, never completion
+    order: under every fault script the threaded result is bitwise-equal
+    to the serial (max_workers=0) reference, f32 and int8 alike."""
+    _, corpus, qs, cfg = _corpus(corpus_dtype)
+    kw = dict(corpus=corpus, queries=qs, r=2.0, cfg=cfg, retry=FAST)
+    serial = fault_tolerant_sharded_search(
+        injector=_SCRIPTS[scenario](), max_workers=0, **kw)
+    threaded = fault_tolerant_sharded_search(
+        injector=_SCRIPTS[scenario](), max_workers=None, **kw)
+    _assert_bitwise(serial.result, threaded.result)
+    np.testing.assert_array_equal(serial.shard_ok, threaded.shard_ok)
+    np.testing.assert_array_equal(serial.attempts, threaded.attempts)
+    assert serial.faults == threaded.faults
+    assert serial.code == threaded.code
+    if scenario == "healthy":
+        assert serial.complete and int(np.asarray(serial.result.count).sum())
+    if scenario == "all_shards_lost":
+        assert serial.coverage == 0.0
+
+
+def test_replicated_fanout_threaded_equals_serial(setup_f32):
+    _, corpus, qs, cfg = setup_f32
+    rc = ReplicatedCorpus.replicate(corpus, 2)
+    inj = lambda: FaultInjector(seed=0, down_replicas=((0, 0), (2, 1)))
+    serial = replicated_fan_out(fleet=ReplicaFleet(rc), queries=qs, r=2.0,
+                                cfg=cfg, retry=FAST, injector=inj(),
+                                max_workers=0)
+    threaded = replicated_fan_out(fleet=ReplicaFleet(rc), queries=qs, r=2.0,
+                                  cfg=cfg, retry=FAST, injector=inj())
+    _assert_bitwise(serial.result, threaded.result)
+    np.testing.assert_array_equal(serial.served_by, threaded.served_by)
+    assert serial.code == threaded.code == REPLICA_LOST
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker: trip, cooldown, half-open probe (fake clock)
+# ---------------------------------------------------------------------------
+
+def test_breaker_trip_halfopen_recovery_roundtrip():
+    clock = FakeClock()
+    br = CircuitBreaker(BreakerConfig(fail_threshold=3, cooldown_s=30.0),
+                        clock=clock)
+    assert br.state == "closed" and br.allow()
+    assert not br.record_failure() and not br.record_failure()
+    assert br.allow()  # two consecutive failures: still closed
+    assert br.record_failure()  # third trips
+    assert br.state == "open" and br.trips == 1
+    assert not br.allow()
+    clock.advance(29.9)
+    assert not br.allow()  # cooldown not elapsed
+    clock.advance(0.2)
+    assert br.allow()  # half-open: one probe admitted
+    assert br.state == "half_open"
+    assert not br.allow()  # ...and only one
+    assert br.record_failure()  # failed probe: straight back to open
+    assert br.state == "open" and br.trips == 2
+    clock.advance(30.1)
+    assert br.allow()
+    br.record_success()  # successful probe closes
+    assert br.state == "closed" and br.failures == 0 and br.allow()
+    # a success between failures resets the consecutive count
+    br.record_failure()
+    br.record_failure()
+    br.record_success()
+    assert not br.record_failure() and br.state == "closed"
+
+
+def test_breaker_force_open_and_half_open_readmit():
+    clock = FakeClock()
+    br = CircuitBreaker(BreakerConfig(cooldown_s=1e9), clock=clock)
+    br.force_open()
+    assert br.state == "open" and not br.allow()
+    br.to_half_open()  # recovery re-admits without waiting the cooldown
+    assert br.allow() and br.state == "half_open"
+    br.record_success()
+    assert br.state == "closed"
+
+
+def test_breaker_trips_in_fanout_then_recovers(setup_f32):
+    """A persistently-down primary accumulates consecutive failures across
+    searches until its breaker trips; past the cooldown, the next healthy
+    search probes it half-open and closes the breaker."""
+    _, corpus, qs, cfg = setup_f32
+    clock = FakeClock()
+    fleet = ReplicaFleet(ReplicatedCorpus.replicate(corpus, 2), clock=clock,
+                         breaker=BreakerConfig(fail_threshold=3,
+                                               cooldown_s=30.0))
+    down = FaultInjector(seed=0, down_replicas=((2, 0),))
+    healthy = replicated_fan_out(fleet=ReplicaFleet(
+        ReplicatedCorpus(replicas=[corpus])), queries=qs, r=2.0, cfg=cfg,
+        retry=FAST)
+    for i in range(3):  # one failure on (2, 0) per search
+        res = replicated_fan_out(fleet=fleet, queries=qs, r=2.0, cfg=cfg,
+                                 retry=FAST, injector=down)
+        assert res.complete and res.code == REPLICA_LOST
+        _assert_bitwise(res.result, healthy.result)
+    assert fleet.breakers[(2, 0)].state == "open"
+    assert fleet.stats["breaker_trips"] == 1
+    # breaker open: the replica is skipped entirely (no injector needed for
+    # the answer to stay whole), and health reports it down
+    res = replicated_fan_out(fleet=fleet, queries=qs, r=2.0, cfg=cfg,
+                             retry=FAST)
+    assert res.code == REPLICA_LOST and not res.replica_ok[2, 0]
+    clock.advance(31.0)
+    res = replicated_fan_out(fleet=fleet, queries=qs, r=2.0, cfg=cfg,
+                             retry=FAST)  # half-open probe succeeds
+    assert fleet.breakers[(2, 0)].state == "closed"
+    assert res.code is None and res.replica_ok.all()
+    _assert_bitwise(res.result, healthy.result)
+
+
+# ---------------------------------------------------------------------------
+# replica loss: coverage stays whole; shard loss still degrades
+# ---------------------------------------------------------------------------
+
+def test_one_replica_per_shard_down_keeps_coverage(setup_f32):
+    """The headline contract: R=2 with one replica of EVERY shard down
+    serves the full answer (coverage 1.0, bitwise-identical to healthy),
+    annotated replica_lost — coverage < 1.0 requires every replica of a
+    shard to be exhausted."""
+    _, corpus, qs, cfg = setup_f32
+    healthy = fault_tolerant_sharded_search(corpus=corpus, queries=qs, r=2.0,
+                                            cfg=cfg, retry=FAST)
+    rc = ReplicatedCorpus.replicate(corpus, 2)
+    lost = fault_tolerant_sharded_search(
+        fleet=ReplicaFleet(rc), queries=qs, r=2.0, cfg=cfg, retry=FAST,
+        injector=FaultInjector(
+            seed=0, down_replicas=((0, 0), (1, 1), (2, 0), (3, 1))))
+    assert lost.complete and lost.coverage == 1.0
+    assert lost.code == REPLICA_LOST
+    assert REPLICA_LOST in ERROR_CODES
+    assert lost.replicas_ok < lost.replicas_total == 8
+    assert np.asarray(lost.served_by).tolist() == [1, 0, 1, 0]
+    _assert_bitwise(lost.result, healthy.result)
+
+
+def test_whole_shard_down_still_degrades_with_replicas(setup_f32):
+    """down_shards kills every replica of the shard: R=2 cannot save it,
+    and shard_lost (the stronger code) wins over replica_lost."""
+    _, corpus, qs, cfg = setup_f32
+    fleet = ReplicaFleet(ReplicatedCorpus.replicate(corpus, 2))
+    lost = fault_tolerant_sharded_search(
+        fleet=fleet, queries=qs, r=2.0, cfg=cfg, retry=FAST,
+        injector=FaultInjector(seed=0, down_shards=(1,)))
+    assert not lost.complete and lost.coverage == 0.75
+    assert lost.code == SHARD_LOST
+    assert int(lost.served_by[1]) == -1
+
+
+# ---------------------------------------------------------------------------
+# hedging: scripted-slow primaries, wall-clock path
+# ---------------------------------------------------------------------------
+
+def test_hedge_policy_delay():
+    class Hist:
+        count = 4
+
+        @staticmethod
+        def percentile(p):
+            return 0.2
+
+    assert HedgePolicy(delay_s=0.0).delay_for(Hist) == 0.0
+    assert HedgePolicy().delay_for(None) == 0.05  # no samples: fallback
+    assert HedgePolicy().delay_for(Hist) == pytest.approx(0.2)  # p95
+    assert HedgePolicy(factor=0.5).delay_for(Hist) == pytest.approx(0.1)
+    assert HedgePolicy(min_delay_s=0.5).delay_for(Hist) == 0.5  # clamped
+
+
+def test_scripted_slow_primaries_are_hedged(setup_f32):
+    """Every primary scripted slow: each shard fires one hedge, the
+    secondary wins, the answer is bitwise-identical (parity!) and slow
+    costs no breaker penalty — slow is not sick."""
+    _, corpus, qs, cfg = setup_f32
+    healthy = fault_tolerant_sharded_search(corpus=corpus, queries=qs, r=2.0,
+                                            cfg=cfg, retry=FAST)
+    fleet = ReplicaFleet(ReplicatedCorpus.replicate(corpus, 2))
+    hedged = fault_tolerant_sharded_search(
+        fleet=fleet, queries=qs, r=2.0, cfg=cfg, retry=FAST,
+        injector=FaultInjector(seed=0,
+                               script={(s, 0, 0): "slow" for s in range(4)}),
+        hedge=HedgePolicy(delay_s=0.0))
+    assert hedged.hedges_fired == 4 and hedged.hedge_wins == 4
+    assert hedged.complete and hedged.code is None  # full redundancy kept
+    assert fleet.stats["hedges_fired"] == 4
+    assert fleet.stats["breaker_trips"] == 0
+    assert all(br.failures == 0 for br in fleet.breakers.values())
+    _assert_bitwise(hedged.result, healthy.result)
+
+
+def test_slow_without_hedge_or_peer_is_late_success(setup_f32):
+    """No hedge policy (or nothing to hedge to): a slow replica is just a
+    late success, never a fault."""
+    _, corpus, qs, cfg = setup_f32
+    healthy = fault_tolerant_sharded_search(corpus=corpus, queries=qs, r=2.0,
+                                            cfg=cfg, retry=FAST)
+    slow = FaultInjector(seed=0, script={(s, 0, 0): "slow" for s in range(4)})
+    no_hedge = fault_tolerant_sharded_search(
+        fleet=ReplicaFleet(ReplicatedCorpus.replicate(corpus, 2)),
+        queries=qs, r=2.0, cfg=cfg, retry=FAST, injector=slow)
+    assert no_hedge.hedges_fired == 0 and no_hedge.code is None
+    _assert_bitwise(no_hedge.result, healthy.result)
+    # R=1: hedging requested but no peer exists
+    r1 = fault_tolerant_sharded_search(
+        fleet=ReplicaFleet(corpus), queries=qs, r=2.0, cfg=cfg, retry=FAST,
+        injector=slow, hedge=HedgePolicy(delay_s=0.0))
+    assert r1.hedges_fired == 0 and r1.code is None
+    _assert_bitwise(r1.result, healthy.result)
+
+
+def test_wall_clock_hedge_path_is_bitwise(setup_f32):
+    """The real-timer hedge race (no injector): with an aggressive delay
+    hedges actually fire, and first-validated-wins cannot change a bit of
+    the answer."""
+    _, corpus, qs, cfg = setup_f32
+    healthy = fault_tolerant_sharded_search(corpus=corpus, queries=qs, r=2.0,
+                                            cfg=cfg, retry=FAST)
+    fleet = ReplicaFleet(ReplicatedCorpus.replicate(corpus, 2))
+    raced = fault_tolerant_sharded_search(
+        fleet=fleet, queries=qs, r=2.0, cfg=cfg, retry=FAST,
+        hedge=HedgePolicy(delay_s=0.0))
+    assert raced.complete and raced.code is None
+    assert raced.hedges_fired >= 0  # timing-dependent; the answer is not:
+    _assert_bitwise(raced.result, healthy.result)
+
+
+# ---------------------------------------------------------------------------
+# loss & recovery: maintain() rebuilds from a surviving peer
+# ---------------------------------------------------------------------------
+
+def test_fleet_lose_maintain_recovery_roundtrip(setup_f32):
+    _, corpus, qs, cfg = setup_f32
+    fleet = ReplicaFleet(ReplicatedCorpus.replicate(corpus, 2))
+    fleet.lose(2, 1)
+    fleet.lose(2, 1)  # idempotent
+    assert fleet.stats["replicas_lost"] == 1
+    res = fault_tolerant_sharded_search(fleet=fleet, queries=qs, r=2.0,
+                                        cfg=cfg, retry=FAST)
+    assert res.complete and res.code == REPLICA_LOST
+    assert not res.replica_ok[2, 1] and res.replicas_ok == 7
+    assert fleet.maintain() == 1
+    assert fleet.stats["replicas_recovered"] == 1 and not fleet.lost
+    # recovered replica re-enters via half-open: first request is a probe
+    assert fleet.breakers[(2, 1)].state == "half_open"
+    res = fault_tolerant_sharded_search(fleet=fleet, queries=qs, r=2.0,
+                                        cfg=cfg, retry=FAST)
+    assert res.code is None and res.replica_ok.all()
+    # aim traffic at the recovered replica: the probe succeeds and closes
+    res = replicated_fan_out(fleet=fleet, queries=qs, r=2.0, cfg=cfg,
+                             retry=FAST, preferred=1)
+    assert res.code is None
+    assert fleet.breakers[(2, 1)].state == "closed"
+
+
+def test_maintain_needs_surviving_peer_and_respects_recover_fn(setup_f32):
+    _, corpus, qs, cfg = setup_f32
+    fleet = ReplicaFleet(ReplicatedCorpus.replicate(corpus, 2))
+    fleet.lose(1, 0)
+    fleet.lose(1, 1)  # whole shard gone: nothing to rebuild from
+    assert fleet.maintain() == 0 and len(fleet.lost) == 2
+    res = fault_tolerant_sharded_search(fleet=fleet, queries=qs, r=2.0,
+                                        cfg=cfg, retry=FAST)
+    assert res.code == SHARD_LOST and res.coverage == 0.75
+
+    slow_rebuild = ReplicaFleet(ReplicatedCorpus.replicate(corpus, 2),
+                                recover_fn=lambda s, rep: False)
+    slow_rebuild.lose(3, 0)
+    assert slow_rebuild.maintain() == 0  # rebuild still in progress
+    slow_rebuild.recover_fn = lambda s, rep: True
+    assert slow_rebuild.maintain() == 1
+
+
+# ---------------------------------------------------------------------------
+# live replica groups: parity under churn, rebuild from checkpoint + WAL
+# ---------------------------------------------------------------------------
+
+_LCFG = LiveConfig(capacity=96, insert_batch=16)
+_LBUILD = BuildConfig(max_degree=8, beam=16, insert_batch=32)
+
+
+def _churn(idx, seed, n_ops=10):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_ops):
+        roll = rng.random()
+        if roll < 0.5:
+            idx.insert(rng.standard_normal(
+                (int(rng.integers(1, 4)), 8)).astype(np.float32))
+        elif roll < 0.9:
+            idx.delete(rng.integers(0, idx.next_ext_id,
+                                    size=int(rng.integers(1, 4))))
+        else:
+            idx.maybe_consolidate()
+
+
+def test_live_replicas_stay_bitwise_under_churn():
+    pts = np.random.default_rng(1).standard_normal((128, 8)).astype(np.float32)
+    idx = LiveShardedIndex.create(pts, 2, _LCFG, build_cfg=_LBUILD,
+                                  replicas=2)
+    assert idx.n_replicas == 2
+    idx.assert_replica_parity()
+    _churn(idx, seed=2)
+    for sh in idx.shards:
+        sh.consolidate()  # force the heavy mutation on every primary...
+    for g in idx.groups:
+        for member in g[1:]:
+            member.consolidate()  # ...and every secondary
+    idx.assert_replica_parity()
+    rc, tomb, flat_ext = idx.replicated_corpus()
+    assert rc.n_replicas == 2 and rc.parity_ok()
+    # the replicated columns serve queries identically to the primary view
+    cfg = RangeConfig(search=SearchConfig(beam=16, max_beam=16, visit_cap=64),
+                      mode="greedy", result_cap=128)
+    qs = jnp.asarray(pts[:8] + 0.01)
+    a = fault_tolerant_sharded_search(corpus=rc.replica(0), queries=qs, r=2.0,
+                                      cfg=cfg, retry=FAST, tombstones=tomb)
+    b = replicated_fan_out(
+        fleet=ReplicaFleet(rc), queries=qs, r=2.0, cfg=cfg, retry=FAST,
+        tombstones=tomb, preferred=1)  # serve everything from replica 1
+    _assert_bitwise(a.result, b.result)
+
+
+def test_live_rebuild_replica_from_checkpoint_and_wal(tmp_path):
+    """Lose a live replica mid-churn and rebuild it from the primary's
+    checkpoint + WAL tail: deterministic replay rejoins it bit-identical
+    (assert_replica_parity), with no WAL handle of its own."""
+    from repro.fault import WriteAheadLog
+
+    pts = np.random.default_rng(3).standard_normal((96, 8)).astype(np.float32)
+    idx = LiveShardedIndex.create(pts, 2, _LCFG, build_cfg=_LBUILD,
+                                  replicas=2)
+    wal = WriteAheadLog(str(tmp_path / "shard0.wal"))
+    idx.groups[0][0].attach_wal(wal)  # exactly one group member logs
+    cm = CheckpointManager(str(tmp_path / "ck"))
+    _churn(idx, seed=4, n_ops=5)
+    idx.groups[0][0].save(cm)
+    _churn(idx, seed=5, n_ops=5)  # the tail the WAL must carry
+    idx.assert_replica_parity()
+    # replica (0, 1) dies; rebuild from manifest + WAL tail
+    idx.groups[0][1] = None
+    rebuilt = idx.rebuild_replica(0, 1, cm,
+                                  wal=WriteAheadLog(str(tmp_path / "shard0.wal")))
+    assert rebuilt.wal is None  # the primary keeps the only log handle
+    idx.assert_replica_parity()
+    with pytest.raises(ValueError, match="primary"):
+        idx.rebuild_replica(0, 0, cm)
+
+
+def test_clone_live_index_is_independent():
+    pts = np.random.default_rng(5).standard_normal((64, 8)).astype(np.float32)
+    a = LiveIndex.create(pts, _LCFG, _LBUILD, metric="l2")
+    b = clone_live_index(a)
+    a.insert(np.ones((2, 8), np.float32))
+    assert a.n_live == b.n_live + 2  # clone did not see the insert
+    assert a.next_ext_id != b.next_ext_id
+
+
+def test_live_replica_group_validation():
+    pts = np.random.default_rng(6).standard_normal((64, 8)).astype(np.float32)
+    sh = LiveIndex.create(pts, _LCFG, _LBUILD, metric="l2")
+    other = clone_live_index(sh)
+    with pytest.raises(ValueError, match="replica_groups"):
+        LiveShardedIndex([sh], replica_groups=[[other, sh]])
+    with pytest.raises(ValueError, match="replicas"):
+        LiveShardedIndex.create(pts, 2, _LCFG, build_cfg=_LBUILD, replicas=0)
+
+
+# ---------------------------------------------------------------------------
+# serving integration: RangeServer(replicas=, hedge=)
+# ---------------------------------------------------------------------------
+
+def test_server_replicated_annotations_and_stats(setup_f32):
+    _, corpus, qs, cfg = setup_f32
+    qs_np = np.asarray(qs)
+    retry = RetryPolicy(max_attempts=2, backoff_s=0.0)
+
+    def drive(srv, n=6):
+        for i in range(n):
+            srv.submit(Request(req_id=i, query=qs_np[i], radius=2.0))
+        return sorted(srv.run_until_drained(), key=lambda r: r.req_id)
+
+    base = drive(RangeServer(None, cfg, ServerConfig(max_batch=8),
+                             sharded=corpus, retry=retry))
+    assert all(r.replicas_ok is None and r.replicas_total is None
+               for r in base)  # unreplicated: no replica annotations
+
+    srv = RangeServer(None, cfg, ServerConfig(max_batch=8), sharded=corpus,
+                      replicas=2, retry=retry,
+                      injector=FaultInjector(
+                          seed=0,
+                          down_replicas=((0, 0), (1, 1), (2, 0), (3, 1))))
+    resp = drive(srv)
+    for r, r0 in zip(resp, base):
+        assert r.complete and r.coverage == 1.0 and r.code == REPLICA_LOST
+        assert r.replicas_total == 8 and r.replicas_ok < 8
+        np.testing.assert_array_equal(r.ids, r0.ids)  # R=2 loss == healthy
+        np.testing.assert_array_equal(r.dists, r0.dists)
+    assert srv.stats["replicas_lost"] == 0  # down, not declared lost
+    assert srv.stats["degraded_batches"] == 0  # the answer stayed whole
+
+    hedged = RangeServer(None, cfg, ServerConfig(max_batch=8), sharded=corpus,
+                         replicas=2, retry=retry,
+                         hedge=HedgePolicy(delay_s=0.0),
+                         injector=FaultInjector(
+                             seed=0,
+                             script={(s, 0, 0): "slow" for s in range(4)}))
+    resp = drive(hedged)
+    assert all(r.complete and r.code is None for r in resp)
+    assert hedged.stats["hedges_fired"] > 0
+    assert hedged.stats["hedge_wins"] == hedged.stats["hedges_fired"]
+
+    with pytest.raises(ValueError, match="replicas"):
+        RangeServer(None, cfg, replicas=2)
+
+
+def test_server_maintain_recovers_lost_replica(setup_f32):
+    """step() runs the fleet's maintenance sweep: a replica declared lost
+    is rebuilt between batches and the next response regains full
+    redundancy."""
+    _, corpus, qs, cfg = setup_f32
+    qs_np = np.asarray(qs)
+    srv = RangeServer(None, cfg, ServerConfig(max_batch=4), sharded=corpus,
+                      replicas=2, retry=FAST)
+    srv.fleet.lose(1, 1)
+    srv.submit(Request(req_id=0, query=qs_np[0], radius=2.0))
+    (r0,) = srv.run_until_drained()
+    # maintain() ran before the batch, so recovery already happened; the
+    # lost replica was re-admitted through half-open and probed clean
+    assert srv.stats["replicas_lost"] == 1
+    assert srv.stats["replicas_recovered"] == 1
+    srv.submit(Request(req_id=1, query=qs_np[1], radius=2.0))
+    (r1,) = srv.run_until_drained()
+    assert r1.code is None and r1.replicas_ok == r1.replicas_total == 8
