@@ -73,6 +73,36 @@ def print_table(title: str, header: list[str], rows: list[list]):
         print(",".join(f"{x:.4g}" if isinstance(x, float) else str(x) for x in r))
 
 
+def make_heavy_tailed(n: int, d: int = 32, n_queries: int = 128,
+                      n_clusters: int = 48, sigma: float = 1.8,
+                      void_frac: float = 0.8, seed: int = 0):
+    """Planted-cluster corpus with lognormal (heavy-tailed) populations.
+
+    Cluster sizes are drawn lognormal(0, sigma): a couple of giant clusters
+    hold most of the mass while the median cluster is tiny — the Pareto
+    match-count shape of the paper's Fig. 4 (most queries zero results, a
+    few enormous outliers), pushed harder than the quantile-matched
+    synthetic profiles. ``void_frac`` of the queries land in empty space
+    (zero matches at any sub-separation radius); the rest sit on cluster
+    centers, so their match count inherits the cluster-size tail directly.
+    Returns ``(points, queries)`` as float32 numpy arrays, l2 metric."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.lognormal(mean=0.0, sigma=sigma, size=n_clusters)
+    sizes = np.maximum(1, np.round(sizes / sizes.sum() * n)).astype(np.int64)
+    # rounding drift -> exactly n points, absorbed by the largest cluster
+    sizes[int(np.argmax(sizes))] += n - int(sizes.sum())
+    centers = rng.normal(0.0, 4.0, (n_clusters, d))
+    assign = np.repeat(np.arange(n_clusters), sizes)
+    points = (centers[assign] +
+              rng.normal(0.0, 0.05, (n, d))).astype(np.float32)
+
+    n_void = int(round(void_frac * n_queries))
+    q_void = rng.normal(0.0, 4.0, (n_void, d))  # ~surely inter-cluster space
+    q_hit = centers[rng.integers(0, n_clusters, n_queries - n_void)]
+    queries = np.concatenate([q_void, q_hit]).astype(np.float32)
+    return points, queries
+
+
 QUICK_PROFILES = ["bigann-like", "gist-like", "msmarco-like"]
 ALL_PROFILES = ["bigann-like", "deep-like", "msturing-like", "gist-like",
                 "ssnpp-like", "openai-like", "text2image-like",

@@ -46,6 +46,23 @@ MAX_MIXED_AP_GAP = 0.005
 MAX_QUANTIZED_AP_GAP = 0.01
 MIN_QUANTIZED_BYTES_REDUCTION = 3.0
 
+# tiered-corpus gates. The tier moves the raw f32 rerank rows off device
+# (host-RAM row store) while int8 codes + 12B meta stay resident, so the
+# two gated claims are (a) STRUCTURAL: device corpus bytes per vector
+# (codes + meta + the bounded row cache, from the measured MemoryBudget)
+# must drop >= 3x vs f32-resident, with the row cache pinned to <= 25% of
+# the raw-row bytes it replaces (else the "tier" is quietly re-residenting
+# the corpus); and (b) BITWISE: results must be identical to the resident
+# int8 engine on the same graph — ids, dists, count, every bit. Not an AP
+# gap of zero, actual array equality: the tiered exact_pairs contract is
+# that cache state, fetch bucketing, and eviction history can never change
+# a result bit. Fetch-path telemetry (dedup ratio, cache hit rate, rows/
+# bytes fetched) is recorded for trajectory tracking, not gated (it shifts
+# with REPRO_TIER_CACHE_ROWS, which the CI memcap job deliberately
+# shrinks).
+MIN_TIER_DEVICE_BYTES_REDUCTION = 3.0
+MAX_TIER_CACHE_FRAC_OF_RAW = 0.25
+
 # live-churn gate: after 10% churn (inserts + tombstoned deletes) and a
 # consolidation pass, AP on the live set may trail a FRESH static rebuild of
 # the same live set by at most this much — the acceptance bound on what
@@ -212,6 +229,31 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
           f"{quantized['hot_path']['bytes_per_dist_int8']:.0f} "
           f"bytes/distance)")
 
+    # -- tiered row: host-RAM raw rows, device codes + bounded cache ---------
+    tiered = _tiered_row(n)
+    tm, tf = tiered["memory"], tiered["fetch"]
+    print(f"[smoke] tiered (gist-like d={tiered['dim']}): device "
+          f"{tm['device_bytes_per_vector']:.0f} B/vec vs f32-resident "
+          f"{tm['f32_resident_bytes'] // n} -> "
+          f"{tm['device_bytes_reduction_vs_f32']:.2f}x "
+          f"(floor {MIN_TIER_DEVICE_BYTES_REDUCTION}); cache "
+          f"{tm['cache_rows']} rows = {tm['cache_frac_of_raw']:.3f} of raw "
+          f"(cap {MAX_TIER_CACHE_FRAC_OF_RAW}); bitwise_identical="
+          f"{tiered['bitwise_identical']}")
+    print(f"[smoke] tiered fetch path: dedup {tf['dedup_ratio']:.2f}x "
+          f"({tf['pairs']} pairs -> {tf['unique_rows']} unique), cache hit "
+          f"rate {tf['cache_hit_rate']:.3f}, {tf['fetched_rows']} rows / "
+          f"{tf['fetch_batches']} buckets fetched; qps ratio vs resident "
+          f"int8 {tiered['qps_ratio']:.2f}x")
+
+    # -- heavy-tail row: radius methodology on an adversarial workload -------
+    heavy = _heavy_tail_row(min(n, 4_000))
+    print(f"[smoke] heavy-tail radius (recorded): zero_frac="
+          f"{heavy['zero_frac']:.3f} max_count={heavy['max_count']} "
+          f"median_nonzero={heavy['median_nonzero']} top-10% queries hold "
+          f"{heavy['top10pct_match_mass']:.2f} of all matches; "
+          f"hist={heavy['histogram']}")
+
     # -- tail-latency row: continuous batching vs lockstep -------------------
     tail = _tail_latency_row(n)
     print(f"[smoke] tail latency (point queries, {tail['n_point']} of "
@@ -270,6 +312,8 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
         baseline_expand1=base, speedup_vs_expand1=round(speedup, 3),
         mixed_radius=mixed,
         quantized=quantized,
+        tiered=tiered,
+        heavy_tail=heavy,
         churn=churn,
         tail_latency=tail,
         degraded=degraded,
@@ -279,6 +323,9 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
                     max_mixed_ap_gap=MAX_MIXED_AP_GAP,
                     max_quantized_ap_gap=MAX_QUANTIZED_AP_GAP,
                     min_quantized_bytes_reduction=MIN_QUANTIZED_BYTES_REDUCTION,
+                    min_tier_device_bytes_reduction=MIN_TIER_DEVICE_BYTES_REDUCTION,
+                    max_tier_cache_frac_of_raw=MAX_TIER_CACHE_FRAC_OF_RAW,
+                    tier_bitwise_identical=True,
                     max_churn_ap_gap=MAX_CHURN_AP_GAP,
                     max_tail_p99_ratio=MAX_TAIL_P99_RATIO,
                     max_tail_ap_gap=MAX_TAIL_AP_GAP,
@@ -307,6 +354,19 @@ def smoke(n: int, min_qps: float, min_ap: float) -> int:
     if (hp["bytes_per_dist_f32"] / hp["bytes_per_dist_int8"]
             < MIN_QUANTIZED_BYTES_REDUCTION):
         print("[smoke] FAIL: int8 bytes-per-distance reduction below floor")
+        return 1
+    if not tiered["bitwise_identical"]:
+        print("[smoke] FAIL: tiered results deviate from the resident int8 "
+              "engine — the exact_pairs bitwise-parity contract is broken")
+        return 1
+    if (tiered["memory"]["device_bytes_reduction_vs_f32"]
+            < MIN_TIER_DEVICE_BYTES_REDUCTION):
+        print("[smoke] FAIL: tiered device bytes/vector reduction vs "
+              "f32-resident below floor")
+        return 1
+    if tiered["memory"]["cache_frac_of_raw"] > MAX_TIER_CACHE_FRAC_OF_RAW:
+        print("[smoke] FAIL: tiered row cache exceeds the resident-bytes "
+              "cap — the tier is re-residenting the corpus")
         return 1
     if churn["ap_gap"] > MAX_CHURN_AP_GAP:
         print("[smoke] FAIL: churned live index trails a fresh rebuild by "
@@ -998,6 +1058,122 @@ def _quantized_row(n: int) -> dict:
                  "roofline cut, which the Pallas int8 kernels realize on "
                  "TPU HBM",
         ),
+    )
+
+
+def _tiered_row(n: int) -> dict:
+    """Tiered corpus vs resident int8 on the same graph: the device-bytes
+    cut the tier exists for, proven at BITWISE result identity (see the
+    MIN_TIER_DEVICE_BYTES_REDUCTION note). Same gist-like profile and
+    config as _quantized_row so the f32 -> int8 -> tiered progression
+    reads off one table."""
+    import dataclasses as _dc
+
+    import numpy as np
+
+    from repro.core import (
+        RangeConfig, RangeSearchEngine, SearchConfig, exact_range_search,
+    )
+    from repro.tier import tiered_corpus
+
+    from .common import ap_of, get_dataset, get_engine, run_range
+
+    profile = "gist-like"
+    ds, pts, qs, _, prof, _ = get_dataset(profile, n)
+    qs = qs[:128]
+    mean_counts = np.asarray(prof.counts).mean(axis=0)
+    r = float(prof.radii[int(np.argmin(np.abs(mean_counts - 128.0)))])
+    gt = exact_range_search(pts, qs, r, ds.metric)
+    eng = get_engine(profile, n)
+    # resident int8 reference: same graph/entries, raw rows on device
+    eng_i8 = _dc.replace(
+        RangeSearchEngine.from_graph(pts, eng.graph, metric=ds.metric,
+                                     corpus_dtype="int8"),
+        start_ids=eng.start_ids)
+    # tiered contender: identical codes (split from the SAME QuantizedCorpus,
+    # raw rows move to the host store). Cache default n/32 rows (~3% of raw
+    # bytes); the CI memcap env may shrink it further — parity must survive.
+    cache_rows = int(os.environ.get("REPRO_TIER_CACHE_ROWS",
+                                    max(1, n // 32)))
+    tier = tiered_corpus(eng_i8.points, cache_rows=cache_rows)
+    eng_tier = _dc.replace(eng_i8, points=tier)
+
+    cfg = RangeConfig(search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
+                                          metric=ds.metric, expand_width=4),
+                      mode="greedy", result_cap=2048)
+    qps_i8, res_i8 = run_range(eng_i8, qs, r, cfg)
+    qps_t, res_t = run_range(eng_tier, qs, r, cfg)
+    bitwise = bool(
+        np.array_equal(np.asarray(res_t.ids), np.asarray(res_i8.ids)) and
+        np.array_equal(np.asarray(res_t.dists), np.asarray(res_i8.dists)) and
+        np.array_equal(np.asarray(res_t.count), np.asarray(res_i8.count)))
+
+    d = int(pts.shape[1])
+    budget = tier.budget()
+    f32_resident = 4 * d * n  # the raw rows a resident f32 corpus parks in HBM
+    reduction = f32_resident / max(1, budget.device_total)
+    cache_frac = budget.device["row_cache"] / max(1, budget.host["row_store"])
+    return dict(
+        profile=profile, dim=d, radius=r,
+        qps_int8=round(qps_i8, 2), qps_tiered=round(qps_t, 2),
+        qps_ratio=round(qps_t / max(qps_i8, 1e-9), 3),
+        ap_tiered=round(ap_of(res_t, gt), 4),
+        bitwise_identical=bitwise,
+        rerank_per_query=round(float(np.asarray(res_t.n_rerank).mean()), 1),
+        memory=dict(
+            **budget.as_dict(),
+            device_bytes_per_vector=round(budget.device_bytes_per_vector(n), 1),
+            f32_resident_bytes=f32_resident,
+            device_bytes_reduction_vs_f32=round(reduction, 3),
+            cache_rows=int(tier.cache.capacity),
+            cache_frac_of_raw=round(cache_frac, 4),
+        ),
+        fetch=tier.counters.as_dict(),
+        note="bitwise identity to resident int8 and the measured device-"
+             "bytes cut are the gated claims; QPS ratio and fetch telemetry "
+             "(dedup ratio, cache hit rate) are recorded for trajectory "
+             "tracking, not gated",
+    )
+
+
+def _heavy_tail_row(n: int) -> dict:
+    """RECORDED, not gated: the radius methodology (core/radius.py) on a
+    lognormal planted-cluster corpus whose match counts are far heavier-
+    tailed than the quantile-matched profiles — most queries zero matches,
+    a few queries matching entire giant clusters. Exercises sweep /
+    select_radius / match_histogram end to end and records the Fig. 4
+    bucket table; wall-clock-free and deterministic, kept ungated because
+    it validates the *methodology's* behavior on an adversarial input, not
+    a perf or quality floor of the engine."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.radius import (
+        default_grid, match_histogram, select_radius, sweep,
+    )
+
+    from .common import make_heavy_tailed
+
+    pts, qs = make_heavy_tailed(n, d=32, n_queries=128, seed=0)
+    grid = default_grid(pts, qs, "l2", num=32)
+    prof = sweep(jnp.asarray(pts), jnp.asarray(qs), grid, "l2")
+    r, gi = select_radius(prof, target_zero_frac=0.85, robustness_weight=0.2)
+    counts = np.asarray(prof.counts)[:, gi]
+    nz = np.sort(counts[counts > 0])
+    # tail mass: fraction of ALL matches held by the top 10% of queries —
+    # ~1.0 for a true heavy tail, ~0.1 for a uniform workload
+    k = max(1, counts.size // 10)
+    tail_mass = float(np.sort(counts)[-k:].sum() / max(1, counts.sum()))
+    return dict(
+        n=n, dim=32, radius=float(r),
+        zero_frac=round(float(prof.zero_frac[gi]), 4),
+        histogram=match_histogram(counts),
+        mean_count=round(float(counts.mean()), 1),
+        max_count=int(counts.max()),
+        median_nonzero=0 if nz.size == 0 else int(np.median(nz)),
+        top10pct_match_mass=round(tail_mass, 4),
+        note="recorded only — validates radius selection + Fig. 4 "
+             "bucketing on a heavy-tailed workload",
     )
 
 

@@ -113,7 +113,10 @@ class QuantizedCorpus:
         return self.meta[..., 2]
 
 
-Corpus = Union[jnp.ndarray, QuantizedCorpus]
+# The third arm is `repro.tier.TieredCorpus` (duck-typed via its
+# ``is_tiered`` marker rather than imported — core stays tier-free; the
+# helpers below recurse into its device-resident arm).
+Corpus = Union[jnp.ndarray, QuantizedCorpus, "TieredCorpus"]  # noqa: F821
 
 
 def quantize_rows(vecs: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -153,23 +156,31 @@ def corpus_cast(points: jnp.ndarray, corpus_dtype: str) -> Corpus:
 
 
 def corpus_dtype_name(points: Corpus) -> str:
+    if getattr(points, "is_tiered", False):
+        return corpus_dtype_name(points.device)
     if isinstance(points, QuantizedCorpus):
         return "int8"
     return str(jnp.asarray(points).dtype)
 
 
 def corpus_size(points: Corpus) -> int:
+    if getattr(points, "is_tiered", False):
+        return corpus_size(points.device)
     return (points.codes if isinstance(points, QuantizedCorpus)
             else points).shape[0]
 
 
 def corpus_dim(points: Corpus) -> int:
+    if getattr(points, "is_tiered", False):
+        return corpus_dim(points.device)
     return (points.codes if isinstance(points, QuantizedCorpus)
             else points).shape[-1]
 
 
 def bytes_per_vector(points: Corpus) -> int:
     """Hot-loop HBM bytes gathered per distance (the roofline term)."""
+    if getattr(points, "is_tiered", False):
+        return bytes_per_vector(points.device)  # raw rows are host-side
     d = corpus_dim(points)
     if isinstance(points, QuantizedCorpus):
         return d + META_BYTES  # int8 codes + the f32 metadata row
@@ -318,7 +329,10 @@ def corpus_take_rows(points: Corpus, idx: jnp.ndarray) -> Corpus:
 def corpus_raw(points: Corpus) -> jnp.ndarray:
     """The exact-vector view used by graph construction/mutation (build
     searches + RobustPrune always run on exact vectors). Quantized corpora
-    must carry ``raw`` to be mutable."""
+    must carry ``raw`` to be mutable. A tiered corpus materializes its host
+    store on device — a mutation/consolidation cost, never a query cost."""
+    if getattr(points, "is_tiered", False):
+        return points.raw_array()
     if isinstance(points, QuantizedCorpus):
         if points.raw is None:
             raise ValueError(

@@ -51,21 +51,33 @@ class RangeSearchEngine:
               metric: str = "l2", seed: int = 0,
               n_starts: int = 4,
               corpus_dtype: Optional[str] = None,
-              labels: Optional[jnp.ndarray] = None) -> "RangeSearchEngine":
+              labels: Optional[jnp.ndarray] = None,
+              tier: bool = False,
+              resident_mb: Optional[float] = None) -> "RangeSearchEngine":
         cfg = build_cfg or BuildConfig(metric=metric)
         graph = build_vamana(points, cfg, seed=seed)
         return RangeSearchEngine.from_graph(points, graph, metric=metric,
                                             n_starts=n_starts,
                                             corpus_dtype=corpus_dtype,
-                                            labels=labels)
+                                            labels=labels, tier=tier,
+                                            resident_mb=resident_mb)
 
     @staticmethod
     def from_graph(points: jnp.ndarray, graph: Graph, metric: str = "l2",
                    n_starts: int = 4,
                    corpus_dtype: Optional[str] = None,
-                   labels: Optional[jnp.ndarray] = None) -> "RangeSearchEngine":
+                   labels: Optional[jnp.ndarray] = None,
+                   tier: bool = False,
+                   resident_mb: Optional[float] = None) -> "RangeSearchEngine":
         starts = start_points(points, metric, n_starts)
-        if corpus_dtype is not None:
+        if tier:
+            # deferred import: core stays importable without repro.tier;
+            # only an engine explicitly built with tier=True touches it
+            from ..tier import tiered_corpus
+            points = tiered_corpus(points,
+                                   corpus_dtype=corpus_dtype or "int8",
+                                   resident_mb=resident_mb)
+        elif corpus_dtype is not None:
             points = corpus_cast(points, corpus_dtype)
         if labels is not None:
             labels = jnp.asarray(labels, jnp.uint32)
@@ -123,7 +135,7 @@ class RangeSearchEngine:
     # -- introspection -------------------------------------------------------
     def stats(self) -> dict:
         deg = np.asarray(self.graph.degrees())
-        return dict(
+        out = dict(
             num_points=corpus_size(self.points),
             dim=corpus_dim(self.points),
             max_degree=int(self.graph.max_degree),
@@ -133,3 +145,7 @@ class RangeSearchEngine:
             corpus_dtype=corpus_dtype_name(self.points),
             hot_bytes_per_vector=int(bytes_per_vector(self.points)),
         )
+        if getattr(self.points, "is_tiered", False):
+            out["tier"] = self.points.counters.as_dict()
+            out["memory_budget"] = self.points.budget().as_dict()
+        return out

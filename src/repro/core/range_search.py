@@ -693,6 +693,26 @@ def _range_search_fused(
 # Two-phase pipeline with host-side query compaction (the QPS path)
 # ---------------------------------------------------------------------------
 
+def _tier_of(points):
+    """The `TieredCorpus` wrapper, if ``points`` is one (duck-typed on the
+    ``is_tiered`` marker — core never imports `repro.tier`)."""
+    return points if getattr(points, "is_tiered", False) else None
+
+
+def _exact_pairs_for(points, queries, ids_p, lanes_p, metric: str,
+                     n_real=None):
+    """Exact f32 pair distances for any exact-capable corpus view: resident
+    raw rows go through `_exact_pairs`; a tiered corpus plans + fetches its
+    host rows (`TieredCorpus.exact_pairs` — bit-identical by contract).
+    ``n_real`` bounds the fetch planning to the unpadded pair prefix."""
+    tier = _tier_of(points)
+    if tier is not None:
+        return tier.exact_pairs(queries, ids_p, lanes_p, metric,
+                                n_real=n_real)
+    raw = points.raw if isinstance(points, QuantizedCorpus) else points
+    return _exact_pairs(raw, queries, ids_p, lanes_p, metric)
+
+
 def _maybe_rerank_host(points, queries, rj: jnp.ndarray,
                        res: RangeResult, cfg: RangeConfig) -> RangeResult:
     """Host-compacted boundary rerank for the QPS path.
@@ -701,10 +721,14 @@ def _maybe_rerank_host(points, queries, rj: jnp.ndarray,
     whole batch and padded to the next power of two, so the exact pass is
     ONE batched f32 gather whose size tracks the actual band population
     (O(log) compiled variants) — zero-band batches pay a single vectorized
-    threshold test and no gather at all.
+    threshold test and no gather at all. A tiered corpus serves the gather
+    from its host row store (dedup + cache + bucketed prefetch) with the
+    same bits.
     """
-    if not (isinstance(points, QuantizedCorpus) and cfg.rerank
-            and points.raw is not None):
+    tier = _tier_of(points)
+    qc = tier.device if tier is not None else points
+    if not (isinstance(qc, QuantizedCorpus) and cfg.rerank
+            and (tier is not None or qc.raw is not None)):
         return res
     metric = cfg.search.metric
     ids = np.array(jax.device_get(res.ids))
@@ -712,7 +736,7 @@ def _maybe_rerank_host(points, queries, rj: jnp.ndarray,
     valid = ids != INVALID_ID
     safe = np.where(valid, ids, 0)
     ub = np.asarray(jax.vmap(
-        lambda i_, d_, q_: upper_bound_dists(points, i_, d_, q_, metric))(
+        lambda i_, d_, q_: upper_bound_dists(qc, i_, d_, q_, metric))(
             jnp.asarray(safe), jnp.asarray(dists), queries))
     amb = valid & (ub > np.asarray(rj)[:, None])
     n_rerank = amb.sum(axis=1).astype(np.int32)
@@ -724,10 +748,10 @@ def _maybe_rerank_host(points, queries, rj: jnp.ndarray,
     ids_p = np.concatenate([ids[lanes_p, slots_p],
                             np.zeros(pad, np.int32)])
     lanes_pp = np.concatenate([lanes_p, np.zeros(pad, lanes_p.dtype)])
-    exact_p = np.asarray(_exact_pairs(points.raw, queries,
-                                      jnp.asarray(ids_p, jnp.int32),
-                                      jnp.asarray(lanes_pp, jnp.int32),
-                                      metric))
+    exact_p = np.asarray(_exact_pairs_for(points, queries,
+                                          jnp.asarray(ids_p, jnp.int32),
+                                          jnp.asarray(lanes_pp, jnp.int32),
+                                          metric, n_real=len(lanes_p)))
     rnp = np.asarray(rj)
     exact = np.full(ids.shape, np.inf, np.float32)
     exact[lanes_p, slots_p] = exact_p[:len(lanes_p)]
@@ -766,7 +790,10 @@ def _walk_compacted(
     labels=None,          # (N, W) uint32 per-point label rows
     label_filter: Optional[LabelFilter] = None,
 ) -> RangeResult:
-    points = corpus
+    # a tiered corpus walks on its device arm (codes + meta only); the
+    # host-fetched rerank in finish() sees the full tier
+    tier = _tier_of(corpus)
+    points = tier.device if tier is not None else corpus
     rj = broadcast_radius(r, queries.shape[0])
 
     def finish(res: RangeResult) -> RangeResult:
@@ -776,7 +803,7 @@ def _walk_compacted(
             res = filter_tombstoned(tombstones, res)
         if labels is not None and label_filter is not None:
             res = filter_labeled(labels, label_filter, res)
-        return _maybe_rerank_host(points, queries, rj, res, cfg)
+        return _maybe_rerank_host(corpus, queries, rj, res, cfg)
 
     esj = None if es_radius is None else broadcast_radius(es_radius, queries.shape[0])
     # phase 1 runs at the BASE beam for every mode (for doubling this is the
@@ -860,11 +887,12 @@ def _walk_compacted(
 ENTRY_SEED_FRAC = 0.25
 
 
-def _fallback_scan(raw, queries, rj_np, tombstones, match, fb_sel,
+def _fallback_scan(points, queries, rj_np, tombstones, match, fb_sel,
                    cap: int, metric: str):
     """Brute exact scan of each fallback lane's posting list.
 
-    ``raw`` is the exact-vector corpus view, ``match`` the host (Q, N)
+    ``points`` is any exact-capable corpus view (raw array, quantized
+    corpus with raw rows, or tiered corpus), ``match`` the host (Q, N)
     predicate matrix, ``fb_sel`` the lanes taking this path. All posting
     lists flatten into one pow2-padded ``_exact_pairs`` call (O(log)
     compiled variants, like the rerank band), then each lane keeps
@@ -894,11 +922,11 @@ def _fallback_scan(raw, queries, rj_np, tombstones, match, fb_sel,
     ids_p = np.concatenate(per_ids)
     bucket = next_pow2(total)
     pad = bucket - total
-    d = np.asarray(_exact_pairs(
-        raw, queries,
+    d = np.asarray(_exact_pairs_for(
+        points, queries,
         jnp.asarray(np.concatenate([ids_p, np.zeros(pad, np.int32)])),
         jnp.asarray(np.concatenate([lanes_p, np.zeros(pad, np.int32)])),
-        metric))[:total]
+        metric, n_real=total))[:total]
     off = 0
     for j, pid in enumerate(per_ids):
         dj = d[off:off + pid.size]
@@ -954,9 +982,13 @@ def _range_search_compacted(
     n_corpus = corpus_size(corpus)
     match = np.asarray(label_match_matrix(labels, label_filter))   # (Q, N)
     counts = match.sum(axis=1)
-    raw = corpus.raw if isinstance(corpus, QuantizedCorpus) else corpus
+    if _tier_of(corpus) is not None:
+        has_exact = True  # host store serves the fallback's exact scan
+    else:
+        has_exact = (corpus.raw is not None
+                     if isinstance(corpus, QuantizedCorpus) else True)
     fb = (counts < cfg.filter_threshold * n_corpus
-          if cfg.filter_threshold > 0.0 and raw is not None
+          if cfg.filter_threshold > 0.0 and has_exact
           else np.zeros(n_q, bool))
 
     # filter-aware entry points: selective walk lanes start inside their
@@ -987,7 +1019,7 @@ def _range_search_compacted(
     fb_sel = np.nonzero(fb)[0]
     w_sel = np.nonzero(~fb)[0]
     f_ids, f_d, f_cnt, f_over, f_nd = _fallback_scan(
-        raw, queries, np.asarray(rj), tombstones, match, fb_sel, cap,
+        corpus, queries, np.asarray(rj), tombstones, match, fb_sel, cap,
         cfg.search.metric)
 
     ids = np.full((n_q, cap), INVALID_ID, np.int32)
@@ -1054,7 +1086,19 @@ def range_search_fused(*, corpus, graph, queries, start_ids, r, cfg,
     dead-slot bitset; ``labels``/``label_filter`` the per-point label rows
     and batched predicate (``core.labels``). The fused program always
     walks — the selectivity fallback needs a host dispatch and lives on the
-    compacted path."""
+    compacted path. A tiered corpus runs the program on its device arm
+    (raw=None skips the in-program rerank after the tombstone/label drops)
+    and reranks through the host store afterwards — same filter→rerank
+    order, same bits as the resident program."""
+    tier = _tier_of(corpus)
+    if tier is not None:
+        res = _range_search_fused(corpus=tier.device, graph=graph,
+                                  queries=queries, start_ids=start_ids, r=r,
+                                  cfg=cfg, es_radius=es_radius,
+                                  tombstones=tombstones, labels=labels,
+                                  label_filter=label_filter)
+        rj = broadcast_radius(r, queries.shape[0])
+        return _maybe_rerank_host(corpus, queries, rj, res, cfg)
     return _range_search_fused(corpus=corpus, graph=graph, queries=queries,
                                start_ids=start_ids, r=r, cfg=cfg,
                                es_radius=es_radius, tombstones=tombstones,

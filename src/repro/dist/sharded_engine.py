@@ -67,6 +67,13 @@ class ShardedCorpus:
     # label rows: they are unreachable anyway, and a zero row matches no
     # non-trivial AND/OR predicate.
     labels: Any = None
+    # Tuple of per-shard ``repro.tier.TieredCorpus`` views (device=None —
+    # the stacked ``points`` above IS the device arm; each tier contributes
+    # its host row store + cache), or None for a fully-resident corpus.
+    # Static: a TieredCorpus is identity-hashed and never enters jit; only
+    # the host fan-out path (fault.fault_tolerant_sharded_search) composes
+    # ``tiers[s].with_device(points[s])`` per shard.
+    tiers: Any = dataclasses.field(default=None, metadata=dict(static=True))
 
     @property
     def n_shards(self) -> int:
@@ -92,6 +99,8 @@ def build_sharded(
     lane_pad: int = 0,
     corpus_dtype: str = "float32",
     labels=None,
+    tier: bool = False,
+    resident_mb: float = None,
 ) -> ShardedCorpus:
     """Partition ``points`` into ``n_shards`` contiguous blocks and build one
     sub-index per block with ``build_fn``. A short last block is padded to
@@ -113,7 +122,14 @@ def build_sharded(
     ``labels`` (optional) is the corpus-wide (N, W) uint32 packed label
     matrix (``core.labels.pack_labels``); it splits into the same contiguous
     blocks as the points, zero-padded to the common shard size (zero rows
-    match no non-trivial predicate and are unreachable regardless)."""
+    match no non-trivial predicate and are unreachable regardless).
+
+    ``tier=True`` builds each shard as a tiered corpus: the stacked
+    ``points`` keep only the device arm (int8 codes + meta for "int8";
+    the cast block for float dtypes), while each shard's raw f32 rerank
+    rows move into its own host row store (``ShardedCorpus.tiers``).
+    ``resident_mb`` caps each shard's device row cache. Tiered sharded
+    corpora are served by the host fan-out path only."""
     pts = np.asarray(points)
     n_total, d = pts.shape
     n = cdiv(n_total, n_shards)
@@ -122,7 +138,7 @@ def build_sharded(
         if labels.shape[0] != n_total:
             raise ValueError(
                 f"labels rows ({labels.shape[0]}) != corpus size ({n_total})")
-    blocks, nbrs, starts, labs = [], [], [], []
+    blocks, nbrs, starts, labs, tiers = [], [], [], [], []
     for s in range(n_shards):
         block = pts[s * n:(s + 1) * n]
         graph, start_ids = build_fn(jnp.asarray(block))
@@ -142,6 +158,15 @@ def build_sharded(
                 [neighbors,
                  np.full((n_pad, neighbors.shape[1]), INVALID_ID, np.int32)],
                 axis=0)
+        if tier:
+            # split the (padded) shard: raw rows -> this shard's host store,
+            # device arm -> the stacked points. The tier keeps device=None —
+            # the stacked arm is sliced back in per search (with_device).
+            from ..tier import tiered_corpus
+            t = tiered_corpus(stored, corpus_dtype=corpus_dtype,
+                              resident_mb=resident_mb)
+            tiers.append(t.with_device(None))
+            stored = t.device
         blocks.append(stored)
         nbrs.append(jnp.asarray(neighbors))
         starts.append(jnp.asarray(start_ids, jnp.int32).reshape(-1))
@@ -158,6 +183,7 @@ def build_sharded(
         offsets=jnp.arange(n_shards, dtype=jnp.int32) * n,
         n_total=n_total,
         labels=None if labels is None else jnp.stack(labs),
+        tiers=tuple(tiers) if tier else None,
     )
 
 
@@ -218,6 +244,11 @@ def sharded_range_search(
     merge), so the merged result equals the post-filtered union."""
     if corpus.n_total <= 0:
         raise ValueError("ShardedCorpus.n_total must be the true corpus size")
+    if getattr(corpus, "tiers", None) is not None:
+        raise ValueError(
+            "a tiered ShardedCorpus cannot run the collective shard_map "
+            "program (host row fetches inside a collective would deadlock "
+            "the mesh); use fault.fault_tolerant_sharded_search")
     if label_filter is not None and corpus.labels is None:
         raise ValueError(
             "corpus has no labels attached; build_sharded(..., labels=) to "

@@ -39,6 +39,7 @@ from ..core.graph import Graph
 from ..core.labels import LabelFilter
 from ..core.range_search import RangeConfig, RangeResult, range_search_fused
 from ..dist.sharded_engine import ShardedCorpus, _remap_global, union_merge
+from ..tier import TierFetchError
 from ..utils import INVALID_ID
 from .errors import SHARD_LOST
 from .injector import FaultInjector, ShardFault
@@ -169,8 +170,14 @@ def _search_one_shard(corpus: ShardedCorpus, s: int, queries, radii, cfg,
                       es_vec, tombstones,
                       label_filter: Optional[LabelFilter] = None) -> RangeResult:
     """Exact per-shard search with shard-local ids remapped to global —
-    the same per-shard program the collective path runs, minus the mesh."""
+    the same per-shard program the collective path runs, minus the mesh.
+    A tiered corpus composes shard ``s``'s host store back onto its slice
+    of the stacked device arm, so the per-shard rerank fetches that
+    shard's raw rows (shard-local slot space) before the global remap."""
     shard_pts = jax.tree.map(lambda x: x[s], corpus.points)
+    tiers = getattr(corpus, "tiers", None)
+    if tiers is not None:
+        shard_pts = tiers[s].with_device(shard_pts)
     res = range_search_fused(
         corpus=shard_pts, graph=Graph(neighbors=corpus.neighbors[s]),
         queries=queries, start_ids=corpus.start_ids[s], r=radii, cfg=cfg,
@@ -338,8 +345,10 @@ def fault_tolerant_sharded_search(
                     fault = "garbage"
                     raise ShardFault("garbage", s, attempt)
                 return True, res, attempt + 1, fault
-            except ShardFault as e:
-                fault = e.kind
+            except (ShardFault, TierFetchError) as e:
+                # a failed host-store fetch degrades exactly like a lost
+                # shard: retry, then annotate — never crash the batch
+                fault = getattr(e, "kind", "tier_fetch")
                 if attempt + 1 < retry.max_attempts:
                     d = retry.delay_s(attempt, key=s)
                     if d > 0:

@@ -46,6 +46,7 @@ from ..core.beam_search import broadcast_radius
 from ..core.labels import LabelFilter
 from ..core.range_search import RangeConfig, RangeResult
 from ..dist.sharded_engine import ShardedCorpus
+from ..tier import TierFetchError
 from .degraded import (
     DegradedResult,
     RetryPolicy,
@@ -551,8 +552,8 @@ def replicated_fan_out(
                 if kind == "error":
                     raise ShardError(s, attempt, rep)
                 res = search_replica(s, rep, offset, attempt, kind)
-            except ShardFault as e:
-                st.fault = e.kind
+            except (ShardFault, TierFetchError) as e:
+                st.fault = getattr(e, "kind", "tier_fetch")
                 st.rep_failed.add(rep)
                 fleet.record_failure(s, rep)
                 continue
@@ -599,8 +600,8 @@ def replicated_fan_out(
             rep = futs.pop(fut)
             try:
                 res = fut.result()
-            except ShardFault as e:
-                st.fault = e.kind
+            except (ShardFault, TierFetchError) as e:
+                st.fault = getattr(e, "kind", "tier_fetch")
                 st.rep_failed.add(rep)
                 fleet.record_failure(s, rep)
                 if not futs:

@@ -1,0 +1,4 @@
+from .ops import fetch_rerank_dists
+from .ref import fetch_rerank_dists_ref
+
+__all__ = ["fetch_rerank_dists", "fetch_rerank_dists_ref"]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: double-buffered raw-row gather for the rerank band.
+
+The TPU half of the tiered rerank fetch. The host planner
+(`tier.planner.plan_fetch`) has already deduplicated and pow2-bucketed the
+guard-band (lane, slot) pairs; this kernel consumes one bucket at a time:
+a tile of row ids arrives by scalar prefetch, the exact f32 rows are
+DMA-gathered from the raw-row array (``pltpu.ANY`` — HBM on device, and
+the drop-in source for a host-DMA pointer once single-controller host
+memory is addressable), and the per-pair exact distances come out fused,
+so the gathered rows never materialize as an XLA tensor.
+
+Unlike the expand kernel's start/wait-per-row gather, the row DMAs here
+are **double-buffered** (the guide's two-semaphore rotation): the copy for
+row r+1 is issued while row r's copy is being waited on, hiding the
+row-fetch latency behind itself — the pattern the tiered corpus mirrors
+at bucket granularity on the host side with overlapped ``device_put``.
+
+VMEM per grid step: row scratch ``tile*d*4`` B + query block the same +
+one (1, tile) out row — for tile=16, d=128 that is ~16 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fetch_kernel(
+    ids_ref,    # (P,) int32 scalar-prefetch: clamped row ids (pad -> 0)
+    qv_ref,     # (tile, d) the tile's pre-gathered query rows
+    raw_ref,    # (N, d) f32 raw rows, ANY/HBM — gathered by manual DMA
+    out_ref,    # (1, tile) f32 out: exact distances
+    vec_ref,    # (tile, d) f32 VMEM scratch: gathered rows
+    sems,       # (2,) DMA semaphores — the double-buffer rotation
+    *,
+    tile: int,
+    metric: str,
+):
+    t = pl.program_id(0)
+    base = t * tile
+
+    def row_copy(r):
+        slot = jax.lax.rem(r, 2)
+        return pltpu.make_async_copy(
+            raw_ref.at[ids_ref[base + r]], vec_ref.at[r], sems.at[slot])
+
+    # double-buffered gather: row r+1's DMA is in flight while row r's
+    # completes, so consecutive row fetches overlap instead of serializing
+    row_copy(0).start()
+
+    def body(r, _):
+        @pl.when(r + 1 < tile)
+        def _start_next():
+            row_copy(r + 1).start()
+
+        row_copy(r).wait()
+        return 0
+
+    jax.lax.fori_loop(0, tile, body, 0, unroll=False)
+
+    x = vec_ref[...].astype(jnp.float32)      # (tile, d)
+    q = qv_ref[...].astype(jnp.float32)       # (tile, d)
+    if metric == "l2":
+        diff = x - q
+        out_ref[0, :] = jnp.sum(diff * diff, axis=1)
+    else:  # ip
+        out_ref[0, :] = -jnp.sum(x * q, axis=1)
+
+
+def fetch_rerank_dists_pallas(
+    raw: jnp.ndarray,     # (N, d) f32 raw rows
+    ids: jnp.ndarray,     # (P,) int32 row ids, P a multiple of tile
+    qv: jnp.ndarray,      # (P, d) pre-gathered query rows
+    *,
+    metric: str = "l2",
+    tile: int = 16,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    p, d = qv.shape
+    assert p % tile == 0, f"pair count {p} not a multiple of tile {tile}"
+    n_tiles = p // tile
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda t, ids_ref: (t, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda t, ids_ref: (t, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tile, d), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fetch_kernel, tile=tile, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tile), jnp.float32),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), qv.astype(jnp.float32),
+      raw.astype(jnp.float32))
+    return out.reshape(p)

@@ -1,0 +1,18 @@
+"""XLA reference for the rerank-fetch kernel: gather + per-pair distance."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.distances import point_dist
+
+
+def fetch_rerank_dists_ref(raw: jnp.ndarray, ids: jnp.ndarray,
+                           qv: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """Exact f32 distances for flat rerank pairs.
+
+    ``raw`` is the (N, d) row source, ``ids`` the (P,) row ids, ``qv`` the
+    (P, d) pre-gathered per-pair query rows. Same math as the core
+    `_exact_pairs` seam, with the query gather already done by the caller.
+    """
+    vecs = jnp.take(raw, ids, axis=0).astype(jnp.float32)
+    return point_dist(vecs, qv.astype(jnp.float32), metric)

@@ -68,9 +68,13 @@ def _replicated_main(args) -> int:
     corpus = build_sharded(
         pts, n_shards,
         lambda p: (build_vamana(jnp.asarray(p), bcfg), medoid(p)[None]),
-        corpus_dtype=args.corpus_dtype)
+        corpus_dtype=args.corpus_dtype,
+        tier=args.tier, resident_mb=args.resident_mb)
     print(f"[serve] {n_shards}-shard index built in "
           f"{time.perf_counter() - t0:.1f}s")
+    if args.tier:
+        print(f"[serve] tiered shards: "
+              f"{[t.budget().as_dict() for t in corpus.tiers]}")
 
     down = []
     if args.down_replicas:
@@ -122,6 +126,9 @@ def _replicated_main(args) -> int:
           f"replicas_recovered={st['replicas_recovered']} "
           f"shards_lost={st['shards_lost']} "
           f"degraded_batches={st['degraded_batches']}")
+    if args.tier:
+        print(f"[serve] tier fetch path (shard 0): "
+              f"{corpus.tiers[0].counters.as_dict()}")
     return 0
 
 
@@ -160,9 +167,13 @@ def _churn_main(args) -> int:
         BuildConfig(max_degree=32, beam=64, metric=ds.metric),
         metric=ds.metric, corpus_dtype=args.corpus_dtype,
         labels=None if raw_labels is None
-        else pack_labels(raw_labels[:n], args.num_labels))
+        else pack_labels(raw_labels[:n], args.num_labels),
+        tier=args.tier, resident_mb=args.resident_mb)
     print(f"[serve] live index built in {time.perf_counter() - t0:.1f}s "
           f"{live.stats()}")
+    if args.tier:
+        print(f"[serve] tiered live corpus: "
+              f"{live.points.budget().as_dict()}")
 
     rcfg = EngineDeployConfig().overrides(
         metric=ds.metric,
@@ -266,6 +277,9 @@ def _churn_main(args) -> int:
               f"(AP above scored vs the post-filtered oracle on the final "
               f"live set)")
     print(f"[serve] final live index: {live.stats()}")
+    if args.tier:
+        print(f"[serve] tier fetch path: "
+              f"{live.points.counters.as_dict()}")
     return 0
 
 
@@ -284,6 +298,13 @@ def main(argv=None):
                    help="corpus storage dtype: int8 runs the quantized "
                         "two-pass pipeline (guard-banded search + exact "
                         "boundary rerank)")
+    p.add_argument("--tier", action="store_true",
+                   help="tiered corpus: keep only codes+meta device-resident "
+                        "and serve the guard-band rerank from a host-RAM "
+                        "raw-row store (implies --corpus-dtype int8)")
+    p.add_argument("--resident-mb", type=float, default=None,
+                   help="device row-cache budget for --tier, in MB "
+                        "(default: n/8 rows)")
     p.add_argument("--early-stop", action="store_true")
     p.add_argument("--max-batch", type=int, default=128)
     p.add_argument("--mixed-radius", action="store_true",
@@ -328,6 +349,8 @@ def main(argv=None):
                    help="scripted replica loss, e.g. '0:0,1:1' downs shard "
                         "0's replica 0 and shard 1's replica 1")
     args = p.parse_args(argv)
+    if args.tier:
+        args.corpus_dtype = "int8"  # tiering exists for the quantized split
 
     if args.churn > 0:
         return _churn_main(args)
@@ -363,9 +386,14 @@ def main(argv=None):
     eng = RangeSearchEngine.build(
         pts, BuildConfig(max_degree=32, beam=64, metric=ds.metric),
         metric=ds.metric, corpus_dtype=args.corpus_dtype,
-        labels=labels_packed)
+        labels=labels_packed, tier=args.tier, resident_mb=args.resident_mb)
     print(f"[serve] index built in {time.perf_counter() - t0:.1f}s "
           f"{eng.stats()}")
+    if args.tier:
+        bud = eng.points.budget()
+        print(f"[serve] tiered corpus: device={bud.device_total} B "
+              f"({bud.device_bytes_per_vector(args.n):.1f} B/vec) "
+              f"host={bud.host_total} B; breakdown={bud.as_dict()}")
 
     rng = np.random.default_rng(0)
     if args.mixed_radius:
@@ -500,6 +528,8 @@ def main(argv=None):
               f"(f32: {4 * ds.points.shape[1]}), "
               f"guard-band reranks/query="
               f"{srv.stats['reranked'] / served:.2f}")
+    if args.tier:
+        print(f"[serve] tier fetch path: {eng.points.counters.as_dict()}")
     return 0
 
 

@@ -257,7 +257,9 @@ class LiveIndex:
                corpus_dtype: str = "float32", seed: int = 0,
                first_ext_id: int = 0,
                graph: Optional[Graph] = None,
-               labels=None) -> "LiveIndex":
+               labels=None,
+               tier: bool = False,
+               resident_mb: Optional[float] = None) -> "LiveIndex":
         """Build the initial frozen index, then pre-allocate it to capacity.
 
         ``first_ext_id`` offsets external-id assignment (the sharded router
@@ -270,7 +272,14 @@ class LiveIndex:
         makes the index labeled — inserts may then carry per-row label rows
         and snapshots accept ``filter=`` predicates. The label store is
         pre-allocated to capacity alongside the corpus (zero rows for
-        unborn slots)."""
+        unborn slots).
+
+        ``tier=True`` splits the capacity-padded corpus into a
+        ``repro.tier.TieredCorpus``: codes/meta (or the cast array) stay
+        device-resident while the raw rerank rows — including the FAR
+        sentinel rows of unborn slots — live in a host-RAM row store that
+        inserts write through and consolidation compacts. ``resident_mb``
+        caps the device row cache."""
         pts = jnp.asarray(points, jnp.float32)
         n0 = pts.shape[0]
         if n0 > cfg.capacity:
@@ -286,6 +295,11 @@ class LiveIndex:
                                       cfg.capacity, FAR)
         if corpus_dtype == "int8":
             corpus_raw(stored)  # live int8 requires raw vectors — fail early
+        if tier:
+            # deferred import: live stays importable without repro.tier
+            from ..tier import tiered_corpus
+            stored = tiered_corpus(stored, corpus_dtype=corpus_dtype,
+                                   resident_mb=resident_mb)
         nbrs = jnp.concatenate(
             [graph.neighbors,
              jnp.full((cfg.capacity - n0, graph.max_degree), INVALID_ID,
@@ -444,8 +458,22 @@ class LiveIndex:
             vecs_p = np.zeros((B, d), np.float32)
             vecs_p[:b] = chunk
             active = np.arange(B) < b
-            self.points = _set_rows(self.points, jnp.asarray(slots_p),
-                                    jnp.asarray(vecs_p), jnp.asarray(active))
+            if getattr(self.points, "is_tiered", False):
+                # hot arm updates through the same jitted step; the raw
+                # rows write through to the host store. Fresh slots sit
+                # behind every published snapshot's watermark (and past
+                # consolidation's fresh cache), but invalidate anyway so
+                # a stale cache line can never alias a rewritten row.
+                t = self.points
+                dev = _set_rows(t.device, jnp.asarray(slots_p),
+                                jnp.asarray(vecs_p), jnp.asarray(active))
+                t.store.write(slots, chunk)
+                t.cache.invalidate(slots)
+                self.points = t.with_device(dev)
+            else:
+                self.points = _set_rows(self.points, jnp.asarray(slots_p),
+                                        jnp.asarray(vecs_p),
+                                        jnp.asarray(active))
             if lab_rows is not None:
                 self.labels = self.labels.at[jnp.asarray(slots)].set(
                     jnp.asarray(lab_rows[off:off + b]))
@@ -511,11 +539,33 @@ class LiveIndex:
         self._log("consolidate")
         dead = np.zeros(self.capacity, bool)
         dead[np.asarray(sorted(self._dead), np.int64)] = True
+        tier = self.points if getattr(self.points, "is_tiered", False) else None
+        pts = self.points
+        if tier is not None:
+            # compose a temporary resident corpus (device hot arm + host
+            # store raw) for the rewiring pass; re-split below
+            pts = (dataclasses.replace(tier.device, raw=tier.raw_array())
+                   if tier.quantized else tier.device)
         out = consolidate_index(
-            self.points, self.neighbors, dead, self.live_count,
+            pts, self.neighbors, dead, self.live_count,
             self.build_cfg, self.metric, self.cfg.n_starts, far=FAR)
         new_points, new_neighbors, new_starts, perm, stats = out
         reclaimed = self.live_count - perm.shape[0]
+        if tier is not None:
+            from ..tier import DeviceRowCache, HostRowStore, TieredCorpus
+            if tier.quantized:
+                raw_np = np.asarray(jax.device_get(new_points.raw), np.float32)
+                dev = dataclasses.replace(new_points, raw=None)
+            else:
+                raw_np = np.asarray(jax.device_get(new_points), np.float32)
+                dev = new_points
+            # compaction moved slots, so stale cache lines would alias old
+            # rows: the rebuilt tier starts with an empty cache over a NEW
+            # store (the old store stays valid for old snapshots)
+            new_points = TieredCorpus(
+                dev, HostRowStore(raw_np),
+                DeviceRowCache(tier.cache.dim, tier.cache.capacity),
+                tier.counters, tier.fetch_bucket)
         self.points = new_points
         self.neighbors = new_neighbors
         self.start_ids = new_starts
@@ -551,12 +601,20 @@ class LiveIndex:
                 [self.live_count, self.next_ext_id, self.epoch,
                  self.wal_seq], np.int64),
         )
-        if isinstance(self.points, QuantizedCorpus):
-            state["codes"] = self.points.codes
-            state["meta"] = self.points.meta
-            state["raw"] = self.points.raw
+        tier = self.points if getattr(self.points, "is_tiered", False) else None
+        pts = tier.device if tier is not None else self.points
+        if isinstance(pts, QuantizedCorpus):
+            state["codes"] = pts.codes
+            state["meta"] = pts.meta
+            # tiered: raw comes straight from the host store — the SAME
+            # bytes queries rerank against, so store and manifest can
+            # never disagree about what a restored index answers
+            state["raw"] = (np.ascontiguousarray(tier.store.to_array())
+                            if tier is not None else pts.raw)
         else:
-            state["points"] = self.points
+            state["points"] = pts
+            if tier is not None:  # degenerate float tier: store rides too
+                state["raw"] = np.ascontiguousarray(tier.store.to_array())
         if self.labels is not None:
             state["labels"] = self.labels
         extra = dict(
@@ -565,6 +623,9 @@ class LiveIndex:
             live=dataclasses.asdict(self.cfg),
             build=dataclasses.asdict(self.build_cfg),
         )
+        if tier is not None:
+            extra["tier"] = dict(cache_rows=int(tier.cache.capacity),
+                                 fetch_bucket=int(tier.fetch_bucket))
         return manager.save(self.epoch if step is None else step, state,
                             extra=extra)
 
@@ -586,15 +647,27 @@ class LiveIndex:
         records."""
         from ..core.bitset import bitset_contains
         from ..core.corpus import QuantizedCorpus
-        flat, manifest = manager.restore_flat(step)
+        tier_extra = manager.manifest(step)["extra"].get("tier")
+        # tiered checkpoints restore the raw rows as a copy-on-write
+        # memory map that backs the host store directly — never HBM
+        flat, manifest = manager.restore_flat(
+            step, mmap=("raw",) if tier_extra is not None else None)
         extra = manifest["extra"]
         if extra.get("kind") != "live_index":
             raise ValueError("checkpoint was not written by LiveIndex.save")
         if "points" in flat:
             points = flat["points"]
         else:
-            points = QuantizedCorpus(codes=flat["codes"], meta=flat["meta"],
-                                     raw=flat["raw"])
+            points = QuantizedCorpus(
+                codes=flat["codes"], meta=flat["meta"],
+                raw=None if tier_extra is not None else flat["raw"])
+        if tier_extra is not None:
+            from ..tier import DeviceRowCache, HostRowStore, TieredCorpus
+            raw = flat["raw"]
+            points = TieredCorpus(
+                points, HostRowStore(raw, copy=False),
+                DeviceRowCache(raw.shape[1], tier_extra["cache_rows"]),
+                fetch_bucket=tier_extra["fetch_bucket"])
         counters = [int(x) for x in np.asarray(flat["counters"])]
         # pre-WAL checkpoints carry 3 counters; wal_seq defaults to 0
         live_count, next_ext_id, epoch = counters[:3]

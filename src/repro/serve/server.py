@@ -64,9 +64,9 @@ from ..core.corpus import corpus_dtype_name
 from ..core.engine import RangeSearchEngine
 from ..core.labels import LabelFilter, make_label_filter, make_mask
 from ..core.range_search import (
-    RangeConfig, RangeResult, finalize_results, greedy_coverage,
-    greedy_lane_done, greedy_resume_batch, greedy_seed_batch, range_phase1,
-    range_search_compacted,
+    RangeConfig, RangeResult, _maybe_rerank_host, _tier_of, finalize_results,
+    greedy_coverage, greedy_lane_done, greedy_resume_batch, greedy_seed_batch,
+    range_phase1, range_search_compacted,
 )
 from ..dist.sharded_engine import ShardedCorpus, sharded_range_search
 from ..fault.degraded import RetryPolicy, fault_tolerant_sharded_search
@@ -77,10 +77,13 @@ from ..utils import INVALID_ID, next_pow2
 from .latency import LatencyHistogram
 from .scheduler import LaneScheduler, _gather_lanes
 
-#: ops a Request may carry. "count" is reserved for the aggregate-only
-#: query shape (|S_r(q)| without materializing S) — same admission path,
-#: not yet served.
-REQUEST_OPS = ("range", "insert", "delete")
+#: ops a Request may carry. "count" is the aggregate-only query shape:
+#: |S_r(q)| as a per-lane certified match count (post-rerank, the same
+#: number a range answer's ``count`` field carries) with NO ids/dists
+#: payload — the paper's dedup/count workload. Count requests ride the
+#: same admission queue, micro-batches, and search programs as range
+#: requests; only the response materialization differs.
+REQUEST_OPS = ("range", "count", "insert", "delete")
 
 
 @dataclasses.dataclass(kw_only=True)
@@ -99,8 +102,8 @@ class Request:
     freely (unfiltered lanes ride an all-pass predicate). ``labels``
     (insert op) tags the inserted vector with label ids."""
     req_id: int
-    op: str = "range"                   # range | insert | delete
-    query: Optional[np.ndarray] = None  # range/insert: the vector
+    op: str = "range"                   # range | count | insert | delete
+    query: Optional[np.ndarray] = None  # range/count/insert: the vector
     radius: Optional[float] = None      # per-request; batches mix radii freely
     deadline_s: Optional[float] = None  # latency budget (seconds from submit)
     delete_ids: Optional[np.ndarray] = None  # delete: external ids to remove
@@ -124,8 +127,8 @@ class Response:
     never corrupted: every returned id is exact-distance-certified within
     the request radius."""
     req_id: int
-    op: str = "range"               # range | insert | delete | error
-    ids: np.ndarray = None
+    op: str = "range"               # range | count | insert | delete | error
+    ids: np.ndarray = None          # count op: empty (count-only payload)
     dists: np.ndarray = None
     count: int = 0
     overflow: bool = False
@@ -273,7 +276,7 @@ class RangeServer:
             if cfg.mode != "greedy":
                 raise ValueError("continuous batching schedules the greedy "
                                  f"phase; cfg.mode={cfg.mode!r}")
-            self._pool = LaneScheduler(self._corpus(), self._graph(), cfg,
+            self._pool = LaneScheduler(self._device_corpus(), self._graph(), cfg,
                                        server_cfg.lanes,
                                        server_cfg.slice_rounds)
         self.hist = {"all": LatencyHistogram(),
@@ -319,11 +322,34 @@ class RangeServer:
             # one label-predicate lane (filtered + unfiltered lanes batch
             # together; unfiltered lanes ride an all-pass predicate)
             "filtered_batches": 0, "filtered_requests": 0,
+            # aggregate-only workload: op="count" requests served (certified
+            # per-lane match counts, no ids/dists payload)
+            "count_requests": 0,
         }
 
     # -- served view ---------------------------------------------------------
     def _corpus(self):
         return self._view.points if self.live is not None else self.engine.points
+
+    def _device_corpus(self):
+        """The jit-safe hot arm of the served corpus: a `TieredCorpus` never
+        enters a jitted walk — phase 1 / greedy resume run on its device
+        codes; `_finalize` hands the full tier to the host rerank."""
+        pts = self._corpus()
+        tier = _tier_of(pts)
+        return tier.device if tier is not None else pts
+
+    def _finalize(self, qj, rj, res, lf):
+        """`finalize_results` (tombstones, label predicate, fused resident
+        rerank) plus the tiered corpus's host-fetched guard-band rerank —
+        the continuous-path twin of `_walk_compacted`'s finish()."""
+        res = finalize_results(self._device_corpus(), qj, rj, res, self.cfg,
+                               self._tombstones(),
+                               None if lf is None else self._labels(), lf)
+        pts = self._corpus()
+        if _tier_of(pts) is not None:
+            res = _maybe_rerank_host(pts, qj, rj, res, self.cfg)
+        return res
 
     def _graph(self):
         return self._view.graph if self.live is not None else self.engine.graph
@@ -390,8 +416,9 @@ class RangeServer:
         elif req.query is None:
             raise ValueError(f"{req.op!r} requests need a query vector")
         if req.filter_labels is not None:
-            if req.op != "range":
-                raise ValueError("filter_labels applies to range requests")
+            if req.op not in ("range", "count"):
+                raise ValueError(
+                    "filter_labels applies to range/count requests")
             if self._labels() is None:
                 raise ValueError(
                     "served corpus has no labels attached; filtered range "
@@ -437,13 +464,14 @@ class RangeServer:
     def _shed_expired(self, batch, svc0: float):
         """Split a drained micro-batch into (alive, expired-error responses).
 
-        Only range requests expire — a mutation's effect is wanted no
-        matter how late it applies. Expiry is strict (``now > deadline``)
-        so a zero budget still gets the work done at the instant of
-        submission under a frozen test clock."""
+        Only query (range/count) requests expire — a mutation's effect is
+        wanted no matter how late it applies. Expiry is strict
+        (``now > deadline``) so a zero budget still gets the work done at
+        the instant of submission under a frozen test clock."""
         alive, out = [], []
         for rq, arrive in batch:
-            if rq.op == "range" and svc0 > self._deadline_at(rq, arrive):
+            if (rq.op in ("range", "count")
+                    and svc0 > self._deadline_at(rq, arrive)):
                 self.stats["deadline_shed"] += 1
                 out.append(self._record(self._error_response(
                     rq, DEADLINE_EXPIRED, latency_s=svc0 - arrive,
@@ -567,7 +595,8 @@ class RangeServer:
                                     filter=label_filter), None
         if self.sharded is not None:
             if (self.mesh is not None and self.injector is None
-                    and self.fleet is None):
+                    and self.fleet is None
+                    and getattr(self.sharded, "tiers", None) is None):
                 return sharded_range_search(
                     mesh=self.mesh, corpus=self.sharded, queries=qs, r=rs,
                     cfg=self.cfg, es_radius=es,
@@ -614,8 +643,8 @@ class RangeServer:
         svc0 = self._clock()
         out = []
         if self.live is not None:
-            muts = [b for b in batch if b[0].op != "range"]
-            batch = [b for b in batch if b[0].op == "range"]
+            muts = [b for b in batch if b[0].op in ("insert", "delete")]
+            batch = [b for b in batch if b[0].op in ("range", "count")]
             if muts:
                 out.extend(self._apply_mutations(muts, svc0))
                 if (self.scfg.auto_consolidate
@@ -662,10 +691,16 @@ class RangeServer:
         for i, rq in enumerate(reqs):
             row = ids[i]
             valid = row != INVALID_ID
+            if rq.op == "count":  # certified count only, no payload
+                r_ids = np.zeros(0, row.dtype)
+                r_dists = np.zeros(0, np.float32)
+            else:
+                r_ids, r_dists = row[valid], dists[i][valid]
             out.append(self._record(Response(
                 req_id=rq.req_id,
-                ids=row[valid],
-                dists=dists[i][valid],
+                op=rq.op,
+                ids=r_ids,
+                dists=r_dists,
                 count=int(counts[i]),
                 overflow=bool(over[i]),
                 es_stopped=bool(ess[i]),
@@ -677,6 +712,7 @@ class RangeServer:
                 **dkw,
             )))
         self.stats["served"] += n
+        self.stats["count_requests"] += sum(rq.op == "count" for rq in reqs)
         self.stats["batches"] += 1
         self.stats["filtered_batches"] += int(lf is not None)
         self.stats["filtered_requests"] += n_filtered
@@ -696,8 +732,8 @@ class RangeServer:
         batch = self._drain()
         svc0 = self._clock()
         if self.live is not None:
-            muts = [b for b in batch if b[0].op != "range"]
-            batch = [b for b in batch if b[0].op == "range"]
+            muts = [b for b in batch if b[0].op in ("insert", "delete")]
+            batch = [b for b in batch if b[0].op in ("range", "count")]
             if muts:
                 # in-flight checkpoints must not cross an epoch: finish them
                 # against the snapshot they were admitted under, THEN mutate
@@ -707,7 +743,7 @@ class RangeServer:
                         and self.live.maybe_consolidate()):
                     self.stats["consolidations"] += 1
                 self._view = self.live.snapshot()
-                self._pool.rebind(self._corpus(), self._graph())
+                self._pool.rebind(self._device_corpus(), self._graph())
             self.stats["epoch"] = self._view.epoch
         batch, shed = self._shed_expired(batch, svc0)
         out.extend(shed)
@@ -767,7 +803,7 @@ class RangeServer:
         rj = jnp.asarray(radii)
         es = (self.scfg.es_radius_factor * rj
               if self.scfg.es_radius_factor > 0 else None)
-        st, res, need = range_phase1(self._corpus(), self._graph(), qj,
+        st, res, need = range_phase1(self._device_corpus(), self._graph(), qj,
                                      self._start_ids(), rj, self.cfg,
                                      es_radius=es)
         need_h = np.array(need)
@@ -779,14 +815,12 @@ class RangeServer:
         lf = self._batch_filter(reqs, bucket)
         direct = np.nonzero(~need_h[:n])[0]
         if len(direct):
-            fin = finalize_results(self._corpus(), qj, rj, res, self.cfg,
-                                   self._tombstones(),
-                                   None if lf is None else self._labels(), lf)
+            fin = self._finalize(qj, rj, res, lf)
             out.extend(self._emit_range(fin, direct, reqs, arrive, radii,
                                         svc0, phase2=False))
         lanes = np.nonzero(need_h)[0]
         if len(lanes):
-            seeded = greedy_seed_batch(self._corpus(), st, rj,
+            seeded = greedy_seed_batch(self._device_corpus(), st, rj,
                                        self.cfg.result_cap, self.cfg.search)
             nv1 = np.asarray(st.n_visited)
             nd1 = np.asarray(st.n_dist)
@@ -815,7 +849,7 @@ class RangeServer:
         sel_p = np.concatenate([sel, np.repeat(sel[:1], P - k)])
         g, qs, rs = _gather_lanes((seeded, qj, rj), jnp.asarray(sel_p))
         g = greedy_resume_batch(
-            self._corpus(), self._graph(), qs, rs, g, jnp.ones(P, bool),
+            self._device_corpus(), self._graph(), qs, rs, g, jnp.ones(P, bool),
             self.cfg.result_cap, self.cfg.frontier_rounds,
             self.cfg.frontier_rounds, self.cfg.search)
         _, over = greedy_lane_done(g, self.cfg.frontier_rounds)
@@ -863,9 +897,7 @@ class RangeServer:
             modes = ([m["req"].filter_mode for m in metas]
                      + ["and"] * (P - k))
             lf = make_label_filter(entries, self._num_labels(), modes=modes)
-        res = finalize_results(self._corpus(), qs, rs, res, self.cfg,
-                               self._tombstones(),
-                               None if lf is None else self._labels(), lf)
+        res = self._finalize(qs, rs, res, lf)
         self.stats["pool_retired"] += k
         reqs = [m["req"] for m in metas]
         arrive = [m["arrive"] for m in metas]
@@ -899,10 +931,17 @@ class RangeServer:
             s0 = svc0 if svc0s is None else svc0s[j]
             rq = reqs[i] if svc0s is None else reqs[j]
             rad = radii[i] if svc0s is None else radii[j]
+            if rq.op == "count":  # certified count only, no payload
+                r_ids = np.zeros(0, row.dtype)
+                r_dists = np.zeros(0, np.float32)
+                self.stats["count_requests"] += 1
+            else:
+                r_ids, r_dists = row[valid], dists[i][valid]
             out.append(self._record(Response(
                 req_id=rq.req_id,
-                ids=row[valid],
-                dists=dists[i][valid],
+                op=rq.op,
+                ids=r_ids,
+                dists=r_dists,
                 count=int(counts[i]),
                 overflow=bool(over[i]),
                 es_stopped=bool(ess[i]),

@@ -1,0 +1,24 @@
+"""Tiered corpus: device-resident int8 codes + host-RAM raw-row store.
+
+The subsystem that makes corpus size a host-RAM problem instead of an
+HBM problem (ROADMAP item 1, leg 1). See `tier.corpus` for the parity
+contract and `tier.store` for the DiskANN-style row layout.
+"""
+from .budget import MemoryBudget
+from .cache import DeviceRowCache
+from .corpus import TierCounters, TieredCorpus, tiered_corpus
+from .planner import FetchPlan, plan_fetch
+from .store import ROW_ALIGN, HostRowStore, TierFetchError
+
+__all__ = [
+    "MemoryBudget",
+    "DeviceRowCache",
+    "TierCounters",
+    "TieredCorpus",
+    "tiered_corpus",
+    "FetchPlan",
+    "plan_fetch",
+    "ROW_ALIGN",
+    "HostRowStore",
+    "TierFetchError",
+]

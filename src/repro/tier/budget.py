@@ -1,0 +1,39 @@
+"""Memory-budget accounting for the tiered corpus.
+
+A `MemoryBudget` answers the question the tier exists to change: how many
+bytes are resident on *device* (HBM on TPU) versus parked in *host* RAM,
+broken down by component. Engine stats and `launch/serve.py --tier`
+surface it so the f32-resident → int8-resident → tiered progression is a
+number, not a narrative.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryBudget:
+    """Bytes resident per component, split by residence."""
+
+    device: Dict[str, int]
+    host: Dict[str, int]
+
+    @property
+    def device_total(self) -> int:
+        return int(sum(self.device.values()))
+
+    @property
+    def host_total(self) -> int:
+        return int(sum(self.host.values()))
+
+    def device_bytes_per_vector(self, n: int) -> float:
+        return self.device_total / max(1, n)
+
+    def as_dict(self) -> dict:
+        return {
+            "device": dict(self.device),
+            "host": dict(self.host),
+            "device_total": self.device_total,
+            "host_total": self.host_total,
+        }

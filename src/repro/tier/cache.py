@@ -1,0 +1,108 @@
+"""Bounded device-side cache of hot raw rows.
+
+The guard band is strongly query-correlated: consecutive batches over the
+same corpus re-touch the same boundary points, so a small device-resident
+cache of recently fetched raw rows absorbs most of the host traffic. The
+cache is a fixed (capacity, d) f32 device buffer plus a host-side LRU map
+slot→line; eviction recycles the least-recently-used line (a ring, once
+full). Hit/miss/evict counts live in `TierCounters` on the owning
+`TieredCorpus`.
+
+The device buffer is the *only* device-resident raw-row storage of a
+tiered corpus, so its capacity is exactly the knob `--resident-mb` turns.
+Capacity 0 disables caching (every ambiguous row is streamed).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils import next_pow2
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(buf, lines, rows):
+    # OOB line == capacity → mode="drop" makes padding a no-op
+    return buf.at[lines].set(rows, mode="drop")
+
+
+class DeviceRowCache:
+    """LRU cache of raw f32 rows in a fixed device buffer."""
+
+    def __init__(self, dim: int, capacity_rows: int):
+        self.dim = int(dim)
+        self.capacity = max(0, int(capacity_rows))
+        self._buf = jnp.zeros((max(self.capacity, 1), self.dim), jnp.float32)
+        self._lru: "OrderedDict[int, int]" = OrderedDict()  # slot -> line
+        self._free = list(range(self.capacity - 1, -1, -1))
+
+    @property
+    def nbytes(self) -> int:
+        return 0 if self.capacity == 0 else int(self._buf.nbytes)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def lookup(self, slots: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(hit_mask, lines) for unique ``slots``; hits become most-recent."""
+        slots = np.asarray(slots, np.int64)
+        hit = np.zeros(slots.shape, bool)
+        lines = np.zeros(slots.shape, np.int32)
+        if self.capacity:
+            for i, s in enumerate(slots.tolist()):
+                line = self._lru.get(s)
+                if line is not None:
+                    hit[i] = True
+                    lines[i] = line
+                    self._lru.move_to_end(s)
+        return hit, lines
+
+    def insert(self, slots: np.ndarray, rows) -> int:
+        """Install freshly fetched rows; returns the number of evictions.
+
+        ``rows`` is a device (m, d) array (the bucket just copied up), so
+        installation is a device-side scatter, not another host copy."""
+        slots = np.asarray(slots, np.int64)
+        if self.capacity == 0 or slots.size == 0:
+            return 0
+        n_evicted = 0
+        lines = np.empty(slots.shape, np.int32)
+        for i, s in enumerate(slots.tolist()):
+            if s in self._lru:  # racing duplicate insert: refresh in place
+                lines[i] = self._lru[s]
+                self._lru.move_to_end(s)
+            elif self._free:
+                lines[i] = self._free.pop()
+                self._lru[s] = int(lines[i])
+            else:
+                _, line = self._lru.popitem(last=False)  # LRU out
+                n_evicted += 1
+                lines[i] = line
+                self._lru[s] = int(line)
+        m = next_pow2(slots.size)
+        lines_p = np.full(m, self.capacity, np.int32)  # OOB pad → drop
+        lines_p[: slots.size] = lines
+        rows_p = jnp.zeros((m, self.dim), jnp.float32)
+        rows_p = rows_p.at[: slots.size].set(rows)
+        self._buf = _scatter_rows(self._buf, jnp.asarray(lines_p), rows_p)
+        return n_evicted
+
+    def invalidate(self, slots: np.ndarray) -> int:
+        """Drop ``slots`` from the cache (rows rewritten in the host store
+        — a stale line would break the bitwise-parity contract). Returns
+        how many lines were actually dropped."""
+        dropped = 0
+        for s in np.asarray(slots, np.int64).tolist():
+            line = self._lru.pop(s, None)
+            if line is not None:
+                self._free.append(int(line))
+                dropped += 1
+        return dropped
+
+    def rows(self, lines: np.ndarray):
+        """Device gather of cached rows by line."""
+        return jnp.take(self._buf, jnp.asarray(lines, jnp.int32), axis=0)

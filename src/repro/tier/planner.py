@@ -1,0 +1,70 @@
+"""Batched fetch planning for the guard-band rerank.
+
+`range_search_compacted`'s rerank band arrives as flat (lane, slot) pairs
+with heavy duplication — the same boundary point is ambiguous for many
+lanes at once. The planner turns that into the cheapest host traffic
+possible: deduplicate to unique slots, sort ascending (sequential-ish
+host reads over the row-aligned store), split cache hits from misses, and
+chunk the misses into pow2-sized buckets that the double-buffered
+prefetch path overlaps with compute.
+
+Pure host-side numpy — unit-testable without a device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from ..utils import next_pow2
+
+
+@dataclasses.dataclass
+class FetchPlan:
+    """The host-gather schedule for one rerank band."""
+
+    uniques: np.ndarray       # (U,) sorted unique slots
+    inverse: np.ndarray       # (P,) pair -> index into uniques
+    hit_mask: np.ndarray      # (U,) True where the row is cached
+    hit_lines: np.ndarray     # (U,) cache line for hits (junk elsewhere)
+    miss_chunks: List[np.ndarray]  # miss slots, pow2-bucketed, each sorted
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.inverse.size)
+
+    @property
+    def n_unique(self) -> int:
+        return int(self.uniques.size)
+
+    @property
+    def n_miss(self) -> int:
+        return sum(int(c.size) for c in self.miss_chunks)
+
+
+def plan_fetch(slots: np.ndarray, cache=None,
+               bucket_rows: int = 1024) -> Optional[FetchPlan]:
+    """Plan the host gathers for flat rerank ``slots`` (duplicates allowed).
+
+    ``cache`` is an optional `DeviceRowCache`; its hits are served from the
+    device buffer and never touch the host. Misses are chunked into
+    buckets of at most ``bucket_rows`` rows; every bucket is padded up to
+    a pow2 size by the fetch path, so bucket boundaries land on pow2
+    totals and the jit cache stays O(log) in band size.
+    """
+    slots = np.asarray(slots).ravel()
+    if slots.size == 0:
+        return None
+    uniques, inverse = np.unique(slots, return_inverse=True)
+    if cache is not None and getattr(cache, "capacity", 0) > 0:
+        hit_mask, hit_lines = cache.lookup(uniques)
+    else:
+        hit_mask = np.zeros(uniques.shape, bool)
+        hit_lines = np.zeros(uniques.shape, np.int32)
+    misses = uniques[~hit_mask]
+    bucket = max(1, next_pow2(min(bucket_rows, max(1, misses.size))))
+    miss_chunks = [misses[i:i + bucket] for i in range(0, misses.size, bucket)]
+    return FetchPlan(uniques=uniques, inverse=inverse.astype(np.int32),
+                     hit_mask=hit_mask, hit_lines=hit_lines,
+                     miss_chunks=miss_chunks)

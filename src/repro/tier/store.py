@@ -1,0 +1,104 @@
+"""Host-RAM raw-row store: the cold tier of a ``TieredCorpus``.
+
+The PR 4 two-pass pipeline made the guard-band rerank the *sole* consumer
+of exact f32 vectors — every other stage of the search loop runs on int8
+codes + 12-byte metadata. That is exactly the DiskANN memory split: the
+hot structures (codes, metadata, graph) stay device-resident, the raw rows
+move to host RAM and are fetched on demand for the certified-ambiguous
+band only. This module is the host side of that split.
+
+Layout is DiskANN-style row-aligned: each row occupies a fixed stride
+rounded up to ``ROW_ALIGN`` bytes in one C-contiguous buffer, so a row
+fetch is a single aligned copy and a future TPU DMA path can compute the
+source address as ``base + slot * stride`` without an indirection table.
+"Pinned" here means the buffer is kept allocated and page-touched for the
+store's lifetime; true device-registered pinning is a no-op on the CPU CI
+backend (the TPU runtime would register this same buffer).
+
+A failed fetch raises :class:`TierFetchError` — the fault fan-out
+(``fault.degraded``) treats it like a lost shard (annotated coverage
+degradation), never a crash. ``fail_next`` is the chaos-test hook that
+scripts such failures deterministically.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+ROW_ALIGN = 64  # bytes — row stride granularity (sector/DMA friendly)
+
+
+class TierFetchError(RuntimeError):
+    """A host-store row fetch failed (bad slot, torn mapping, or a scripted
+    chaos-test fault). Handled like ``ShardFault``: the shard degrades with
+    annotated coverage instead of crashing the batch."""
+
+
+class HostRowStore:
+    """Row-aligned host-RAM store of exact f32 rerank rows.
+
+    ``rows`` may be any (N, d) float array; by default it is copied into an
+    owned, stride-aligned buffer. ``copy=False`` wraps the array as-is
+    (e.g. a memory-mapped checkpoint leaf restored copy-on-write) — writes
+    then go through the caller-provided backing.
+    """
+
+    def __init__(self, rows: np.ndarray, *, copy: bool = True,
+                 align: int = ROW_ALIGN):
+        rows = np.asarray(rows, dtype=np.float32)
+        if rows.ndim != 2:
+            raise ValueError(f"store rows must be (N, d), got {rows.shape}")
+        n, d = rows.shape
+        self.n = int(n)
+        self.dim = int(d)
+        if copy:
+            floats_per_row = max(1, -(-d * 4 // align) * align // 4)
+            buf = np.zeros((n, floats_per_row), np.float32)
+            buf[:, :d] = rows
+            self._buf = buf
+            self._rows = buf[:, :d]
+        else:
+            self._buf = rows
+            self._rows = rows
+        # chaos hook: the next N gathers raise TierFetchError
+        self.fail_next = 0
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        """Host bytes kept resident (including alignment padding)."""
+        return int(self._buf.nbytes)
+
+    def __len__(self) -> int:
+        return self.n
+
+    # -- access --------------------------------------------------------------
+    def gather(self, slots: np.ndarray) -> np.ndarray:
+        """Fetch rows by slot: one (m, d) f32 host gather.
+
+        The returned array carries the exact bits of the stored rows — the
+        bitwise-parity contract of the tiered rerank depends on it."""
+        if self.fail_next > 0:
+            self.fail_next -= 1
+            raise TierFetchError(
+                f"scripted host-store fetch failure ({np.size(slots)} rows)")
+        slots = np.asarray(slots, np.int64)
+        if slots.size and (slots.min() < 0 or slots.max() >= self.n):
+            raise TierFetchError(
+                f"host-store fetch out of range: slots in "
+                f"[{slots.min()}, {slots.max()}] vs {self.n} rows")
+        return self._rows[slots]
+
+    def write(self, slots: np.ndarray, vecs: np.ndarray) -> None:
+        """Write rows in place (live inserts: fresh slots only — slots past
+        every published snapshot's watermark, so older snapshots never
+        observe the mutation)."""
+        self._rows[np.asarray(slots, np.int64)] = np.asarray(vecs, np.float32)
+
+    def take(self, idx: np.ndarray) -> "HostRowStore":
+        """A NEW store holding rows ``idx`` in order (consolidation's
+        live-set compaction; the old store stays valid for old snapshots)."""
+        return HostRowStore(self._rows[np.asarray(idx, np.int64)])
+
+    def to_array(self) -> np.ndarray:
+        """The (N, d) row view (no copy) — the checkpoint payload."""
+        return self._rows

@@ -19,7 +19,7 @@ import json
 import os
 import shutil
 import time
-from typing import Optional
+from typing import Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -135,18 +135,27 @@ class CheckpointManager:
             return json.load(f)
 
     def restore_flat(self, step: Optional[int] = None,
-                     shardings: Optional[dict] = None) -> tuple[dict, dict]:
+                     shardings: Optional[dict] = None,
+                     mmap: Optional[Iterable[str]] = None) -> tuple[dict, dict]:
         """Template-free restore: ``({path: array}, manifest)``.
 
         For states whose *structure* is only known from the checkpoint
         itself (the live index rebuilds its wrapper from the manifest's
         ``extra``); ``restore`` below remains the template-shaped API.
-        ``shardings`` is an optional flat ``{path: Sharding}`` dict."""
+        ``shardings`` is an optional flat ``{path: Sharding}`` dict.
+        ``mmap`` names leaves returned as copy-on-write memory-mapped host
+        arrays instead of device arrays (the tiered corpus restores its
+        host row store this way — the raw rows never transit HBM)."""
         manifest = self.manifest(step)
         d = os.path.join(self.dir, f"step_{manifest['step']:010d}")
+        mm = frozenset(mmap or ())
         flat = {}
         for path in manifest["paths"]:
-            arr = np.load(os.path.join(d, path + ".npy"))
+            fp = os.path.join(d, path + ".npy")
+            if path in mm:
+                flat[path] = np.load(fp, mmap_mode="c")
+                continue
+            arr = np.load(fp)
             if shardings is not None and shardings.get(path) is not None:
                 flat[path] = jax.device_put(arr, shardings[path])
             else:

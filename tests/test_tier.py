@@ -1,0 +1,426 @@
+"""Tiered-corpus suite: bitwise parity, cache adversaries, crash safety.
+
+The backbone claim is the `repro.tier` parity contract: an engine whose raw
+f32 rerank rows live in a host-RAM row store answers BIT-IDENTICALLY to the
+fully-resident engine sharing the same codes/graph — under any cache size
+(including 0), any eviction history, any query order, across fused /
+compacted / sharded execution and live churn. Everything else here guards
+the machinery around that contract: the fetch planner's dedup/bucketing,
+the LRU cache's reference semantics, the `REPRO_TIER_CACHE_ROWS` memcap
+hook, `TierFetchError` degrading like shard loss instead of crashing, and
+the checkpoint path keeping the host store and the manifest in agreement
+across crashes (torn checkpoints are invisible; restores are mmap-backed).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BuildConfig, RangeConfig, RangeSearchEngine, SearchConfig,
+    build_knn_graph, build_vamana,
+)
+from repro.dist.sharded_engine import build_sharded
+from repro.fault import (
+    SHARD_LOST, RetryPolicy, fault_tolerant_sharded_search,
+)
+from repro.kernels.rerank_fetch import fetch_rerank_dists
+from repro.live import LiveConfig, LiveIndex
+from repro.serve import RangeServer, Request, ServerConfig
+from repro.tier import (
+    DeviceRowCache, TierFetchError, plan_fetch, tiered_corpus,
+)
+from repro.train import CheckpointManager
+
+D = 10
+BCFG = BuildConfig(max_degree=24, beam=48, insert_batch=256, two_pass=True)
+CFG = RangeConfig(search=SearchConfig(beam=48, max_beam=48, visit_cap=192,
+                                      expand_width=4),
+                  mode="greedy", result_cap=512)
+FAST = RetryPolicy(max_attempts=3, backoff_s=0.0)
+
+
+def _clustered(n, seed=0, d=D, scale=0.35, k=6):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((k, d)).astype(np.float32) * 3
+    return (centers[rng.integers(0, k, n)]
+            + rng.standard_normal((n, d)).astype(np.float32) * scale)
+
+
+_BASE: dict = {}
+
+
+def _base():
+    """(points (500, D), prebuilt graph, queries (24, D), radius), built
+    once; the radius targets ~20 matches/query so the int8 guard band is
+    reliably non-empty (the fetch path actually runs)."""
+    if not _BASE:
+        pts = _clustered(500)
+        qs = _clustered(24, seed=3)
+        dmat = np.linalg.norm(pts[None] - qs[:, None], axis=-1) ** 2
+        _BASE["pts"] = pts
+        _BASE["graph"] = build_vamana(jnp.asarray(pts), BCFG)
+        _BASE["qs"] = jnp.asarray(qs)
+        _BASE["r"] = float(np.quantile(dmat, 20.0 / pts.shape[0]))
+    return _BASE["pts"], _BASE["graph"], _BASE["qs"], _BASE["r"]
+
+
+def _engines(corpus_dtype="int8", cache_rows=24):
+    """(resident engine, tiered engine) sharing codes, graph and entries —
+    the only difference is where the raw rerank rows live."""
+    pts, graph, _, _ = _base()
+    eng = RangeSearchEngine.from_graph(jnp.asarray(pts), graph,
+                                       corpus_dtype=corpus_dtype)
+    src = eng.points if corpus_dtype == "int8" else jnp.asarray(pts)
+    tier = tiered_corpus(src, corpus_dtype=corpus_dtype,
+                         cache_rows=cache_rows)
+    return eng, dataclasses.replace(eng, points=tier)
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: resident vs tiered
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compacted", [True, False], ids=["compacted", "fused"])
+@pytest.mark.parametrize("corpus_dtype", ["float32", "int8"])
+def test_tiered_bitwise_parity(corpus_dtype, compacted):
+    eng, eng_t = _engines(corpus_dtype)
+    _, _, qs, r = _base()
+    res = eng.range(qs, r, cfg=CFG, compacted=compacted)
+    res_t = eng_t.range(qs, r, cfg=CFG, compacted=compacted)
+    _assert_bitwise(res, res_t)
+    # the acceptance pin: the device row cache stays a small fraction of
+    # the raw-row bytes it displaced — the tier may not re-resident them
+    b = eng_t.points.budget()
+    assert b.device["row_cache"] <= 0.25 * b.host["row_store"], b.as_dict()
+    if corpus_dtype == "int8":
+        # parity was proven WITH the fetch path engaged, not vacuously
+        assert eng_t.points.counters.pairs > 0
+        assert int(np.asarray(res_t.n_rerank).sum()) > 0
+    else:
+        # degenerate float tier: the hot arm IS the raw data — no fetches
+        assert eng_t.points.counters.pairs == 0
+    # budget surfaces through engine stats
+    st = eng_t.stats()
+    assert st["memory_budget"]["device_total"] == b.device_total
+    assert st["tier"]["pairs"] == eng_t.points.counters.pairs
+
+
+def test_tiered_parity_per_query_radii():
+    eng, eng_t = _engines("int8")
+    _, _, qs, r = _base()
+    radii = jnp.asarray(np.geomspace(0.25 * r, 2.0 * r, qs.shape[0]),
+                        jnp.float32)
+    _assert_bitwise(eng.range(qs, radii, cfg=CFG),
+                    eng_t.range(qs, radii, cfg=CFG))
+
+
+def test_cache_eviction_adversarial_ordering():
+    """Query order / cache size / eviction history can never change a bit:
+    a 4-row cache (thrashing), a disabled cache (pure streaming) and the
+    resident engine agree on every permutation of the batch."""
+    eng, eng_tiny = _engines("int8", cache_rows=4)
+    _, eng_none = _engines("int8", cache_rows=0)
+    _, _, qs, r = _base()
+    rng = np.random.default_rng(5)
+    orders = [np.arange(qs.shape[0]), np.arange(qs.shape[0])[::-1],
+              rng.permutation(qs.shape[0]), rng.permutation(qs.shape[0])]
+    for order in orders:
+        ref = eng.range(qs[order], r, cfg=CFG)
+        _assert_bitwise(ref, eng_tiny.range(qs[order], r, cfg=CFG))
+        _assert_bitwise(ref, eng_none.range(qs[order], r, cfg=CFG))
+    ct, cn = eng_tiny.points.counters, eng_none.points.counters
+    assert ct.cache_evictions > 0          # the tiny cache really thrashed
+    assert cn.cache_hits == 0              # capacity 0 never caches
+    assert cn.fetched_rows == cn.unique_rows
+    assert ct.pairs >= ct.unique_rows      # dedup never inflates
+
+
+def test_device_row_cache_reference_semantics():
+    """Unit adversary for the LRU cache: random lookup/insert/invalidate
+    interleavings must always (a) return the exact stored row for every
+    reported hit, (b) bound the population by capacity, and (c) treat
+    invalidated slots as misses."""
+    rng = np.random.default_rng(0)
+    raw = rng.standard_normal((64, 4)).astype(np.float32)
+    cache = DeviceRowCache(4, 8)
+    for step in range(120):
+        slots = np.unique(rng.integers(0, 64, rng.integers(1, 6)))
+        hit, lines = cache.lookup(slots)
+        for s, h, ln in zip(slots.tolist(), hit.tolist(), lines.tolist()):
+            if h:
+                got = np.asarray(cache.rows(np.asarray([ln])))[0]
+                np.testing.assert_array_equal(got, raw[s])
+        miss = slots[~hit]
+        if miss.size:
+            cache.insert(miss, jnp.asarray(raw[miss]))
+            hit2, _ = cache.lookup(miss)
+            assert hit2.all()  # just-inserted rows are immediately hits
+        assert len(cache) <= 8
+        if step % 7 == 0:
+            stale = np.unique(rng.integers(0, 64, 3))
+            cache.invalidate(stale)
+            hit3, _ = cache.lookup(stale)
+            assert not hit3.any()
+
+
+def test_plan_fetch_dedup_sort_and_buckets():
+    slots = np.asarray([7, 3, 7, 7, 1, 9, 3])
+    plan = plan_fetch(slots, None, bucket_rows=2)
+    assert plan.uniques.tolist() == [1, 3, 7, 9]
+    np.testing.assert_array_equal(plan.uniques[plan.inverse], slots)
+    assert plan.n_pairs == 7 and plan.n_unique == 4 and plan.n_miss == 4
+    assert all(c.size <= 2 for c in plan.miss_chunks)
+    cat = np.concatenate(plan.miss_chunks)
+    assert (np.diff(cat) > 0).all()  # row-store order: sorted, no dups
+    assert plan_fetch(np.asarray([], np.int64)) is None
+
+
+def test_cache_rows_env_override(monkeypatch):
+    pts = jnp.asarray(_clustered(64, seed=2))
+    monkeypatch.setenv("REPRO_TIER_CACHE_ROWS", "3")
+    assert tiered_corpus(pts).cache.capacity == 3
+    # explicit knobs win over the CI memcap env
+    assert tiered_corpus(pts, cache_rows=9).cache.capacity == 9
+    assert tiered_corpus(pts, resident_mb=1.0).cache.capacity == \
+        (1 << 20) // (D * 4)
+    monkeypatch.delenv("REPRO_TIER_CACHE_ROWS")
+    assert tiered_corpus(pts).cache.capacity == 64 // 8
+
+
+# ---------------------------------------------------------------------------
+# sharded: parity + TierFetchError degradation
+# ---------------------------------------------------------------------------
+
+_SHARD: dict = {}
+
+
+def _shard_base():
+    """800 points over 8 clusters, 4 shards, kNN graphs with one entry per
+    cluster (the test_fault recipe — disconnected components need them)."""
+    if not _SHARD:
+        rng = np.random.default_rng(0)
+        centers = rng.standard_normal((8, 8)).astype(np.float32) * 3
+        pts = (centers[rng.integers(0, 8, 800)]
+               + rng.standard_normal((800, 8)).astype(np.float32) * 0.3)
+        centers_j = jnp.asarray(centers)
+
+        def _builder(p):
+            lab = np.asarray(jnp.argmin(
+                jnp.sum((p[:, None] - centers_j[None]) ** 2, -1), axis=1))
+            starts = np.asarray(
+                [np.flatnonzero(lab == c)[0] for c in range(8)], np.int32)
+            return build_knn_graph(p, k=10), jnp.asarray(starts)
+
+        _SHARD["pts"] = pts
+        _SHARD["builder"] = _builder
+        _SHARD["qs"] = jnp.asarray(pts[:16] + 0.01)
+        _SHARD["cfg"] = RangeConfig(
+            search=SearchConfig(beam=32, max_beam=32, visit_cap=128,
+                                expand_width=4),
+            mode="greedy", result_cap=512)
+    return _SHARD["pts"], _SHARD["builder"], _SHARD["qs"], _SHARD["cfg"]
+
+
+def test_sharded_tiered_bitwise_parity():
+    pts, builder, qs, cfg = _shard_base()
+    res = build_sharded(pts, 4, builder, corpus_dtype="int8")
+    tier = build_sharded(pts, 4, builder, corpus_dtype="int8", tier=True)
+    healthy = fault_tolerant_sharded_search(corpus=res, queries=qs, r=2.0,
+                                            cfg=cfg, retry=FAST)
+    tiered = fault_tolerant_sharded_search(corpus=tier, queries=qs, r=2.0,
+                                           cfg=cfg, retry=FAST)
+    assert healthy.coverage == 1.0 and tiered.coverage == 1.0
+    _assert_bitwise(healthy.result, tiered.result)
+    assert sum(t.counters.pairs for t in tier.tiers) > 0
+    # per-shard caches each respect the resident pin
+    for t in tier.tiers:
+        b = t.budget()
+        assert b.device["row_cache"] <= 0.25 * b.host["row_store"]
+
+
+def test_tier_fetch_error_degrades_like_shard_loss():
+    """A failing host store degrades exactly like a lost shard — annotated
+    coverage, no crash — and recovers to the healthy bits once it heals."""
+    pts, builder, qs, cfg = _shard_base()
+    # resident_mb=0: no cache, so EVERY guard-band row hits the store and
+    # the chaos hook cannot be dodged by warm cache lines
+    tier = build_sharded(pts, 4, builder, corpus_dtype="int8", tier=True,
+                         resident_mb=0.0)
+    healthy = fault_tolerant_sharded_search(corpus=tier, queries=qs, r=2.0,
+                                            cfg=cfg, retry=FAST)
+    assert healthy.coverage == 1.0
+    assert tier.tiers[1].counters.fetched_rows > 0  # shard 1 really fetches
+    tier.tiers[1].store.fail_next = 10_000
+    lost = fault_tolerant_sharded_search(corpus=tier, queries=qs, r=2.0,
+                                         cfg=cfg, retry=FAST)
+    assert not lost.complete and lost.code == SHARD_LOST
+    assert lost.shards_ok == 3 and lost.coverage == 0.75
+    assert lost.faults[1] == "tier_fetch"
+    tier.tiers[1].store.fail_next = 0
+    healed = fault_tolerant_sharded_search(corpus=tier, queries=qs, r=2.0,
+                                           cfg=cfg, retry=FAST)
+    assert healed.coverage == 1.0
+    _assert_bitwise(healthy.result, healed.result)
+
+
+def test_tier_fetch_error_surfaces_unwrapped():
+    eng, eng_t = _engines("int8", cache_rows=0)
+    _, _, qs, r = _base()
+    eng_t.points.store.fail_next = 1
+    with pytest.raises(TierFetchError):
+        eng_t.range(qs, r, cfg=CFG)
+    _assert_bitwise(eng.range(qs, r, cfg=CFG),
+                    eng_t.range(qs, r, cfg=CFG))  # healed: bits intact
+
+
+# ---------------------------------------------------------------------------
+# live churn parity + checkpoint crash consistency
+# ---------------------------------------------------------------------------
+
+def _live_pair(corpus_dtype):
+    pts, graph, _, _ = _base()
+    lcfg = LiveConfig(capacity=768, insert_batch=64, consolidate_at=0.25)
+    mk = lambda tier: LiveIndex.create(pts, lcfg, BCFG, graph=graph,
+                                       corpus_dtype=corpus_dtype, tier=tier)
+    return mk(False), mk(True)
+
+
+@pytest.mark.parametrize("corpus_dtype", ["float32", "int8"])
+def test_live_churn_bitwise_parity(corpus_dtype):
+    a, b = _live_pair(corpus_dtype)
+    _, _, qs, r = _base()
+    stream = _clustered(120, seed=7)
+    ia, ib = a.insert(stream[:60]), b.insert(stream[:60])
+    np.testing.assert_array_equal(ia, ib)
+    for live, ids in ((a, ia), (b, ib)):
+        live.delete(ids[:20])
+        live.delete(np.arange(5, 45))  # initial-row ext ids
+    _assert_bitwise(a.range(qs, r, cfg=CFG), b.range(qs, r, cfg=CFG))
+    # consolidation rebuilds the tier (fresh store + cache, same counters)
+    sa, sb = a.consolidate(), b.consolidate()
+    assert sa["n_live"] == sb["n_live"]
+    _assert_bitwise(a.range(qs, r, cfg=CFG), b.range(qs, r, cfg=CFG))
+    # post-consolidation inserts write through the NEW store
+    np.testing.assert_array_equal(a.insert(stream[60:]), b.insert(stream[60:]))
+    _assert_bitwise(a.range(qs, r, cfg=CFG), b.range(qs, r, cfg=CFG))
+    if corpus_dtype == "int8":
+        assert b.points.counters.pairs > 0
+
+
+def test_live_insert_invalidates_stale_cache_lines():
+    """Overwriting a slot (delete -> consolidate -> reuse, or plain insert
+    into a fresh slot that a previous epoch's row occupied) must never serve
+    the OLD row from the device cache."""
+    _, b = _live_pair("int8")
+    a, _ = _live_pair("int8")
+    _, _, qs, r = _base()
+    stream = _clustered(80, seed=11)
+    # warm the cache on the initial rows
+    _assert_bitwise(a.range(qs, r, cfg=CFG), b.range(qs, r, cfg=CFG))
+    # churn the SAME slots repeatedly: insert, delete, re-insert shifted
+    for k in range(3):
+        ids_a, ids_b = a.insert(stream[:40] + 0.01 * k), \
+            b.insert(stream[:40] + 0.01 * k)
+        np.testing.assert_array_equal(ids_a, ids_b)
+        _assert_bitwise(a.range(qs, r, cfg=CFG), b.range(qs, r, cfg=CFG))
+        a.delete(ids_a)
+        b.delete(ids_b)
+        a.maybe_consolidate()
+        b.maybe_consolidate()
+        _assert_bitwise(a.range(qs, r, cfg=CFG), b.range(qs, r, cfg=CFG))
+
+
+def test_checkpoint_store_and_manifest_never_disagree(tmp_path):
+    """Crash contract: a torn checkpoint directory is invisible; every
+    COMPLETED step's manifest and payload describe the same host store,
+    and the restore is a copy-on-write mmap of that payload (writable,
+    bitwise-equal, raw rows never copied through HBM)."""
+    _, b = _live_pair("int8")
+    _, _, qs, r = _base()
+    stream = _clustered(100, seed=9)
+    cm = CheckpointManager(str(tmp_path), keep=3)
+
+    b.insert(stream[:40])
+    b.save(cm, step=1)
+    raw1 = b.points.store.to_array().copy()
+    b.insert(stream[40:80])
+    b.delete(np.arange(10, 30))
+    b.save(cm, step=2)
+    raw2 = b.points.store.to_array().copy()
+    res2 = b.range(qs, r, cfg=CFG)
+
+    # simulate a crash mid-save: a payload-only tmp dir with no manifest
+    torn = tmp_path / "step_0000000003.tmp"
+    torn.mkdir()
+    (torn / "raw.npy").write_bytes(b"\x93NUMPY garbage")
+    assert cm.latest_step() == 2  # the torn step does not exist
+
+    for step, raw in ((1, raw1), (2, raw2)):
+        man = cm.manifest(step)
+        assert "raw" in man["paths"]  # the store's rows are IN the payload
+        got = LiveIndex.restore(cm, step=step)
+        # manifest extra and the rebuilt tier agree on the static config
+        assert man["extra"]["tier"]["cache_rows"] == got.points.cache.capacity
+        np.testing.assert_array_equal(got.points.store.to_array(), raw)
+    restored = LiveIndex.restore(cm)  # latest == step 2
+    _assert_bitwise(res2, restored.range(qs, r, cfg=CFG))
+    # CoW mmap backing still takes writes: post-restore churn works and
+    # stays bit-identical to the uninterrupted index
+    np.testing.assert_array_equal(b.insert(stream[80:]),
+                                  restored.insert(stream[80:]))
+    _assert_bitwise(b.range(qs, r, cfg=CFG), restored.range(qs, r, cfg=CFG))
+
+
+# ---------------------------------------------------------------------------
+# serving: count op on a tiered engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("continuous", [False, True],
+                         ids=["lockstep", "continuous"])
+def test_count_op_tiered_server(continuous):
+    _, eng_t = _engines("int8")
+    _, _, qs, r = _base()
+    scfg = RangeConfig(search=dataclasses.replace(CFG.search,
+                                                  corpus_dtype="int8"),
+                       mode=CFG.mode, result_cap=CFG.result_cap)
+    srv = RangeServer(eng_t, scfg,
+                      ServerConfig(max_batch=16, continuous=continuous,
+                                   lanes=8) if continuous else
+                      ServerConfig(max_batch=16))
+    qn = np.asarray(qs)
+    for i in range(8):
+        srv.submit(Request(req_id=i, query=qn[i], radius=r))
+        srv.submit(Request(req_id=100 + i, op="count", query=qn[i], radius=r))
+    resp = {x.req_id: x for x in srv.run_until_drained()}
+    for i in range(8):
+        c = resp[100 + i]
+        assert c.op == "count" and c.code is None
+        assert c.ids.size == 0 and c.dists.size == 0  # count-only payload
+        assert c.count == resp[i].count  # same certified post-rerank count
+    assert srv.stats["count_requests"] == 8
+
+
+# ---------------------------------------------------------------------------
+# kernel: TPU fetch+rerank emulated on CPU must match the XLA reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_rerank_fetch_kernel_interpret_parity(metric):
+    rng = np.random.default_rng(0)
+    raw = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32))
+    # 48 pairs: a tile multiple (the planner's pow2 buckets guarantee
+    # this), with duplicate ids as dedup's inverse produces
+    ids = jnp.asarray(rng.integers(0, 64, 48), jnp.int32)
+    qv = jnp.asarray(rng.standard_normal((48, 16)).astype(np.float32))
+    ref = fetch_rerank_dists(raw, ids, qv, metric=metric)
+    pal = fetch_rerank_dists(raw, ids, qv, metric=metric,
+                             use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
